@@ -1,0 +1,150 @@
+//! End-to-end driver: the full three-layer system on a real workload.
+//!
+//! This is the repo's capstone validation: a k-fold cross-validation run
+//! where every numeric step on the request path executes inside compiled
+//! HLO artifacts (Pallas kernels lowered by `make artifacts`) through the
+//! rust PJRT runtime — python is not running. Per fold:
+//!
+//!   `gram` → `cholvec` → `polyfit` → fused `sweep`   (piCholesky)
+//!   `gram` → `exact_sweep`                           (Chol baseline)
+//!
+//! and at the end the native f64 path re-validates the selected λ.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end [-- h]
+//! ```
+
+use picholesky::coordinator::{HloFold, HloPipeline, Metrics};
+use picholesky::data::folds::kfold;
+use picholesky::data::synthetic::{DatasetKind, SyntheticDataset};
+use picholesky::runtime::Engine;
+use picholesky::util::fmt_secs;
+
+fn main() -> picholesky::Result<()> {
+    let h: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128);
+    let k_folds = 4;
+
+    let engine = Engine::new("artifacts")?;
+    let cfg = engine.config(h, None, None)?;
+    println!(
+        "engine: {} | config {} (n={}, n_val={}, g={}, r={}, m={}, D={})",
+        engine.platform(),
+        cfg.tag,
+        cfg.n,
+        cfg.n_val,
+        cfg.g,
+        cfg.r,
+        cfg.m,
+        cfg.d_tri
+    );
+
+    // dataset sized so every fold's train split has ≥ n rows and its val
+    // split ≥ n_val rows (the AOT shapes are static; extras are trimmed)
+    let total = ((cfg.n * k_folds).div_ceil(k_folds - 1)).max(cfg.n_val * k_folds) + k_folds;
+    let ds = SyntheticDataset::generate(DatasetKind::MnistLike, total, cfg.h, 2024);
+    let folds = kfold(total, k_folds, 77);
+
+    let metrics = Metrics::new();
+    let pipe = HloPipeline::new(&engine, cfg, &metrics);
+    let t0 = std::time::Instant::now();
+    pipe.warmup()?;
+    println!("compiled 5 artifacts in {}\n", fmt_secs(t0.elapsed().as_secs_f64()));
+
+    let (lo, hi) = ds.kind.lambda_range();
+    let mut pi_secs = 0.0;
+    let mut exact_secs = 0.0;
+    let mut pi_errs = vec![0.0f64; cfg.m];
+    let mut exact_errs = vec![0.0f64; cfg.m];
+    let mut agreements = 0usize;
+
+    for (fi, fold) in folds.iter().enumerate() {
+        // materialize at exactly the lowered shapes: n train rows, n_val val rows
+        let (xt, yt, xv, yv) = fold.materialize(&ds.x, &ds.y);
+        let hf = HloFold {
+            xt: xt.slice(0, cfg.n, 0, cfg.h),
+            yt: yt[..cfg.n].to_vec(),
+            xv: xv.slice(0, cfg.n_val, 0, cfg.h),
+            yv: yv[..cfg.n_val].to_vec(),
+        };
+
+        let t = std::time::Instant::now();
+        let pi = pipe.run_fold(&hf, lo, hi)?;
+        pi_secs += t.elapsed().as_secs_f64();
+
+        let t = std::time::Instant::now();
+        let exact = pipe.run_fold_exact(&hf, lo, hi)?;
+        exact_secs += t.elapsed().as_secs_f64();
+
+        for i in 0..cfg.m {
+            pi_errs[i] += pi.rmse[i] / k_folds as f64;
+            exact_errs[i] += exact.rmse[i] / k_folds as f64;
+        }
+        let agree = (pi.best_idx as i64 - exact.best_idx as i64).abs() <= 1;
+        agreements += agree as usize;
+        println!(
+            "fold {fi}: piCholesky λ*={:.3e} rmse={:.4} | exact λ*={:.3e} rmse={:.4} | λ agree(±1): {}",
+            pi.best_lambda(),
+            pi.best_rmse(),
+            exact.best_lambda(),
+            exact.best_rmse(),
+            agree
+        );
+    }
+
+    // aggregate curve + selection
+    let best = |errs: &[f64]| {
+        errs.iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .map(|(i, e)| (i, *e))
+            .unwrap()
+    };
+    let grid = pipe.grid(lo, hi);
+    let (pi_i, pi_e) = best(&pi_errs);
+    let (ex_i, ex_e) = best(&exact_errs);
+    println!("\n===== aggregate over {k_folds} folds =====");
+    println!(
+        "piCholesky: λ* = {:.4e}  mean holdout = {:.4}  sweep time = {}",
+        grid[pi_i],
+        pi_e,
+        fmt_secs(pi_secs)
+    );
+    println!(
+        "exact Chol: λ* = {:.4e}  mean holdout = {:.4}  sweep time = {}",
+        grid[ex_i],
+        ex_e,
+        fmt_secs(exact_secs)
+    );
+    println!(
+        "selected-λ agreement (±1 grid step): {agreements}/{k_folds} folds; \
+         curve max gap = {:.3}%",
+        100.0
+            * pi_errs
+                .iter()
+                .zip(&exact_errs)
+                .map(|(a, b)| (a - b).abs() / b)
+                .fold(0.0f64, f64::max)
+    );
+
+    // native f64 re-validation of the selected λ (belt and braces)
+    let (xt, yt, xv, yv) = folds[0].materialize(&ds.x, &ds.y);
+    let xt = xt.slice(0, cfg.n, 0, cfg.h);
+    let hm = picholesky::linalg::gemm::syrk_lower(&xt);
+    let gv = picholesky::linalg::gemm::gemv_t(&xt, &yt[..cfg.n]);
+    let l = picholesky::linalg::cholesky::cholesky_shifted(&hm, grid[pi_i])?;
+    let theta = picholesky::linalg::triangular::solve_cholesky(&l, &gv);
+    let native_err = picholesky::cv::holdout_error(
+        &xv.slice(0, cfg.n_val, 0, cfg.h),
+        &yv[..cfg.n_val],
+        &theta,
+        picholesky::cv::Metric::Rmse,
+    );
+    println!("native f64 re-validation at λ* (fold 0): rmse = {native_err:.4}");
+
+    println!("\n===== runtime metrics =====");
+    print!("{}", metrics.snapshot());
+    Ok(())
+}

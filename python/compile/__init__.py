@@ -1,0 +1,7 @@
+"""Build-time compile path for piCholesky.
+
+Everything under this package runs ONCE, at `make artifacts` time: the Pallas
+kernels (L1) and the JAX graphs that compose them (L2) are lowered to HLO text
+that the rust coordinator (L3) loads through PJRT. Nothing here is imported on
+the request path.
+"""

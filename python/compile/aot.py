@@ -1,0 +1,132 @@
+"""AOT lowering: JAX graphs → HLO text artifacts + manifest.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids that the crate's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md). Every function is
+lowered with ``return_tuple=True`` so the rust side always unwraps a tuple.
+
+``manifest.json`` records, for every artifact, the exact parameter/result
+shapes it was lowered at; the rust runtime validates its literals against the
+manifest before execution.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .shapes import ARTIFACTS, CONFIGS, PiCholConfig
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def lowerings(cfg: PiCholConfig):
+    """(name → (fn, example_arg_specs)) for one shape config."""
+    h, n, nv, g, r, m = cfg.h, cfg.n, cfg.n_val, cfg.g, cfg.r, cfg.m
+    d, dp = cfg.d_vec, cfg.d_pad
+    return {
+        "gram": (
+            lambda x, y: model.gram_fn(x, y),
+            (_spec(n, h), _spec(n)),
+        ),
+        "cholvec": (
+            lambda hm, ls: (model.cholvec_fn(hm, ls),),
+            (_spec(h, h), _spec(g)),
+        ),
+        "polyfit": (
+            lambda ls, t: (model.polyfit_fn(ls, t, r),),
+            (_spec(g), _spec(g, d)),
+        ),
+        "polyeval": (
+            lambda th, ls: (model.polyeval_fn(th, ls, d),),
+            (_spec(r + 1, dp), _spec(m)),
+        ),
+        "sweep": (
+            lambda th, ls, gv, xv, yv: (model.sweep_fn(th, ls, gv, xv, yv),),
+            (_spec(r + 1, dp), _spec(m), _spec(h), _spec(nv, h), _spec(nv)),
+        ),
+        "chol_solve": (
+            lambda hm, lam, gv: (model.chol_solve_fn(hm, lam, gv),),
+            (_spec(h, h), _spec(), _spec(h)),
+        ),
+        "holdout": (
+            lambda xv, yv, th: (model.holdout_fn(xv, yv, th),),
+            (_spec(nv, h), _spec(nv), _spec(h)),
+        ),
+        "exact_sweep": (
+            lambda hm, ls, gv, xv, yv: (model.exact_sweep_fn(hm, ls, gv, xv, yv),),
+            (_spec(h, h), _spec(m), _spec(h), _spec(nv, h), _spec(nv)),
+        ),
+    }
+
+
+def lower_one(name, fn, specs, out_dir, tag):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}_{tag}.hlo.txt"
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    return {
+        "file": fname,
+        "params": [list(s.shape) for s in specs],
+        "dtype": "f32",
+        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        "bytes": len(text),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default="",
+        help="comma-separated h values to lower (default: all in shapes.CONFIGS)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = {int(x) for x in args.configs.split(",") if x}
+    manifest = {"artifacts": ARTIFACTS + ["exact_sweep"], "configs": []}
+    for cfg in CONFIGS:
+        if only and cfg.h not in only:
+            continue
+        entry = cfg.manifest_entry()
+        entry["files"] = {}
+        for name, (fn, specs) in lowerings(cfg).items():
+            info = lower_one(name, fn, specs, args.out_dir, cfg.tag())
+            entry["files"][name] = info
+            print(f"  {info['file']:42s} {info['bytes']:>9d} bytes")
+        manifest["configs"].append(entry)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['configs'])} configs to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for piCholesky.
+
+Four kernels cover the paper's compute hot spots (all run under
+``interpret=True`` — the CPU PJRT plugin cannot execute Mosaic custom-calls;
+the BlockSpecs are still TPU-shaped, see DESIGN.md §Hardware-Adaptation):
+
+- :mod:`gram`     — tiled ``H = XᵀX`` and ``g = Xᵀy`` (Figure 1's BLAS-3 step)
+- :mod:`cholesky` — blocked right-looking Cholesky (the paper's dominant cost)
+- :mod:`polyfit`  — Algorithm 1 lines 5-6, streaming the D axis through VMEM
+- :mod:`polyeval` — dense-λ interpolation ``P = B·Θ`` (the O(r d²) payoff step)
+- :mod:`trisolve` — blocked forward/backward substitution for ``LLᵀθ = g``
+
+:mod:`ref` holds the pure-jnp oracles every kernel is pytest-verified against;
+:mod:`blockops` holds the custom-call-free substitution primitives the kernels
+share (LAPACK FFI custom-calls would not run on the rust PJRT client).
+"""
+
+from . import blockops, cholesky, gram, polyeval, polyfit, ref, trisolve  # noqa: F401

@@ -1,0 +1,104 @@
+"""Custom-call-free dense building blocks.
+
+jax's CPU lowering turns ``jnp.linalg.cholesky`` / ``solve_triangular`` /
+``jnp.linalg.solve`` into LAPACK FFI custom-calls (``lapack_spotrf_ffi`` …)
+that the rust side's xla_extension 0.5.1 cannot execute. Everything here is
+written with plain jnp ops + masked ``fori_loop`` recurrences so the whole
+pipeline lowers to portable HLO:
+
+- :func:`chol_unblocked`    — column-Cholesky of one (small) block
+- :func:`trsolve_lower`     — solve ``L X = B``   (forward substitution)
+- :func:`trsolve_upper_t`   — solve ``Lᵀ X = B``  (backward substitution)
+- :func:`trsolve_right_lt`  — solve ``X Lᵀ = C``  (the TRSM panel step)
+- :func:`spd_solve`         — solve SPD ``A X = B`` via the above
+
+Shapes stay static throughout: loop indices select rows/columns with
+``arange``-masks instead of dynamic slices, so each iteration is O(s²) dense
+work — ideal fodder for the VPU, and exactly the paper's BLAS-2 panel
+economics.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def chol_unblocked(b: jax.Array) -> jax.Array:
+    """Cholesky factor of a (small) SPD block via masked column recurrence.
+
+    Column j of L depends on columns < j only; the fori_loop carries the
+    partially-built factor and masks future columns out of the inner products.
+    """
+    s = b.shape[0]
+    idx = jnp.arange(s)
+
+    def body(j, l):
+        # inner products with already-built columns (< j)
+        colmask = (idx < j).astype(b.dtype)  # (s,)
+        lj = l[j, :] * colmask  # row j restricted to built columns
+        # c[i] = B[i,j] − Σ_{k<j} L[i,k]·L[j,k]
+        c = b[:, j] - (l * colmask[None, :]) @ lj
+        cj = c[j]
+        ljj = jnp.sqrt(jnp.maximum(cj, 1e-30))
+        newcol = jnp.where(idx > j, c / ljj, 0.0)
+        newcol = newcol.at[j].set(ljj)
+        keep = (idx != j).astype(b.dtype)
+        return l * keep[None, :] + newcol[:, None] * (idx == j).astype(b.dtype)[None, :]
+
+    l0 = jnp.zeros_like(b)
+    return jax.lax.fori_loop(0, s, body, l0)
+
+
+def trsolve_lower(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve ``L X = B`` for lower-triangular L (B is (s, k))."""
+    s = l.shape[0]
+    idx = jnp.arange(s)
+
+    def body(i, x):
+        # x_i = (b_i − L[i,:i]·X[:i]) / L[i,i]
+        rowmask = (idx < i).astype(b.dtype)
+        li = l[i, :] * rowmask
+        xi = (b[i, :] - li @ x) / l[i, i]
+        sel = (idx == i).astype(b.dtype)[:, None]
+        return x * (1.0 - sel) + xi[None, :] * sel
+
+    return jax.lax.fori_loop(0, s, body, jnp.zeros_like(b))
+
+
+def trsolve_upper_t(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve ``Lᵀ X = B`` for lower-triangular L (B is (s, k))."""
+    s = l.shape[0]
+    idx = jnp.arange(s)
+
+    def body(step, x):
+        i = s - 1 - step
+        rowmask = (idx > i).astype(b.dtype)
+        # Lᵀ[i, :] = L[:, i]; entries with index > i are below the diagonal
+        col = l[:, i] * rowmask
+        xi = (b[i, :] - col @ x) / l[i, i]
+        sel = (idx == i).astype(b.dtype)[:, None]
+        return x * (1.0 - sel) + xi[None, :] * sel
+
+    return jax.lax.fori_loop(0, s, body, jnp.zeros_like(b))
+
+
+def trsolve_right_lt(c: jax.Array, l: jax.Array) -> jax.Array:
+    """Solve ``X Lᵀ = C`` for lower-triangular L (C is (m, s)) — the blocked
+    Cholesky TRSM panel step: X[:, j] = (C[:, j] − X[:, :j]·L[j, :j]ᵀ)/L[j,j]."""
+    s = l.shape[0]
+    idx = jnp.arange(s)
+
+    def body(j, x):
+        colmask = (idx < j).astype(c.dtype)
+        lj = l[j, :] * colmask  # (s,)
+        xj = (c[:, j] - x @ lj) / l[j, j]
+        sel = (idx == j).astype(c.dtype)[None, :]
+        return x * (1.0 - sel) + xj[:, None] * sel
+
+    return jax.lax.fori_loop(0, s, body, jnp.zeros_like(c))
+
+
+def spd_solve(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve SPD ``A X = B`` by Cholesky + two substitutions (small systems —
+    the (r+1)×(r+1) Vandermonde normal equations)."""
+    l = chol_unblocked(a)
+    return trsolve_upper_t(l, trsolve_lower(l, b))

@@ -1,0 +1,106 @@
+"""Blocked triangular-solve Pallas kernel: ``LLᵀθ = g`` (paper §3.2).
+
+Once a factor L is in hand (exact or interpolated), each candidate λ costs one
+forward and one backward substitution — O(d²), the per-λ request-path cost the
+coordinator pays m times per fold. The kernel keeps the whole factor VMEM-
+resident (h ≤ 1024 ⇒ ≤ 4 MB fp32) and walks it in ``bs×bs`` blocks:
+
+- diagonal blocks: dense triangular solve of one bs-block (the VPU part),
+- off-diagonal updates: ``bs×bs @ bs×nrhs`` MXU mat-vecs accumulated through a
+  ``fori_loop`` carry.
+
+A single-program grid: the substitution recurrence is inherently sequential
+across block rows. Parallelism comes from the L3 coordinator running many λ's
+and folds concurrently — the same shape as the paper's multithreaded BLAS-2.
+
+The intermediate ``w`` (solution of the forward pass) is materialized as a
+second kernel output rather than scratch so the kernel stays portable across
+pallas backends; XLA dead-code-eliminates it from the AOT artifact when the
+caller drops it.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import blockops
+from ..shapes import TRISOLVE_BS
+
+
+def _make_kernel(h: int, bs: int):
+    """Build the blocked substitution kernel for a fixed (h, bs)."""
+    nb = h // bs
+
+    def kernel(l_ref, g_ref, o_ref, w_ref):
+        # ---- forward pass: L w = g ----
+        def fwd_body(i, _):
+            gi = g_ref[pl.dslice(i * bs, bs), :]
+
+            def inner(j, acc):
+                lij = l_ref[pl.dslice(i * bs, bs), pl.dslice(j * bs, bs)]
+                wj = w_ref[pl.dslice(j * bs, bs), :]
+                return acc + lij @ wj
+
+            acc = jax.lax.fori_loop(0, i, inner, jnp.zeros_like(gi))
+            lii = l_ref[pl.dslice(i * bs, bs), pl.dslice(i * bs, bs)]
+            # custom-call-free substitution (see blockops): LAPACK FFI calls
+            # would not run on the rust PJRT client
+            w_ref[pl.dslice(i * bs, bs), :] = blockops.trsolve_lower(lii, gi - acc)
+            return 0
+
+        jax.lax.fori_loop(0, nb, fwd_body, 0)
+
+        # ---- backward pass: Lᵀ θ = w ----
+        def bwd_body(ir, _):
+            i = nb - 1 - ir
+            wi = w_ref[pl.dslice(i * bs, bs), :]
+
+            def inner(joff, acc):
+                jj = i + 1 + joff
+                lji = l_ref[pl.dslice(jj * bs, bs), pl.dslice(i * bs, bs)]
+                tj = o_ref[pl.dslice(jj * bs, bs), :]
+                return acc + lji.T @ tj
+
+            acc = jax.lax.fori_loop(0, nb - 1 - i, inner, jnp.zeros_like(wi))
+            lii = l_ref[pl.dslice(i * bs, bs), pl.dslice(i * bs, bs)]
+            o_ref[pl.dslice(i * bs, bs), :] = blockops.trsolve_upper_t(lii, wi - acc)
+            return 0
+
+        jax.lax.fori_loop(0, nb, bwd_body, 0)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bs",))
+def trisolve_blocked(l: jax.Array, g2: jax.Array, bs: int = TRISOLVE_BS) -> jax.Array:
+    """Solve ``LLᵀθ = g2`` for h divisible by bs; g2 is (h, nrhs)."""
+    h = l.shape[0]
+    theta, _w = pl.pallas_call(
+        _make_kernel(h, bs),
+        out_shape=(
+            jax.ShapeDtypeStruct(g2.shape, g2.dtype),
+            jax.ShapeDtypeStruct(g2.shape, g2.dtype),
+        ),
+        interpret=True,
+    )(l, g2)
+    return theta
+
+
+def trisolve(l: jax.Array, g: jax.Array, bs: int = TRISOLVE_BS) -> jax.Array:
+    """Public API: solve ``LLᵀθ = g`` for arbitrary h.
+
+    Pads to a bs multiple with an identity diagonal block; the padded rows of
+    g are zero so the padding never feeds back into the true solution.
+    """
+    h = l.shape[0]
+    pad = (-h) % bs
+    squeeze = g.ndim == 1
+    g2 = g.reshape(h, -1)
+    if pad:
+        eye_tail = jnp.diag(jnp.pad(jnp.zeros(h, l.dtype), (0, pad), constant_values=1.0))
+        l = jnp.pad(l, ((0, pad), (0, pad))) + eye_tail
+        g2 = jnp.pad(g2, ((0, pad), (0, 0)))
+    out = trisolve_blocked(l, g2, bs=bs)[:h]
+    return out.reshape(h) if squeeze else out

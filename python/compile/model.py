@@ -1,0 +1,163 @@
+"""Layer-2 JAX graphs: the piCholesky pipeline composed from the L1 kernels.
+
+Each public function here becomes one AOT artifact per shape config (see
+``shapes.CONFIGS``). The rust coordinator sequences them:
+
+    gram ─► cholvec ─► polyfit ─► sweep ──► argmin λ
+                 │                  ▲
+                 └── (baselines) chol_solve ─► holdout
+
+Only jnp ops and the Pallas kernels appear — everything lowers to a single
+HLO module per function with static shapes, which is what the xla 0.1.6 crate
+can compile and run on the CPU PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cholesky as cholesky_k
+from .kernels import gram as gram_k
+from .kernels import polyeval as polyeval_k
+from .kernels import polyfit as polyfit_k
+from .kernels import trisolve as trisolve_k
+from .shapes import TILE_D, pad_to
+
+
+def gram_fn(x: jax.Array, y: jax.Array):
+    """Artifact ``gram``: Hessian and gradient from the design matrix.
+
+    (X[n,h], y[n]) → (H[h,h], g[h]). The O(nd²) step of Figure 1.
+    """
+    return gram_k.gram(x, y)
+
+
+def cholvec_fn(h_mat: jax.Array, lams: jax.Array):
+    """Artifact ``cholvec``: the g exact factors, vectorized (Algorithm 1
+    lines 1-2).
+
+    (H[h,h], λ[g]) → T[g, h²] — **full-matrix** vectorization (paper §5): a
+    plain reshape. The triangle gather (row-wise/recursive orderings) costs
+    ~10× the factorization itself on the CPU PJRT backend (§Perf), so the
+    HLO path takes Table 1's aligned-copy/2×-flops trade-off.
+    """
+    h = h_mat.shape[0]
+    eye = jnp.eye(h, dtype=h_mat.dtype)
+
+    def one(lam):
+        l = cholesky_k.cholesky(h_mat + lam * eye)
+        return l.reshape(h * h)
+
+    return jax.lax.map(one, lams)
+
+
+def polyfit_fn(lams: jax.Array, t: jax.Array, r: int):
+    """Artifact ``polyfit``: Θ = (VᵀV)⁻¹VᵀT (Algorithm 1 lines 3-6).
+
+    (λ[g], T[g,D]) → Θ[(r+1), D_pad]. The output keeps the tile padding so the
+    downstream sweep/polyeval artifacts can stream it without re-padding.
+    """
+    g, d = t.shape
+    a = polyfit_k.projector(lams, r)
+    tp = jnp.pad(t, ((0, 0), (0, pad_to(d, TILE_D) - d)))
+    return polyfit_k.proj_apply_tiled(a, tp)
+
+
+def polyeval_fn(theta: jax.Array, lams_m: jax.Array, d: int):
+    """Artifact ``polyeval``: interpolated vec(L) rows at the dense grid.
+
+    (Θ[(r+1), D_pad], λ[m]) → P[m, d] (padding sliced off; d = h² in the
+    full-matrix layout).
+    """
+    from .kernels.ref import vandermonde_ref
+
+    b = vandermonde_ref(lams_m, theta.shape[0] - 1)
+    p = polyeval_k.eval_tiled(b, theta)
+    return p[:, :d]
+
+
+def solve_one_fn(l: jax.Array, g_vec: jax.Array):
+    """Solve LLᵀθ = g via the blocked-substitution kernel."""
+    return trisolve_k.trisolve(l, g_vec)
+
+
+def holdout_fn(xv: jax.Array, yv: jax.Array, theta: jax.Array):
+    """Artifact ``holdout``: (RMSE, misclassification) of one θ on the
+    validation fold."""
+    pred = xv @ theta
+    rmse = jnp.sqrt(jnp.mean((pred - yv) ** 2))
+    miscls = jnp.mean((jnp.sign(pred) != jnp.sign(yv)).astype(pred.dtype))
+    return jnp.stack([rmse, miscls])
+
+
+def chol_solve_fn(h_mat: jax.Array, lam: jax.Array, g_vec: jax.Array):
+    """Artifact ``chol_solve``: one exact baseline solve,
+    θ = (H + λI)⁻¹ g via Cholesky + blocked substitution (paper §3.2)."""
+    h = h_mat.shape[0]
+    l = cholesky_k.cholesky(h_mat + lam * jnp.eye(h, dtype=h_mat.dtype))
+    return trisolve_k.trisolve(l, g_vec)
+
+
+def sweep_fn(
+    theta: jax.Array,
+    lams_m: jax.Array,
+    g_vec: jax.Array,
+    xv: jax.Array,
+    yv: jax.Array,
+):
+    """Artifact ``sweep``: the entire piCholesky inner loop for one fold in a
+    single HLO module — the L2 fusion that keeps python (and per-λ dispatch
+    overhead) off the request path.
+
+    (Θ[(r+1),D_pad], λ[m], g[h], Xv[nv,h], yv[nv]) → errs[m, 2]:
+      1. P = B·Θ            (polyeval kernel, one pass over D for all m λ's)
+      2. L_t = tril(P_t.reshape(h,h))  (full-matrix unvec: free; tril clamps
+                                        the fitted-zero upper triangle)
+      3. θ_t = LLᵀ \\ g      (trisolve kernel)
+      4. errs_t = holdout(Xv, yv, θ_t)
+    """
+    h = g_vec.shape[0]
+    d = h * h
+    p = polyeval_fn(theta, lams_m, d)
+
+    def per_lambda(p_row):
+        l = jnp.tril(p_row.reshape(h, h))
+        th = trisolve_k.trisolve(l, g_vec)
+        return holdout_fn(xv, yv, th)
+
+    return jax.lax.map(per_lambda, p)
+
+
+def exact_sweep_fn(
+    h_mat: jax.Array,
+    lams_m: jax.Array,
+    g_vec: jax.Array,
+    xv: jax.Array,
+    yv: jax.Array,
+):
+    """Baseline counterpart of :func:`sweep_fn`: exact Cholesky at every grid
+    point (the paper's ``Chol`` algorithm) fused into one HLO module."""
+    def per_lambda(lam):
+        th = chol_solve_fn(h_mat, lam, g_vec)
+        return holdout_fn(xv, yv, th)
+
+    return jax.lax.map(per_lambda, lams_m)
+
+
+# ---------------------------------------------------------------------------
+# Convenience jitted wrappers for the python test-suite (not lowered to
+# artifacts; the artifacts are produced shape-by-shape in aot.py).
+# ---------------------------------------------------------------------------
+
+pichol_fit = jax.jit(
+    lambda h_mat, lams, r: polyfit_fn(lams, cholvec_fn(h_mat, lams), r),
+    static_argnames=("r",),
+)
+
+
+@functools.partial(jax.jit, static_argnames=("r",))
+def pichol_sweep(h_mat, lams_g, lams_m, g_vec, xv, yv, *, r=2):
+    t = cholvec_fn(h_mat, lams_g)
+    theta = polyfit_fn(lams_g, t, r)
+    return sweep_fn(theta, lams_m, g_vec, xv, yv)

@@ -1,0 +1,110 @@
+"""Canonical shape manifest shared by the AOT lowering and the rust runtime.
+
+Every artifact is lowered at a fixed shape (PJRT AOT requires static shapes).
+The rust runtime reads `artifacts/manifest.json` and refuses to feed an
+executable a tensor whose shape differs from what it was lowered at, so this
+file is the single source of truth for the interchange contract.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+#: Column tile for streaming the huge D axis (D = h(h+1)/2) through VMEM.
+TILE_D = 512
+
+#: Block size for the blocked triangular substitution kernel.
+TRISOLVE_BS = 32
+
+
+def tri_d(h: int) -> int:
+    """Number of entries in the lower triangle of an h x h factor."""
+    return h * (h + 1) // 2
+
+
+def pad_to(n: int, mult: int) -> int:
+    """Round n up to a multiple of mult."""
+    return ((n + mult - 1) // mult) * mult
+
+
+def pick_tile(dim: int, prefer: int = 128) -> int:
+    """Largest power-of-two tile <= prefer that divides dim (>=8 when possible)."""
+    t = prefer
+    while t > 8:
+        if dim % t == 0:
+            return t
+        t //= 2
+    return t if dim % t == 0 else 1
+
+
+@dataclass(frozen=True)
+class PiCholConfig:
+    """One AOT configuration: every artifact name below is lowered per config.
+
+    h       factor dimension (d+1 in the paper; h x h Hessian)
+    n       training rows fed to the gram artifact
+    n_val   validation rows fed to the sweep/holdout artifacts
+    g       number of exact Cholesky sample points (paper: 4)
+    r       polynomial degree (paper: 2)
+    m       dense lambda-grid size swept per fold (paper: 31)
+    """
+
+    h: int
+    n: int
+    n_val: int
+    g: int = 4
+    r: int = 2
+    m: int = 31
+
+    @property
+    def d_tri(self) -> int:
+        return tri_d(self.h)
+
+    @property
+    def d_vec(self) -> int:
+        """Vector length of the HLO path's factor flattening.
+
+        The HLO pipeline uses the paper's **full-matrix** strategy (§5): a
+        plain h² reshape instead of a triangle gather. Profiling on the CPU
+        PJRT backend (EXPERIMENTS.md §Perf) showed XLA's gather/scatter for
+        the D = h(h+1)/2 triangle costing ~10× the factorization itself, so
+        the Table 1 trade-off (aligned copies, 2× fit/interp flops) is the
+        right choice here. The rust-native path keeps the recursive strategy.
+        """
+        return self.h * self.h
+
+    @property
+    def d_pad(self) -> int:
+        return pad_to(self.d_vec, TILE_D)
+
+    def tag(self) -> str:
+        return f"h{self.h}_g{self.g}_r{self.r}_m{self.m}"
+
+    def manifest_entry(self) -> dict:
+        e = asdict(self)
+        e["d_tri"] = self.d_tri
+        e["d_vec"] = self.d_vec
+        e["d_pad"] = self.d_pad
+        e["vec_strategy"] = "full-matrix"
+        e["tag"] = self.tag()
+        return e
+
+
+#: Configurations lowered by `make artifacts`. h=64 keeps tests fast; h=256 is
+#: the end-to-end example's working size; h=512 exists for the perf pass.
+CONFIGS = [
+    PiCholConfig(h=64, n=512, n_val=128),
+    PiCholConfig(h=128, n=1024, n_val=256),
+    PiCholConfig(h=256, n=2048, n_val=512),
+    PiCholConfig(h=256, n=2048, n_val=512, g=6, r=3),
+    PiCholConfig(h=512, n=4096, n_val=1024),
+]
+
+#: Artifact basenames; each is lowered once per config as `<name>_<tag>.hlo.txt`.
+ARTIFACTS = [
+    "gram",        # (X[n,h], y[n])             -> (H[h,h], g[h])
+    "cholvec",     # (H, lams[g])               -> T[g, D]    exact factors, row-vec
+    "polyfit",     # (lams[g], T[g, D])         -> Theta[r+1, D_pad]
+    "polyeval",    # (Theta, lams_m[m])         -> P[m, D_pad]
+    "sweep",       # (Theta, lams_m, g[h], Xv, yv) -> errs[m, 2]  (rmse, miscls)
+    "chol_solve",  # (H, lam, g[h])             -> theta[h]   exact per-lambda solve
+    "holdout",     # (Xv, yv, theta[h])         -> (rmse, miscls)
+]

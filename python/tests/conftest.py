@@ -1,0 +1,31 @@
+"""Shared fixtures for the kernel/model test-suite."""
+
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xC0FFEE)
+
+
+def make_spd(rng, h, dtype=np.float32, cond=1e3):
+    """Random SPD matrix with controlled condition number — the Hessian stand-in."""
+    q, _ = np.linalg.qr(rng.standard_normal((h, h)))
+    eigs = np.logspace(0, np.log10(cond), h)
+    return ((q * eigs) @ q.T).astype(dtype)
+
+
+@pytest.fixture
+def spd64(rng):
+    return make_spd(rng, 64).astype(np.float32)
+
+
+def assert_close(a, b, rtol=2e-3, atol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)

@@ -1,0 +1,67 @@
+"""AOT pipeline tests: lowering produces parseable HLO + a faithful manifest."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.shapes import CONFIGS, PiCholConfig, pick_tile, pad_to, tri_d
+
+
+def test_config_invariants():
+    for cfg in CONFIGS:
+        assert cfg.g > cfg.r, "Algorithm 1 requires g > r"
+        assert cfg.d_pad >= cfg.d_tri and cfg.d_pad % 512 == 0
+        assert cfg.n % 128 == 0 and cfg.h % 32 == 0
+
+
+def test_tri_d():
+    assert tri_d(1) == 1
+    assert tri_d(64) == 64 * 65 // 2
+    assert tri_d(16384) == 16384 * 16385 // 2  # the paper's biggest D
+
+
+def test_pad_and_tile_helpers():
+    assert pad_to(100, 512) == 512
+    assert pad_to(512, 512) == 512
+    assert pick_tile(256) == 128
+    assert pick_tile(96) == 32
+    assert pick_tile(50, prefer=64) in (2, 1)  # 50 = 2·25
+
+
+def test_lowering_emits_hlo_text(tmp_path):
+    cfg = PiCholConfig(h=32, n=128, n_val=64)
+    lw = aot.lowerings(cfg)
+    info = aot.lower_one("holdout", *lw["holdout"], str(tmp_path), cfg.tag())
+    text = (tmp_path / info["file"]).read_text()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # f32 params at the manifest shapes
+    assert f"f32[{cfg.n_val},{cfg.h}]" in text
+
+
+def test_lowering_all_names_small(tmp_path):
+    """Every artifact name lowers without error at a tiny config."""
+    cfg = PiCholConfig(h=32, n=128, n_val=64)
+    for name, (fn, specs) in aot.lowerings(cfg).items():
+        info = aot.lower_one(name, fn, specs, str(tmp_path), cfg.tag())
+        assert info["bytes"] > 100, name
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_matches_files():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        manifest = json.load(f)
+    for cfg in manifest["configs"]:
+        for name, info in cfg["files"].items():
+            path = os.path.join(root, info["file"])
+            assert os.path.exists(path), info["file"]
+            assert os.path.getsize(path) == info["bytes"]

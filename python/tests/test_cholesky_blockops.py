@@ -1,0 +1,96 @@
+"""blockops primitives and the Pallas blocked-Cholesky kernel vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import blockops, cholesky as chol_k
+
+from .conftest import assert_close, make_spd
+
+
+def rand_lower(rng, s, scale=0.3):
+    a = rng.standard_normal((s, s))
+    return (np.tril(a, -1) * scale + np.diag(np.abs(a.diagonal()) + s)).astype(np.float32)
+
+
+@pytest.mark.parametrize("s", [1, 2, 5, 16, 32])
+def test_chol_unblocked(rng, s):
+    a = make_spd(rng, s, cond=1e3).astype(np.float64)
+    l = np.asarray(blockops.chol_unblocked(jnp.asarray(a, jnp.float32)))
+    expect = np.linalg.cholesky(a)
+    np.testing.assert_allclose(l, expect, rtol=5e-3, atol=5e-3)
+    # strictly lower-triangular output
+    assert np.allclose(np.triu(l, 1), 0.0)
+
+
+@pytest.mark.parametrize("s,k", [(8, 1), (16, 4), (32, 3)])
+def test_trsolve_lower_and_upper_t(rng, s, k):
+    l = rand_lower(rng, s)
+    b = rng.standard_normal((s, k)).astype(np.float32)
+    x = np.asarray(blockops.trsolve_lower(jnp.asarray(l), jnp.asarray(b)))
+    np.testing.assert_allclose(l @ x, b, rtol=1e-3, atol=1e-4)
+    y = np.asarray(blockops.trsolve_upper_t(jnp.asarray(l), jnp.asarray(b)))
+    np.testing.assert_allclose(l.T @ y, b, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,s", [(4, 8), (16, 16), (40, 32)])
+def test_trsolve_right_lt(rng, m, s):
+    l = rand_lower(rng, s)
+    c = rng.standard_normal((m, s)).astype(np.float32)
+    x = np.asarray(blockops.trsolve_right_lt(jnp.asarray(c), jnp.asarray(l)))
+    np.testing.assert_allclose(x @ l.T, c, rtol=1e-3, atol=1e-4)
+
+
+def test_spd_solve(rng):
+    a = make_spd(rng, 4, cond=100.0)
+    b = rng.standard_normal((4, 6)).astype(np.float32)
+    x = np.asarray(blockops.spd_solve(jnp.asarray(a), jnp.asarray(b)))
+    expect = np.linalg.solve(a.astype(np.float64), b.astype(np.float64))
+    np.testing.assert_allclose(x, expect, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("h", [32, 64, 96, 128])
+def test_pallas_cholesky_matches_numpy(rng, h):
+    a = make_spd(rng, h, cond=1e4).astype(np.float64)
+    l = np.asarray(chol_k.cholesky(jnp.asarray(a, jnp.float32)))
+    expect = np.linalg.cholesky(a)
+    np.testing.assert_allclose(l, expect, rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("h", [17, 33, 50])
+def test_pallas_cholesky_ragged(rng, h):
+    """Identity-padding path for h not a multiple of the panel width."""
+    a = make_spd(rng, h, cond=1e3).astype(np.float64)
+    l = np.asarray(chol_k.cholesky(jnp.asarray(a, jnp.float32)))
+    expect = np.linalg.cholesky(a)
+    np.testing.assert_allclose(l, expect, rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("bs", [8, 16, 32, 64])
+def test_pallas_cholesky_block_invariance(rng, bs):
+    a = make_spd(rng, 64, cond=1e3).astype(np.float64)
+    l = np.asarray(chol_k.cholesky(jnp.asarray(a, jnp.float32), bs=bs))
+    expect = np.linalg.cholesky(a)
+    np.testing.assert_allclose(l, expect, rtol=2e-2, atol=2e-3)
+
+
+def test_pallas_cholesky_reconstruction(rng):
+    a = make_spd(rng, 96, cond=1e4)
+    l = np.asarray(chol_k.cholesky(jnp.asarray(a)), dtype=np.float64)
+    rec = l @ l.T
+    np.testing.assert_allclose(rec, a.astype(np.float64), rtol=1e-3, atol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(h=st.integers(min_value=2, max_value=70), seed=st.integers(min_value=0, max_value=2**31))
+def test_pallas_cholesky_hypothesis(h, seed):
+    r = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(r.standard_normal((h, h)))
+    eigs = np.logspace(0, 2, h)
+    a = (q * eigs) @ q.T
+    l = np.asarray(chol_k.cholesky(jnp.asarray(a, jnp.float32)), dtype=np.float64)
+    rec = l @ l.T
+    rel = np.abs(rec - a).max() / np.abs(a).max()
+    assert rel < 1e-3, f"h={h}: reconstruction rel err {rel}"

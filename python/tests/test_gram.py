@@ -1,0 +1,70 @@
+"""gram kernel vs pure-jnp oracle: exact-tile, ragged, dtype and tile sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram as gram_k
+from compile.kernels import ref
+
+from .conftest import assert_close
+
+
+@pytest.mark.parametrize("n,h", [(128, 64), (256, 128), (512, 64), (96, 48)])
+def test_gram_matches_ref(rng, n, h):
+    x = rng.standard_normal((n, h)).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    hm, gv = gram_k.gram(jnp.asarray(x), jnp.asarray(y))
+    hr, gr = ref.gram_ref(jnp.asarray(x), jnp.asarray(y))
+    assert_close(hm, hr, rtol=5e-3, atol=5e-3)
+    assert_close(gv, gr, rtol=5e-3, atol=5e-3)
+
+
+def test_gram_symmetry(rng):
+    x = rng.standard_normal((256, 64)).astype(np.float32)
+    hm, _ = gram_k.gram(jnp.asarray(x), jnp.asarray(x[:, 0]))
+    assert_close(hm, jnp.asarray(np.asarray(hm)).T)
+
+
+def test_gram_psd(rng):
+    """XᵀX must be positive semi-definite."""
+    x = rng.standard_normal((128, 32)).astype(np.float32)
+    hm, _ = gram_k.gram(jnp.asarray(x), jnp.asarray(x[:, 0]))
+    eigs = np.linalg.eigvalsh(np.asarray(hm, dtype=np.float64))
+    assert eigs.min() > -1e-3
+
+
+@pytest.mark.parametrize("tile", [32, 64, 128])
+def test_gram_tile_invariance(rng, tile):
+    """Result must not depend on the chosen block shape."""
+    x = rng.standard_normal((256, 128)).astype(np.float32)
+    y = rng.standard_normal(256).astype(np.float32)
+    hm, gv = gram_k.gram(jnp.asarray(x), jnp.asarray(y), tile_h=tile, tile_k=tile)
+    hr, gr = ref.gram_ref(jnp.asarray(x), jnp.asarray(y))
+    assert_close(hm, hr, rtol=5e-3, atol=5e-3)
+    assert_close(gv, gr, rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=3, max_value=200),
+    h=st.integers(min_value=2, max_value=90),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_gram_hypothesis_ragged_shapes(n, h, seed):
+    """Padding path: arbitrary (n, h), including shapes far from any tile."""
+    r = np.random.default_rng(seed)
+    x = r.standard_normal((n, h)).astype(np.float32)
+    y = r.standard_normal(n).astype(np.float32)
+    hm, gv = gram_k.gram(jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(hm), x.T @ x, rtol=2e-2, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(gv), x.T @ y, rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_gram_dtype_preserved(rng, dtype):
+    x = rng.standard_normal((64, 32)).astype(dtype)
+    y = rng.standard_normal(64).astype(dtype)
+    hm, gv = gram_k.gram(jnp.asarray(x), jnp.asarray(y))
+    assert hm.dtype == dtype and gv.dtype == dtype

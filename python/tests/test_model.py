@@ -1,0 +1,115 @@
+"""L2 graph tests: shapes, numerics and the fused fold sweep end-to-end."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile.shapes import TILE_D, pad_to, tri_d
+
+from .conftest import assert_close, make_spd
+
+
+@pytest.fixture
+def small_problem(rng):
+    """A tiny but honest ridge problem: n=256, h=32, with a meaningful λ*."""
+    n, h = 256, 32
+    x = rng.standard_normal((n, h)).astype(np.float32) / np.sqrt(h)
+    w_true = rng.standard_normal(h).astype(np.float32)
+    y = np.sign(x @ w_true + 0.5 * rng.standard_normal(n)).astype(np.float32)
+    return x, y
+
+
+def test_gram_fn(small_problem):
+    x, y = small_problem
+    hm, gv = model.gram_fn(jnp.asarray(x), jnp.asarray(y))
+    assert hm.shape == (32, 32) and gv.shape == (32,)
+    assert_close(hm, x.T @ x, rtol=1e-2, atol=1e-2)
+    assert_close(gv, x.T @ y, rtol=1e-2, atol=1e-2)
+
+
+def test_cholvec_fn_rows_are_exact_factors(rng):
+    h, g = 24, 4
+    hm = make_spd(rng, h)
+    lams = np.array([0.01, 0.1, 0.5, 1.0], np.float32)
+    t = model.cholvec_fn(jnp.asarray(hm), jnp.asarray(lams))
+    # full-matrix vectorization: row s is the flattened h×h factor
+    assert t.shape == (g, h * h)
+    for s, lam in enumerate(lams):
+        l = np.linalg.cholesky(hm.astype(np.float64) + lam * np.eye(h))
+        assert_close(t[s], l.reshape(-1), rtol=1e-2, atol=1e-3)
+
+
+def test_polyfit_fn_padded_output(rng):
+    g, r, h = 4, 2, 32
+    d = tri_d(h)
+    lams = np.array([0.01, 0.1, 0.5, 1.0], np.float32)
+    t = rng.standard_normal((g, d)).astype(np.float32)
+    theta = model.polyfit_fn(jnp.asarray(lams), jnp.asarray(t), r)
+    assert theta.shape == (r + 1, pad_to(d, TILE_D))
+    theta_ref = ref.polyfit_ref(jnp.asarray(lams), jnp.asarray(t), r)
+    assert_close(theta[:, :d], theta_ref, rtol=2e-2, atol=2e-3)
+    # padding columns must be exactly zero (zero targets → zero coefficients)
+    np.testing.assert_array_equal(np.asarray(theta[:, d:]), 0.0)
+
+
+def test_chol_solve_fn_solves_system(rng):
+    h = 32
+    hm = make_spd(rng, h)
+    gv = rng.standard_normal(h).astype(np.float32)
+    lam = jnp.float32(0.3)
+    th = np.asarray(model.chol_solve_fn(jnp.asarray(hm), lam, jnp.asarray(gv)))
+    a = hm.astype(np.float64) + 0.3 * np.eye(h)
+    expected = np.linalg.solve(a, gv.astype(np.float64))
+    np.testing.assert_allclose(th, expected, rtol=1e-2, atol=1e-3)
+
+
+def test_holdout_fn_metrics(rng):
+    nv, h = 64, 16
+    xv = rng.standard_normal((nv, h)).astype(np.float32)
+    th = rng.standard_normal(h).astype(np.float32)
+    yv = np.sign(xv @ th).astype(np.float32)
+    out = np.asarray(model.holdout_fn(jnp.asarray(xv), jnp.asarray(yv), jnp.asarray(th)))
+    assert out.shape == (2,)
+    assert out[1] == 0.0  # θ perfectly separates its own labels
+    pred = xv @ th
+    assert_close(out[0], np.sqrt(np.mean((pred - yv) ** 2)), rtol=1e-3, atol=1e-4)
+
+
+def test_sweep_fn_matches_exact_sweep_near_center(rng, small_problem):
+    """The fused piCholesky sweep must track the exact sweep closely within the
+    sampled λ interval — this is the paper's Figures 7/8 in miniature."""
+    x, y = small_problem
+    n, h = x.shape
+    xv, yv = x[:64], y[:64]
+    xt, yt = x[64:], y[64:]
+    hm = (xt.T @ xt).astype(np.float32)
+    gv = (xt.T @ yt).astype(np.float32)
+
+    lams_g = np.array([0.02, 0.2, 0.6, 1.0], np.float32)
+    lams_m = np.linspace(0.02, 1.0, 15).astype(np.float32)
+
+    t = model.cholvec_fn(jnp.asarray(hm), jnp.asarray(lams_g))
+    theta = model.polyfit_fn(jnp.asarray(lams_g), t, 2)
+    errs_pi = np.asarray(
+        model.sweep_fn(theta, jnp.asarray(lams_m), jnp.asarray(gv), jnp.asarray(xv), jnp.asarray(yv))
+    )
+    errs_exact = np.asarray(
+        model.exact_sweep_fn(
+            jnp.asarray(hm), jnp.asarray(lams_m), jnp.asarray(gv), jnp.asarray(xv), jnp.asarray(yv)
+        )
+    )
+    assert errs_pi.shape == (15, 2) and errs_exact.shape == (15, 2)
+    # RMSE curves agree to a few percent inside the interpolation interval
+    np.testing.assert_allclose(errs_pi[:, 0], errs_exact[:, 0], rtol=0.05, atol=5e-3)
+    # and crucially the argmin λ agrees (the paper's success criterion)
+    assert abs(int(np.argmin(errs_pi[:, 0])) - int(np.argmin(errs_exact[:, 0]))) <= 1
+
+
+def test_pichol_fit_wrapper(rng):
+    h = 16
+    hm = make_spd(rng, h)
+    lams = np.array([0.05, 0.2, 0.6, 1.0], np.float32)
+    theta = model.pichol_fit(jnp.asarray(hm), jnp.asarray(lams), 2)
+    assert theta.shape[0] == 3

@@ -1,0 +1,21 @@
+//! Ablation benches over the design choices DESIGN.md §4 calls out:
+//! sample count g × degree r, Cholesky panel width, recursive-vectorization
+//! base threshold h₀.
+//!
+//! `cargo bench --bench bench_ablations`
+
+use picholesky::experiments::ablations;
+
+fn main() {
+    let gr = ablations::run_gr(96, 0xAB1A);
+    gr.print();
+    gr.write_to("results/bench").expect("write results");
+
+    let block = ablations::run_chol_block(768, &[8, 16, 32, 64, 128, 256], 3, 0xAB1B);
+    block.print();
+    block.write_to("results/bench").expect("write results");
+
+    let h0 = ablations::run_recursive_h0(2048, &[4, 8, 16, 32, 64, 128, 256, 512], 10, 0xAB1C);
+    h0.print();
+    h0.write_to("results/bench").expect("write results");
+}

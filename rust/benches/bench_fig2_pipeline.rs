@@ -1,0 +1,14 @@
+//! Regenerates **Figure 2**: % of pipeline time in Hessian build vs the
+//! cross-validation Cholesky sweep vs everything else, over (n, h).
+//!
+//! `cargo bench --bench bench_fig2_pipeline`
+
+use picholesky::experiments::fig2;
+
+fn main() {
+    let ns = [512, 1024, 2048, 4096];
+    let hs = [64, 128, 256];
+    let report = fig2::run(&ns, &hs, 31, 0xF162);
+    report.print();
+    report.write_to("results/bench").expect("write results");
+}

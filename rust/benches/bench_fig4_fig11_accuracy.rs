@@ -1,0 +1,19 @@
+//! Regenerates **Figure 4** (exact vs interpolated factor-entry curves over
+//! λ) and **Figure 11** (NRMSE of the interpolation vs λ).
+//!
+//! `cargo bench --bench bench_fig4_fig11_accuracy`
+
+use picholesky::experiments::{fig11, fig4};
+
+fn main() {
+    // paper Figure 4 setting: 2nd-order polynomials from 6 sample λ's,
+    // evaluated on a 50-point dense grid
+    let f4 = fig4::run(128, 6, 2, 50, 0xF164);
+    f4.print();
+    f4.write_to("results/bench").expect("write results");
+
+    // paper Figure 11 setting: g=4, r=2 over the 31-point grid
+    let f11 = fig11::run(128, 4, 2, 31, 0xF111);
+    f11.print();
+    f11.write_to("results/bench").expect("write results");
+}

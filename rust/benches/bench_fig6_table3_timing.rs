@@ -1,0 +1,22 @@
+//! Regenerates **Figure 6** (total CV seconds of the six algorithms vs h on
+//! MNIST-like data) and **Table 3** (per-fold seconds at the largest h across
+//! all four datasets).
+//!
+//! `cargo bench --bench bench_fig6_table3_timing`
+
+use picholesky::coordinator::Coordinator;
+use picholesky::cv::CvConfig;
+use picholesky::experiments::fig6_table3;
+
+fn main() {
+    let coord = Coordinator::default();
+    let cfg = CvConfig::default(); // paper: k=5 folds, q=31, g=4, r=2
+
+    let fig6 = fig6_table3::run_fig6(&coord, &[64, 128, 192], 6, &cfg);
+    fig6.print();
+    fig6.write_to("results/bench").expect("write results");
+
+    let table3 = fig6_table3::run_table3(&coord, 768, 192, &cfg);
+    table3.print();
+    table3.write_to("results/bench").expect("write results");
+}

@@ -1,0 +1,23 @@
+//! Regenerates **Figures 7-8** (hold-out error vs λ for the six algorithms
+//! on all four datasets) and **Table 4** (min hold-out error + selected λ).
+//!
+//! `cargo bench --bench bench_fig7_table4_holdout`
+
+use picholesky::coordinator::Coordinator;
+use picholesky::cv::CvConfig;
+use picholesky::data::synthetic::DatasetKind;
+use picholesky::experiments::fig7_table4;
+
+fn main() {
+    let coord = Coordinator::default();
+    let cfg = CvConfig::default();
+    let (n, h) = (640, 160);
+
+    let fig7 = fig7_table4::run_fig7_8(&coord, &DatasetKind::all(), n, h, &cfg);
+    fig7.print();
+    fig7.write_to("results/bench").expect("write results");
+
+    let table4 = fig7_table4::run_table4(&coord, n, h, &cfg);
+    table4.print();
+    table4.write_to("results/bench").expect("write results");
+}

@@ -1,0 +1,26 @@
+//! Regenerates **Figure 9** (|log₁₀ λ_sel/λ_opt| vs wall-time for
+//! Chol/PIChol/MChol) and **Figure 10** (PINRMSE vs PIChol interpolation
+//! quality across datasets).
+//!
+//! `cargo bench --bench bench_fig9_fig10_convergence`
+
+use picholesky::coordinator::Coordinator;
+use picholesky::cv::CvConfig;
+use picholesky::data::synthetic::DatasetKind;
+use picholesky::experiments::{fig10, fig9};
+
+fn main() {
+    let cfg = CvConfig::default();
+
+    // Figure 9 on the two datasets the paper uses (COIL-100, Caltech-101)
+    for kind in [DatasetKind::CoilLike, DatasetKind::Caltech101Like] {
+        let rep = fig9::run(kind, 640, 160, &cfg, 0xF169);
+        rep.print();
+        rep.write_to("results/bench").expect("write results");
+    }
+
+    let coord = Coordinator::default();
+    let f10 = fig10::run(&coord, &DatasetKind::all(), 512, 96, &cfg);
+    f10.print();
+    f10.write_to("results/bench").expect("write results");
+}

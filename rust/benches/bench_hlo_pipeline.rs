@@ -1,0 +1,100 @@
+//! Perf harness for the AOT request path: per-artifact wall times at each
+//! lowered shape config, plus the piCholesky-vs-exact fold comparison.
+//! This is the measurement tool behind EXPERIMENTS.md §Perf (L2).
+//!
+//! `cargo bench --bench bench_hlo_pipeline` (requires `make artifacts`)
+
+use picholesky::coordinator::{HloFold, HloPipeline, Metrics};
+use picholesky::data::synthetic::{DatasetKind, SyntheticDataset};
+use picholesky::runtime::{Engine, Tensor};
+use picholesky::util::fmt_secs;
+
+fn main() {
+    let engine = Engine::new("artifacts").expect("run `make artifacts` first");
+    println!("platform: {}", engine.platform());
+
+    for h in [64usize, 128, 256] {
+        let Ok(cfg) = engine.config(h, Some(4), Some(2)) else {
+            continue;
+        };
+        let total = cfg.n + cfg.n_val;
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, total, cfg.h, 99);
+        let fold = HloFold {
+            xt: ds.x.slice(0, cfg.n, 0, cfg.h),
+            yt: ds.y[..cfg.n].to_vec(),
+            xv: ds.x.slice(cfg.n, total, 0, cfg.h),
+            yv: ds.y[cfg.n..].to_vec(),
+        };
+        let metrics = Metrics::new();
+        let pipe = HloPipeline::new(&engine, cfg, &metrics);
+        pipe.warmup().expect("warmup");
+
+        let (lo, hi) = ds.kind.lambda_range();
+        let grid = pipe.grid(lo, hi);
+        let sample = pipe.sample_lambdas(&grid);
+
+        // per-stage timing over `reps` runs
+        let reps = 3;
+        let (mut h_t, mut g_t) = pipe.gram(&fold).expect("gram");
+        for _ in 0..reps {
+            let (a, b) = pipe.gram(&fold).expect("gram");
+            h_t = a;
+            g_t = b;
+        }
+        let mut theta = pipe.fit(&h_t, &sample).expect("fit");
+        for _ in 0..reps {
+            theta = pipe.fit(&h_t, &sample).expect("fit");
+        }
+        for _ in 0..reps {
+            pipe.sweep(&theta, &grid, &g_t, &fold).expect("sweep");
+            pipe.exact_sweep(&h_t, &grid, &g_t, &fold).expect("exact");
+        }
+        // single-λ exact solve for the per-factorization cost
+        for _ in 0..reps {
+            engine
+                .run(
+                    cfg,
+                    "chol_solve",
+                    &[h_t.clone(), Tensor::scalar(0.1), g_t.clone()],
+                )
+                .expect("chol_solve");
+        }
+
+        println!("\n== h = {h} (n = {}, D = {}) ==", cfg.n, cfg.d_tri);
+        for (name, calls) in [
+            ("hlo.gram", reps + 1),
+            ("hlo.cholvec", reps + 1),
+            ("hlo.polyfit", reps + 1),
+            ("hlo.sweep", reps),
+            ("hlo.exact_sweep", reps),
+        ] {
+            println!(
+                "  {name:<18} {} per call",
+                fmt_secs(metrics.seconds(name) / calls as f64)
+            );
+        }
+        let per_chol_solve = {
+            // chol_solve isn't in the pipeline metrics; time directly
+            let t0 = std::time::Instant::now();
+            engine
+                .run(
+                    cfg,
+                    "chol_solve",
+                    &[h_t.clone(), Tensor::scalar(0.1), g_t.clone()],
+                )
+                .expect("chol_solve");
+            t0.elapsed().as_secs_f64()
+        };
+        println!("  chol_solve (1 λ)   {} per call", fmt_secs(per_chol_solve));
+        let sweep_s = metrics.seconds("hlo.sweep") / reps as f64;
+        let exact_s = metrics.seconds("hlo.exact_sweep") / reps as f64;
+        let fit_s = (metrics.seconds("hlo.cholvec") + metrics.seconds("hlo.polyfit"))
+            / (reps + 1) as f64;
+        println!(
+            "  fold totals: pichol fit+sweep = {}, exact sweep = {} ({:.2}× ratio)",
+            fmt_secs(fit_s + sweep_s),
+            fmt_secs(exact_s),
+            exact_s / (fit_s + sweep_s)
+        );
+    }
+}

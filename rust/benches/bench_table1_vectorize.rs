@@ -1,0 +1,28 @@
+//! Regenerates **Table 1**: vec / fit / interp seconds for row-wise,
+//! full-matrix and recursive vectorization over a dimension sweep.
+//!
+//! `cargo bench --bench bench_table1_vectorize`
+//! (paper dims 1024–16384; defaults here scale to a 1-core box, override
+//! with PICHOL_BENCH_DIMS="256,512,1024").
+
+use picholesky::experiments::table1;
+
+fn dims_from_env(default: &[usize]) -> Vec<usize> {
+    std::env::var("PICHOL_BENCH_DIMS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|x| x.trim().parse().ok())
+                .collect()
+        })
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn main() {
+    let dims = dims_from_env(&[256, 512, 1024, 2048]);
+    // paper setting: g=4 factors, 31-point interpolation grid
+    let report = table1::run(&dims, 4, 31, 0xBE7C);
+    report.print();
+    report.write_to("results/bench").expect("write results");
+}

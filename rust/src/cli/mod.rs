@@ -1,0 +1,138 @@
+//! Command-line interface for the `pichol` launcher.
+//!
+//! No `clap` in the offline crate set — a small hand-rolled parser covers
+//! the subcommand + `--flag value` grammar:
+//!
+//! ```text
+//! pichol cv        --dataset mnist --h 128 --n 1024 --solver pichol [...]
+//! pichol compare   --dataset mnist --h 96  --n 512     # all six algorithms
+//! pichol experiments --out results [--fast]            # every table/figure
+//! pichol bound     --h 16 --lambda-c 0.5               # Theorem 4.7 demo
+//! pichol info      [--artifacts artifacts]             # manifest + platform
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed invocation: subcommand + flags.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let command = argv
+            .first()
+            .cloned()
+            .ok_or_else(|| anyhow!("missing subcommand\n{}", USAGE))?;
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(name) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument '{a}'\n{USAGE}");
+            };
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                switches.push(name.to_string());
+                i += 1;
+            }
+        }
+        Ok(Args {
+            command,
+            flags,
+            switches,
+        })
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+pichol — piCholesky cross-validation coordinator
+
+USAGE:
+  pichol <command> [--flag value]...
+
+COMMANDS:
+  cv           run one algorithm's k-fold CV
+               --dataset mnist|coil|caltech101|caltech256  --solver chol|pichol|mchol|svd|tsvd|rsvd|pinrmse
+               --h <dim> --n <samples> --folds <k> --grid <q> --g <samples> --degree <r>
+               --seed <u64> --config <file.toml>
+  compare      run all six algorithms on one dataset (Figure 6 row)
+               flags as for `cv`
+  hlo          run one fold through the AOT HLO pipeline (requires `make artifacts`)
+               --h 64|128|256|512 --dataset mnist --seed <u64> --artifacts <dir> --exact
+  experiments  regenerate every paper table/figure into --out <dir> (--fast shrinks sizes)
+  bound        evaluate the Theorem 4.4/4.7 error bound --h <dim> --lambda-c <f64>
+  info         show PJRT platform + artifact manifest --artifacts <dir>
+  help         this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = Args::parse(&argv(&["cv", "--h", "128", "--fast", "--seed", "7"])).unwrap();
+        assert_eq!(a.command, "cv");
+        assert_eq!(a.usize_flag("h", 0).unwrap(), 128);
+        assert_eq!(a.usize_flag("seed", 0).unwrap(), 7);
+        assert!(a.switch("fast"));
+        assert!(!a.switch("slow"));
+        assert_eq!(a.usize_flag("missing", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(&argv(&["cv", "oops"])).is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Args::parse(&[]).is_err());
+    }
+
+    #[test]
+    fn bad_int_flag() {
+        let a = Args::parse(&argv(&["cv", "--h", "many"])).unwrap();
+        assert!(a.usize_flag("h", 1).is_err());
+    }
+}

@@ -1,0 +1,316 @@
+//! Experiment configuration: a TOML-subset parser plus the typed
+//! [`ExperimentConfig`] the CLI and benches consume.
+//!
+//! The offline crate set has no `toml`/`serde`, so [`parse_toml`] supports
+//! the slice actually used by experiment files: `[section]` headers,
+//! `key = value` with string/int/float/bool/array values, `#` comments.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+use crate::cv::{CvConfig, Metric};
+use crate::data::synthetic::DatasetKind;
+
+/// A parsed scalar-or-array TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key → value` map.
+pub type TomlDoc = BTreeMap<String, TomlValue>;
+
+fn parse_value(raw: &str) -> Result<TomlValue> {
+    let raw = raw.trim();
+    if raw.starts_with('"') && raw.ends_with('"') && raw.len() >= 2 {
+        return Ok(TomlValue::Str(raw[1..raw.len() - 1].to_string()));
+    }
+    if raw == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if raw.starts_with('[') && raw.ends_with(']') {
+        let inner = &raw[1..raw.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value '{raw}'")
+}
+
+/// Parse a TOML-subset document into a flat `section.key` map.
+pub fn parse_toml(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::new();
+    let mut section = String::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = match line.find('#') {
+            // only strip comments outside strings (good enough for configs)
+            Some(i) if !line[..i].contains('"') || line[..i].matches('"').count() % 2 == 0 => {
+                &line[..i]
+            }
+            _ => line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') && line.ends_with(']') {
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow!("line {}: expected 'key = value'", lineno + 1))?;
+        let key = line[..eq].trim();
+        let value = parse_value(&line[eq + 1..])
+            .with_context(|| format!("line {}", lineno + 1))?;
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.insert(full_key, value);
+    }
+    Ok(doc)
+}
+
+/// Typed experiment configuration (CLI + config-file driven).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Dataset to imitate.
+    pub dataset: DatasetKind,
+    /// Number of samples n.
+    pub n: usize,
+    /// Working dimension h = d+1.
+    pub h: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Cross-validation settings.
+    pub cv: CvConfig,
+    /// Worker threads (0 = auto).
+    pub workers: usize,
+    /// Artifacts directory for the HLO path.
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            dataset: DatasetKind::MnistLike,
+            n: 1024,
+            h: 128,
+            seed: 42,
+            cv: CvConfig::default(),
+            workers: 0,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML-subset file; missing keys keep defaults.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        let doc = parse_toml(&text)?;
+        Self::from_doc(&doc)
+    }
+
+    /// Build from a parsed document.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let mut cfg = Self::default();
+        if let Some(v) = doc.get("dataset").and_then(TomlValue::as_str) {
+            cfg.dataset = parse_dataset(v)?;
+        }
+        if let Some(v) = doc.get("n").and_then(TomlValue::as_usize) {
+            cfg.n = v;
+        }
+        if let Some(v) = doc.get("h").and_then(TomlValue::as_usize) {
+            cfg.h = v;
+        }
+        if let Some(v) = doc.get("seed").and_then(TomlValue::as_usize) {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = doc.get("workers").and_then(TomlValue::as_usize) {
+            cfg.workers = v;
+        }
+        if let Some(v) = doc.get("artifacts_dir").and_then(TomlValue::as_str) {
+            cfg.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = doc.get("cv.k_folds").and_then(TomlValue::as_usize) {
+            cfg.cv.k_folds = v;
+        }
+        if let Some(v) = doc.get("cv.q_grid").and_then(TomlValue::as_usize) {
+            cfg.cv.q_grid = v;
+        }
+        if let Some(v) = doc.get("cv.g_samples").and_then(TomlValue::as_usize) {
+            cfg.cv.g_samples = v;
+        }
+        if let Some(v) = doc.get("cv.degree").and_then(TomlValue::as_usize) {
+            cfg.cv.degree = v;
+        }
+        if let Some(v) = doc.get("cv.metric").and_then(TomlValue::as_str) {
+            cfg.cv.metric = match v {
+                "rmse" => Metric::Rmse,
+                "misclass" => Metric::Misclass,
+                other => bail!("unknown metric '{other}'"),
+            };
+        }
+        let lo = doc.get("cv.lambda_min").and_then(TomlValue::as_f64);
+        let hi = doc.get("cv.lambda_max").and_then(TomlValue::as_f64);
+        if let (Some(lo), Some(hi)) = (lo, hi) {
+            cfg.cv.lambda_range = Some((lo, hi));
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check invariants (Algorithm 1 preconditions etc.).
+    pub fn validate(&self) -> Result<()> {
+        if self.cv.g_samples <= self.cv.degree {
+            bail!(
+                "cv.g_samples ({}) must exceed cv.degree ({}) — Algorithm 1 needs g > r",
+                self.cv.g_samples,
+                self.cv.degree
+            );
+        }
+        if self.cv.k_folds < 2 {
+            bail!("cv.k_folds must be ≥ 2");
+        }
+        if self.h < 2 || self.n < self.cv.k_folds {
+            bail!("need h ≥ 2 and n ≥ k_folds");
+        }
+        if let Some((lo, hi)) = self.cv.lambda_range {
+            if !(lo > 0.0 && hi > lo) {
+                bail!("lambda range must satisfy 0 < lo < hi");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse a dataset name (paper names and shorthands).
+pub fn parse_dataset(s: &str) -> Result<DatasetKind> {
+    match s.to_ascii_lowercase().as_str() {
+        "mnist" | "mnist-like" => Ok(DatasetKind::MnistLike),
+        "coil" | "coil100" | "coil100-like" => Ok(DatasetKind::CoilLike),
+        "caltech101" | "caltech101-like" => Ok(DatasetKind::Caltech101Like),
+        "caltech256" | "caltech256-like" => Ok(DatasetKind::Caltech256Like),
+        other => bail!("unknown dataset '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse_toml(
+            r#"
+            # experiment
+            dataset = "coil"
+            n = 512
+            [cv]
+            k_folds = 3
+            lambda_min = 0.001
+            lambda_max = 1.0
+            metric = "rmse"
+            grid = [1, 2, 3]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("dataset").unwrap().as_str(), Some("coil"));
+        assert_eq!(doc.get("n").unwrap().as_usize(), Some(512));
+        assert_eq!(doc.get("cv.k_folds").unwrap().as_usize(), Some(3));
+        assert_eq!(doc.get("cv.lambda_min").unwrap().as_f64(), Some(0.001));
+        match doc.get("cv.grid").unwrap() {
+            TomlValue::Array(a) => assert_eq!(a.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn experiment_config_from_doc() {
+        let doc = parse_toml(
+            r#"
+            dataset = "caltech101"
+            h = 64
+            [cv]
+            g_samples = 5
+            degree = 3
+            "#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.dataset, DatasetKind::Caltech101Like);
+        assert_eq!(cfg.h, 64);
+        assert_eq!(cfg.cv.g_samples, 5);
+        assert_eq!(cfg.cv.degree, 3);
+    }
+
+    #[test]
+    fn validation_rejects_g_le_r() {
+        let doc = parse_toml("[cv]\ng_samples = 2\ndegree = 2\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_lambda_range() {
+        let doc = parse_toml("[cv]\nlambda_min = 1.0\nlambda_max = 0.5\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn unknown_metric_rejected() {
+        let doc = parse_toml("[cv]\nmetric = \"accuracy\"\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn dataset_parse_aliases() {
+        assert!(parse_dataset("MNIST").is_ok());
+        assert!(parse_dataset("coil100-like").is_ok());
+        assert!(parse_dataset("imagenet").is_err());
+    }
+}

@@ -1,0 +1,235 @@
+//! The AOT request path: one cross-validation fold entirely through the
+//! compiled HLO artifacts (python is long gone by now).
+//!
+//! Pipeline per fold (artifact names in backticks):
+//!
+//! ```text
+//!   `gram`     (X_t, y_t)            → (H, g)          O(n d²), Pallas tiles
+//!   `cholvec`  (H, λ_sample[g])      → T[g, D]         the g exact factors
+//!   `polyfit`  (λ_sample, T)         → Θ[(r+1), D_pad] Algorithm 1
+//!   `sweep`    (Θ, λ_grid[m], g, Xv, yv) → errs[m, 2]  interp+solve+holdout,
+//!                                                      all m λ's in one call
+//! ```
+//!
+//! plus `exact_sweep` (H, λ_grid, g, Xv, yv) → errs for the Chol baseline.
+//! The fused `sweep` artifact is the L2-level batching win: one executable
+//! launch serves the entire grid, so the per-λ dispatch cost the paper
+//! attributes to BLAS-3 batching shows up here as a single PJRT execution.
+
+use anyhow::Result;
+
+use super::metrics::Metrics;
+use crate::linalg::matrix::Matrix;
+use crate::runtime::{ConfigEntry, Engine, Tensor};
+use crate::util::{logspace, subsample_indices};
+
+/// Per-λ hold-out results from one fold sweep.
+#[derive(Clone, Debug)]
+pub struct HloSweepResult {
+    pub grid: Vec<f64>,
+    /// RMSE per grid λ.
+    pub rmse: Vec<f64>,
+    /// Misclassification rate per grid λ.
+    pub miscls: Vec<f64>,
+    /// Index of the best (RMSE-minimizing) λ.
+    pub best_idx: usize,
+}
+
+impl HloSweepResult {
+    fn from_errs(grid: Vec<f64>, errs: &Tensor) -> Result<Self> {
+        anyhow::ensure!(
+            errs.dims == vec![grid.len(), 2],
+            "sweep output shape {:?}",
+            errs.dims
+        );
+        let rmse: Vec<f64> = (0..grid.len()).map(|i| errs.data[2 * i] as f64).collect();
+        let miscls: Vec<f64> = (0..grid.len())
+            .map(|i| errs.data[2 * i + 1] as f64)
+            .collect();
+        let best_idx = rmse
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Ok(Self {
+            grid,
+            rmse,
+            miscls,
+            best_idx,
+        })
+    }
+
+    pub fn best_lambda(&self) -> f64 {
+        self.grid[self.best_idx]
+    }
+
+    pub fn best_rmse(&self) -> f64 {
+        self.rmse[self.best_idx]
+    }
+}
+
+/// One fold's data, shaped exactly as the AOT config expects.
+pub struct HloFold {
+    pub xt: Matrix,
+    pub yt: Vec<f64>,
+    pub xv: Matrix,
+    pub yv: Vec<f64>,
+}
+
+impl HloFold {
+    fn validate(&self, cfg: &ConfigEntry) -> Result<()> {
+        anyhow::ensure!(
+            self.xt.rows() == cfg.n && self.xt.cols() == cfg.h,
+            "train split {}×{} != lowered {}×{}",
+            self.xt.rows(),
+            self.xt.cols(),
+            cfg.n,
+            cfg.h
+        );
+        anyhow::ensure!(
+            self.xv.rows() == cfg.n_val && self.xv.cols() == cfg.h,
+            "val split {}×{} != lowered {}×{}",
+            self.xv.rows(),
+            self.xv.cols(),
+            cfg.n_val,
+            cfg.h
+        );
+        Ok(())
+    }
+}
+
+/// The fold pipeline bound to one engine + shape config.
+pub struct HloPipeline<'e> {
+    engine: &'e Engine,
+    cfg: &'e ConfigEntry,
+    metrics: &'e Metrics,
+}
+
+impl<'e> HloPipeline<'e> {
+    pub fn new(engine: &'e Engine, cfg: &'e ConfigEntry, metrics: &'e Metrics) -> Self {
+        Self {
+            engine,
+            cfg,
+            metrics,
+        }
+    }
+
+    /// Compile every artifact up front so fold execution never compiles.
+    pub fn warmup(&self) -> Result<()> {
+        self.metrics.time("hlo.compile", || {
+            self.engine.warmup(
+                self.cfg,
+                &["gram", "cholvec", "polyfit", "sweep", "exact_sweep"],
+            )
+        })
+    }
+
+    /// The λ grid this config was lowered for (m points).
+    pub fn grid(&self, lo: f64, hi: f64) -> Vec<f64> {
+        logspace(lo, hi, self.cfg.m)
+    }
+
+    /// Sparse sample λ's (g of the m grid points).
+    pub fn sample_lambdas(&self, grid: &[f64]) -> Vec<f64> {
+        subsample_indices(grid.len(), self.cfg.g)
+            .into_iter()
+            .map(|i| grid[i])
+            .collect()
+    }
+
+    /// `gram`: Hessian + gradient on-device.
+    pub fn gram(&self, fold: &HloFold) -> Result<(Tensor, Tensor)> {
+        fold.validate(self.cfg)?;
+        let out = self.metrics.time("hlo.gram", || {
+            self.engine.run(
+                self.cfg,
+                "gram",
+                &[Tensor::from_matrix(&fold.xt), Tensor::from_vec(&fold.yt)],
+            )
+        })?;
+        self.metrics.incr("hlo.gram.calls");
+        anyhow::ensure!(out.len() == 2, "gram returned {} outputs", out.len());
+        let mut it = out.into_iter();
+        Ok((it.next().unwrap(), it.next().unwrap()))
+    }
+
+    /// piCholesky fit through `cholvec` + `polyfit`; returns Θ (padded).
+    pub fn fit(&self, h_t: &Tensor, sample_lams: &[f64]) -> Result<Tensor> {
+        let lams = Tensor::from_vec(sample_lams);
+        let t = self.metrics.time("hlo.cholvec", || {
+            self.engine.run(self.cfg, "cholvec", &[h_t.clone(), lams.clone()])
+        })?;
+        self.metrics.incr("hlo.cholvec.calls");
+        let theta = self.metrics.time("hlo.polyfit", || {
+            self.engine.run(self.cfg, "polyfit", &[lams, t[0].clone()])
+        })?;
+        self.metrics.incr("hlo.polyfit.calls");
+        Ok(theta.into_iter().next().unwrap())
+    }
+
+    /// Fused piCholesky sweep: interp + solve + holdout for the whole grid.
+    pub fn sweep(
+        &self,
+        theta: &Tensor,
+        grid: &[f64],
+        g_vec: &Tensor,
+        fold: &HloFold,
+    ) -> Result<HloSweepResult> {
+        let out = self.metrics.time("hlo.sweep", || {
+            self.engine.run(
+                self.cfg,
+                "sweep",
+                &[
+                    theta.clone(),
+                    Tensor::from_vec(grid),
+                    g_vec.clone(),
+                    Tensor::from_matrix(&fold.xv),
+                    Tensor::from_vec(&fold.yv),
+                ],
+            )
+        })?;
+        self.metrics.incr("hlo.sweep.calls");
+        HloSweepResult::from_errs(grid.to_vec(), &out[0])
+    }
+
+    /// Exact-Cholesky sweep baseline (`exact_sweep` artifact).
+    pub fn exact_sweep(
+        &self,
+        h_t: &Tensor,
+        grid: &[f64],
+        g_vec: &Tensor,
+        fold: &HloFold,
+    ) -> Result<HloSweepResult> {
+        let out = self.metrics.time("hlo.exact_sweep", || {
+            self.engine.run(
+                self.cfg,
+                "exact_sweep",
+                &[
+                    h_t.clone(),
+                    Tensor::from_vec(grid),
+                    g_vec.clone(),
+                    Tensor::from_matrix(&fold.xv),
+                    Tensor::from_vec(&fold.yv),
+                ],
+            )
+        })?;
+        self.metrics.incr("hlo.exact_sweep.calls");
+        HloSweepResult::from_errs(grid.to_vec(), &out[0])
+    }
+
+    /// Full piCholesky fold: gram → fit → sweep.
+    pub fn run_fold(&self, fold: &HloFold, lo: f64, hi: f64) -> Result<HloSweepResult> {
+        let grid = self.grid(lo, hi);
+        let (h_t, g_t) = self.gram(fold)?;
+        let theta = self.fit(&h_t, &self.sample_lambdas(&grid))?;
+        self.sweep(&theta, &grid, &g_t, fold)
+    }
+
+    /// Full exact-Cholesky fold: gram → exact sweep (the baseline).
+    pub fn run_fold_exact(&self, fold: &HloFold, lo: f64, hi: f64) -> Result<HloSweepResult> {
+        let grid = self.grid(lo, hi);
+        let (h_t, g_t) = self.gram(fold)?;
+        self.exact_sweep(&h_t, &grid, &g_t, fold)
+    }
+}

@@ -1,0 +1,132 @@
+//! Lightweight metrics registry: counters and duration gauges shared across
+//! the coordinator's worker threads, snapshotted into experiment reports.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Process-wide metrics: monotonically increasing counters plus cumulative
+/// phase durations (nanosecond-resolution, stored as u64 nanos).
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    durations: Mutex<BTreeMap<String, AtomicU64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment a counter.
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Add `n` to a counter.
+    pub fn add(&self, name: &str, n: u64) {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Time a closure, accumulating under `name`.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let nanos = t0.elapsed().as_nanos() as u64;
+        let mut map = self.durations.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(nanos, Ordering::Relaxed);
+        out
+    }
+
+    /// Counter value.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|a| a.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Cumulative seconds under a duration name.
+    pub fn seconds(&self, name: &str) -> f64 {
+        self.durations
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|a| a.load(Ordering::Relaxed) as f64 * 1e-9)
+            .unwrap_or(0.0)
+    }
+
+    /// Render a sorted snapshot (CLI `--metrics` output).
+    pub fn snapshot(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            s.push_str(&format!("counter {k} = {}\n", v.load(Ordering::Relaxed)));
+        }
+        for (k, v) in self.durations.lock().unwrap().iter() {
+            s.push_str(&format!(
+                "time    {k} = {:.4}s\n",
+                v.load(Ordering::Relaxed) as f64 * 1e-9
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("solves");
+        m.add("solves", 4);
+        assert_eq!(m.counter("solves"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn durations_accumulate() {
+        let m = Metrics::new();
+        m.time("phase", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        m.time("phase", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(m.seconds("phase") >= 0.004);
+    }
+
+    #[test]
+    fn snapshot_lists_everything() {
+        let m = Metrics::new();
+        m.incr("a");
+        m.time("b", || {});
+        let s = m.snapshot();
+        assert!(s.contains("counter a = 1"));
+        assert!(s.contains("time    b"));
+    }
+
+    #[test]
+    fn thread_safety() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.incr("x");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("x"), 4000);
+    }
+}

@@ -1,0 +1,145 @@
+//! Layer-3 coordinator: the process that owns the cross-validation run.
+//!
+//! The paper's systems contribution is *amortization across the λ sweep*
+//! (g exact factorizations serve q ≫ g candidate values); the coordinator is
+//! where that shows up operationally:
+//!
+//! - [`pool`] — a std::thread worker pool fanning fold×algorithm sweeps;
+//! - [`metrics`] — shared counters/timers, snapshotted into reports;
+//! - [`hlo_pipeline`] — the AOT request path (gram → cholvec → polyfit →
+//!   fused sweep, one PJRT execution per stage, python nowhere in sight);
+//! - [`Coordinator`] — ties them together: plans folds, schedules work,
+//!   aggregates [`crate::cv::CvReport`]s for whole experiment matrices.
+
+pub mod hlo_pipeline;
+pub mod metrics;
+pub mod pool;
+
+use std::sync::Arc;
+
+use crate::cv::solvers::SolverKind;
+use crate::cv::{run_cv, CvConfig, CvReport};
+use crate::data::synthetic::{DatasetKind, SyntheticDataset};
+pub use hlo_pipeline::{HloFold, HloPipeline, HloSweepResult};
+pub use metrics::Metrics;
+pub use pool::WorkerPool;
+
+/// The coordinator: worker pool + metrics + (lazily created) PJRT engine.
+pub struct Coordinator {
+    pool: WorkerPool,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::new(pool::default_workers())
+    }
+}
+
+impl Coordinator {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            pool: WorkerPool::new(workers),
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Run one algorithm over one dataset (k-fold, native path), timed.
+    pub fn run_one(
+        &self,
+        ds: &SyntheticDataset,
+        kind: SolverKind,
+        cfg: &CvConfig,
+    ) -> crate::Result<CvReport> {
+        self.metrics.incr("cv.runs");
+        let rep = run_cv(ds, kind, cfg)?;
+        self.metrics
+            .add("cv.lambda_evals", (rep.grid.len() * cfg.k_folds) as u64);
+        Ok(rep)
+    }
+
+    /// Run a full algorithm matrix over one dataset, fanning algorithms
+    /// across the worker pool (the Figure 6 / Table 3 workload).
+    pub fn run_matrix(
+        &self,
+        ds: Arc<SyntheticDataset>,
+        kinds: &[SolverKind],
+        cfg: &CvConfig,
+    ) -> Vec<crate::Result<CvReport>> {
+        let jobs: Vec<Box<dyn FnOnce() -> crate::Result<CvReport> + Send>> = kinds
+            .iter()
+            .map(|&kind| {
+                let ds = ds.clone();
+                let cfg = cfg.clone();
+                let f: Box<dyn FnOnce() -> crate::Result<CvReport> + Send> =
+                    Box::new(move || run_cv(&ds, kind, &cfg));
+                f
+            })
+            .collect();
+        self.metrics.add("cv.matrix_jobs", kinds.len() as u64);
+        self.pool.map(jobs)
+    }
+
+    /// Generate the four paper-style datasets at a working dimension h,
+    /// in parallel.
+    pub fn generate_datasets(
+        &self,
+        n: usize,
+        h: usize,
+        seed: u64,
+    ) -> Vec<Arc<SyntheticDataset>> {
+        let jobs: Vec<Box<dyn FnOnce() -> Arc<SyntheticDataset> + Send>> = DatasetKind::all()
+            .into_iter()
+            .map(|kind| {
+                let f: Box<dyn FnOnce() -> Arc<SyntheticDataset> + Send> = Box::new(move || {
+                    Arc::new(SyntheticDataset::generate(kind, n, h, seed))
+                });
+                f
+            })
+            .collect();
+        self.pool.map(jobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_runs_all_algorithms() {
+        let coord = Coordinator::new(2);
+        let ds = Arc::new(SyntheticDataset::generate(
+            DatasetKind::MnistLike,
+            120,
+            17,
+            1,
+        ));
+        let cfg = CvConfig {
+            k_folds: 2,
+            q_grid: 7,
+            ..CvConfig::default()
+        };
+        let kinds = [SolverKind::Chol, SolverKind::PiChol, SolverKind::RSvd];
+        let reports = coord.run_matrix(ds, &kinds, &cfg);
+        assert_eq!(reports.len(), 3);
+        for (kind, rep) in kinds.iter().zip(reports) {
+            let rep = rep.unwrap();
+            assert_eq!(rep.kind, *kind);
+            assert!(rep.best_error.is_finite());
+        }
+        assert_eq!(coord.metrics.counter("cv.matrix_jobs"), 3);
+    }
+
+    #[test]
+    fn generate_datasets_covers_all_kinds() {
+        let coord = Coordinator::new(2);
+        let ds = coord.generate_datasets(40, 9, 3);
+        assert_eq!(ds.len(), 4);
+        let names: Vec<_> = ds.iter().map(|d| d.kind.name()).collect();
+        assert!(names.contains(&"mnist-like") && names.contains(&"caltech256-like"));
+    }
+}

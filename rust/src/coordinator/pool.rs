@@ -1,0 +1,155 @@
+//! A small fixed-size worker pool over std::thread.
+//!
+//! tokio is not in the offline crate set, and the coordinator's concurrency
+//! needs are simple: fan a batch of CPU-bound jobs (fold × algorithm sweeps)
+//! over N workers and collect results in completion order. Jobs are
+//! `FnOnce`-boxed closures; results come back tagged with their job index so
+//! callers can reassemble deterministic orderings.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool. Dropping the pool joins all workers.
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers (at least 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = rx.clone();
+                thread::Builder::new()
+                    .name(format!("pichol-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            workers,
+        }
+    }
+
+    /// Submit one job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(job))
+            .expect("worker pool channel closed");
+    }
+
+    /// Run a batch of jobs and return their results **in input order**.
+    pub fn map<T: Send + 'static>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
+    ) -> Vec<T> {
+        let n = jobs.len();
+        let (rtx, rrx) = mpsc::channel::<(usize, T)>();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let rtx = rtx.clone();
+            self.submit(move || {
+                let out = job();
+                // receiver may be gone if the caller panicked; ignore
+                let _ = rtx.send((i, out));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, out) in rrx {
+            slots[i] = Some(out);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("worker died before returning a result"))
+            .collect()
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel, workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Pick a worker count: respects `PICHOL_WORKERS`, defaults to available
+/// parallelism (this box: 1).
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("PICHOL_WORKERS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..20)
+            .map(|i| {
+                let f: Box<dyn FnOnce() -> usize + Send> = Box::new(move || i * i);
+                f
+            })
+            .collect();
+        let out = pool.map(jobs);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_jobs_run_once() {
+        let pool = WorkerPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<Box<dyn FnOnce() -> () + Send>> = (0..50)
+            .map(|_| {
+                let c = counter.clone();
+                let f: Box<dyn FnOnce() + Send> = Box::new(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+                f
+            })
+            .collect();
+        pool.map(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = WorkerPool::new(2);
+        pool.submit(|| {});
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn size_clamped_to_one() {
+        assert_eq!(WorkerPool::new(0).size(), 1);
+    }
+}

@@ -1,0 +1,250 @@
+//! Cross-validation framework: the paper's §6 experimental machinery.
+//!
+//! Each fold follows the Figure 1 pipeline: materialize the split, build the
+//! Hessian `H = XᵀX` and gradient `g = Xᵀy` once (O(nd²)), then run one of
+//! the six comparative algorithms ([`solvers`]) over the candidate-λ grid and
+//! score each θ on the held-out split. [`run_cv`] aggregates over folds with
+//! per-phase wall-clock timings — the raw material for Figures 2, 6, 7-9 and
+//! Tables 3-4.
+
+pub mod solvers;
+
+use crate::data::folds::kfold;
+use crate::data::synthetic::SyntheticDataset;
+use crate::linalg::gemm::{gemv, gemv_t, syrk_lower};
+use crate::linalg::matrix::Matrix;
+use crate::pichol::mchol::Probe;
+use crate::util::{logspace, PhaseTimer};
+use solvers::SolverKind;
+
+/// Hold-out error metric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// Root-mean-square error of predictions vs ±1 labels (the paper's
+    /// hold-out error scale: MNIST ≈ 0.36, Caltech-256 ≈ 0.94).
+    Rmse,
+    /// Sign-misclassification rate.
+    Misclass,
+}
+
+/// Score one coefficient vector on the validation split.
+pub fn holdout_error(xv: &Matrix, yv: &[f64], theta: &[f64], metric: Metric) -> f64 {
+    let pred = gemv(xv, theta);
+    match metric {
+        Metric::Rmse => {
+            let mse: f64 = pred
+                .iter()
+                .zip(yv)
+                .map(|(p, y)| (p - y) * (p - y))
+                .sum::<f64>()
+                / yv.len() as f64;
+            mse.sqrt()
+        }
+        Metric::Misclass => {
+            let wrong = pred
+                .iter()
+                .zip(yv)
+                .filter(|(p, y)| p.signum() != y.signum())
+                .count();
+            wrong as f64 / yv.len() as f64
+        }
+    }
+}
+
+/// Everything a solver needs for one fold (Hessian/gradient precomputed and
+/// timed under the `hessian` phase by the runner).
+pub struct FoldData {
+    pub xt: Matrix,
+    pub yt: Vec<f64>,
+    pub xv: Matrix,
+    pub yv: Vec<f64>,
+    /// `H = XᵀX` over the training split.
+    pub h_mat: Matrix,
+    /// `g = Xᵀy` over the training split.
+    pub g_vec: Vec<f64>,
+}
+
+impl FoldData {
+    /// Build from a materialized split, timing the Hessian phase.
+    pub fn build(
+        xt: Matrix,
+        yt: Vec<f64>,
+        xv: Matrix,
+        yv: Vec<f64>,
+        timer: &mut PhaseTimer,
+    ) -> Self {
+        let h_mat = timer.time("hessian", || syrk_lower(&xt));
+        let g_vec = timer.time("hessian", || gemv_t(&xt, &yt));
+        Self {
+            xt,
+            yt,
+            xv,
+            yv,
+            h_mat,
+            g_vec,
+        }
+    }
+}
+
+/// Per-fold sweep output.
+pub struct SweepResult {
+    /// Hold-out error at each grid λ; NaN where the algorithm never
+    /// evaluated (MChol probes off-grid).
+    pub errors: Vec<f64>,
+    /// Best λ according to this algorithm (may be off-grid for MChol).
+    pub best_lambda: f64,
+    /// Error at `best_lambda`.
+    pub best_error: f64,
+    /// Time-stamped probe trajectory (Figure 9); empty for grid algorithms.
+    pub probes: Vec<Probe>,
+}
+
+/// Cross-validation configuration (paper §6.3 defaults).
+#[derive(Clone, Debug)]
+pub struct CvConfig {
+    /// Number of folds k.
+    pub k_folds: usize,
+    /// Candidate grid size q (31 exponentially spaced values).
+    pub q_grid: usize,
+    /// piCholesky sample count g.
+    pub g_samples: usize,
+    /// Polynomial degree r.
+    pub degree: usize,
+    /// λ search range; `None` = use the dataset's paper range.
+    pub lambda_range: Option<(f64, f64)>,
+    /// Master seed (folds, sketches).
+    pub seed: u64,
+    /// Truncated-SVD rank as a fraction of h.
+    pub tsvd_rank_frac: f64,
+    /// Randomized-SVD (oversample, power iterations).
+    pub rsvd_params: (usize, usize),
+    /// Hold-out metric.
+    pub metric: Metric,
+}
+
+impl Default for CvConfig {
+    fn default() -> Self {
+        Self {
+            k_folds: 5,
+            q_grid: 31,
+            g_samples: 4,
+            degree: 2,
+            lambda_range: None,
+            seed: 0x9C0_1E5C,
+            tsvd_rank_frac: 0.15,
+            rsvd_params: (8, 1),
+            metric: Metric::Rmse,
+        }
+    }
+}
+
+/// Aggregated result of a k-fold run of one algorithm.
+pub struct CvReport {
+    pub kind: SolverKind,
+    /// The candidate λ grid.
+    pub grid: Vec<f64>,
+    /// Mean hold-out error per grid point (NaN-aware mean over folds).
+    pub mean_errors: Vec<f64>,
+    /// Mean best λ across folds (geometric mean — λ lives on a log scale).
+    pub best_lambda: f64,
+    /// Mean of per-fold best errors.
+    pub best_error: f64,
+    /// Cumulative phase timings over all folds.
+    pub timer: PhaseTimer,
+    /// Per-fold (best λ, best error).
+    pub fold_bests: Vec<(f64, f64)>,
+    /// Probe trajectories per fold (Figure 9; empty for grid algorithms).
+    pub probes: Vec<Vec<Probe>>,
+}
+
+impl CvReport {
+    /// Total wall-clock seconds across folds and phases.
+    pub fn total_secs(&self) -> f64 {
+        self.timer.total()
+    }
+}
+
+/// Run k-fold cross-validation of one algorithm over a dataset.
+pub fn run_cv(
+    ds: &SyntheticDataset,
+    kind: SolverKind,
+    cfg: &CvConfig,
+) -> crate::Result<CvReport> {
+    let (lo, hi) = cfg.lambda_range.unwrap_or_else(|| ds.kind.lambda_range());
+    let grid = logspace(lo, hi, cfg.q_grid);
+    let folds = kfold(ds.n(), cfg.k_folds, cfg.seed);
+
+    let mut timer = PhaseTimer::new();
+    let mut sum_errors = vec![0.0f64; grid.len()];
+    let mut cnt_errors = vec![0usize; grid.len()];
+    let mut fold_bests = Vec::with_capacity(folds.len());
+    let mut probes = Vec::new();
+    let mut log_lambda_sum = 0.0;
+    let mut best_err_sum = 0.0;
+
+    for fold in &folds {
+        let (xt, yt, xv, yv) = fold.materialize(&ds.x, &ds.y);
+        let data = FoldData::build(xt, yt, xv, yv, &mut timer);
+        let result = solvers::sweep(kind, &data, &grid, cfg, &mut timer)?;
+        for (i, &e) in result.errors.iter().enumerate() {
+            if e.is_finite() {
+                sum_errors[i] += e;
+                cnt_errors[i] += 1;
+            }
+        }
+        log_lambda_sum += result.best_lambda.ln();
+        best_err_sum += result.best_error;
+        fold_bests.push((result.best_lambda, result.best_error));
+        probes.push(result.probes);
+    }
+
+    let k = folds.len() as f64;
+    let mean_errors: Vec<f64> = sum_errors
+        .iter()
+        .zip(&cnt_errors)
+        .map(|(&s, &c)| if c > 0 { s / c as f64 } else { f64::NAN })
+        .collect();
+
+    Ok(CvReport {
+        kind,
+        grid,
+        mean_errors,
+        best_lambda: (log_lambda_sum / k).exp(),
+        best_error: best_err_sum / k,
+        timer,
+        fold_bests,
+        probes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::DatasetKind;
+
+    #[test]
+    fn holdout_metrics() {
+        let xv = Matrix::eye(4);
+        let yv = vec![1.0, 1.0, -1.0, -1.0];
+        let theta = vec![1.0, 1.0, -1.0, 1.0]; // last one wrong
+        assert!((holdout_error(&xv, &yv, &theta, Metric::Misclass) - 0.25).abs() < 1e-12);
+        let rmse = holdout_error(&xv, &yv, &theta, Metric::Rmse);
+        assert!((rmse - 1.0).abs() < 1e-12); // one coord off by 2 → √(4/4)=1
+    }
+
+    #[test]
+    fn run_cv_chol_small() {
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 120, 17, 3);
+        let cfg = CvConfig {
+            k_folds: 3,
+            q_grid: 9,
+            ..CvConfig::default()
+        };
+        let rep = run_cv(&ds, SolverKind::Chol, &cfg).unwrap();
+        assert_eq!(rep.mean_errors.len(), 9);
+        assert!(rep.mean_errors.iter().all(|e| e.is_finite()));
+        assert!(rep.best_error > 0.0 && rep.best_error < 2.0);
+        assert!(rep.timer.get("chol") > 0.0);
+        assert!(rep.timer.get("hessian") > 0.0);
+    }
+}

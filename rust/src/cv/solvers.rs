@@ -1,0 +1,415 @@
+//! The six comparative algorithms of §6.2, behind one dispatch point.
+//!
+//! | kind      | paper name | strategy |
+//! |-----------|------------|----------|
+//! | `Chol`    | Exact Cholesky | factorize `H+λI` at every grid point |
+//! | `PiChol`  | piCholesky | Algorithm 1: g exact factors + interpolation |
+//! | `MChol`   | Multi-level Cholesky | binary-search narrowing (§6.2.3) |
+//! | `Svd`     | Exact SVD | one SVD of X, closed-form θ per λ (eq. 11) |
+//! | `TSvd`    | Truncated SVD | Lanczos top-k, then eq. 11 on the truncation |
+//! | `RSvd`    | Randomized SVD | Halko sketch, then eq. 11 |
+//! | `Pinrmse` | PINRMSE | interpolate the error curve itself (Figure 10) |
+
+use super::{holdout_error, CvConfig, FoldData, SweepResult};
+use crate::linalg::cholesky::cholesky_shifted;
+use crate::linalg::lanczos::lanczos_svd;
+use crate::linalg::randomized::randomized_svd;
+use crate::linalg::svd::{jacobi_svd, Svd};
+use crate::linalg::triangular::solve_cholesky;
+use crate::pichol::{self, FitOptions};
+use crate::util::{subsample_indices, PhaseTimer};
+use crate::vectorize::{Recursive, VecStrategy};
+
+/// Algorithm selector (paper §6.2 numbering).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SolverKind {
+    Chol,
+    PiChol,
+    MChol,
+    Svd,
+    TSvd,
+    RSvd,
+    Pinrmse,
+}
+
+impl SolverKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Chol => "Chol",
+            SolverKind::PiChol => "PIChol",
+            SolverKind::MChol => "MChol",
+            SolverKind::Svd => "SVD",
+            SolverKind::TSvd => "t-SVD",
+            SolverKind::RSvd => "r-SVD",
+            SolverKind::Pinrmse => "PINRMSE",
+        }
+    }
+
+    /// The paper's six (Table 3 / Figure 6 row order).
+    pub fn paper_six() -> [SolverKind; 6] {
+        [
+            SolverKind::Chol,
+            SolverKind::PiChol,
+            SolverKind::MChol,
+            SolverKind::Svd,
+            SolverKind::TSvd,
+            SolverKind::RSvd,
+        ]
+    }
+
+    pub fn parse(s: &str) -> Option<SolverKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "chol" => Some(SolverKind::Chol),
+            "pichol" | "pi" => Some(SolverKind::PiChol),
+            "mchol" => Some(SolverKind::MChol),
+            "svd" => Some(SolverKind::Svd),
+            "tsvd" | "t-svd" => Some(SolverKind::TSvd),
+            "rsvd" | "r-svd" => Some(SolverKind::RSvd),
+            "pinrmse" => Some(SolverKind::Pinrmse),
+            _ => None,
+        }
+    }
+}
+
+/// Dispatch one fold's λ sweep to the chosen algorithm.
+pub fn sweep(
+    kind: SolverKind,
+    data: &FoldData,
+    grid: &[f64],
+    cfg: &CvConfig,
+    timer: &mut PhaseTimer,
+) -> crate::Result<SweepResult> {
+    match kind {
+        SolverKind::Chol => sweep_chol(data, grid, cfg, timer),
+        SolverKind::PiChol => sweep_pichol(data, grid, cfg, timer),
+        SolverKind::MChol => sweep_mchol(data, grid, cfg, timer),
+        SolverKind::Svd => sweep_svd_like(data, grid, cfg, timer, SvdFlavor::Full),
+        SolverKind::TSvd => sweep_svd_like(data, grid, cfg, timer, SvdFlavor::Truncated),
+        SolverKind::RSvd => sweep_svd_like(data, grid, cfg, timer, SvdFlavor::Randomized),
+        SolverKind::Pinrmse => sweep_pinrmse(data, grid, cfg, timer),
+    }
+}
+
+fn best_of(grid: &[f64], errors: &[f64]) -> (f64, f64) {
+    let (mut bl, mut be) = (grid[0], f64::INFINITY);
+    for (&l, &e) in grid.iter().zip(errors) {
+        if e.is_finite() && e < be {
+            be = e;
+            bl = l;
+        }
+    }
+    (bl, be)
+}
+
+/// Exact Cholesky at every grid point — the paper's reference algorithm.
+fn sweep_chol(
+    data: &FoldData,
+    grid: &[f64],
+    cfg: &CvConfig,
+    timer: &mut PhaseTimer,
+) -> crate::Result<SweepResult> {
+    let mut errors = Vec::with_capacity(grid.len());
+    for &lam in grid {
+        let l = timer.time("chol", || cholesky_shifted(&data.h_mat, lam))?;
+        let theta = timer.time("solve", || solve_cholesky(&l, &data.g_vec));
+        let e = timer.time("holdout", || {
+            holdout_error(&data.xv, &data.yv, &theta, cfg.metric)
+        });
+        errors.push(e);
+    }
+    let (bl, be) = best_of(grid, &errors);
+    Ok(SweepResult {
+        errors,
+        best_lambda: bl,
+        best_error: be,
+        probes: Vec::new(),
+    })
+}
+
+/// piCholesky: g exact factors, then O(r·d²) interpolation per grid point.
+fn sweep_pichol(
+    data: &FoldData,
+    grid: &[f64],
+    cfg: &CvConfig,
+    timer: &mut PhaseTimer,
+) -> crate::Result<SweepResult> {
+    let strategy = Recursive::default();
+    let sample_lams: Vec<f64> = subsample_indices(grid.len(), cfg.g_samples)
+        .into_iter()
+        .map(|i| grid[i])
+        .collect();
+    let interp = pichol::fit(
+        &data.h_mat,
+        &sample_lams,
+        &FitOptions {
+            degree: cfg.degree,
+            strategy: &strategy,
+        },
+        timer,
+    )?;
+
+    let mut errors = Vec::with_capacity(grid.len());
+    let mut vbuf = vec![0.0; interp.theta.cols()];
+    for &lam in grid {
+        let l = timer.time("interp", || {
+            interp.eval_vec_into(lam, &mut vbuf);
+            strategy.unvec(&vbuf, interp.h)
+        });
+        let theta = timer.time("solve", || solve_cholesky(&l, &data.g_vec));
+        let e = timer.time("holdout", || {
+            holdout_error(&data.xv, &data.yv, &theta, cfg.metric)
+        });
+        errors.push(e);
+    }
+    let (bl, be) = best_of(grid, &errors);
+    Ok(SweepResult {
+        errors,
+        best_lambda: bl,
+        best_error: be,
+        probes: Vec::new(),
+    })
+}
+
+/// Multi-level Cholesky: §6.2's binary search. Grid errors are reported at
+/// the grid points nearest to each probe (NaN elsewhere).
+fn sweep_mchol(
+    data: &FoldData,
+    grid: &[f64],
+    cfg: &CvConfig,
+    timer: &mut PhaseTimer,
+) -> crate::Result<SweepResult> {
+    // centre the search on the middle of the grid range (log scale); the
+    // paper seeds MChol the same way it seeds everyone's ranges
+    let c = 0.5 * (grid[0].log10() + grid[grid.len() - 1].log10());
+    let s = 0.5 * (grid[grid.len() - 1].log10() - grid[0].log10());
+    let params = crate::pichol::mchol::MCholParams { s, s0: 0.0025 };
+
+    let t0 = std::time::Instant::now();
+    let result = crate::pichol::mchol::multilevel_search(c, params, |lam| {
+        let l = cholesky_shifted(&data.h_mat, lam).expect("H + λI not PD in MChol");
+        let theta = solve_cholesky(&l, &data.g_vec);
+        holdout_error(&data.xv, &data.yv, &theta, cfg.metric)
+    });
+    timer.add("chol", t0.elapsed().as_secs_f64());
+
+    // scatter probes onto the grid for the mean-curve plots
+    let mut errors = vec![f64::NAN; grid.len()];
+    for p in &result.probes {
+        let idx = grid
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                let da = (a.ln() - p.lambda.ln()).abs();
+                let db = (b.ln() - p.lambda.ln()).abs();
+                da.partial_cmp(&db).unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap();
+        if errors[idx].is_nan() || p.error < errors[idx] {
+            errors[idx] = p.error;
+        }
+    }
+
+    Ok(SweepResult {
+        errors,
+        best_lambda: result.best_lambda,
+        best_error: result.best_error,
+        probes: result.probes,
+    })
+}
+
+enum SvdFlavor {
+    Full,
+    Truncated,
+    Randomized,
+}
+
+/// The three SVD baselines share the eq. 11 sweep; they differ only in how
+/// the factorization is obtained (and how much of the spectrum it carries).
+fn sweep_svd_like(
+    data: &FoldData,
+    grid: &[f64],
+    cfg: &CvConfig,
+    timer: &mut PhaseTimer,
+    flavor: SvdFlavor,
+) -> crate::Result<SweepResult> {
+    let h = data.xt.cols();
+    let k = ((h as f64 * cfg.tsvd_rank_frac).round() as usize).clamp(1, h);
+    let svd: Svd = match flavor {
+        SvdFlavor::Full => timer.time("svd", || jacobi_svd(&data.xt)),
+        SvdFlavor::Truncated => timer.time("svd", || lanczos_svd(&data.xt, k, 10, cfg.seed)),
+        SvdFlavor::Randomized => {
+            let (p, q) = cfg.rsvd_params;
+            timer.time("svd", || randomized_svd(&data.xt, k, p, q, cfg.seed))
+        }
+    };
+    let uty = timer.time("svd", || svd.project_y(&data.yt));
+
+    let mut errors = Vec::with_capacity(grid.len());
+    for &lam in grid {
+        let theta = timer.time("solve", || svd.ridge_solve(&uty, lam));
+        let e = timer.time("holdout", || {
+            holdout_error(&data.xv, &data.yv, &theta, cfg.metric)
+        });
+        errors.push(e);
+    }
+    let (bl, be) = best_of(grid, &errors);
+    Ok(SweepResult {
+        errors,
+        best_lambda: bl,
+        best_error: be,
+        probes: Vec::new(),
+    })
+}
+
+/// PINRMSE: exact solves at the g sparse λ's only, then interpolate the
+/// *error curve* (Figure 10's strawman).
+fn sweep_pinrmse(
+    data: &FoldData,
+    grid: &[f64],
+    cfg: &CvConfig,
+    timer: &mut PhaseTimer,
+) -> crate::Result<SweepResult> {
+    let sample_idx = subsample_indices(grid.len(), cfg.g_samples);
+    let sample_lams: Vec<f64> = sample_idx.iter().map(|&i| grid[i]).collect();
+    let mut sample_errs = Vec::with_capacity(sample_lams.len());
+    for &lam in &sample_lams {
+        let l = timer.time("chol", || cholesky_shifted(&data.h_mat, lam))?;
+        let theta = timer.time("solve", || solve_cholesky(&l, &data.g_vec));
+        let e = timer.time("holdout", || {
+            holdout_error(&data.xv, &data.yv, &theta, cfg.metric)
+        });
+        sample_errs.push(e);
+    }
+    let (errors, best_lambda, best_error) = {
+        let poly = timer.time("fit", || {
+            crate::pichol::pinrmse::fit_error_curve(&sample_lams, &sample_errs, cfg.degree)
+        });
+        let (bl, be, curve) = timer.time("interp", || poly.sweep(grid));
+        (curve, bl, be)
+    };
+    Ok(SweepResult {
+        errors,
+        best_lambda,
+        best_error,
+        probes: Vec::new(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::{run_cv, CvConfig};
+    use crate::data::synthetic::{DatasetKind, SyntheticDataset};
+
+    fn tiny_cfg() -> CvConfig {
+        CvConfig {
+            k_folds: 2,
+            q_grid: 11,
+            ..CvConfig::default()
+        }
+    }
+
+    fn tiny_ds() -> SyntheticDataset {
+        SyntheticDataset::generate(DatasetKind::MnistLike, 160, 21, 5)
+    }
+
+    #[test]
+    fn all_solvers_run_and_agree_on_scale() {
+        let ds = tiny_ds();
+        let cfg = tiny_cfg();
+        let chol = run_cv(&ds, SolverKind::Chol, &cfg).unwrap();
+        for kind in [
+            SolverKind::PiChol,
+            SolverKind::MChol,
+            SolverKind::Svd,
+            SolverKind::TSvd,
+            SolverKind::RSvd,
+            SolverKind::Pinrmse,
+        ] {
+            let rep = run_cv(&ds, kind, &cfg).unwrap();
+            assert!(
+                rep.best_error.is_finite() && rep.best_error > 0.0,
+                "{} best error {}",
+                kind.name(),
+                rep.best_error
+            );
+            // every algorithm's best error is within 3× of exact Cholesky's
+            // (even the bad ones aren't *that* bad on an easy tiny problem)
+            assert!(
+                rep.best_error < 3.0 * chol.best_error + 0.5,
+                "{}: {} vs chol {}",
+                kind.name(),
+                rep.best_error,
+                chol.best_error
+            );
+        }
+    }
+
+    #[test]
+    fn pichol_tracks_chol_curve() {
+        let ds = tiny_ds();
+        let cfg = tiny_cfg();
+        let chol = run_cv(&ds, SolverKind::Chol, &cfg).unwrap();
+        let pi = run_cv(&ds, SolverKind::PiChol, &cfg).unwrap();
+        // curves agree pointwise within a few percent (Figures 7-8)
+        for (i, (&a, &b)) in chol.mean_errors.iter().zip(&pi.mean_errors).enumerate() {
+            let rel = (a - b).abs() / a;
+            assert!(rel < 0.08, "grid[{i}]: chol={a:.4} pichol={b:.4} rel={rel:.3}");
+        }
+        // selected λ within one grid step (Table 4)
+        let li = chol
+            .grid
+            .iter()
+            .position(|&l| (l - chol.best_lambda).abs() / l < 0.5)
+            .unwrap_or(0);
+        let pi_idx = pi
+            .grid
+            .iter()
+            .position(|&l| (l - pi.best_lambda).abs() / l < 0.5)
+            .unwrap_or(pi.grid.len());
+        assert!(
+            (li as i64 - pi_idx as i64).abs() <= 2,
+            "selected λ far apart: chol={} pichol={}",
+            chol.best_lambda,
+            pi.best_lambda
+        );
+    }
+
+    #[test]
+    fn svd_matches_chol_exactly() {
+        // eq. 11 and the normal equations are algebraically identical
+        let ds = tiny_ds();
+        let cfg = tiny_cfg();
+        let chol = run_cv(&ds, SolverKind::Chol, &cfg).unwrap();
+        let svd = run_cv(&ds, SolverKind::Svd, &cfg).unwrap();
+        for (&a, &b) in chol.mean_errors.iter().zip(&svd.mean_errors) {
+            assert!((a - b).abs() < 1e-6, "chol={a} svd={b}");
+        }
+    }
+
+    #[test]
+    fn mchol_reaches_grid_optimum() {
+        let ds = tiny_ds();
+        let cfg = tiny_cfg();
+        let chol = run_cv(&ds, SolverKind::Chol, &cfg).unwrap();
+        let mchol = run_cv(&ds, SolverKind::MChol, &cfg).unwrap();
+        // MChol refines continuously, so its best error is ≤ grid best + slack
+        assert!(mchol.best_error <= chol.best_error + 0.02);
+        // the selected λ may wander when the curve is flat near its optimum
+        // (λ is then weakly identified — Table 4's agreement holds on the
+        // paper-scale datasets, checked in the fig7/table4 bench); here we
+        // only require the same decade-and-a-half
+        let ratio = (mchol.best_lambda.log10() - chol.best_lambda.log10()).abs();
+        assert!(ratio < 2.0, "log10 ratio {ratio}");
+        // probes recorded for Figure 9
+        assert!(!mchol.probes[0].is_empty());
+    }
+
+    #[test]
+    fn solver_kind_parse() {
+        assert_eq!(SolverKind::parse("pichol"), Some(SolverKind::PiChol));
+        assert_eq!(SolverKind::parse("T-SVD"), Some(SolverKind::TSvd));
+        assert_eq!(SolverKind::parse("nope"), None);
+    }
+}

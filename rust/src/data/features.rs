@@ -1,0 +1,146 @@
+//! Kar–Karnick randomized polynomial-kernel feature maps.
+//!
+//! The paper projects its image data with "the randomized polynomial kernel
+//! [17]" (Kar & Karnick, *Random Feature Maps for Dot Product Kernels*,
+//! AISTATS 2012). For the degree-p dot-product kernel `k(x,z) = (xᵀz)^p`,
+//! each random feature is
+//!
+//! ```text
+//!   φ_j(x) = a_j · Π_{t=1..p} (ω_{j,t}ᵀ x),     ω entries Rademacher ±1
+//! ```
+//!
+//! so that `E[φ(x)ᵀφ(z)] = k(x, z)`. This module implements the exact
+//! construction (it needs only a seeded PRNG, so unlike the image corpora it
+//! is *not* a stand-in — see DESIGN.md §3).
+
+use crate::linalg::matrix::Matrix;
+use crate::prng::Xoshiro256;
+
+/// A sampled degree-`p` random polynomial feature map raw_dim → out_dim.
+pub struct KarKarnickMap {
+    /// ω vectors: `p` banks of out_dim × raw_dim Rademacher matrices.
+    banks: Vec<Matrix>,
+    raw_dim: usize,
+    out_dim: usize,
+    degree: usize,
+}
+
+impl KarKarnickMap {
+    /// Sample a map. Each of the `degree` banks holds one ω per output
+    /// feature; the normalization 1/√out_dim makes the feature inner product
+    /// an unbiased kernel estimate.
+    pub fn new(raw_dim: usize, out_dim: usize, degree: usize, seed: u64) -> Self {
+        assert!(degree >= 1);
+        let mut rng = Xoshiro256::seed_from(seed);
+        let banks = (0..degree)
+            .map(|_| Matrix::from_fn(out_dim, raw_dim, |_, _| rng.rademacher()))
+            .collect();
+        Self {
+            banks,
+            raw_dim,
+            out_dim,
+            degree,
+        }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// Map one raw sample.
+    pub fn apply_one(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.raw_dim);
+        let norm = 1.0 / (self.out_dim as f64).sqrt();
+        let mut out = vec![norm; self.out_dim];
+        for bank in &self.banks {
+            for (j, o) in out.iter_mut().enumerate() {
+                let dot: f64 = bank.row(j).iter().zip(x).map(|(w, v)| w * v).sum();
+                *o *= dot;
+            }
+        }
+        out
+    }
+
+    /// Map a whole n×raw_dim matrix to n×out_dim (row-blocked GEMM per bank,
+    /// then a Hadamard product across banks — BLAS-3 all the way).
+    pub fn apply(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), self.raw_dim);
+        let n = x.rows();
+        let gem = crate::linalg::gemm::Gemm::default();
+        let norm = 1.0 / (self.out_dim as f64).sqrt();
+        let mut out = Matrix::from_fn(n, self.out_dim, |_, _| norm);
+        for bank in &self.banks {
+            // proj = X · bankᵀ  (n × out_dim)
+            let proj = gem.a_bt(x, bank);
+            for (o, p) in out.as_mut_slice().iter_mut().zip(proj.as_slice()) {
+                *o *= p;
+            }
+        }
+        out
+    }
+
+    pub fn degree(&self) -> usize {
+        self.degree
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::random_matrix;
+
+    #[test]
+    fn batch_matches_single() {
+        let map = KarKarnickMap::new(20, 15, 2, 1);
+        let x = random_matrix(6, 20, 2);
+        let batch = map.apply(&x);
+        for i in 0..6 {
+            let one = map.apply_one(x.row(i));
+            for j in 0..15 {
+                assert!((batch[(i, j)] - one[j]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_estimate_is_unbiased() {
+        // φ(x)ᵀφ(z) ≈ (xᵀz)^p for large out_dim
+        let raw = 10;
+        let mut rng = crate::prng::Xoshiro256::seed_from(3);
+        let x: Vec<f64> = (0..raw).map(|_| rng.normal() / (raw as f64).sqrt()).collect();
+        let z: Vec<f64> = (0..raw).map(|_| rng.normal() / (raw as f64).sqrt()).collect();
+        let exact: f64 = x.iter().zip(&z).map(|(a, b)| a * b).sum::<f64>().powi(2);
+
+        let out_dim = 20_000;
+        let map = KarKarnickMap::new(raw, out_dim, 2, 7);
+        let fx = map.apply_one(&x);
+        let fz = map.apply_one(&z);
+        let est: f64 = fx.iter().zip(&fz).map(|(a, b)| a * b).sum();
+        assert!(
+            (est - exact).abs() < 0.05 * exact.abs().max(0.05),
+            "kernel estimate {est} vs exact {exact}"
+        );
+    }
+
+    #[test]
+    fn degree_one_is_linear_projection() {
+        let map = KarKarnickMap::new(8, 4, 1, 5);
+        let x: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let y: Vec<f64> = (0..8).map(|i| (7 - i) as f64).collect();
+        let sum: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+        let fx = map.apply_one(&x);
+        let fy = map.apply_one(&y);
+        let fsum = map.apply_one(&sum);
+        for j in 0..4 {
+            assert!((fsum[j] - fx[j] - fy[j]).abs() < 1e-10, "not linear at {j}");
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = KarKarnickMap::new(6, 5, 2, 11);
+        let b = KarKarnickMap::new(6, 5, 2, 11);
+        let x: Vec<f64> = (0..6).map(|i| (i as f64).cos()).collect();
+        assert_eq!(a.apply_one(&x), b.apply_one(&x));
+    }
+}

@@ -1,0 +1,100 @@
+//! k-fold cross-validation splits.
+//!
+//! The paper's pipeline (Figure 1) runs the whole Hessian + Cholesky-sweep
+//! machinery once per fold; these splits are shuffled once with a seeded
+//! permutation so every algorithm sees identical folds.
+
+use crate::linalg::matrix::Matrix;
+use crate::prng::Xoshiro256;
+
+/// One train/validation split (index sets into the parent dataset).
+#[derive(Clone, Debug)]
+pub struct Fold {
+    pub train: Vec<usize>,
+    pub val: Vec<usize>,
+}
+
+/// Standard shuffled k-fold split of `n` samples.
+pub fn kfold(n: usize, k: usize, seed: u64) -> Vec<Fold> {
+    assert!(k >= 2 && k <= n, "need 2 <= k <= n");
+    let mut rng = Xoshiro256::seed_from(seed ^ 0xF01D);
+    let perm = rng.permutation(n);
+    let mut folds = Vec::with_capacity(k);
+    for f in 0..k {
+        let lo = f * n / k;
+        let hi = (f + 1) * n / k;
+        let val: Vec<usize> = perm[lo..hi].to_vec();
+        let train: Vec<usize> = perm[..lo].iter().chain(&perm[hi..]).copied().collect();
+        folds.push(Fold { train, val });
+    }
+    folds
+}
+
+impl Fold {
+    /// Materialize (X_train, y_train, X_val, y_val) for this fold.
+    pub fn materialize(&self, x: &Matrix, y: &[f64]) -> (Matrix, Vec<f64>, Matrix, Vec<f64>) {
+        let h = x.cols();
+        let gather = |idx: &[usize]| {
+            let mut xm = Matrix::zeros(idx.len(), h);
+            let mut ym = Vec::with_capacity(idx.len());
+            for (r, &i) in idx.iter().enumerate() {
+                xm.row_mut(r).copy_from_slice(x.row(i));
+                ym.push(y[i]);
+            }
+            (xm, ym)
+        };
+        let (xt, yt) = gather(&self.train);
+        let (xv, yv) = gather(&self.val);
+        (xt, yt, xv, yv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::random_matrix;
+
+    #[test]
+    fn partition_properties() {
+        let folds = kfold(103, 5, 1);
+        assert_eq!(folds.len(), 5);
+        let mut seen = vec![0usize; 103];
+        for f in &folds {
+            assert_eq!(f.train.len() + f.val.len(), 103);
+            for &i in &f.val {
+                seen[i] += 1;
+            }
+            // train ∩ val = ∅
+            let tset: std::collections::HashSet<_> = f.train.iter().collect();
+            assert!(f.val.iter().all(|i| !tset.contains(i)));
+        }
+        // every sample is validated exactly once
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = kfold(50, 5, 7);
+        let b = kfold(50, 5, 7);
+        for (fa, fb) in a.iter().zip(&b) {
+            assert_eq!(fa.val, fb.val);
+        }
+    }
+
+    #[test]
+    fn materialize_gathers_rows() {
+        let x = random_matrix(10, 3, 1);
+        let y: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let folds = kfold(10, 5, 2);
+        let (xt, yt, xv, yv) = folds[0].materialize(&x, &y);
+        assert_eq!(xt.rows(), 8);
+        assert_eq!(xv.rows(), 2);
+        for (r, &i) in folds[0].val.iter().enumerate() {
+            assert_eq!(yv[r], i as f64);
+            assert_eq!(xv.row(r), x.row(i));
+        }
+        for (r, &i) in folds[0].train.iter().enumerate() {
+            assert_eq!(yt[r], y[i]);
+        }
+    }
+}

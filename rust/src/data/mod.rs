@@ -1,0 +1,21 @@
+//! Datasets and feature maps.
+//!
+//! The paper evaluates on MNIST, COIL-100, Caltech-101 and Caltech-256,
+//! projected with the Kar–Karnick randomized polynomial kernel (MNIST/COIL)
+//! or a spatial-pyramid pipeline (Caltech) to h−1 dimensions, then converted
+//! to balanced 2-class problems (§6.1, Table 2).
+//!
+//! Those corpora are unavailable offline, so [`synthetic`] generates
+//! deterministic Gaussian-mixture stand-ins with the same raw dimensionality
+//! and class structure (see DESIGN.md §3 for why this preserves behaviour:
+//! every algorithm under test touches the data only through `H = XᵀX` and
+//! `g = Xᵀy`). [`features`] implements the Kar–Karnick map itself — the same
+//! construction the paper runs, not a stand-in. [`folds`] does the k-fold
+//! splitting.
+
+pub mod features;
+pub mod folds;
+pub mod synthetic;
+
+pub use folds::{kfold, Fold};
+pub use synthetic::{DatasetKind, SyntheticDataset};

@@ -1,0 +1,122 @@
+//! Figure 2: percent of pipeline time spent in (a) Hessian computation,
+//! (b) the cross-validation Cholesky sweep, (c) everything else, as a
+//! function of n (training points) and h (feature dimension).
+//!
+//! The paper's point: once `n < k·q·d`, the k·q factorizations dominate —
+//! which is exactly the regime piCholesky attacks.
+
+use crate::data::synthetic::{DatasetKind, SyntheticDataset};
+use crate::linalg::cholesky::cholesky_shifted;
+use crate::linalg::gemm::{gemv_t, syrk_lower};
+use crate::linalg::triangular::solve_cholesky;
+use crate::util::{logspace, timed};
+
+use super::{csv_of, Report};
+
+/// Measured split for one (n, h).
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub n: usize,
+    pub h: usize,
+    pub hessian_s: f64,
+    pub chol_sweep_s: f64,
+    pub other_s: f64,
+}
+
+impl Split {
+    pub fn percents(&self) -> (f64, f64, f64) {
+        let total = self.hessian_s + self.chol_sweep_s + self.other_s;
+        (
+            100.0 * self.hessian_s / total,
+            100.0 * self.chol_sweep_s / total,
+            100.0 * self.other_s / total,
+        )
+    }
+}
+
+/// Time one (n, h) cell: Hessian build + q-point Cholesky sweep + solves.
+pub fn measure_cell(n: usize, h: usize, q: usize, seed: u64) -> Split {
+    let ds = SyntheticDataset::generate(DatasetKind::MnistLike, n, h, seed);
+    let grid = logspace(1e-3, 1.0, q);
+
+    let ((h_mat, g_vec), hessian_s) = timed(|| {
+        let hm = syrk_lower(&ds.x);
+        let gv = gemv_t(&ds.x, &ds.y);
+        (hm, gv)
+    });
+
+    let mut chol_sweep_s = 0.0;
+    let mut other_s = 0.0;
+    for &lam in &grid {
+        let (l, cs) = timed(|| cholesky_shifted(&h_mat, lam).expect("PD"));
+        chol_sweep_s += cs;
+        let (theta, os) = timed(|| solve_cholesky(&l, &g_vec));
+        std::hint::black_box(theta[0]);
+        other_s += os;
+    }
+
+    Split {
+        n,
+        h,
+        hessian_s,
+        chol_sweep_s,
+        other_s,
+    }
+}
+
+/// Run the Figure 2 grid.
+pub fn run(ns: &[usize], hs: &[usize], q: usize, seed: u64) -> Report {
+    let mut report = Report::new("fig2");
+    report.push_md("# Figure 2 — pipeline cost split (% of total)\n");
+    report.push_md(&format!("q = {q} candidate λ values per sweep.\n"));
+    report.push_md("| n | h | hessian % | chol-sweep % | other % |\n|---|---|---|---|---|");
+
+    let mut rows = Vec::new();
+    for &n in ns {
+        for &h in hs {
+            if h > n {
+                continue; // keep the Hessian meaningful
+            }
+            let s = measure_cell(n, h, q, seed);
+            let (ph, pc, po) = s.percents();
+            report.push_md(&format!(
+                "| {n} | {h} | {ph:.1} | {pc:.1} | {po:.1} |"
+            ));
+            rows.push(vec![n as f64, h as f64, ph, pc, po]);
+        }
+    }
+    report.push_md(
+        "\nExpected shape (paper Fig. 2): the chol-sweep share grows with h and shrinks \
+         with n; for n ≲ k·q·d the sweep dominates.\n",
+    );
+    report.push_series(
+        "percents",
+        csv_of(&["n", "h", "hessian_pct", "chol_pct", "other_pct"], &rows),
+    );
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percents_sum_to_100() {
+        let s = measure_cell(128, 32, 5, 1);
+        let (a, b, c) = s.percents();
+        assert!((a + b + c - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chol_share_grows_with_h() {
+        // the Figure 2 trend: larger h → factorization sweep dominates more
+        let lo = measure_cell(512, 16, 9, 2);
+        let hi = measure_cell(512, 96, 9, 2);
+        let (_, pc_lo, _) = lo.percents();
+        let (_, pc_hi, _) = hi.percents();
+        assert!(
+            pc_hi > pc_lo,
+            "chol% should grow with h: {pc_lo:.1} → {pc_hi:.1}"
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! Figure 6 + Table 3: wall-clock time of the six algorithms.
+//!
+//! Figure 6: total CV seconds vs h on the MNIST-like dataset.
+//! Table 3: per-fold seconds at the largest h across all four datasets.
+//!
+//! Paper shapes to reproduce: PIChol ≈ 3-4× faster than Chol; MChol between
+//! them; SVD ~13× slower than Chol; t-SVD slower than Chol; r-SVD fastest
+//! of all (but useless for λ selection — Figure 7/Table 4's point).
+
+use std::sync::Arc;
+
+use crate::coordinator::Coordinator;
+use crate::cv::solvers::SolverKind;
+use crate::cv::CvConfig;
+use crate::data::synthetic::{DatasetKind, SyntheticDataset};
+use crate::util::{fmt_secs, markdown_table};
+
+use super::{csv_of, Report};
+
+/// Timing of every algorithm at one h on one dataset.
+pub fn time_matrix(
+    coord: &Coordinator,
+    kind: DatasetKind,
+    n: usize,
+    h: usize,
+    cfg: &CvConfig,
+) -> Vec<(SolverKind, f64, f64, f64)> {
+    let ds = Arc::new(SyntheticDataset::generate(kind, n, h, cfg.seed));
+    let kinds = SolverKind::paper_six();
+    let reports = coord.run_matrix(ds, &kinds, cfg);
+    kinds
+        .iter()
+        .zip(reports)
+        .map(|(&k, rep)| {
+            let rep = rep.expect("cv run failed");
+            (k, rep.total_secs(), rep.best_lambda, rep.best_error)
+        })
+        .collect()
+}
+
+/// Figure 6: algorithm timing vs h (MNIST-like).
+pub fn run_fig6(coord: &Coordinator, hs: &[usize], n_per_h: usize, cfg: &CvConfig) -> Report {
+    let mut report = Report::new("fig6");
+    report.push_md("# Figure 6 — total CV seconds vs h (MNIST-like)\n");
+    report.push_md(&format!(
+        "k = {} folds, q = {} grid points, g = {}, r = {}; n = {n_per_h}·1 per h.\n",
+        cfg.k_folds, cfg.q_grid, cfg.g_samples, cfg.degree
+    ));
+
+    let mut md_rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    for &h in hs {
+        let n = (n_per_h * h).max(4 * h);
+        let times = time_matrix(coord, DatasetKind::MnistLike, n, h, cfg);
+        let mut row = vec![h.to_string()];
+        let mut crow = vec![h as f64];
+        for (_, secs, _, _) in &times {
+            row.push(fmt_secs(*secs));
+            crow.push(*secs);
+        }
+        md_rows.push(row);
+        csv_rows.push(crow);
+    }
+    let mut headers = vec!["h"];
+    headers.extend(SolverKind::paper_six().iter().map(|k| k.name()));
+    report.push_md(&markdown_table(&headers, &md_rows));
+
+    if let (Some(first), Some(last)) = (csv_rows.first(), csv_rows.last()) {
+        let _ = first;
+        // speedup summary at the largest h: Chol/PIChol
+        report.push_md(&format!(
+            "\nAt h = {}: PIChol is {:.2}× faster than Chol (paper at h=16384: ≈3.8×), \
+             SVD is {:.1}× slower than Chol (paper: ≈13×).\n",
+            last[0] as usize,
+            last[1] / last[2],
+            last[4] / last[1],
+        ));
+    }
+    report.push_series("times", csv_of(&headers_as_csv(), &csv_rows));
+    report
+}
+
+fn headers_as_csv() -> Vec<&'static str> {
+    let mut v = vec!["h"];
+    v.extend(SolverKind::paper_six().iter().map(|k| k.name()));
+    v
+}
+
+/// Table 3: per-fold seconds at one h across the four datasets.
+pub fn run_table3(coord: &Coordinator, n: usize, h: usize, cfg: &CvConfig) -> Report {
+    let mut report = Report::new("table3");
+    report.push_md(&format!(
+        "# Table 3 — per-fold seconds at h = {h} (paper: h = 16384)\n"
+    ));
+
+    let mut md_rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    for kind in DatasetKind::all() {
+        let times = time_matrix(coord, kind, n, h, cfg);
+        for (i, (k, secs, _, _)) in times.iter().enumerate() {
+            let per_fold = secs / cfg.k_folds as f64;
+            if md_rows.len() <= i {
+                md_rows.push(vec![k.name().to_string()]);
+                csv_rows.push(vec![i as f64]);
+            }
+            md_rows[i].push(fmt_secs(per_fold));
+            csv_rows[i].push(per_fold);
+        }
+        let _ = kind;
+    }
+    let mut headers = vec!["algorithm"];
+    headers.extend(DatasetKind::all().iter().map(|k| k.name()));
+    report.push_md(&markdown_table(&headers, &md_rows));
+    report.push_md(
+        "\nExpected shape (paper Table 3): PIChol ≈ 3-4× under Chol; SVD slowest; \
+         r-SVD fastest.\n",
+    );
+    report.push_series(
+        "per_fold_seconds",
+        csv_of(
+            &["algo_idx", "mnist", "coil", "caltech101", "caltech256"],
+            &csv_rows,
+        ),
+    );
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pichol_beats_chol_at_moderate_h() {
+        let coord = Coordinator::new(1);
+        let cfg = CvConfig {
+            k_folds: 2,
+            q_grid: 31,
+            ..CvConfig::default()
+        };
+        let times = time_matrix(&coord, DatasetKind::MnistLike, 256, 96, &cfg);
+        let chol = times.iter().find(|(k, ..)| *k == SolverKind::Chol).unwrap().1;
+        let pichol = times.iter().find(|(k, ..)| *k == SolverKind::PiChol).unwrap().1;
+        assert!(
+            pichol < chol,
+            "piCholesky should already win at h=96/q=31: chol={chol:.3}s pichol={pichol:.3}s"
+        );
+    }
+}

@@ -1,0 +1,229 @@
+//! Figure 9: |log₁₀(λ_selected / λ_optimal)| as a function of elapsed
+//! wall-clock time for Chol, PIChol and MChol.
+//!
+//! Paper shape: MChol's trajectory steps down slowly (each refinement level
+//! costs 3 exact factorizations); Chol's drops as its sequential sweep
+//! happens to pass near the optimum; PIChol jumps to (near) zero as soon as
+//! its g factorizations + fit complete — much earlier than the others.
+
+use crate::cv::solvers::SolverKind;
+use crate::cv::{holdout_error, CvConfig, FoldData};
+use crate::data::folds::kfold;
+use crate::data::synthetic::{DatasetKind, SyntheticDataset};
+use crate::linalg::cholesky::cholesky_shifted;
+use crate::linalg::triangular::solve_cholesky;
+use crate::pichol::{fit, FitOptions};
+use crate::util::{logspace, subsample_indices, PhaseTimer};
+use crate::vectorize::{Recursive, VecStrategy};
+
+use super::{csv_of, Report};
+
+/// One algorithm's trajectory: (elapsed seconds, |log10 λ_sel/λ_opt|).
+pub struct Trajectory {
+    pub kind: SolverKind,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Reference optimum: exact Chol over the full grid (what Figure 9 measures
+/// selection error against).
+fn reference_lambda(data: &FoldData, grid: &[f64], cfg: &CvConfig) -> f64 {
+    let mut best = (grid[0], f64::INFINITY);
+    for &lam in grid {
+        let l = cholesky_shifted(&data.h_mat, lam).expect("PD");
+        let th = solve_cholesky(&l, &data.g_vec);
+        let e = holdout_error(&data.xv, &data.yv, &th, cfg.metric);
+        if e < best.1 {
+            best = (lam, e);
+        }
+    }
+    best.0
+}
+
+fn log_ratio(sel: f64, opt: f64) -> f64 {
+    (sel.log10() - opt.log10()).abs()
+}
+
+/// Chol trajectory: after each sequential grid evaluation, the current
+/// best-so-far λ.
+fn chol_trajectory(data: &FoldData, grid: &[f64], opt: f64, cfg: &CvConfig) -> Trajectory {
+    let t0 = std::time::Instant::now();
+    let mut best = (grid[0], f64::INFINITY);
+    let mut points = Vec::new();
+    for &lam in grid {
+        let l = cholesky_shifted(&data.h_mat, lam).expect("PD");
+        let th = solve_cholesky(&l, &data.g_vec);
+        let e = holdout_error(&data.xv, &data.yv, &th, cfg.metric);
+        if e < best.1 {
+            best = (lam, e);
+        }
+        points.push((t0.elapsed().as_secs_f64(), log_ratio(best.0, opt)));
+    }
+    Trajectory {
+        kind: SolverKind::Chol,
+        points,
+    }
+}
+
+/// PIChol trajectory: one point when the fit completes (selection ready),
+/// then refinement as the interpolated sweep walks the grid.
+fn pichol_trajectory(data: &FoldData, grid: &[f64], opt: f64, cfg: &CvConfig) -> Trajectory {
+    let t0 = std::time::Instant::now();
+    let strategy = Recursive::default();
+    let sample: Vec<f64> = subsample_indices(grid.len(), cfg.g_samples)
+        .into_iter()
+        .map(|i| grid[i])
+        .collect();
+    let mut timer = PhaseTimer::new();
+    let interp = fit(
+        &data.h_mat,
+        &sample,
+        &FitOptions {
+            degree: cfg.degree,
+            strategy: &strategy,
+        },
+        &mut timer,
+    )
+    .expect("fit");
+
+    let mut best = (grid[0], f64::INFINITY);
+    let mut points = Vec::new();
+    let mut vbuf = vec![0.0; interp.theta.cols()];
+    for &lam in grid {
+        interp.eval_vec_into(lam, &mut vbuf);
+        let l = strategy.unvec(&vbuf, interp.h);
+        let th = solve_cholesky(&l, &data.g_vec);
+        let e = holdout_error(&data.xv, &data.yv, &th, cfg.metric);
+        if e < best.1 {
+            best = (lam, e);
+        }
+        points.push((t0.elapsed().as_secs_f64(), log_ratio(best.0, opt)));
+    }
+    Trajectory {
+        kind: SolverKind::PiChol,
+        points,
+    }
+}
+
+/// MChol trajectory straight from its probe log.
+fn mchol_trajectory(data: &FoldData, grid: &[f64], opt: f64, cfg: &CvConfig) -> Trajectory {
+    let c = 0.5 * (grid[0].log10() + grid[grid.len() - 1].log10());
+    let s = 0.5 * (grid[grid.len() - 1].log10() - grid[0].log10());
+    let result = crate::pichol::mchol::multilevel_search(
+        c,
+        crate::pichol::mchol::MCholParams { s, s0: 0.0025 },
+        |lam| {
+            let l = cholesky_shifted(&data.h_mat, lam).expect("PD");
+            let th = solve_cholesky(&l, &data.g_vec);
+            holdout_error(&data.xv, &data.yv, &th, cfg.metric)
+        },
+    );
+    let mut best = (result.probes[0].lambda, f64::INFINITY);
+    let mut points = Vec::new();
+    for p in &result.probes {
+        if p.error < best.1 {
+            best = (p.lambda, p.error);
+        }
+        points.push((p.elapsed, log_ratio(best.0, opt)));
+    }
+    Trajectory {
+        kind: SolverKind::MChol,
+        points,
+    }
+}
+
+/// Run Figure 9 on one dataset.
+pub fn run(kind: DatasetKind, n: usize, h: usize, cfg: &CvConfig, seed: u64) -> Report {
+    let ds = SyntheticDataset::generate(kind, n, h, seed);
+    let (lo, hi) = cfg.lambda_range.unwrap_or_else(|| kind.lambda_range());
+    let grid = logspace(lo, hi, cfg.q_grid);
+    let folds = kfold(ds.n(), cfg.k_folds, cfg.seed);
+    let (xt, yt, xv, yv) = folds[0].materialize(&ds.x, &ds.y);
+    let mut timer = PhaseTimer::new();
+    let data = FoldData::build(xt, yt, xv, yv, &mut timer);
+
+    let opt = reference_lambda(&data, &grid, cfg);
+    let trajectories = vec![
+        chol_trajectory(&data, &grid, opt, cfg),
+        pichol_trajectory(&data, &grid, opt, cfg),
+        mchol_trajectory(&data, &grid, opt, cfg),
+    ];
+
+    let mut report = Report::new("fig9");
+    report.push_md(&format!(
+        "# Figure 9 — |log₁₀(λ_sel/λ_opt)| vs time ({}, h = {h})\n",
+        kind.name()
+    ));
+    report.push_md("| algorithm | time to reach ≤0.2 | final |log ratio| | total time |\n|---|---|---|---|");
+    for t in &trajectories {
+        let reach = t
+            .points
+            .iter()
+            .find(|(_, r)| *r <= 0.2)
+            .map(|(s, _)| format!("{s:.4}s"))
+            .unwrap_or_else(|| "never".into());
+        let last = t.points.last().unwrap();
+        report.push_md(&format!(
+            "| {} | {reach} | {:.3} | {:.4}s |",
+            t.kind.name(),
+            last.1,
+            last.0
+        ));
+    }
+    report.push_md(
+        "\nExpected shape (paper Fig. 9): PIChol reaches low selection error in a fraction \
+         of Chol/MChol's time.\n",
+    );
+
+    for t in &trajectories {
+        let rows: Vec<Vec<f64>> = t.points.iter().map(|&(s, r)| vec![s, r]).collect();
+        report.push_series(
+            &format!("traj_{}", t.kind.name()),
+            csv_of(&["elapsed_s", "abs_log10_ratio"], &rows),
+        );
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pichol_converges_faster_than_chol() {
+        let cfg = CvConfig {
+            k_folds: 2,
+            q_grid: 21,
+            ..CvConfig::default()
+        };
+        let rep = run(DatasetKind::CoilLike, 200, 64, &cfg, 7);
+        // parse: pichol total < chol total (structure check via series)
+        let chol = rep.series.iter().find(|(n, _)| n == "traj_Chol").unwrap();
+        let pi = rep.series.iter().find(|(n, _)| n == "traj_PIChol").unwrap();
+        let last_time = |csv: &str| -> f64 {
+            csv.lines()
+                .last()
+                .unwrap()
+                .split(',')
+                .next()
+                .unwrap()
+                .parse()
+                .unwrap()
+        };
+        assert!(
+            last_time(&pi.1) < last_time(&chol.1),
+            "pichol total should be below chol"
+        );
+        // and its final selection error is small
+        let final_ratio: f64 = pi
+            .1
+            .lines()
+            .last()
+            .unwrap()
+            .split(',')
+            .nth(1)
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(final_ratio < 0.5, "pichol final log-ratio {final_ratio}");
+    }
+}

@@ -1,0 +1,109 @@
+//! Experiment drivers: one submodule per table/figure of the paper's
+//! evaluation (§6), each parameterized by problem size so the same code runs
+//! as a fast smoke test or as the full bench (see DESIGN.md §4 for the
+//! experiment index).
+//!
+//! | module | reproduces |
+//! |---|---|
+//! | [`fig2`] | Figure 2 — % time of pipeline steps vs (n, h) |
+//! | [`table1`] | Table 1 — vec/fit/interp cost of the 3 vectorizations |
+//! | [`fig4`] | Figure 4 — exact vs interpolated factor entries over λ |
+//! | [`fig6_table3`] | Figure 6 + Table 3 — timing of the 6 algorithms |
+//! | [`fig7_table4`] | Figures 7-8 + Table 4 — hold-out curves and selections |
+//! | [`fig9`] | Figure 9 — selected-λ error vs wall-time trajectories |
+//! | [`fig10`] | Figure 10 — PINRMSE vs PIChol interpolation quality |
+//! | [`fig11`] | Figure 11 — NRMSE of the factor interpolation vs λ |
+//! | [`ablations`] | design-choice sweeps (g, r, block sizes, h₀) |
+
+pub mod ablations;
+pub mod fig10;
+pub mod fig11;
+pub mod fig2;
+pub mod fig4;
+pub mod fig6_table3;
+pub mod fig7_table4;
+pub mod fig9;
+pub mod table1;
+
+use std::io::Write;
+use std::path::Path;
+
+/// A rendered experiment report: markdown text plus optional CSV series.
+pub struct Report {
+    /// Experiment id, e.g. "table1".
+    pub id: String,
+    /// Human-readable markdown (tables, headers, notes).
+    pub markdown: String,
+    /// (name, csv-text) data series for plotting.
+    pub series: Vec<(String, String)>,
+}
+
+impl Report {
+    pub fn new(id: &str) -> Self {
+        Self {
+            id: id.to_string(),
+            markdown: String::new(),
+            series: Vec::new(),
+        }
+    }
+
+    pub fn push_md(&mut self, text: &str) {
+        self.markdown.push_str(text);
+        if !text.ends_with('\n') {
+            self.markdown.push('\n');
+        }
+    }
+
+    pub fn push_series(&mut self, name: &str, csv: String) {
+        self.series.push((name.to_string(), csv));
+    }
+
+    /// Print to stdout (bench harness behaviour).
+    pub fn print(&self) {
+        println!("\n===== {} =====", self.id);
+        println!("{}", self.markdown);
+    }
+
+    /// Write `<dir>/<id>.md` and `<dir>/<id>_<series>.csv`.
+    pub fn write_to(&self, dir: impl AsRef<Path>) -> std::io::Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::File::create(dir.join(format!("{}.md", self.id)))?;
+        f.write_all(self.markdown.as_bytes())?;
+        for (name, csv) in &self.series {
+            let mut f = std::fs::File::create(dir.join(format!("{}_{}.csv", self.id, name)))?;
+            f.write_all(csv.as_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+/// Render a CSV from a header and rows of f64.
+pub fn csv_of(header: &[&str], rows: &[Vec<f64>]) -> String {
+    let mut s = header.join(",");
+    s.push('\n');
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v:.6e}")).collect();
+        s.push_str(&cells.join(","));
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_roundtrip(){
+        let mut r = Report::new("t");
+        r.push_md("# hello");
+        r.push_series("curve", csv_of(&["x", "y"], &[vec![1.0, 2.0]]));
+        let dir = std::env::temp_dir().join("pichol_report_test");
+        r.write_to(&dir).unwrap();
+        assert!(dir.join("t.md").exists());
+        assert!(dir.join("t_curve.csv").exists());
+        let csv = std::fs::read_to_string(dir.join("t_curve.csv")).unwrap();
+        assert!(csv.starts_with("x,y"));
+    }
+}

@@ -1,0 +1,58 @@
+//! # piCholesky
+//!
+//! A rust + JAX/Pallas reproduction of *piCholesky: Polynomial Interpolation
+//! of Multiple Cholesky Factors for Efficient Approximate Cross-Validation*
+//! (Kuang, Gittens & Hamid, 2014).
+//!
+//! Ridge-regression cross-validation solves `(H + λI)θ = g` over k folds × q
+//! candidate λ values; each solve costs an `O(d³)` Cholesky factorization, so
+//! the λ sweep dominates the pipeline once `n < k·q·d` (paper Figures 1-2).
+//! piCholesky computes only `g ≪ q` exact factors, fits a degree-`r`
+//! polynomial to every entry of the factor as a function of λ (one big
+//! least-squares problem, Algorithm 1) and *interpolates* the remaining
+//! factors at `O(r·d²)` each.
+//!
+//! ## Architecture (three layers, python never on the request path)
+//!
+//! - **L1** — Pallas kernels (`python/compile/kernels/`): tiled Gram matrix,
+//!   polynomial fit/eval streaming the huge `D = h(h+1)/2` axis, blocked
+//!   triangular solves.
+//! - **L2** — JAX graphs (`python/compile/model.py`) composing the kernels,
+//!   AOT-lowered once to HLO text artifacts by `make artifacts`.
+//! - **L3** — this crate: the cross-validation coordinator ([`coordinator`],
+//!   [`cv`]), the native Algorithm-1 implementation ([`pichol`]), the
+//!   LAPACK-like substrate the paper assumes ([`linalg`]), the §5 triangular
+//!   vectorization strategies ([`vectorize`]), dataset synthesis and
+//!   Kar–Karnick random feature maps ([`data`]), and the PJRT runtime that
+//!   loads the AOT artifacts ([`runtime`]).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use picholesky::data::synthetic::{DatasetKind, SyntheticDataset};
+//! use picholesky::cv::{run_cv, CvConfig};
+//! use picholesky::cv::solvers::SolverKind;
+//!
+//! let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 512, 128, 7);
+//! let cfg = CvConfig::default();
+//! let report = run_cv(&ds, SolverKind::PiChol, &cfg).unwrap();
+//! println!("λ* = {:.4}, holdout = {:.4}", report.best_lambda, report.best_error);
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod cv;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod pichol;
+pub mod prng;
+pub mod runtime;
+pub mod testutil;
+pub mod util;
+pub mod vectorize;
+
+/// Crate-wide result type (anyhow-backed; the only external dependency apart
+/// from the `xla` PJRT bindings).
+pub type Result<T> = anyhow::Result<T>;

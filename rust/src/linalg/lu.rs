@@ -1,0 +1,156 @@
+//! LU decomposition with partial pivoting.
+//!
+//! Needed by the §4 error-bound machinery: the Fréchet-derivative operator
+//! `M = L⊗I + I⊗L` is *not* symmetric, so its inverse (Theorem 4.3/4.4)
+//! requires a general solver. Standard `getrf`/`getrs` shape.
+
+use super::matrix::Matrix;
+
+/// Compact LU factors: `P·A = L·U` with unit-diagonal L stored below the
+/// diagonal of `lu` and U on/above it.
+pub struct LuFactors {
+    lu: Matrix,
+    /// Row permutation: row i of PA is row `perm[i]` of A.
+    perm: Vec<usize>,
+    /// Sign of the permutation (determinant bookkeeping).
+    pub sign: f64,
+}
+
+/// Factor a square matrix; returns `None` if (numerically) singular.
+pub fn lu_decompose(a: &Matrix) -> Option<LuFactors> {
+    assert!(a.is_square());
+    let n = a.rows();
+    let mut lu = a.clone();
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut sign = 1.0;
+
+    for k in 0..n {
+        // pivot search in column k
+        let mut p = k;
+        let mut pmax = lu[(k, k)].abs();
+        for i in (k + 1)..n {
+            let v = lu[(i, k)].abs();
+            if v > pmax {
+                pmax = v;
+                p = i;
+            }
+        }
+        if pmax < 1e-300 {
+            return None;
+        }
+        if p != k {
+            perm.swap(p, k);
+            sign = -sign;
+            let (rk, rp) = lu.two_rows_mut(k, p);
+            rk.swap_with_slice(rp);
+        }
+        let pivot = lu[(k, k)];
+        for i in (k + 1)..n {
+            let m = lu[(i, k)] / pivot;
+            lu[(i, k)] = m;
+            if m == 0.0 {
+                continue;
+            }
+            // row update: contiguous tail axpy
+            let (rk, ri) = lu.two_rows_mut(k, i);
+            for j in (k + 1)..n {
+                ri[j] -= m * rk[j];
+            }
+        }
+    }
+    Some(LuFactors { lu, perm, sign })
+}
+
+impl LuFactors {
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows();
+        assert_eq!(b.len(), n);
+        // apply permutation, then forward/back substitution
+        let mut x: Vec<f64> = self.perm.iter().map(|&p| b[p]).collect();
+        for i in 1..n {
+            let row = self.lu.row(i);
+            let mut s = x[i];
+            for k in 0..i {
+                s -= row[k] * x[k];
+            }
+            x[i] = s;
+        }
+        for i in (0..n).rev() {
+            let row = self.lu.row(i);
+            let mut s = x[i];
+            for k in (i + 1)..n {
+                s -= row[k] * x[k];
+            }
+            x[i] = s / row[i];
+        }
+        x
+    }
+
+    /// Solve for a multi-column RHS.
+    pub fn solve_matrix(&self, b: &Matrix) -> Matrix {
+        let n = self.lu.rows();
+        assert_eq!(b.rows(), n);
+        let mut out = Matrix::zeros(n, b.cols());
+        for j in 0..b.cols() {
+            let col = self.solve(&b.col(j));
+            for i in 0..n {
+                out[(i, j)] = col[i];
+            }
+        }
+        out
+    }
+
+    /// Explicit inverse (used by the bound calculator at small h²).
+    pub fn inverse(&self) -> Matrix {
+        self.solve_matrix(&Matrix::eye(self.lu.rows()))
+    }
+
+    /// Determinant.
+    pub fn det(&self) -> f64 {
+        let mut d = self.sign;
+        for i in 0..self.lu.rows() {
+            d *= self.lu[(i, i)];
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{gemm, gemv};
+    use crate::testutil::{assert_matrix_close, assert_vec_close, random_matrix};
+
+    #[test]
+    fn solve_random_system() {
+        let a = random_matrix(20, 20, 1);
+        let x_true: Vec<f64> = (0..20).map(|i| (i as f64 * 0.3).cos()).collect();
+        let b = gemv(&a, &x_true);
+        let f = lu_decompose(&a).unwrap();
+        assert_vec_close(&f.solve(&b), &x_true, 1e-9);
+    }
+
+    #[test]
+    fn inverse_reconstructs_identity() {
+        let a = random_matrix(15, 15, 2);
+        let f = lu_decompose(&a).unwrap();
+        let ainv = f.inverse();
+        assert_matrix_close(&gemm(&a, &ainv), &Matrix::eye(15), 1e-9);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let mut a = random_matrix(8, 8, 3);
+        let dup = a.row(0).to_vec();
+        a.row_mut(5).copy_from_slice(&dup);
+        assert!(lu_decompose(&a).is_none());
+    }
+
+    #[test]
+    fn det_of_known() {
+        let a = Matrix::from_vec(2, 2, vec![3.0, 1.0, 4.0, 2.0]);
+        let f = lu_decompose(&a).unwrap();
+        assert!((f.det() - 2.0).abs() < 1e-12);
+    }
+}

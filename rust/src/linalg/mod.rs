@@ -1,0 +1,39 @@
+//! Dense linear-algebra substrate.
+//!
+//! The paper assumes a multithreaded BLAS-3/LAPACK underneath ("maximally
+//! exploiting modern hardware using high performance BLAS-3 software", §1).
+//! Nothing of the sort exists in the offline crate set, so this module builds
+//! the pieces from scratch, in the same cache-blocked style:
+//!
+//! - [`matrix`] — the row-major `Matrix` type and views
+//! - [`gemm`] — blocked matmul / syrk / matvec (the BLAS-3 core)
+//! - [`cholesky`] — blocked right-looking Cholesky (LAPACK `potrf` shape)
+//! - [`triangular`] — forward/backward substitution and block TRSM
+//! - [`qr`] — Householder QR (thin Q), used by the randomized SVD
+//! - [`svd`] — one-sided Jacobi SVD (the paper's `SVD` baseline)
+//! - [`lanczos`] — Lanczos-bidiagonalization truncated SVD (`t-SVD` baseline)
+//! - [`randomized`] — Halko–Martinsson–Tropp randomized SVD (`r-SVD` baseline)
+//! - [`norms`] — Frobenius/spectral norms and condition estimates
+//!
+//! Everything is `f64`: the native path is the correctness reference the
+//! fp32 HLO path is compared against.
+
+pub mod cholesky;
+pub mod gemm;
+pub mod lanczos;
+pub mod lu;
+pub mod matrix;
+pub mod norms;
+pub mod qr;
+pub mod randomized;
+pub mod svd;
+pub mod triangular;
+
+pub use cholesky::{cholesky_blocked, cholesky_in_place, CholeskyError};
+pub use gemm::{gemm, gemv, syrk_lower, Gemm};
+pub use matrix::Matrix;
+pub use norms::{fro_norm, spectral_norm_est};
+pub use qr::householder_qr_thin;
+pub use randomized::randomized_svd;
+pub use svd::jacobi_svd;
+pub use triangular::{solve_cholesky, trsm_left_lower, trsv_lower, trsv_upper};

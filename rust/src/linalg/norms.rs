@@ -1,0 +1,92 @@
+//! Norms and conditioning estimates used by the error-bound machinery (§4).
+
+use super::gemm::gemv;
+use super::matrix::Matrix;
+use crate::prng::Xoshiro256;
+
+/// Frobenius norm.
+pub fn fro_norm(a: &Matrix) -> f64 {
+    a.as_slice().iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Vector 2-norm.
+pub fn vec_norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// RMS over all entries (the paper's `1/√D ‖·‖_F` normalization).
+pub fn rms(a: &Matrix) -> f64 {
+    fro_norm(a) / (a.as_slice().len() as f64).sqrt()
+}
+
+/// Spectral norm estimate via power iteration on `AᵀA`.
+pub fn spectral_norm_est(a: &Matrix, iters: usize, seed: u64) -> f64 {
+    let n = a.cols();
+    let mut rng = Xoshiro256::seed_from(seed);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut sigma = 0.0;
+    for _ in 0..iters {
+        let av = gemv(a, &v);
+        let atav = super::gemm::gemv_t(a, &av);
+        let nrm = vec_norm(&atav);
+        if nrm == 0.0 {
+            return 0.0;
+        }
+        sigma = nrm.sqrt();
+        for (vi, &x) in v.iter_mut().zip(&atav) {
+            *vi = x / nrm;
+        }
+    }
+    sigma
+}
+
+/// NRMSE between a prediction matrix and a target matrix, normalized by the
+/// target's standard deviation — the paper's Figure 11 metric ("naively using
+/// the mean of the target variable implies NRMSE of 1").
+pub fn nrmse(pred: &Matrix, target: &Matrix) -> f64 {
+    assert_eq!(
+        (pred.rows(), pred.cols()),
+        (target.rows(), target.cols()),
+        "nrmse shape mismatch"
+    );
+    let n = target.as_slice().len() as f64;
+    let mean = target.as_slice().iter().sum::<f64>() / n;
+    let var = target.as_slice().iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+    let mse = pred
+        .as_slice()
+        .iter()
+        .zip(target.as_slice())
+        .map(|(p, t)| (p - t).powi(2))
+        .sum::<f64>()
+        / n;
+    (mse / var.max(1e-300)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::random_spd;
+
+    #[test]
+    fn fro_of_identity() {
+        assert!((fro_norm(&Matrix::eye(9)) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spectral_matches_largest_eigenvalue_of_spd() {
+        let a = random_spd(20, 100.0, 1);
+        // largest eigenvalue via dense Jacobi SVD (SPD ⇒ σ₁ = λ₁)
+        let svd = crate::linalg::svd::jacobi_svd(&a);
+        let est = spectral_norm_est(&a, 200, 2);
+        assert!((est - svd.s[0]).abs() / svd.s[0] < 1e-6);
+    }
+
+    #[test]
+    fn nrmse_zero_when_equal_one_when_mean() {
+        let t = Matrix::from_fn(5, 5, |i, j| (i * 5 + j) as f64);
+        assert!(nrmse(&t, &t) < 1e-12);
+        let mean = t.as_slice().iter().sum::<f64>() / 25.0;
+        let m = Matrix::from_fn(5, 5, |_, _| mean);
+        assert!((nrmse(&m, &t) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,141 @@
+//! Householder QR with thin-Q extraction.
+//!
+//! Needed by the randomized-SVD baseline (orthonormalizing the sketch) and by
+//! the Lanczos reorthogonalization. Standard LAPACK `geqrf`/`orgqr` shape,
+//! unblocked — the matrices it sees (n × (k+p) sketches) are tall and skinny,
+//! so BLAS-2 is fine.
+
+use super::matrix::Matrix;
+
+/// Compact QR state: Householder vectors stored below the diagonal of `qr`,
+/// scalar factors in `tau`.
+pub struct QrFactors {
+    qr: Matrix,
+    tau: Vec<f64>,
+}
+
+/// Factor `a` (m×n, m ≥ n) as Q·R.
+pub fn householder_qr(a: &Matrix) -> QrFactors {
+    let (m, n) = (a.rows(), a.cols());
+    assert!(m >= n, "householder_qr expects a tall matrix");
+    let mut qr = a.clone();
+    let mut tau = vec![0.0; n];
+
+    for k in 0..n {
+        // norm of the k-th column below the diagonal
+        let mut normx = 0.0;
+        for i in k..m {
+            normx += qr[(i, k)] * qr[(i, k)];
+        }
+        normx = normx.sqrt();
+        if normx == 0.0 {
+            tau[k] = 0.0;
+            continue;
+        }
+        let alpha = qr[(k, k)];
+        let beta = -alpha.signum() * normx;
+        let v0 = alpha - beta;
+        // v = [1, qr[k+1..,k]/v0]; apply H = I − τ v vᵀ
+        tau[k] = -v0 / beta;
+        for i in (k + 1)..m {
+            qr[(i, k)] /= v0;
+        }
+        qr[(k, k)] = beta;
+        // update trailing columns
+        for j in (k + 1)..n {
+            let mut dot = qr[(k, j)];
+            for i in (k + 1)..m {
+                dot += qr[(i, k)] * qr[(i, j)];
+            }
+            dot *= tau[k];
+            qr[(k, j)] -= dot;
+            for i in (k + 1)..m {
+                let vik = qr[(i, k)];
+                qr[(i, j)] -= dot * vik;
+            }
+        }
+    }
+    QrFactors { qr, tau }
+}
+
+impl QrFactors {
+    /// The upper-triangular R (n×n).
+    pub fn r(&self) -> Matrix {
+        let n = self.qr.cols();
+        Matrix::from_fn(n, n, |i, j| if j >= i { self.qr[(i, j)] } else { 0.0 })
+    }
+
+    /// Thin Q (m×n) via backward accumulation of the Householder reflectors.
+    pub fn thin_q(&self) -> Matrix {
+        let (m, n) = (self.qr.rows(), self.qr.cols());
+        let mut q = Matrix::zeros(m, n);
+        for i in 0..n {
+            q[(i, i)] = 1.0;
+        }
+        for k in (0..n).rev() {
+            if self.tau[k] == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                // dot = vᵀ q[:,j] with v = [1; qr[k+1..,k]]
+                let mut dot = q[(k, j)];
+                for i in (k + 1)..m {
+                    dot += self.qr[(i, k)] * q[(i, j)];
+                }
+                dot *= self.tau[k];
+                q[(k, j)] -= dot;
+                for i in (k + 1)..m {
+                    let vik = self.qr[(i, k)];
+                    q[(i, j)] -= dot * vik;
+                }
+            }
+        }
+        q
+    }
+}
+
+/// Convenience: thin (Q, R) of a tall matrix.
+pub fn householder_qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let f = householder_qr(a);
+    (f.thin_q(), f.r())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::gemm;
+    use crate::testutil::{assert_matrix_close, random_matrix};
+
+    #[test]
+    fn qr_reconstructs() {
+        let a = random_matrix(30, 8, 1);
+        let (q, r) = householder_qr_thin(&a);
+        assert_matrix_close(&gemm(&q, &r), &a, 1e-10);
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let a = random_matrix(40, 10, 2);
+        let (q, _) = householder_qr_thin(&a);
+        let qtq = gemm(&q.transpose(), &q);
+        assert_matrix_close(&qtq, &Matrix::eye(10), 1e-10);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let a = random_matrix(20, 6, 3);
+        let (_, r) = householder_qr_thin(&a);
+        for i in 0..6 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn square_case() {
+        let a = random_matrix(12, 12, 4);
+        let (q, r) = householder_qr_thin(&a);
+        assert_matrix_close(&gemm(&q, &r), &a, 1e-9);
+    }
+}

@@ -1,0 +1,178 @@
+//! Triangular solves: the per-λ request-path operation (paper §3.2).
+//!
+//! Once a factor L (exact or interpolated) is in hand, solving
+//! `L Lᵀ θ = g` is a forward substitution followed by a backward one —
+//! `O(d²)` each, which is exactly why interpolating L (instead of the
+//! solution θ) preserves the cheap per-λ cost structure.
+
+use super::matrix::Matrix;
+
+/// Forward substitution: solve `L w = b` for lower-triangular L.
+pub fn trsv_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert!(l.is_square() && b.len() == n);
+    let mut w = vec![0.0; n];
+    for i in 0..n {
+        let row = l.row(i);
+        let mut s = b[i];
+        // contiguous dot over the already-solved prefix
+        for k in 0..i {
+            s -= row[k] * w[k];
+        }
+        w[i] = s / row[i];
+    }
+    w
+}
+
+/// Backward substitution: solve `Lᵀ x = b` given lower-triangular L
+/// (reads L column-wise, i.e. Lᵀ row-wise).
+pub fn trsv_upper(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert!(l.is_square() && b.len() == n);
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        let xi = x[i] / l[(i, i)];
+        x[i] = xi;
+        // eliminate xi from all earlier equations: x[k] -= L[i][k] * xi
+        let row = l.row(i);
+        for k in 0..i {
+            x[k] -= row[k] * xi;
+        }
+    }
+    x
+}
+
+/// Solve `L Lᵀ θ = g` — the complete per-λ ridge solve.
+pub fn solve_cholesky(l: &Matrix, g: &[f64]) -> Vec<f64> {
+    trsv_upper(l, &trsv_lower(l, g))
+}
+
+/// Block TRSM: solve `L X = B` for a multi-column right-hand side
+/// (lower-triangular L, B overwritten column-block-wise).
+pub fn trsm_left_lower(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows();
+    assert!(l.is_square() && b.rows() == n);
+    let ncols = b.cols();
+    let mut x = b.clone();
+    for i in 0..n {
+        let lii = l[(i, i)];
+        // x[i,:] = (b[i,:] - Σ_{k<i} L[i,k]·x[k,:]) / L[i,i]
+        for k in 0..i {
+            let lik = l[(i, k)];
+            if lik == 0.0 {
+                continue;
+            }
+            let (xk, xi) = x.two_rows_mut(k, i);
+            for c in 0..ncols {
+                xi[c] -= lik * xk[c];
+            }
+        }
+        for v in x.row_mut(i) {
+            *v /= lii;
+        }
+    }
+    x
+}
+
+/// Solve `Lᵀ X = B` for a multi-column RHS.
+pub fn trsm_left_lower_t(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows();
+    assert!(l.is_square() && b.rows() == n);
+    let ncols = b.cols();
+    let mut x = b.clone();
+    for i in (0..n).rev() {
+        let lii = l[(i, i)];
+        for v in x.row_mut(i) {
+            *v /= lii;
+        }
+        let lrow = l.row(i).to_vec();
+        for k in 0..i {
+            let lik = lrow[k];
+            if lik == 0.0 {
+                continue;
+            }
+            let (xk, xi) = x.two_rows_mut(k, i);
+            for c in 0..ncols {
+                xk[c] -= lik * xi[c];
+            }
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky::cholesky_blocked;
+    use crate::linalg::gemm::{gemm, gemv};
+    use crate::testutil::{random_matrix, random_spd};
+
+    #[test]
+    fn trsv_lower_solves() {
+        let a = random_spd(20, 1e3, 1);
+        let l = cholesky_blocked(&a).unwrap();
+        let b: Vec<f64> = (0..20).map(|i| (i as f64).cos()).collect();
+        let w = trsv_lower(&l, &b);
+        let lb = gemv(&l, &w);
+        for (x, y) in lb.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn trsv_upper_solves() {
+        let a = random_spd(20, 1e3, 2);
+        let l = cholesky_blocked(&a).unwrap();
+        let b: Vec<f64> = (0..20).map(|i| (i as f64).sin()).collect();
+        let x = trsv_upper(&l, &b);
+        let ltx = gemv(&l.transpose(), &x);
+        for (p, q) in ltx.iter().zip(&b) {
+            assert!((p - q).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn solve_cholesky_residual() {
+        let a = random_spd(50, 1e5, 3);
+        let l = cholesky_blocked(&a).unwrap();
+        let g: Vec<f64> = (0..50).map(|i| ((i * 7 % 13) as f64) - 6.0).collect();
+        let th = solve_cholesky(&l, &g);
+        let ath = gemv(&a, &th);
+        let res: f64 = ath.iter().zip(&g).map(|(x, y)| (x - y).powi(2)).sum::<f64>().sqrt();
+        let gn: f64 = g.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!(res / gn < 1e-8, "relative residual {}", res / gn);
+    }
+
+    #[test]
+    fn trsm_matches_columnwise_trsv() {
+        let a = random_spd(16, 1e2, 4);
+        let l = cholesky_blocked(&a).unwrap();
+        let b = random_matrix(16, 5, 5);
+        let x = trsm_left_lower(&l, &b);
+        for j in 0..5 {
+            let bj = b.col(j);
+            let xj = trsv_lower(&l, &bj);
+            for i in 0..16 {
+                assert!((x[(i, j)] - xj[i]).abs() < 1e-10);
+            }
+        }
+        let xt = trsm_left_lower_t(&l, &b);
+        for j in 0..5 {
+            let bj = b.col(j);
+            let xj = trsv_upper(&l, &bj);
+            for i in 0..16 {
+                assert!((xt[(i, j)] - xj[i]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn trsm_reconstruction() {
+        let a = random_spd(12, 1e2, 6);
+        let l = cholesky_blocked(&a).unwrap();
+        let b = random_matrix(12, 3, 7);
+        let x = trsm_left_lower(&l, &b);
+        let lb = gemm(&l, &x);
+        assert!(lb.max_abs_diff(&b) < 1e-10);
+    }
+}

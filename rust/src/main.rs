@@ -1,0 +1,326 @@
+//! `pichol` — the leader binary: CLI over the coordinator, the native and
+//! HLO cross-validation pipelines, and the experiment suite.
+
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+use picholesky::cli::{Args, USAGE};
+use picholesky::config::{parse_dataset, ExperimentConfig};
+use picholesky::coordinator::{Coordinator, HloFold, HloPipeline};
+use picholesky::cv::solvers::SolverKind;
+use picholesky::cv::CvConfig;
+use picholesky::data::synthetic::{DatasetKind, SyntheticDataset};
+use picholesky::experiments;
+use picholesky::runtime::Engine;
+use picholesky::util::fmt_secs;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "cv" => cmd_cv(&args),
+        "compare" => cmd_compare(&args),
+        "hlo" => cmd_hlo(&args),
+        "experiments" => cmd_experiments(&args),
+        "bound" => cmd_bound(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+/// Assemble an ExperimentConfig from `--config` file + flag overrides.
+fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(ds) = args.flag("dataset") {
+        cfg.dataset = parse_dataset(ds)?;
+    }
+    cfg.h = args.usize_flag("h", cfg.h)?;
+    cfg.n = args.usize_flag("n", cfg.n)?;
+    cfg.seed = args.usize_flag("seed", cfg.seed as usize)? as u64;
+    cfg.cv.k_folds = args.usize_flag("folds", cfg.cv.k_folds)?;
+    cfg.cv.q_grid = args.usize_flag("grid", cfg.cv.q_grid)?;
+    cfg.cv.g_samples = args.usize_flag("g", cfg.cv.g_samples)?;
+    cfg.cv.degree = args.usize_flag("degree", cfg.cv.degree)?;
+    cfg.cv.seed = cfg.seed;
+    if let Some(dir) = args.flag("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_cv(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let solver = SolverKind::parse(args.flag("solver").unwrap_or("pichol"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --solver"))?;
+    let coord = Coordinator::new(cfg.workers.max(1));
+    println!(
+        "dataset={} n={} h={} solver={} folds={} grid={}",
+        cfg.dataset.name(),
+        cfg.n,
+        cfg.h,
+        solver.name(),
+        cfg.cv.k_folds,
+        cfg.cv.q_grid
+    );
+    let ds = SyntheticDataset::generate(cfg.dataset, cfg.n, cfg.h, cfg.seed);
+    let rep = coord.run_one(&ds, solver, &cfg.cv)?;
+    println!(
+        "λ* = {:.4e}   holdout = {:.4}   total = {}",
+        rep.best_lambda,
+        rep.best_error,
+        fmt_secs(rep.total_secs())
+    );
+    for (phase, secs) in rep.timer.entries() {
+        println!("  {phase:<10} {}", fmt_secs(*secs));
+    }
+    if args.switch("metrics") {
+        print!("{}", coord.metrics.snapshot());
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let coord = Coordinator::new(cfg.workers.max(1));
+    let ds = Arc::new(SyntheticDataset::generate(
+        cfg.dataset, cfg.n, cfg.h, cfg.seed,
+    ));
+    println!(
+        "comparing 6 algorithms on {} (n={}, h={})",
+        cfg.dataset.name(),
+        cfg.n,
+        cfg.h
+    );
+    let reports = coord.run_matrix(ds, &SolverKind::paper_six(), &cfg.cv);
+    println!("{:<8} {:>12} {:>12} {:>10}", "algo", "λ*", "holdout", "total");
+    for rep in reports {
+        let rep = rep?;
+        println!(
+            "{:<8} {:>12.4e} {:>12.4} {:>10}",
+            rep.kind.name(),
+            rep.best_lambda,
+            rep.best_error,
+            fmt_secs(rep.total_secs())
+        );
+    }
+    Ok(())
+}
+
+fn cmd_hlo(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let engine = Engine::new(&cfg.artifacts_dir)?;
+    let entry = engine.config(cfg.h, None, None)?;
+    println!(
+        "platform: {}   config: {} (n={}, n_val={}, g={}, r={}, m={})",
+        engine.platform(),
+        entry.tag,
+        entry.n,
+        entry.n_val,
+        entry.g,
+        entry.r,
+        entry.m
+    );
+
+    // dataset sized exactly to the lowered shapes
+    let total = entry.n + entry.n_val;
+    let ds = SyntheticDataset::generate(cfg.dataset, total, entry.h, cfg.seed);
+    let fold = HloFold {
+        xt: ds.x.slice(0, entry.n, 0, entry.h),
+        yt: ds.y[..entry.n].to_vec(),
+        xv: ds.x.slice(entry.n, total, 0, entry.h),
+        yv: ds.y[entry.n..].to_vec(),
+    };
+    let metrics = picholesky::coordinator::Metrics::new();
+    let pipe = HloPipeline::new(&engine, entry, &metrics);
+    let (lo, hi) = cfg
+        .cv
+        .lambda_range
+        .unwrap_or_else(|| cfg.dataset.lambda_range());
+
+    let t0 = std::time::Instant::now();
+    pipe.warmup()?;
+    println!("compiled in {}", fmt_secs(t0.elapsed().as_secs_f64()));
+
+    let t0 = std::time::Instant::now();
+    let result = pipe.run_fold(&fold, lo, hi)?;
+    let pichol_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "piCholesky (HLO): λ* = {:.4e}  rmse = {:.4}  miscls = {:.4}  in {}",
+        result.best_lambda(),
+        result.best_rmse(),
+        result.miscls[result.best_idx],
+        fmt_secs(pichol_secs)
+    );
+
+    if args.switch("exact") {
+        let t0 = std::time::Instant::now();
+        let exact = pipe.run_fold_exact(&fold, lo, hi)?;
+        let exact_secs = t0.elapsed().as_secs_f64();
+        println!(
+            "exact Chol (HLO): λ* = {:.4e}  rmse = {:.4}  in {}  (pichol speedup {:.2}×)",
+            exact.best_lambda(),
+            exact.best_rmse(),
+            fmt_secs(exact_secs),
+            exact_secs / pichol_secs
+        );
+    }
+    print!("{}", metrics.snapshot());
+    Ok(())
+}
+
+fn cmd_experiments(args: &Args) -> Result<()> {
+    let out = args.flag("out").unwrap_or("results").to_string();
+    let fast = args.switch("fast");
+    let seed = args.usize_flag("seed", 42)? as u64;
+    let coord = Coordinator::default();
+
+    // sizes: --fast for smoke runs, default for the EXPERIMENTS.md record
+    #[allow(clippy::type_complexity)]
+    let (t1_dims, f2_ns, f2_hs, f6_hs, big_h, big_n): (
+        Vec<usize>,
+        Vec<usize>,
+        Vec<usize>,
+        Vec<usize>,
+        usize,
+        usize,
+    ) = if fast {
+        (
+            vec![128, 256],
+            vec![256, 512],
+            vec![32, 64],
+            vec![32, 64],
+            64,
+            256,
+        )
+    } else {
+        (
+            vec![256, 512, 1024, 2048],
+            vec![512, 1024, 2048, 4096],
+            vec![64, 128, 256],
+            vec![64, 128, 256, 384],
+            256,
+            1024,
+        )
+    };
+    let cfg = CvConfig::default();
+
+    let reports = vec![
+        experiments::table1::run(&t1_dims, 4, 31, seed),
+        experiments::fig2::run(&f2_ns, &f2_hs, cfg.q_grid, seed),
+        experiments::fig4::run(if fast { 48 } else { 128 }, 6, 2, 50, seed),
+        experiments::fig6_table3::run_fig6(&coord, &f6_hs, 8, &cfg),
+        experiments::fig6_table3::run_table3(&coord, big_n, big_h, &cfg),
+        experiments::fig7_table4::run_fig7_8(&coord, &DatasetKind::all(), big_n, big_h, &cfg),
+        experiments::fig7_table4::run_table4(&coord, big_n, big_h, &cfg),
+        experiments::fig9::run(DatasetKind::CoilLike, big_n, big_h, &cfg, seed),
+        experiments::fig10::run(
+            &coord,
+            &DatasetKind::all(),
+            big_n,
+            if fast { 48 } else { 96 },
+            &cfg,
+        ),
+        experiments::fig11::run(if fast { 48 } else { 128 }, 4, 2, 31, seed),
+        experiments::ablations::run_gr(if fast { 24 } else { 64 }, seed),
+        experiments::ablations::run_chol_block(
+            if fast { 128 } else { 512 },
+            &[8, 16, 32, 64, 128, 256],
+            3,
+            seed,
+        ),
+        experiments::ablations::run_recursive_h0(
+            if fast { 256 } else { 1024 },
+            &[4, 8, 16, 32, 64, 128, 256],
+            10,
+            seed,
+        ),
+    ];
+    for rep in &reports {
+        rep.print();
+        rep.write_to(&out)?;
+    }
+    println!("\nwrote {} reports to {out}/", reports.len());
+    Ok(())
+}
+
+fn cmd_bound(args: &Args) -> Result<()> {
+    let h = args.usize_flag("h", 16)?;
+    let lambda_c = args.f64_flag("lambda-c", 0.5)?;
+    let w = args.f64_flag("w", 0.15)?;
+    let gamma = args.f64_flag("gamma", 0.25)?;
+    let seed = args.usize_flag("seed", 1)? as u64;
+
+    let a = picholesky::testutil::random_spd(h, 1e3, seed);
+    let calc = picholesky::pichol::bound::BoundCalculator::new(a.clone());
+    let lams: Vec<f64> = (0..4)
+        .map(|i| lambda_c - w + 2.0 * w * i as f64 / 3.0)
+        .collect();
+    let mut timer = picholesky::util::PhaseTimer::new();
+    let interp = picholesky::pichol::fit(
+        &a,
+        &lams,
+        &picholesky::pichol::FitOptions {
+            degree: 2,
+            strategy: &picholesky::vectorize::RowWise,
+        },
+        &mut timer,
+    )?;
+    let bound = calc.thm47_rhs(gamma, w, lambda_c, &lams, 2, 7);
+    println!("Theorem 4.7 bound (h={h}, λc={lambda_c}, w={w}, γ={gamma}): {bound:.4e}");
+    println!("{:<10} {:>14} {:>14} {:>8}", "λ", "measured", "bound", "ok");
+    for i in 0..7 {
+        let lam = lambda_c - gamma + 2.0 * gamma * i as f64 / 6.0;
+        let approx = interp.eval_factor(lam, &picholesky::vectorize::RowWise);
+        let measured = calc.measured_rms_error(lam, &approx);
+        println!(
+            "{lam:<10.4} {measured:>14.4e} {bound:>14.4e} {:>8}",
+            if measured <= bound { "ok" } else { "VIOLATED" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.flag("artifacts").unwrap_or("artifacts");
+    match Engine::new(dir) {
+        Ok(engine) => {
+            println!("platform: {}", engine.platform());
+            println!("artifacts ({dir}):");
+            for cfg in &engine.manifest().configs {
+                println!(
+                    "  {:<22} h={:<5} n={:<6} D={:<9} files={}",
+                    cfg.tag,
+                    cfg.h,
+                    cfg.n,
+                    cfg.d_tri,
+                    cfg.files.len()
+                );
+            }
+        }
+        Err(e) => {
+            println!("no artifacts loaded: {e:#}");
+            println!("(native path still available: `pichol cv`, `pichol compare`)");
+        }
+    }
+    println!("native linalg: ok (f64, blocked kernels)");
+    Ok(())
+}

@@ -1,0 +1,395 @@
+//! The §4 theoretical machinery: Fréchet derivative of the Cholesky map,
+//! its second-order Taylor polynomial, and the Theorem 4.4 / 4.7 error
+//! bounds.
+//!
+//! The paper works with the h²×h² Kronecker operator `M = ⟦C(A)⟧ =
+//! C(A)⊗I + I⊗C(A)` and freely identifies `vec(Γ)` with `vec(Γᵀ)`. That
+//! identification is exact only on symmetric arguments; the derivative of
+//! the Cholesky map is *lower-triangular*, so a faithful implementation uses
+//! the same operator **restricted to the lower-triangular/symmetric pair of
+//! D-dimensional subspaces** (D = h(h+1)/2):
+//!
+//! ```text
+//!   op(X) : lt-coords(Γ) ↦ sym-coords(Γ Xᵀ + X Γᵀ)          (D×D)
+//! ```
+//!
+//! Theorem 4.1 says exactly that `op(L)` is invertible, and all the paper's
+//! quantities carry over verbatim:
+//!
+//! - `M_s = op(L_s)` with `L_s = C(A + sI)`;
+//! - first derivative direction `Γ_s = unvec(M_s⁻¹ v_I)` (Theorem 4.3);
+//! - `E_s = op(Γ_s)`; second derivative direction `M_s⁻¹ E_s M_s⁻¹ v_I`
+//!   (the sign/factor bookkeeping reproduces `d²L/ds² = −M⁻¹·2 vec(Γ Γᵀ)`);
+//! - `R_[a,b] = max_s (‖M_s⁻¹E_s‖₂²·‖M_s⁻¹v_I‖₂ +
+//!   ‖M_s⁻¹‖₂·‖M_s⁻¹E_s‖₂·‖M_s⁻¹v_I‖₂²)` — Theorem 4.4's remainder scale.
+//!
+//! The restricted operator is also D×D instead of h²×h², which makes the
+//! bound computable at h=64 instead of h=16. Everything here is exact dense
+//! linear algebra — this module exists to *validate* the theory (see
+//! `examples/error_bound.rs`), not to run on the request path.
+
+use crate::linalg::cholesky::cholesky_shifted;
+use crate::linalg::gemm::{gemm, gemv};
+use crate::linalg::lu::lu_decompose;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::norms::spectral_norm_est;
+use crate::linalg::svd::jacobi_svd;
+
+/// Row-wise lower-triangular coordinates: index of entry (i, j), j ≤ i.
+#[inline]
+fn lt_index(i: usize, j: usize) -> usize {
+    i * (i + 1) / 2 + j
+}
+
+/// Lower-triangle coordinates of a (lower-triangular or symmetric) matrix.
+pub fn lt_vec(x: &Matrix) -> Vec<f64> {
+    let h = x.rows();
+    let mut v = vec![0.0; h * (h + 1) / 2];
+    for i in 0..h {
+        for j in 0..=i {
+            v[lt_index(i, j)] = x[(i, j)];
+        }
+    }
+    v
+}
+
+/// Rebuild a lower-triangular matrix from its lt-coordinates.
+pub fn lt_unvec(v: &[f64], h: usize) -> Matrix {
+    assert_eq!(v.len(), h * (h + 1) / 2);
+    let mut m = Matrix::zeros(h, h);
+    for i in 0..h {
+        for j in 0..=i {
+            m[(i, j)] = v[lt_index(i, j)];
+        }
+    }
+    m
+}
+
+/// The restricted symmetrized-Kronecker operator:
+/// `op(X)·lt(Γ) = sym-coords(Γ Xᵀ + X Γᵀ)` for lower-triangular Γ.
+pub fn op_lt(x: &Matrix) -> Matrix {
+    let h = x.rows();
+    assert!(x.is_square());
+    let d = h * (h + 1) / 2;
+    let mut m = Matrix::zeros(d, d);
+    // column (p, q): image of the basis matrix E_pq (q ≤ p):
+    //   S[i,j] = δ_ip X[j,q] + δ_jp X[i,q]
+    for p in 0..h {
+        for q in 0..=p {
+            let col = lt_index(p, q);
+            // rows with i = p: S[p,j] += X[j,q] for j ≤ p
+            for j in 0..=p {
+                m[(lt_index(p, j), col)] += x[(j, q)];
+            }
+            // rows with j = p: S[i,p] += X[i,q] for i ≥ p
+            for i in p..h {
+                m[(lt_index(i, p), col)] += x[(i, q)];
+            }
+        }
+    }
+    m
+}
+
+/// Everything Theorem 4.4 needs at one shift s.
+pub struct ShiftQuantities {
+    /// `‖M_s⁻¹‖₂`
+    pub minv_norm: f64,
+    /// `‖M_s⁻¹ E_s‖₂`
+    pub minv_e_norm: f64,
+    /// `‖M_s⁻¹ v_I‖₂`
+    pub minv_vi_norm: f64,
+    /// First derivative direction `dL/ds` in lt-coordinates.
+    pub dvec: Vec<f64>,
+    /// `−d²L/ds²` in lt-coordinates (`M⁻¹ E M⁻¹ v_I`).
+    pub d2vec: Vec<f64>,
+}
+
+/// Bound calculator for a fixed positive-definite `A`.
+pub struct BoundCalculator {
+    a: Matrix,
+    h: usize,
+}
+
+impl BoundCalculator {
+    pub fn new(a: Matrix) -> Self {
+        assert!(a.is_square());
+        let h = a.rows();
+        Self { a, h }
+    }
+
+    /// D = h(h+1)/2 — the paper's entry count.
+    pub fn d_tri(&self) -> usize {
+        self.h * (self.h + 1) / 2
+    }
+
+    /// Compute the Theorem 4.4 quantities at shift s (one D×D LU).
+    pub fn at_shift(&self, s: f64) -> ShiftQuantities {
+        let h = self.h;
+        let l = cholesky_shifted(&self.a, s).expect("A + sI not PD");
+        let m = op_lt(&l);
+        let lu = lu_decompose(&m).expect("Fréchet operator singular (A+sI should be PD)");
+        let minv = lu.inverse();
+
+        let vi = lt_vec(&Matrix::eye(h));
+        let dvec = gemv(&minv, &vi); // Γ = M⁻¹ v_I  (= dL/ds)
+        let e = op_lt(&lt_unvec(&dvec, h)); // E_s = op(Γ)
+        let minv_e = gemm(&minv, &e);
+        let d2vec = gemv(&minv_e, &dvec); // M⁻¹ E M⁻¹ v_I (= −d²L/ds²)
+
+        let minv_norm = spectral_norm_est(&minv, 150, 17);
+        let minv_e_norm = spectral_norm_est(&minv_e, 150, 18);
+        let minv_vi_norm = dvec.iter().map(|x| x * x).sum::<f64>().sqrt();
+
+        ShiftQuantities {
+            minv_norm,
+            minv_e_norm,
+            minv_vi_norm,
+            dvec,
+            d2vec,
+        }
+    }
+
+    /// `R_[a,b]` estimated by maximizing over `samples` shifts in [a, b].
+    pub fn r_interval(&self, a: f64, b: f64, samples: usize) -> f64 {
+        let (lo, hi) = (a.min(b), a.max(b));
+        let mut r = 0.0f64;
+        let n = samples.max(2);
+        for i in 0..n {
+            let s = lo + (hi - lo) * i as f64 / (n - 1) as f64;
+            let q = self.at_shift(s);
+            let term = q.minv_e_norm * q.minv_e_norm * q.minv_vi_norm
+                + q.minv_norm * q.minv_e_norm * q.minv_vi_norm * q.minv_vi_norm;
+            r = r.max(term);
+        }
+        r
+    }
+
+    /// The second-order Taylor polynomial `p_TS(λ; λc)` of Theorem 4.4.
+    pub fn taylor_poly(&self, lambda_c: f64) -> TaylorPoly {
+        let q = self.at_shift(lambda_c);
+        let l_c = cholesky_shifted(&self.a, lambda_c).expect("A + λcI not PD");
+        TaylorPoly {
+            lambda_c,
+            l_c,
+            d1: lt_unvec(&q.dvec, self.h),
+            d2: lt_unvec(&q.d2vec, self.h),
+        }
+    }
+
+    /// Theorem 4.4 RHS: `2|λ−λc|³ R_[λc,λ] / (3√D)`.
+    pub fn thm44_rhs(&self, lambda: f64, lambda_c: f64, samples: usize) -> f64 {
+        let gamma = (lambda - lambda_c).abs();
+        let r = self.r_interval(lambda_c.min(lambda), lambda_c.max(lambda), samples);
+        2.0 * gamma.powi(3) * r / (3.0 * (self.d_tri() as f64).sqrt())
+    }
+
+    /// Theorem 4.7 RHS for a query window γ around λc, samples within w:
+    /// `[γ³ + √g w³ (1+γ²)(λc+1)‖V†‖₂] · R_[λc−γ, λc+γ] / √D`.
+    pub fn thm47_rhs(
+        &self,
+        gamma: f64,
+        w: f64,
+        lambda_c: f64,
+        sample_lambdas: &[f64],
+        degree: usize,
+        r_samples: usize,
+    ) -> f64 {
+        let g = sample_lambdas.len() as f64;
+        let vpinv = v_pseudoinverse_norm(sample_lambdas, degree);
+        let lo = (lambda_c - gamma).max(1e-12);
+        let r = self.r_interval(lo, lambda_c + gamma, r_samples);
+        (gamma.powi(3) + g.sqrt() * w.powi(3) * (1.0 + gamma * gamma) * (lambda_c + 1.0) * vpinv)
+            * r
+            / (self.d_tri() as f64).sqrt()
+    }
+
+    /// Measured `1/√D · ‖C(A+λI) − L̂‖_F` over the lower triangle — the LHS
+    /// the bounds control.
+    pub fn measured_rms_error(&self, lambda: f64, approx: &Matrix) -> f64 {
+        let exact = cholesky_shifted(&self.a, lambda).expect("A + λI not PD");
+        let mut sum = 0.0;
+        for i in 0..self.h {
+            for j in 0..=i {
+                let d = exact[(i, j)] - approx[(i, j)];
+                sum += d * d;
+            }
+        }
+        (sum / self.d_tri() as f64).sqrt()
+    }
+}
+
+/// The Theorem 4.4 second-order Taylor expansion of the Cholesky map:
+/// `p_TS(λ) = L_c + (λ−λc)·Γ − (λ−λc)²/2 · (M⁻¹EM⁻¹v_I)`.
+pub struct TaylorPoly {
+    pub lambda_c: f64,
+    l_c: Matrix,
+    d1: Matrix,
+    d2: Matrix,
+}
+
+impl TaylorPoly {
+    pub fn eval(&self, lambda: f64) -> Matrix {
+        let t = lambda - self.lambda_c;
+        let mut out = self.l_c.clone();
+        for ((o, &a), &b) in out
+            .as_mut_slice()
+            .iter_mut()
+            .zip(self.d1.as_slice())
+            .zip(self.d2.as_slice())
+        {
+            *o += t * a - 0.5 * t * t * b;
+        }
+        out
+    }
+}
+
+/// `‖V†‖₂ = 1/σ_min(V)` for the Vandermonde observation matrix (Theorem 4.6's
+/// conditioning measure).
+pub fn v_pseudoinverse_norm(sample_lambdas: &[f64], degree: usize) -> f64 {
+    let v = super::vandermonde(sample_lambdas, degree);
+    let svd = jacobi_svd(&v);
+    let smin = svd.s.last().copied().unwrap_or(0.0);
+    assert!(smin > 0.0, "V rank-deficient: duplicate sample points?");
+    1.0 / smin
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{random_lower_factor, random_spd};
+
+    #[test]
+    fn lt_vec_roundtrip() {
+        let l = random_lower_factor(7, 1);
+        assert!(lt_unvec(&lt_vec(&l), 7).max_abs_diff(&l) == 0.0);
+    }
+
+    #[test]
+    fn op_action_matches_definition() {
+        // op(X)·lt(Γ) = sym-coords(ΓXᵀ + XΓᵀ)
+        let x = crate::testutil::random_matrix(5, 5, 2);
+        let g = random_lower_factor(5, 3);
+        let m = op_lt(&x);
+        let got = gemv(&m, &lt_vec(&g));
+        let gxt = gemm(&g, &x.transpose());
+        let xgt = gemm(&x, &g.transpose());
+        let expect_mat = Matrix::from_fn(5, 5, |i, j| gxt[(i, j)] + xgt[(i, j)]);
+        let expect = lt_vec(&expect_mat);
+        for (a, b) in got.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn frechet_derivative_matches_finite_difference() {
+        // Theorem 4.3: dL/ds = unvec(M⁻¹ v_I) — check vs central difference
+        let a = random_spd(8, 1e2, 4);
+        let calc = BoundCalculator::new(a.clone());
+        let s = 0.5;
+        let q = calc.at_shift(s);
+        let analytic = lt_unvec(&q.dvec, 8);
+        let eps = 1e-5;
+        let lp = cholesky_shifted(&a, s + eps).unwrap();
+        let lm = cholesky_shifted(&a, s - eps).unwrap();
+        let fd = Matrix::from_fn(8, 8, |i, j| (lp[(i, j)] - lm[(i, j)]) / (2.0 * eps));
+        assert!(
+            analytic.max_abs_diff(&fd) < 1e-6,
+            "Δ = {}",
+            analytic.max_abs_diff(&fd)
+        );
+    }
+
+    #[test]
+    fn second_derivative_matches_finite_difference() {
+        let a = random_spd(6, 50.0, 9);
+        let calc = BoundCalculator::new(a.clone());
+        let s = 0.7;
+        let q = calc.at_shift(s);
+        // d²L/ds² = −M⁻¹EM⁻¹v_I
+        let analytic = lt_unvec(&q.d2vec, 6);
+        let eps = 1e-4;
+        let lp = cholesky_shifted(&a, s + eps).unwrap();
+        let l0 = cholesky_shifted(&a, s).unwrap();
+        let lm = cholesky_shifted(&a, s - eps).unwrap();
+        let fd = Matrix::from_fn(6, 6, |i, j| {
+            -(lp[(i, j)] - 2.0 * l0[(i, j)] + lm[(i, j)]) / (eps * eps)
+        });
+        assert!(
+            analytic.max_abs_diff(&fd) < 1e-4,
+            "Δ = {}",
+            analytic.max_abs_diff(&fd)
+        );
+    }
+
+    #[test]
+    fn taylor_error_is_cubic_in_gamma() {
+        let a = random_spd(8, 1e2, 5);
+        let calc = BoundCalculator::new(a.clone());
+        let p = calc.taylor_poly(0.5);
+        let err = |gamma: f64| calc.measured_rms_error(0.5 + gamma, &p.eval(0.5 + gamma));
+        let (e1, e2) = (err(0.05), err(0.1));
+        // doubling γ should scale error by ≈ 8 (cubic remainder)
+        let ratio = e2 / e1;
+        assert!(
+            (5.0..13.0).contains(&ratio),
+            "remainder not cubic: ratio = {ratio}"
+        );
+    }
+
+    #[test]
+    fn thm44_bound_dominates_measured_error() {
+        let a = random_spd(6, 50.0, 6);
+        let calc = BoundCalculator::new(a.clone());
+        let lambda_c = 0.6;
+        let p = calc.taylor_poly(lambda_c);
+        for lam in [0.45, 0.55, 0.7, 0.8] {
+            let measured = calc.measured_rms_error(lam, &p.eval(lam));
+            let bound = calc.thm44_rhs(lam, lambda_c, 7);
+            assert!(
+                measured <= bound * 1.01 + 1e-14,
+                "λ={lam}: measured {measured:.3e} > bound {bound:.3e}"
+            );
+        }
+    }
+
+    #[test]
+    fn thm47_bound_dominates_pichol_error() {
+        let a = random_spd(6, 50.0, 7);
+        let calc = BoundCalculator::new(a.clone());
+        let lambda_c = 0.55;
+        let w = 0.15;
+        let lams: Vec<f64> = (0..4)
+            .map(|i| lambda_c - w + 2.0 * w * i as f64 / 3.0)
+            .collect();
+        let mut timer = crate::util::PhaseTimer::new();
+        let interp = crate::pichol::fit(
+            &a,
+            &lams,
+            &crate::pichol::FitOptions {
+                degree: 2,
+                strategy: &crate::vectorize::RowWise,
+            },
+            &mut timer,
+        )
+        .unwrap();
+        let gamma = 0.2;
+        let bound = calc.thm47_rhs(gamma, w, lambda_c, &lams, 2, 7);
+        for lam in [lambda_c - 0.18, lambda_c, lambda_c + 0.18] {
+            let approx = interp.eval_factor(lam, &crate::vectorize::RowWise);
+            let measured = calc.measured_rms_error(lam, &approx);
+            assert!(
+                measured <= bound * 1.01 + 1e-14,
+                "λ={lam}: measured {measured:.3e} > bound {bound:.3e}"
+            );
+        }
+    }
+
+    #[test]
+    fn v_pinv_norm_matches_inverse_min_singular() {
+        let lams = [0.1, 0.3, 0.6, 1.0];
+        let n = v_pseudoinverse_norm(&lams, 2);
+        let v = crate::pichol::vandermonde(&lams, 2);
+        let svd = jacobi_svd(&v);
+        assert!((n - 1.0 / svd.s[2]).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,157 @@
+//! Multi-level Cholesky (MChol) — the paper's §6.2 binary-search baseline,
+//! also used to find the initial λ ranges every algorithm searches.
+//!
+//! Starting from a range `[10^(c−s), 10^(c+s)]`, iterate:
+//!   (a) evaluate the hold-out error at λ = 10^(c−s), 10^c, 10^(c+s) with
+//!       exact Cholesky factorizations,
+//!   (b) recentre c on the best of the three,
+//!   (c) halve s,
+//! until `s ≤ s₀`. Each level costs 3 exact `O(d³)` factorizations (cached
+//! across levels when a grid point repeats).
+
+use std::collections::HashMap;
+
+/// One evaluated probe point.
+#[derive(Clone, Debug)]
+pub struct Probe {
+    pub lambda: f64,
+    pub error: f64,
+    /// Cumulative wall-clock seconds when this probe finished (for Figure 9).
+    pub elapsed: f64,
+}
+
+/// Result of a multi-level search.
+pub struct MCholResult {
+    /// Best λ found.
+    pub best_lambda: f64,
+    /// Hold-out error at the best λ.
+    pub best_error: f64,
+    /// Every probe in evaluation order (Figure 9's trajectory).
+    pub probes: Vec<Probe>,
+    /// Final bracketing range `[10^(c−s₀), 10^(c+s₀)]`.
+    pub final_range: (f64, f64),
+    /// Number of exact factorizations actually performed (cache misses).
+    pub factorizations: usize,
+}
+
+/// Search parameters (paper §6.3: s = 1.5, s₀ = 0.0025).
+#[derive(Clone, Copy, Debug)]
+pub struct MCholParams {
+    /// Initial log₁₀ half-width.
+    pub s: f64,
+    /// Terminal half-width.
+    pub s0: f64,
+}
+
+impl Default for MCholParams {
+    fn default() -> Self {
+        Self { s: 1.5, s0: 0.0025 }
+    }
+}
+
+/// Run the multi-level search. `eval` maps λ to hold-out error (each call is
+/// expected to do an exact factorization — the paper's step (a)); results are
+/// memoized so re-probed grid points are free.
+pub fn multilevel_search(
+    center_log10: f64,
+    params: MCholParams,
+    mut eval: impl FnMut(f64) -> f64,
+) -> MCholResult {
+    let mut c = center_log10;
+    let mut s = params.s;
+    let mut probes = Vec::new();
+    let mut cache: HashMap<u64, f64> = HashMap::new();
+    let mut factorizations = 0usize;
+    let t0 = std::time::Instant::now();
+
+    let mut best = (f64::NAN, f64::INFINITY);
+    while s > params.s0 {
+        for exp in [c - s, c, c + s] {
+            let lam = 10f64.powf(exp);
+            let key = lam.to_bits();
+            let err = *cache.entry(key).or_insert_with(|| {
+                factorizations += 1;
+                eval(lam)
+            });
+            probes.push(Probe {
+                lambda: lam,
+                error: err,
+                elapsed: t0.elapsed().as_secs_f64(),
+            });
+            if err < best.1 {
+                best = (lam, err);
+            }
+        }
+        // recentre on the best of the three and halve the bracket
+        c = best.0.log10();
+        s /= 2.0;
+    }
+
+    MCholResult {
+        best_lambda: best.0,
+        best_error: best.1,
+        probes,
+        final_range: (10f64.powf(c - params.s0), 10f64.powf(c + params.s0)),
+        factorizations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Convex error curve with known minimizer λ* = 10^(-1.3).
+    fn synthetic_err(lam: f64) -> f64 {
+        let l = lam.log10();
+        (l + 1.3) * (l + 1.3) + 0.25
+    }
+
+    #[test]
+    fn converges_to_minimum_of_convex_curve() {
+        let r = multilevel_search(0.0, MCholParams { s: 1.5, s0: 1e-3 }, synthetic_err);
+        assert!(
+            (r.best_lambda.log10() + 1.3).abs() < 5e-3,
+            "found λ = 1e{:.4}",
+            r.best_lambda.log10()
+        );
+        assert!((r.best_error - 0.25).abs() < 1e-4);
+    }
+
+    #[test]
+    fn halving_schedule_length() {
+        // levels = ceil(log2(s/s0)); each level probes 3 points
+        let r = multilevel_search(0.0, MCholParams { s: 1.6, s0: 0.05 }, synthetic_err);
+        let levels = (1.6f64 / 0.05).log2().ceil() as usize;
+        assert_eq!(r.probes.len(), 3 * levels);
+    }
+
+    #[test]
+    fn memoization_avoids_repeat_factorizations() {
+        let mut calls = 0usize;
+        let r = multilevel_search(
+            0.0,
+            MCholParams { s: 1.5, s0: 0.01 },
+            |lam| {
+                calls += 1;
+                synthetic_err(lam)
+            },
+        );
+        assert_eq!(calls, r.factorizations);
+        // the centre point repeats between levels → strictly fewer evals than probes
+        assert!(r.factorizations < r.probes.len());
+    }
+
+    #[test]
+    fn probes_have_monotone_timestamps() {
+        let r = multilevel_search(0.0, MCholParams::default(), synthetic_err);
+        for w in r.probes.windows(2) {
+            assert!(w[1].elapsed >= w[0].elapsed);
+        }
+    }
+
+    #[test]
+    fn final_range_brackets_best() {
+        let r = multilevel_search(0.0, MCholParams { s: 1.5, s0: 0.01 }, synthetic_err);
+        assert!(r.final_range.0 <= r.best_lambda && r.best_lambda <= r.final_range.1);
+    }
+}

@@ -1,0 +1,312 @@
+//! The paper's core contribution: Algorithm 1 (*pi*CHOLESKY).
+//!
+//! Fit: given the Hessian `H` and `g` sample points `{λ_s}`, compute the
+//! exact factors `Lˢ = chol(H + λ_s I)`, vectorize them into the g×D target
+//! matrix `T` (via any [`crate::vectorize::VecStrategy`]), build the
+//! g×(r+1) Vandermonde observation matrix `V`, and solve the one-shot
+//! least-squares problem `Θ = (VᵀV)⁻¹VᵀT` — D independent degree-r
+//! polynomials, one per factor entry, learned simultaneously (eq. 3-4).
+//!
+//! Eval: for any new λ_t, `vec(L^t) = [1 λ_t … λ_t^r] Θ` at `O(r·d²)` —
+//! versus `O(d³)` for an exact factorization.
+//!
+//! Submodules: [`mchol`] (the §6.2 multi-level binary search), [`bound`]
+//! (the §4 Fréchet/Taylor error-bound calculator), [`pinrmse`] (the
+//! hold-out-error-interpolation alternative the paper compares against in
+//! Figure 10).
+
+pub mod bound;
+pub mod mchol;
+pub mod pinrmse;
+pub mod warmstart;
+
+use crate::linalg::cholesky::{cholesky_shifted, CholeskyError};
+use crate::linalg::gemm::Gemm;
+use crate::linalg::matrix::Matrix;
+use crate::util::PhaseTimer;
+use crate::vectorize::{build_target_matrix, VecStrategy};
+
+/// Build the g×(r+1) observation matrix V: row s is `[1, λ_s, …, λ_s^r]`
+/// (Algorithm 1 lines 3-4: the leftmost r+1 columns of the Vandermonde
+/// matrix, monomial basis).
+pub fn vandermonde(lams: &[f64], r: usize) -> Matrix {
+    Matrix::from_fn(lams.len(), r + 1, |s, p| lams[s].powi(p as i32))
+}
+
+/// Solve the tiny (r+1)×(r+1) normal-equations system for the projector
+/// `A = (VᵀV)⁻¹Vᵀ` ((r+1)×g). The system is symmetric positive-definite for
+/// distinct sample points, so Cholesky is exact here too.
+pub(crate) fn projector_for(v: &Matrix) -> Matrix {
+    let gem = Gemm::default();
+    let h_lam = gem.at_b(v, v); // VᵀV, (r+1)×(r+1)
+    let l = crate::linalg::cholesky::cholesky_blocked(&h_lam)
+        .expect("Vandermonde normal equations not PD: duplicate sample points?");
+    // A = H⁻¹Vᵀ: solve against Vᵀ
+    let vt = v.transpose();
+    let w = crate::linalg::triangular::trsm_left_lower(&l, &vt);
+    crate::linalg::triangular::trsm_left_lower_t(&l, &w)
+}
+
+/// A fitted piCholesky interpolant: Θ plus everything needed to reconstruct
+/// factors at arbitrary λ.
+pub struct Interpolant {
+    /// (r+1)×D coefficient matrix (Algorithm 1's Θ).
+    pub theta: Matrix,
+    /// Factor dimension h = d+1.
+    pub h: usize,
+    /// Polynomial degree r.
+    pub degree: usize,
+    /// Sample points used for the fit.
+    pub sample_lambdas: Vec<f64>,
+}
+
+impl Interpolant {
+    /// Interpolated vectorized factor at λ: `vec(L) = [1 λ … λ^r] Θ`.
+    /// `O(r·D)` — the paper's payoff step.
+    pub fn eval_vec_into(&self, lam: f64, out: &mut [f64]) {
+        let d = self.theta.cols();
+        debug_assert_eq!(out.len(), d);
+        out.copy_from_slice(self.theta.row(0));
+        let mut pw = 1.0;
+        for p in 1..=self.degree {
+            pw *= lam;
+            let row = self.theta.row(p);
+            for (o, &c) in out.iter_mut().zip(row) {
+                *o += pw * c;
+            }
+        }
+    }
+
+    /// Allocating wrapper around [`Interpolant::eval_vec_into`].
+    pub fn eval_vec(&self, lam: f64) -> Vec<f64> {
+        let mut out = vec![0.0; self.theta.cols()];
+        self.eval_vec_into(lam, &mut out);
+        out
+    }
+
+    /// Interpolated factor as a matrix (unvec through the given strategy —
+    /// must be the same strategy the fit used).
+    pub fn eval_factor(&self, lam: f64, strategy: &dyn VecStrategy) -> Matrix {
+        strategy.unvec(&self.eval_vec(lam), self.h)
+    }
+}
+
+/// Fit configuration for Algorithm 1.
+pub struct FitOptions<'a> {
+    /// Polynomial degree r (paper default 2; requires g > r sample points).
+    pub degree: usize,
+    /// Vectorization strategy for building T (paper default: recursive).
+    pub strategy: &'a dyn VecStrategy,
+}
+
+/// Algorithm 1: fit the interpolant from `g` exact factorizations.
+///
+/// Phase timings land in `timer` under the Table 1 names: `chol` (line 1),
+/// `vec` (line 2), `fit` (lines 3-6).
+pub fn fit(
+    h_mat: &Matrix,
+    sample_lambdas: &[f64],
+    opts: &FitOptions,
+    timer: &mut PhaseTimer,
+) -> Result<Interpolant, CholeskyError> {
+    let g = sample_lambdas.len();
+    let r = opts.degree;
+    assert!(g > r, "Algorithm 1 requires g > r (got g={g}, r={r})");
+    let h = h_mat.rows();
+
+    // line 1: the g exact factors — the O(g d³) dominant cost
+    let mut factors = Vec::with_capacity(g);
+    for &lam in sample_lambdas {
+        let l = timer.time("chol", || cholesky_shifted(h_mat, lam))?;
+        factors.push(l);
+    }
+
+    // line 2: vectorize into T (g×D)
+    let t = timer.time("vec", || build_target_matrix(opts.strategy, &factors));
+
+    // lines 3-6: V, G_λ = VᵀT, H_λ = VᵀV, Θ = H_λ⁻¹G_λ — done as Θ = A·T
+    let theta = timer.time("fit", || {
+        let v = vandermonde(sample_lambdas, r);
+        let a = projector_for(&v);
+        Gemm::default().mul(&a, &t)
+    });
+
+    Ok(Interpolant {
+        theta,
+        h,
+        degree: r,
+        sample_lambdas: sample_lambdas.to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::fro_norm;
+    use crate::testutil::{proptest_lite, random_spd};
+    use crate::util::PhaseTimer;
+    use crate::vectorize::{Recursive, RowWise};
+
+    fn fit_default(h_mat: &Matrix, lams: &[f64]) -> Interpolant {
+        let mut t = PhaseTimer::new();
+        fit(
+            h_mat,
+            lams,
+            &FitOptions {
+                degree: 2,
+                strategy: &RowWise,
+            },
+            &mut t,
+        )
+        .unwrap()
+    }
+
+    fn rel_err(got: &Matrix, exact: &Matrix) -> f64 {
+        let mut d = got.clone();
+        for (x, y) in d.as_mut_slice().iter_mut().zip(exact.as_slice()) {
+            *x -= y;
+        }
+        fro_norm(&d) / fro_norm(exact)
+    }
+
+    #[test]
+    fn vandermonde_shape_and_values() {
+        let v = vandermonde(&[0.5, 2.0], 2);
+        assert_eq!((v.rows(), v.cols()), (2, 3));
+        assert_eq!(v[(0, 0)], 1.0);
+        assert_eq!(v[(0, 2)], 0.25);
+        assert_eq!(v[(1, 1)], 2.0);
+        assert_eq!(v[(1, 2)], 4.0);
+    }
+
+    #[test]
+    fn interpolant_hits_sample_points_when_g_eq_r_plus_1() {
+        // with g = r+1 the LS fit is interpolation: exact at the samples
+        let a = random_spd(16, 1e3, 1);
+        let lams = [0.1, 0.5, 1.0];
+        let interp = fit_default(&a, &lams);
+        for &lam in &lams {
+            let exact = cholesky_shifted(&a, lam).unwrap();
+            let got = interp.eval_factor(lam, &RowWise);
+            let rel = rel_err(&got, &exact);
+            assert!(rel < 1e-9, "rel error at sample λ={lam}: {rel:.2e}");
+        }
+    }
+
+    #[test]
+    fn interpolation_error_small_between_samples() {
+        // the Figure 4 claim: g=6, r=2 tracks the exact factors densely
+        let a = random_spd(24, 1e4, 2);
+        let lams: Vec<f64> = (0..6).map(|i| 0.05 + 0.19 * i as f64).collect();
+        let interp = fit_default(&a, &lams);
+        for i in 0..50 {
+            let lam = 0.05 + 0.95 * i as f64 / 49.0;
+            let exact = cholesky_shifted(&a, lam).unwrap();
+            let got = interp.eval_factor(lam, &RowWise);
+            let rel = rel_err(&got, &exact);
+            assert!(rel < 5e-3, "λ={lam}: rel={rel:.2e}");
+        }
+    }
+
+    #[test]
+    fn extrapolation_degrades_gracefully() {
+        // the cubic-in-γ bound (Thm 4.7): error far outside the sampled
+        // interval must be much larger than inside
+        let a = random_spd(16, 1e3, 7);
+        let lams = [0.4, 0.5, 0.6, 0.7];
+        let interp = fit_default(&a, &lams);
+        let inside = rel_err(
+            &interp.eval_factor(0.55, &RowWise),
+            &cholesky_shifted(&a, 0.55).unwrap(),
+        );
+        let outside = rel_err(
+            &interp.eval_factor(5.0, &RowWise),
+            &cholesky_shifted(&a, 5.0).unwrap(),
+        );
+        assert!(outside > 10.0 * inside, "inside={inside:.2e} outside={outside:.2e}");
+    }
+
+    #[test]
+    fn strategy_agnostic_factors() {
+        // fit with recursive ordering must reproduce the same factor as
+        // row-wise ordering (the polynomials are per-entry, order-independent)
+        let a = random_spd(20, 1e3, 3);
+        let lams = [0.05, 0.3, 0.7, 1.0];
+        let mut t = PhaseTimer::new();
+        let rec = Recursive::default();
+        let f_rec = fit(
+            &a,
+            &lams,
+            &FitOptions {
+                degree: 2,
+                strategy: &rec,
+            },
+            &mut t,
+        )
+        .unwrap();
+        let f_rw = fit_default(&a, &lams);
+        let l_rec = f_rec.eval_factor(0.42, &rec);
+        let l_rw = f_rw.eval_factor(0.42, &RowWise);
+        assert!(l_rec.max_abs_diff(&l_rw) < 1e-10);
+    }
+
+    #[test]
+    fn timer_records_all_phases() {
+        let a = random_spd(12, 1e2, 4);
+        let mut t = PhaseTimer::new();
+        let _ = fit(
+            &a,
+            &[0.1, 0.4, 0.8, 1.0],
+            &FitOptions {
+                degree: 2,
+                strategy: &RowWise,
+            },
+            &mut t,
+        )
+        .unwrap();
+        assert!(t.get("chol") > 0.0);
+        assert!(t.get("vec") > 0.0);
+        assert!(t.get("fit") > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "requires g > r")]
+    fn rejects_underdetermined() {
+        let a = random_spd(8, 1e2, 5);
+        let mut t = PhaseTimer::new();
+        let _ = fit(
+            &a,
+            &[0.1, 0.5],
+            &FitOptions {
+                degree: 2,
+                strategy: &RowWise,
+            },
+            &mut t,
+        );
+    }
+
+    #[test]
+    fn interpolated_factor_solves_ridge_accurately_property() {
+        // end use: θ from the interpolated factor ≈ θ from the exact factor
+        proptest_lite::check("interp-solve", 8, |c| {
+            let h = c.dim(10, 28);
+            let a = random_spd(h, 1e3, 0xF17 + c.index as u64);
+            let lams = [0.1, 0.4, 0.7, 1.0];
+            let interp = fit_default(&a, &lams);
+            let lam = c.float(0.12, 0.98);
+            let g: Vec<f64> = (0..h).map(|i| (i as f64 * 0.71).sin()).collect();
+            let l_exact = cholesky_shifted(&a, lam).unwrap();
+            let l_pi = interp.eval_factor(lam, &RowWise);
+            let th_exact = crate::linalg::triangular::solve_cholesky(&l_exact, &g);
+            let th_pi = crate::linalg::triangular::solve_cholesky(&l_pi, &g);
+            let num: f64 = th_exact
+                .iter()
+                .zip(&th_pi)
+                .map(|(x, y)| (x - y).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let den: f64 = th_exact.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!(num / den < 0.02, "θ rel err {} at λ={lam}", num / den);
+        });
+    }
+}

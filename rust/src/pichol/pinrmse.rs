@@ -1,0 +1,96 @@
+//! PINRMSE — interpolate the *hold-out error curve* instead of the factors
+//! (the paper's Figure 10 ablation).
+//!
+//! "PINRMSE is equivalent to replacing the g×D matrix T in Algorithm 1 with
+//! a g×1 vector t, where the entries in t are the hold-out errors that
+//! correspond to the sparsely sampled λ values." The paper shows this is
+//! *much* worse than interpolating the factors: the error curve is not
+//! as polynomial-friendly as the factor entries, so the selected λ can be
+//! dramatically wrong (MNIST, Caltech-101).
+
+use super::vandermonde;
+use crate::linalg::gemm::Gemm;
+
+/// A degree-r polynomial fitted to (λ, hold-out-error) samples.
+pub struct ErrorCurvePoly {
+    /// r+1 coefficients, constant term first.
+    pub coeffs: Vec<f64>,
+}
+
+/// Fit the error-curve polynomial (Algorithm 1 with D = 1).
+pub fn fit_error_curve(sample_lambdas: &[f64], errors: &[f64], degree: usize) -> ErrorCurvePoly {
+    assert_eq!(sample_lambdas.len(), errors.len());
+    assert!(sample_lambdas.len() > degree, "need g > r samples");
+    let v = vandermonde(sample_lambdas, degree);
+    let gem = Gemm::default();
+    let h = gem.at_b(&v, &v);
+    let l = crate::linalg::cholesky::cholesky_blocked(&h).expect("degenerate sample points");
+    // g_vec = Vᵀ t
+    let g_vec = crate::linalg::gemm::gemv_t(&v, errors);
+    let coeffs = crate::linalg::triangular::solve_cholesky(&l, &g_vec);
+    ErrorCurvePoly { coeffs }
+}
+
+impl ErrorCurvePoly {
+    /// Evaluate the fitted error curve at λ (Horner).
+    pub fn eval(&self, lam: f64) -> f64 {
+        self.coeffs.iter().rev().fold(0.0, |acc, &c| acc * lam + c)
+    }
+
+    /// Interpolated errors over a grid; returns (argmin λ, min error, curve).
+    pub fn sweep(&self, grid: &[f64]) -> (f64, f64, Vec<f64>) {
+        let curve: Vec<f64> = grid.iter().map(|&l| self.eval(l)).collect();
+        let (mut bi, mut be) = (0usize, f64::INFINITY);
+        for (i, &e) in curve.iter().enumerate() {
+            if e < be {
+                be = e;
+                bi = i;
+            }
+        }
+        (grid[bi], be, curve)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_exact_quadratic() {
+        // t(λ) = 2 − 3λ + λ² sampled at 4 points
+        let lams = [0.1, 0.4, 0.7, 1.0];
+        let errs: Vec<f64> = lams.iter().map(|&l| 2.0 - 3.0 * l + l * l).collect();
+        let p = fit_error_curve(&lams, &errs, 2);
+        assert!((p.coeffs[0] - 2.0).abs() < 1e-9);
+        assert!((p.coeffs[1] + 3.0).abs() < 1e-9);
+        assert!((p.coeffs[2] - 1.0).abs() < 1e-9);
+        assert!((p.eval(0.55) - (2.0 - 3.0 * 0.55 + 0.55 * 0.55)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sweep_finds_quadratic_minimum() {
+        // minimum of 2 − 3λ + λ² is at λ = 1.5; clamp grid to [0,1] → edge
+        let lams = [0.1, 0.4, 0.7, 1.0];
+        let errs: Vec<f64> = lams.iter().map(|&l| 2.0 - 3.0 * l + l * l).collect();
+        let p = fit_error_curve(&lams, &errs, 2);
+        let grid: Vec<f64> = (0..50).map(|i| 0.02 * (i + 1) as f64).collect();
+        let (best, _, curve) = p.sweep(&grid);
+        assert_eq!(curve.len(), 50);
+        assert!((best - 1.0).abs() < 1e-12, "grid minimum at the boundary");
+    }
+
+    #[test]
+    fn misfits_nonpolynomial_curves() {
+        // the Figure 10 phenomenon: a sharp exponential valley fitted by a
+        // quadratic picks a far-off λ
+        let truth = |l: f64| ((l.log10() + 2.0) * 3.0).powi(2).min(5.0) + 0.1;
+        let lams = [1e-3, 1e-2, 1e-1, 1.0];
+        let errs: Vec<f64> = lams.iter().map(|&l| truth(l)).collect();
+        let p = fit_error_curve(&lams, &errs, 2);
+        let grid: Vec<f64> = (0..100).map(|i| 10f64.powf(-3.0 + 3.0 * i as f64 / 99.0)).collect();
+        let (best_fit, _, _) = p.sweep(&grid);
+        // true minimizer is 1e-2; the quadratic-in-λ fit lands far away
+        let log_ratio = (best_fit.log10() - (-2.0f64)).abs();
+        assert!(log_ratio > 0.5, "PINRMSE unexpectedly accurate: λ={best_fit}");
+    }
+}

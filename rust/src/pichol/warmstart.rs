@@ -1,0 +1,319 @@
+//! Cross-fold warm-starting — the paper's §7 future-work item, implemented.
+//!
+//! "Currently, we apply the learned polynomial functions within a particular
+//! validation fold. Going forward, we intend to use these functions to
+//! *warm-start* the learning process in a different fold. This would reduce
+//! the number of exact Cholesky factors required in a fold."
+//!
+//! The mechanism: fold j's Hessian `H_j` differs from fold i's by a low-rank
+//! (n/k-row) resampling, so the fitted coefficient matrix Θ changes little
+//! between folds. We therefore fit fold 1 with the full g sample points, and
+//! every later fold with only `g_warm < g` *fresh* factorizations:
+//!
+//! 1. evaluate the previous fold's interpolant at the g_warm fresh λ's;
+//! 2. compute the exact factors there (the only O(d³) work in this fold);
+//! 3. fit a **correction polynomial of degree r_warm ≤ g_warm − 1** to the
+//!    residuals `vec(Lˢ_exact) − vec(L̂ˢ_prev)`;
+//! 4. the fold's interpolant is `Θ_prev + Θ_residual` (padded in degree).
+//!
+//! Because the residual is small and smooth, a low-degree correction
+//! suffices — the per-fold exact-factorization count drops from g to g_warm
+//! (e.g. 4 → 2), which is exactly the saving the paper projected. The
+//! ablation bench measures both the saving and the accuracy cost.
+
+use crate::linalg::cholesky::CholeskyError;
+use crate::linalg::gemm::Gemm;
+use crate::linalg::matrix::Matrix;
+use crate::util::PhaseTimer;
+use crate::vectorize::{build_target_matrix, VecStrategy};
+
+use super::{fit, projector_for, vandermonde, FitOptions, Interpolant};
+
+/// Warm-start configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct WarmStartOptions {
+    /// Fresh exact factorizations per warm fold (must exceed `degree_warm`).
+    pub g_warm: usize,
+    /// Degree of the residual correction polynomial.
+    pub degree_warm: usize,
+}
+
+impl Default for WarmStartOptions {
+    fn default() -> Self {
+        // two fresh factors, linear correction: the cheapest honest update
+        Self {
+            g_warm: 2,
+            degree_warm: 1,
+        }
+    }
+}
+
+/// Fit fold j's interpolant from fold i's, using only `g_warm` exact factors.
+pub fn warm_fit(
+    prev: &Interpolant,
+    h_mat: &Matrix,
+    fresh_lambdas: &[f64],
+    opts: &WarmStartOptions,
+    strategy: &dyn VecStrategy,
+    timer: &mut PhaseTimer,
+) -> Result<Interpolant, CholeskyError> {
+    let gw = fresh_lambdas.len();
+    assert_eq!(gw, opts.g_warm, "fresh λ count must match g_warm");
+    assert!(
+        gw > opts.degree_warm,
+        "warm fit needs g_warm > degree_warm (got {gw} ≤ {})",
+        opts.degree_warm
+    );
+    let h = h_mat.rows();
+    assert_eq!(h, prev.h, "fold dimension changed");
+
+    // 1-2. fresh exact factors at the warm sample points
+    let mut factors = Vec::with_capacity(gw);
+    for &lam in fresh_lambdas {
+        factors.push(timer.time("chol", || {
+            crate::linalg::cholesky::cholesky_shifted(h_mat, lam)
+        })?);
+    }
+    let t_exact = timer.time("vec", || build_target_matrix(strategy, &factors));
+
+    // residuals against the previous fold's interpolant
+    let d = prev.theta.cols();
+    let mut resid = Matrix::zeros(gw, d);
+    timer.time("interp", || {
+        let mut buf = vec![0.0; d];
+        for (s, &lam) in fresh_lambdas.iter().enumerate() {
+            prev.eval_vec_into(lam, &mut buf);
+            for (o, (&e, &p)) in resid.row_mut(s).iter_mut().zip(t_exact.row(s).iter().zip(&buf))
+            {
+                *o = e - p;
+            }
+        }
+    });
+
+    // 3. low-degree LS fit of the residual curves
+    let theta_resid = timer.time("fit", || {
+        let v = vandermonde(fresh_lambdas, opts.degree_warm);
+        let a = projector_for(&v);
+        Gemm::default().mul(&a, &resid)
+    });
+
+    // 4. Θ_new = Θ_prev + Θ_resid (degree-padded)
+    let degree = prev.degree.max(opts.degree_warm);
+    let mut theta = Matrix::zeros(degree + 1, d);
+    for p in 0..=prev.degree {
+        theta.row_mut(p).copy_from_slice(prev.theta.row(p));
+    }
+    for p in 0..=opts.degree_warm {
+        let row = theta_resid.row(p).to_vec();
+        for (o, r) in theta.row_mut(p).iter_mut().zip(row) {
+            *o += r;
+        }
+    }
+
+    Ok(Interpolant {
+        theta,
+        h,
+        degree,
+        sample_lambdas: fresh_lambdas.to_vec(),
+    })
+}
+
+/// Convenience: run a whole k-fold schedule — full fit on the first Hessian,
+/// warm fits on the rest. Returns the interpolants and the total number of
+/// exact factorizations performed (the paper's cost metric).
+pub fn warm_schedule(
+    hessians: &[Matrix],
+    full_lambdas: &[f64],
+    warm_lambdas: &[f64],
+    degree: usize,
+    opts: &WarmStartOptions,
+    strategy: &dyn VecStrategy,
+    timer: &mut PhaseTimer,
+) -> Result<(Vec<Interpolant>, usize), CholeskyError> {
+    assert!(!hessians.is_empty());
+    let mut out = Vec::with_capacity(hessians.len());
+    let first = fit(
+        &hessians[0],
+        full_lambdas,
+        &FitOptions { degree, strategy },
+        timer,
+    )?;
+    let mut factorizations = full_lambdas.len();
+    out.push(first);
+    for h_mat in &hessians[1..] {
+        let prev = out.last().unwrap();
+        let warm = warm_fit(prev, h_mat, warm_lambdas, opts, strategy, timer)?;
+        factorizations += warm_lambdas.len();
+        out.push(warm);
+    }
+    Ok((out, factorizations))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky::cholesky_shifted;
+    use crate::linalg::norms::fro_norm;
+    use crate::testutil::{random_matrix, random_spd};
+    use crate::vectorize::RowWise;
+
+    /// Two "folds": H and a low-rank resampled perturbation of it.
+    fn fold_pair(h: usize, seed: u64) -> (Matrix, Matrix) {
+        let a = random_spd(h, 1e3, seed);
+        // resample ~1/5 of the mass: A' = A + small symmetric low-rank bump
+        let u = random_matrix(h, 3, seed + 1);
+        let mut b = a.clone();
+        let bump = Gemm::default().a_bt(&u, &u);
+        for (x, y) in b.as_mut_slice().iter_mut().zip(bump.as_slice()) {
+            *x += 0.02 * y;
+        }
+        (a, b)
+    }
+
+    fn rel_factor_err(interp: &Interpolant, h_mat: &Matrix, lam: f64) -> f64 {
+        let exact = cholesky_shifted(h_mat, lam).unwrap();
+        let got = interp.eval_factor(lam, &RowWise);
+        let mut d = got;
+        for (x, y) in d.as_mut_slice().iter_mut().zip(exact.as_slice()) {
+            *x -= y;
+        }
+        fro_norm(&d) / fro_norm(&exact)
+    }
+
+    #[test]
+    fn warm_fit_tracks_new_fold() {
+        let (a, b) = fold_pair(20, 3);
+        let lams = [0.1, 0.4, 0.7, 1.0];
+        let mut timer = PhaseTimer::new();
+        let full = fit(
+            &a,
+            &lams,
+            &FitOptions {
+                degree: 2,
+                strategy: &RowWise,
+            },
+            &mut timer,
+        )
+        .unwrap();
+
+        // stale interpolant on the new fold: measurable error
+        let stale = rel_factor_err(&full, &b, 0.55);
+        // warm fit with only 2 fresh factors
+        let warm = warm_fit(
+            &full,
+            &b,
+            &[0.25, 0.85],
+            &WarmStartOptions::default(),
+            &RowWise,
+            &mut timer,
+        )
+        .unwrap();
+        let corrected = rel_factor_err(&warm, &b, 0.55);
+        assert!(
+            corrected < stale,
+            "warm fit should improve on the stale interpolant: {corrected:.2e} !< {stale:.2e}"
+        );
+        // and it should approach the full refit's quality
+        let refit = fit(
+            &b,
+            &lams,
+            &FitOptions {
+                degree: 2,
+                strategy: &RowWise,
+            },
+            &mut timer,
+        )
+        .unwrap();
+        let refit_err = rel_factor_err(&refit, &b, 0.55);
+        assert!(
+            corrected < refit_err * 25.0 + 1e-9,
+            "warm {corrected:.2e} vs refit {refit_err:.2e}"
+        );
+    }
+
+    #[test]
+    fn warm_schedule_counts_factorizations() {
+        let (a, b) = fold_pair(16, 7);
+        let (c, _) = fold_pair(16, 8);
+        let mut timer = PhaseTimer::new();
+        let (interps, count) = warm_schedule(
+            &[a, b, c],
+            &[0.1, 0.4, 0.7, 1.0],
+            &[0.25, 0.85],
+            2,
+            &WarmStartOptions::default(),
+            &RowWise,
+            &mut timer,
+        )
+        .unwrap();
+        assert_eq!(interps.len(), 3);
+        // 4 (full) + 2 + 2 (warm) instead of 3 × 4 = 12
+        assert_eq!(count, 8);
+    }
+
+    #[test]
+    fn identical_fold_warm_fit_is_nearly_exact() {
+        // if the "new" fold equals the old one, residuals ≈ 0 and the warm
+        // interpolant reproduces the previous one
+        let a = random_spd(14, 1e2, 9);
+        let lams = [0.1, 0.5, 1.0, 1.5];
+        let mut timer = PhaseTimer::new();
+        let full = fit(
+            &a,
+            &lams,
+            &FitOptions {
+                degree: 2,
+                strategy: &RowWise,
+            },
+            &mut timer,
+        )
+        .unwrap();
+        let warm = warm_fit(
+            &full,
+            &a,
+            &[0.3, 1.2],
+            &WarmStartOptions::default(),
+            &RowWise,
+            &mut timer,
+        )
+        .unwrap();
+        for lam in [0.2, 0.6, 1.4] {
+            let e_full = rel_factor_err(&full, &a, lam);
+            let e_warm = rel_factor_err(&warm, &a, lam);
+            // the correction refits the full fit's own residual at 2 points,
+            // so a small perturbation (same order of magnitude) is expected
+            assert!(
+                e_warm < e_full * 5.0 + 1e-6,
+                "λ={lam}: warm {e_warm:.2e} vs full {e_full:.2e}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "g_warm > degree_warm")]
+    fn rejects_underdetermined_correction() {
+        let a = random_spd(8, 1e2, 1);
+        let mut timer = PhaseTimer::new();
+        let full = fit(
+            &a,
+            &[0.1, 0.5, 1.0],
+            &FitOptions {
+                degree: 2,
+                strategy: &RowWise,
+            },
+            &mut timer,
+        )
+        .unwrap();
+        let _ = warm_fit(
+            &full,
+            &a,
+            &[0.3],
+            &WarmStartOptions {
+                g_warm: 1,
+                degree_warm: 1,
+            },
+            &RowWise,
+            &mut timer,
+        );
+    }
+}

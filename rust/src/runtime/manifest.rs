@@ -1,0 +1,176 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the
+//! build-time python lowering (`python/compile/aot.py`) and the rust runtime.
+
+use super::json::{parse, Json};
+use anyhow::{anyhow, bail, Context};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lowered HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    /// File name under the artifacts directory.
+    pub file: String,
+    /// Parameter shapes the function was lowered at (row-major dims).
+    pub params: Vec<Vec<usize>>,
+    /// Size in bytes (sanity-checked on load).
+    pub bytes: usize,
+}
+
+/// One shape configuration (mirrors `python/compile/shapes.PiCholConfig`).
+#[derive(Clone, Debug)]
+pub struct ConfigEntry {
+    pub h: usize,
+    pub n: usize,
+    pub n_val: usize,
+    pub g: usize,
+    pub r: usize,
+    pub m: usize,
+    pub d_tri: usize,
+    /// Vector length of the HLO path's flattening (h² — full-matrix layout,
+    /// see EXPERIMENTS.md §Perf for why not the triangle).
+    pub d_vec: usize,
+    pub d_pad: usize,
+    pub tag: String,
+    pub files: BTreeMap<String, ArtifactInfo>,
+}
+
+/// The parsed manifest plus its directory (for resolving file paths).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: Vec<ConfigEntry>,
+}
+
+fn usize_field(j: &Json, key: &str) -> anyhow::Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("manifest: missing numeric field '{key}'"))
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+
+        let mut configs = Vec::new();
+        for cj in j
+            .get("configs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing 'configs' array"))?
+        {
+            let mut files = BTreeMap::new();
+            for (name, fj) in cj
+                .get("files")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| anyhow!("manifest: config missing 'files'"))?
+            {
+                let params = fj
+                    .get("params")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("manifest: artifact '{name}' missing params"))?
+                    .iter()
+                    .map(|p| {
+                        p.as_arr()
+                            .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
+                            .ok_or_else(|| anyhow!("manifest: bad param shape in '{name}'"))
+                    })
+                    .collect::<anyhow::Result<Vec<Vec<usize>>>>()?;
+                files.insert(
+                    name.clone(),
+                    ArtifactInfo {
+                        file: fj
+                            .get("file")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("manifest: artifact '{name}' missing file"))?
+                            .to_string(),
+                        params,
+                        bytes: usize_field(fj, "bytes")?,
+                    },
+                );
+            }
+            configs.push(ConfigEntry {
+                h: usize_field(cj, "h")?,
+                n: usize_field(cj, "n")?,
+                n_val: usize_field(cj, "n_val")?,
+                g: usize_field(cj, "g")?,
+                r: usize_field(cj, "r")?,
+                m: usize_field(cj, "m")?,
+                d_tri: usize_field(cj, "d_tri")?,
+                d_vec: usize_field(cj, "d_vec")?,
+                d_pad: usize_field(cj, "d_pad")?,
+                tag: cj
+                    .get("tag")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("manifest: config missing tag"))?
+                    .to_string(),
+                files,
+            });
+        }
+        if configs.is_empty() {
+            bail!("manifest has no configs — re-run `make artifacts`");
+        }
+        Ok(Manifest { dir, configs })
+    }
+
+    /// Find the config for a given h (and optionally g/r).
+    pub fn config_for(&self, h: usize, g: Option<usize>, r: Option<usize>) -> Option<&ConfigEntry> {
+        self.configs.iter().find(|c| {
+            c.h == h && g.map(|v| c.g == v).unwrap_or(true) && r.map(|v| c.r == v).unwrap_or(true)
+        })
+    }
+
+    /// Absolute path of one artifact file.
+    pub fn path_of(&self, info: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&info.file)
+    }
+}
+
+impl ConfigEntry {
+    /// Look up one artifact by name, with a helpful error.
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactInfo> {
+        self.files
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest for {}", self.tag))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        Manifest::load(dir).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(m) = repo_artifacts() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        assert!(!m.configs.is_empty());
+        let c = m.config_for(64, None, None).expect("h=64 config");
+        assert_eq!(c.d_tri, 64 * 65 / 2);
+        let gram = c.artifact("gram").unwrap();
+        assert_eq!(gram.params[0], vec![c.n, c.h]);
+        // file exists and size matches
+        let meta = std::fs::metadata(m.path_of(gram)).unwrap();
+        assert_eq!(meta.len() as usize, gram.bytes);
+    }
+
+    #[test]
+    fn config_for_filters() {
+        let Some(m) = repo_artifacts() else {
+            return;
+        };
+        assert!(m.config_for(256, Some(6), Some(3)).is_some());
+        assert!(m.config_for(256, Some(4), Some(2)).is_some());
+        assert!(m.config_for(999, None, None).is_none());
+    }
+}

@@ -1,0 +1,225 @@
+//! PJRT runtime: load the AOT HLO artifacts and execute them from rust.
+//!
+//! The interchange is HLO **text** (`HloModuleProto::from_text_file`): jax ≥
+//! 0.5 emits serialized protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects, while the text parser reassigns ids (see
+//! /opt/xla-example/README.md). Every entry point was lowered with
+//! `return_tuple=True`, so results always unwrap from a tuple.
+//!
+//! [`Engine`] owns the PJRT CPU client and a compile-once/execute-many cache
+//! keyed by `(artifact, config tag)` — compilation happens at most once per
+//! process, execution is the only per-request cost (python is never
+//! involved).
+
+pub mod json;
+pub mod manifest;
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::linalg::matrix::Matrix;
+pub use manifest::{ArtifactInfo, ConfigEntry, Manifest};
+
+/// A tensor crossing the PJRT boundary (f32, row-major, shape-carrying).
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            dims.iter().product::<usize>(),
+            data.len(),
+            "shape/buffer mismatch"
+        );
+        Self { dims, data }
+    }
+
+    pub fn scalar(v: f64) -> Self {
+        Self {
+            dims: vec![],
+            data: vec![v as f32],
+        }
+    }
+
+    pub fn from_vec(v: &[f64]) -> Self {
+        Self {
+            dims: vec![v.len()],
+            data: v.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    pub fn from_matrix(m: &Matrix) -> Self {
+        Self {
+            dims: vec![m.rows(), m.cols()],
+            data: m.to_f32_vec(),
+        }
+    }
+
+    pub fn to_matrix(&self) -> Result<Matrix> {
+        match self.dims.as_slice() {
+            [r, c] => Ok(Matrix::from_f32(*r, *c, &self.data)),
+            d => bail!("tensor is not a matrix: dims {d:?}"),
+        }
+    }
+
+    pub fn to_vec_f64(&self) -> Vec<f64> {
+        self.data.iter().map(|&x| x as f64).collect()
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.shape()?;
+        let dims: Vec<usize> = match &shape {
+            xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+            _ => bail!("unexpected non-array result shape"),
+        };
+        let data = lit.to_vec::<f32>()?;
+        Ok(Tensor { dims, data })
+    }
+}
+
+/// Compile-once, execute-many PJRT engine over a manifest of artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over `<dir>/manifest.json`.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Platform description (for the CLI `info` command).
+    pub fn platform(&self) -> String {
+        format!(
+            "{} ({} devices)",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+
+    /// Resolve the config for a factor dimension h (optionally g, r).
+    pub fn config(&self, h: usize, g: Option<usize>, r: Option<usize>) -> Result<&ConfigEntry> {
+        self.manifest.config_for(h, g, r).ok_or_else(|| {
+            anyhow!(
+                "no AOT config for h={h} (g={g:?}, r={r:?}); re-run `make artifacts` \
+                 with a matching shapes.CONFIGS entry"
+            )
+        })
+    }
+
+    fn executable(
+        &self,
+        cfg: &ConfigEntry,
+        name: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = format!("{}:{}", cfg.tag, name);
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let info = cfg.artifact(name)?;
+        let path = self.manifest.path_of(info);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}' ({})", cfg.tag))?,
+        );
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Validate inputs against the manifest shapes, execute, unwrap the tuple.
+    pub fn run(&self, cfg: &ConfigEntry, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let info = cfg.artifact(name)?;
+        if inputs.len() != info.params.len() {
+            bail!(
+                "artifact '{name}': expected {} inputs, got {}",
+                info.params.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, expect)) in inputs.iter().zip(&info.params).enumerate() {
+            if &t.dims != expect {
+                bail!(
+                    "artifact '{name}' input {i}: shape {:?} != lowered shape {:?}",
+                    t.dims,
+                    expect
+                );
+            }
+        }
+        let exe = self.executable(cfg, name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // return_tuple=True: unwrap all tuple elements
+        let parts = lit.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Warm the compile cache for a config (used by the coordinator at
+    /// startup so the request path never compiles).
+    pub fn warmup(&self, cfg: &ConfigEntry, names: &[&str]) -> Result<()> {
+        for name in names {
+            self.executable(cfg, name)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Integration tests against the real artifacts live in
+    //! `rust/tests/runtime_integration.rs`; these only cover the Tensor
+    //! marshalling helpers (no PJRT needed).
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.dims, vec![2, 3]);
+        let m = t.to_matrix().unwrap();
+        assert_eq!((m.rows(), m.cols()), (2, 3));
+        assert!(Tensor::new(vec![6], vec![0.0; 6]).to_matrix().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/buffer mismatch")]
+    fn tensor_rejects_bad_buffer() {
+        let _ = Tensor::new(vec![2, 2], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn tensor_matrix_roundtrip() {
+        let m = crate::testutil::random_matrix(3, 4, 1);
+        let t = Tensor::from_matrix(&m);
+        let back = t.to_matrix().unwrap();
+        assert!(m.max_abs_diff(&back) < 1e-6);
+    }
+}

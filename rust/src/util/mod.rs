@@ -1,0 +1,160 @@
+//! Small shared utilities: wall-clock timing, formatting, log-spaced grids.
+
+use std::time::Instant;
+
+/// Measure the wall-clock seconds of a closure, returning (result, secs).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// A cumulative named timer: the per-phase instrumentation behind Table 1 and
+/// Figure 2 (vec / fit / interp / hessian / cholesky / solve / holdout).
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimer {
+    entries: Vec<(String, f64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f`, accumulating its wall time under `phase`.
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let (out, secs) = timed(f);
+        self.add(phase, secs);
+        out
+    }
+
+    /// Add seconds to a phase directly.
+    pub fn add(&mut self, phase: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == phase) {
+            e.1 += secs;
+        } else {
+            self.entries.push((phase.to_string(), secs));
+        }
+    }
+
+    /// Seconds accumulated under `phase` (0 if never timed).
+    pub fn get(&self, phase: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == phase)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    /// Total across phases.
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|(_, s)| s).sum()
+    }
+
+    /// (phase, seconds) pairs in insertion order.
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+
+    /// Merge another timer into this one.
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (name, secs) in &other.entries {
+            self.add(name, *secs);
+        }
+    }
+}
+
+/// `q` exponentially spaced values in `[lo, hi]` (the paper's candidate-λ
+/// grids, e.g. 31 points on `[10⁻³, 1]`).
+pub fn logspace(lo: f64, hi: f64, q: usize) -> Vec<f64> {
+    assert!(lo > 0.0 && hi > lo && q >= 2);
+    let (a, b) = (lo.log10(), hi.log10());
+    (0..q)
+        .map(|i| 10f64.powf(a + (b - a) * i as f64 / (q - 1) as f64))
+        .collect()
+}
+
+/// Evenly pick `g` of the `q` grid values (the paper sparsely samples its g=4
+/// interpolation points from the 31 candidates).
+pub fn subsample_indices(q: usize, g: usize) -> Vec<usize> {
+    assert!(g >= 2 && g <= q);
+    (0..g)
+        .map(|i| (i as f64 * (q - 1) as f64 / (g - 1) as f64).round() as usize)
+        .collect()
+}
+
+/// Render a markdown table (used by the experiment reports).
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    s.push_str("| ");
+    s.push_str(&headers.join(" | "));
+    s.push_str(" |\n|");
+    for _ in headers {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    for row in rows {
+        s.push_str("| ");
+        s.push_str(&row.join(" | "));
+        s.push_str(" |\n");
+    }
+    s
+}
+
+/// Format seconds with sensible precision.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logspace_endpoints_and_monotone() {
+        let g = logspace(1e-3, 1.0, 31);
+        assert_eq!(g.len(), 31);
+        assert!((g[0] - 1e-3).abs() < 1e-12);
+        assert!((g[30] - 1.0).abs() < 1e-9);
+        for w in g.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn subsample_hits_endpoints() {
+        let idx = subsample_indices(31, 4);
+        assert_eq!(idx[0], 0);
+        assert_eq!(*idx.last().unwrap(), 30);
+        assert_eq!(idx.len(), 4);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        t.add("vec", 1.0);
+        t.add("fit", 2.0);
+        t.add("vec", 0.5);
+        assert!((t.get("vec") - 1.5).abs() < 1e-12);
+        assert!((t.total() - 3.5).abs() < 1e-12);
+        let mut u = PhaseTimer::new();
+        u.add("vec", 1.0);
+        u.merge(&t);
+        assert!((u.get("vec") - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn markdown_table_shape() {
+        let s = markdown_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(s.contains("| a | b |"));
+        assert!(s.contains("| 1 | 2 |"));
+    }
+}

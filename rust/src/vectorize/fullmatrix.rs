@@ -1,0 +1,62 @@
+//! Full-matrix vectorization: the other Table 1 baseline.
+//!
+//! Dumps the entire h×h buffer in one perfectly aligned memcpy — the fastest
+//! possible *vec* step — but D becomes h² instead of h(h+1)/2, so every
+//! downstream polynomial fit and interpolation does ~2× the work ("would
+//! increase the number of interpolations by a factor of 2", §5). The zeros
+//! above the diagonal are fitted as (exactly zero) polynomials.
+
+use super::VecStrategy;
+use crate::linalg::matrix::Matrix;
+
+/// Whole-buffer flattening, upper-triangle zeros included.
+pub struct FullMatrix;
+
+impl VecStrategy for FullMatrix {
+    fn name(&self) -> &'static str {
+        "full-matrix"
+    }
+
+    fn dim(&self, h: usize) -> usize {
+        h * h
+    }
+
+    fn vec_into(&self, l: &Matrix, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), l.rows() * l.cols());
+        out.copy_from_slice(l.as_slice());
+    }
+
+    fn unvec(&self, v: &[f64], h: usize) -> Matrix {
+        assert_eq!(v.len(), h * h);
+        let mut m = Matrix::from_vec(h, h, v.to_vec());
+        // the interpolated upper triangle is numerically ~0 but may carry
+        // roundoff from the fit; clamp it to keep the factor triangular
+        m.zero_upper();
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::random_lower_factor;
+
+    #[test]
+    fn single_copy_layout() {
+        let l = random_lower_factor(5, 1);
+        let v = FullMatrix.vec(&l);
+        assert_eq!(v, l.as_slice());
+    }
+
+    #[test]
+    fn unvec_clamps_upper_noise() {
+        let mut v = vec![0.0; 9];
+        v[0] = 1.0;
+        v[4] = 1.0;
+        v[8] = 1.0;
+        v[1] = 1e-9; // roundoff noise above the diagonal
+        let m = FullMatrix.unvec(&v, 3);
+        assert_eq!(m[(0, 1)], 0.0);
+        assert_eq!(m[(0, 0)], 1.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Triangular-factor vectorization strategies (paper §5, Table 1).
+//!
+//! Algorithm 1 needs each Cholesky factor `Lˢ` flattened into row s of the
+//! g×D target matrix T so the fit/interp steps run at BLAS-3 granularity.
+//! How the flattening is done controls two costs:
+//!
+//! 1. the *vec* cost — memory-copy pattern (contiguity, copy count, alignment)
+//! 2. the *fit/interp* cost — the vector length D the polynomial machinery
+//!    must chew through (the triangle has h(h+1)/2 entries; a full-matrix
+//!    dump has h², i.e. ~2× redundant work downstream)
+//!
+//! The three strategies of the paper:
+//!
+//! - [`rowwise::RowWise`] — concatenate the triangle row by row: minimal D
+//!   but h separate copies of wildly varying length (1…h), the worst-case
+//!   pattern for copy engines;
+//! - [`fullmatrix::FullMatrix`] — one h² memcpy: a single aligned copy but D
+//!   doubles, so lines 5–6 of Algorithm 1 and every interpolation pay 2×;
+//! - [`recursive::Recursive`] — the paper's contribution: divide-and-conquer
+//!   partition (eq. 10) into one *square* block (copied with full-matrix
+//!   alignment, no redundancy) and two half-size triangles recursed until a
+//!   base size h₀, which is flattened row-wise. Aligned copies *and*
+//!   minimal D.
+//!
+//! All strategies are exact bijections between factors and vectors; the
+//! property tests verify `unvec(vec(L)) = L` for every strategy and shape.
+
+pub mod fullmatrix;
+pub mod recursive;
+pub mod rowwise;
+
+use crate::linalg::matrix::Matrix;
+
+pub use fullmatrix::FullMatrix;
+pub use recursive::Recursive;
+pub use rowwise::RowWise;
+
+/// Number of entries in an h×h lower triangle (the paper's D).
+pub fn tri_d(h: usize) -> usize {
+    h * (h + 1) / 2
+}
+
+/// A bijection between lower-triangular h×h factors and flat vectors.
+pub trait VecStrategy: Send + Sync {
+    /// Human-readable strategy name (Table 1 column group).
+    fn name(&self) -> &'static str;
+
+    /// Length of the vectorized form for dimension h.
+    fn dim(&self, h: usize) -> usize;
+
+    /// Flatten the lower triangle of `l` into `out` (`out.len() == dim(h)`).
+    fn vec_into(&self, l: &Matrix, out: &mut [f64]);
+
+    /// Inverse: rebuild the lower-triangular factor from its vector form.
+    fn unvec(&self, v: &[f64], h: usize) -> Matrix;
+
+    /// Convenience allocating wrapper around [`VecStrategy::vec_into`].
+    fn vec(&self, l: &Matrix) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim(l.rows())];
+        self.vec_into(l, &mut out);
+        out
+    }
+}
+
+/// Flatten g factors into a g×D target matrix T (Algorithm 1 line 2).
+pub fn build_target_matrix(strategy: &dyn VecStrategy, factors: &[Matrix]) -> Matrix {
+    assert!(!factors.is_empty());
+    let h = factors[0].rows();
+    let d = strategy.dim(h);
+    let mut t = Matrix::zeros(factors.len(), d);
+    for (s, l) in factors.iter().enumerate() {
+        assert_eq!(l.rows(), h, "factor dimension mismatch");
+        strategy.vec_into(l, t.row_mut(s));
+    }
+    t
+}
+
+/// All three strategies, for Table 1 sweeps.
+pub fn all_strategies() -> Vec<Box<dyn VecStrategy>> {
+    vec![
+        Box::new(RowWise),
+        Box::new(FullMatrix),
+        Box::new(Recursive::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{proptest_lite, random_lower_factor};
+
+    #[test]
+    fn dims() {
+        assert_eq!(tri_d(4), 10);
+        assert_eq!(RowWise.dim(4), 10);
+        assert_eq!(FullMatrix.dim(4), 16);
+        assert_eq!(Recursive::default().dim(4), 10);
+    }
+
+    #[test]
+    fn roundtrip_all_strategies_property() {
+        proptest_lite::check("vec-unvec roundtrip", 40, |c| {
+            let h = c.dim(1, 97);
+            let l = random_lower_factor(h, 0xAB00 + c.index as u64);
+            for s in all_strategies() {
+                let v = s.vec(&l);
+                assert_eq!(v.len(), s.dim(h), "{} dim", s.name());
+                let back = s.unvec(&v, h);
+                assert!(
+                    back.max_abs_diff(&l) == 0.0,
+                    "{} roundtrip not exact at h={h}",
+                    s.name()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn strategies_are_permutations_of_each_other() {
+        // same multiset of entries regardless of ordering strategy
+        let l = random_lower_factor(13, 5);
+        let mut a = RowWise.vec(&l);
+        let mut b = Recursive::default().vec(&l);
+        assert_eq!(a.len(), b.len());
+        a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn build_target_matrix_rows() {
+        let ls: Vec<Matrix> = (0..3).map(|s| random_lower_factor(8, s)).collect();
+        let t = build_target_matrix(&RowWise, &ls);
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.cols(), tri_d(8));
+        for (s, l) in ls.iter().enumerate() {
+            assert_eq!(t.row(s), RowWise.vec(l).as_slice());
+        }
+    }
+}

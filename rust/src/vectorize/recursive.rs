@@ -1,0 +1,170 @@
+//! Recursive divide-and-conquer vectorization — the paper's §5 contribution
+//! (Figure 5, eq. 10).
+//!
+//! Partition the h×h lower triangle at h₂ = ⌊h/2⌋ into
+//!
+//! ```text
+//!   L11 = L[0..h2,  0..h2]   (lower triangle, recurse)
+//!   L12 = L[h2..h,  0..h2]   (dense square block — full-matrix copy)
+//!   L22 = L[h2..h,  h2..h]   (lower triangle, recurse)
+//! ```
+//!
+//! and emit `[vec(L12), vec_rec(L11), vec_rec(L22)]` (the square block first,
+//! matching the paper's concatenation order). The square blocks are copied
+//! row-by-row as long aligned runs — the memcpy profile of full-matrix — while
+//! the output length stays at the minimal D = h(h+1)/2. Recursion stops at
+//! the threshold h₀, below which a row-wise flattening of the small triangle
+//! is cheap ("for a sufficiently small h₀ is not expensive").
+//!
+//! The layout is a pure function of (h, h₀), so `unvec` replays the same
+//! recursion to invert it. The strategy works for any h (not just powers of
+//! two): odd splits simply produce uneven halves.
+
+use super::{tri_d, VecStrategy};
+use crate::linalg::matrix::Matrix;
+
+/// Recursive block vectorization with base-case threshold `h0`.
+pub struct Recursive {
+    /// Triangle size at which to fall back to row-wise copying.
+    pub h0: usize,
+}
+
+impl Default for Recursive {
+    fn default() -> Self {
+        // Table 1's sweet spot: big enough to amortize recursion overhead,
+        // small enough that base-case row-wise copies stay cache-resident.
+        Self { h0: 64 }
+    }
+}
+
+impl Recursive {
+    pub fn with_base(h0: usize) -> Self {
+        assert!(h0 >= 1);
+        Self { h0 }
+    }
+
+    /// Recursive vec of the triangle at (r0, c0) with size n; returns the new
+    /// write offset.
+    fn vec_rec(&self, l: &Matrix, r0: usize, n: usize, out: &mut [f64], mut off: usize) -> usize {
+        if n == 0 {
+            return off;
+        }
+        if n <= self.h0 {
+            // base case: row-wise over the small triangle
+            for i in 0..n {
+                let take = i + 1;
+                out[off..off + take].copy_from_slice(&l.row(r0 + i)[r0..r0 + take]);
+                off += take;
+            }
+            return off;
+        }
+        let h2 = n / 2;
+        // square block L12 = rows r0+h2 .. r0+n, cols r0 .. r0+h2 — each row
+        // is one long contiguous copy (the alignment win)
+        for i in h2..n {
+            out[off..off + h2].copy_from_slice(&l.row(r0 + i)[r0..r0 + h2]);
+            off += h2;
+        }
+        off = self.vec_rec(l, r0, h2, out, off);
+        self.vec_rec(l, r0 + h2, n - h2, out, off)
+    }
+
+    /// Inverse recursion.
+    fn unvec_rec(&self, v: &[f64], l: &mut Matrix, r0: usize, n: usize, mut off: usize) -> usize {
+        if n == 0 {
+            return off;
+        }
+        if n <= self.h0 {
+            for i in 0..n {
+                let take = i + 1;
+                l.row_mut(r0 + i)[r0..r0 + take].copy_from_slice(&v[off..off + take]);
+                off += take;
+            }
+            return off;
+        }
+        let h2 = n / 2;
+        for i in h2..n {
+            l.row_mut(r0 + i)[r0..r0 + h2].copy_from_slice(&v[off..off + h2]);
+            off += h2;
+        }
+        off = self.unvec_rec(v, l, r0, h2, off);
+        self.unvec_rec(v, l, r0 + h2, n - h2, off)
+    }
+}
+
+impl VecStrategy for Recursive {
+    fn name(&self) -> &'static str {
+        "recursive"
+    }
+
+    fn dim(&self, h: usize) -> usize {
+        tri_d(h)
+    }
+
+    fn vec_into(&self, l: &Matrix, out: &mut [f64]) {
+        let h = l.rows();
+        debug_assert_eq!(out.len(), tri_d(h));
+        let end = self.vec_rec(l, 0, h, out, 0);
+        debug_assert_eq!(end, tri_d(h));
+    }
+
+    fn unvec(&self, v: &[f64], h: usize) -> Matrix {
+        assert_eq!(v.len(), tri_d(h));
+        let mut l = Matrix::zeros(h, h);
+        let end = self.unvec_rec(v, &mut l, 0, h, 0);
+        debug_assert_eq!(end, tri_d(h));
+        l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{proptest_lite, random_lower_factor};
+
+    #[test]
+    fn matches_paper_partition_order_h4() {
+        // h=4, h0=1: split at 2 → square block rows 2,3 cols 0,1 first,
+        // then L11 (rows 0,1) recursed, then L22 (rows 2,3) recursed.
+        let l = Matrix::from_fn(4, 4, |i, j| if j <= i { (i * 4 + j) as f64 } else { 0.0 });
+        let v = Recursive::with_base(1).vec(&l);
+        assert_eq!(
+            v,
+            vec![
+                8.0, 9.0, 12.0, 13.0, // L12 square (rows 2-3 × cols 0-1)
+                4.0, 0.0, 5.0, // L11 triangle: square [4] first, then [0], [5]
+                14.0, 10.0, 15.0 // L22 triangle at (2,2): square [14], then [10], [15]
+            ]
+        );
+    }
+
+    #[test]
+    fn base_case_equals_rowwise() {
+        let l = random_lower_factor(16, 1);
+        let big_base = Recursive::with_base(16).vec(&l);
+        let rw = super::super::RowWise.vec(&l);
+        assert_eq!(big_base, rw);
+    }
+
+    #[test]
+    fn roundtrip_across_bases_and_sizes_property() {
+        proptest_lite::check("recursive roundtrip (h0 sweep)", 30, |c| {
+            let h = c.dim(1, 130);
+            let h0 = c.dim(1, 32);
+            let l = random_lower_factor(h, 0xEC0 + c.index as u64);
+            let s = Recursive::with_base(h0);
+            let back = s.unvec(&s.vec(&l), h);
+            assert!(back.max_abs_diff(&l) == 0.0, "h={h} h0={h0}");
+        });
+    }
+
+    #[test]
+    fn odd_and_power_of_two_sizes() {
+        for h in [1usize, 2, 3, 7, 8, 15, 16, 17, 31, 33, 64, 100] {
+            let l = random_lower_factor(h, h as u64);
+            let s = Recursive::default();
+            assert_eq!(s.vec(&l).len(), tri_d(h));
+            assert!(s.unvec(&s.vec(&l), h).max_abs_diff(&l) == 0.0, "h={h}");
+        }
+    }
+}

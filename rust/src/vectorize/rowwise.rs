@@ -1,0 +1,69 @@
+//! Row-wise vectorization: the naive baseline of Table 1.
+//!
+//! Concatenates the lower-triangular rows `L[0][..1], L[1][..2], …,
+//! L[h-1][..h]`. Minimal output length D = h(h+1)/2, but the copy loop
+//! issues h separate copies whose lengths ramp from 1 to h — short copies
+//! amortize nothing, and in the paper's column-major setting they are also
+//! non-contiguous. This is also the canonical ordering of the HLO
+//! interchange (matches `jnp.tril_indices` row-major order in
+//! `python/compile/kernels/ref.py::vec_tri_ref`).
+
+use super::{tri_d, VecStrategy};
+use crate::linalg::matrix::Matrix;
+
+/// Row-by-row triangle flattening.
+pub struct RowWise;
+
+impl VecStrategy for RowWise {
+    fn name(&self) -> &'static str {
+        "row-wise"
+    }
+
+    fn dim(&self, h: usize) -> usize {
+        tri_d(h)
+    }
+
+    fn vec_into(&self, l: &Matrix, out: &mut [f64]) {
+        let h = l.rows();
+        debug_assert_eq!(out.len(), tri_d(h));
+        let mut off = 0;
+        for i in 0..h {
+            let take = i + 1;
+            out[off..off + take].copy_from_slice(&l.row(i)[..take]);
+            off += take;
+        }
+    }
+
+    fn unvec(&self, v: &[f64], h: usize) -> Matrix {
+        assert_eq!(v.len(), tri_d(h));
+        let mut l = Matrix::zeros(h, h);
+        let mut off = 0;
+        for i in 0..h {
+            let take = i + 1;
+            l.row_mut(i)[..take].copy_from_slice(&v[off..off + take]);
+            off += take;
+        }
+        l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_matches_tril_indices() {
+        // The canonical interchange ordering: (0,0),(1,0),(1,1),(2,0),…
+        let l = Matrix::from_fn(3, 3, |i, j| if j <= i { (i * 3 + j) as f64 } else { 0.0 });
+        let v = RowWise.vec(&l);
+        assert_eq!(v, vec![0.0, 3.0, 4.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn h1_edge_case() {
+        let l = Matrix::from_vec(1, 1, vec![2.5]);
+        let v = RowWise.vec(&l);
+        assert_eq!(v, vec![2.5]);
+        assert_eq!(RowWise.unvec(&v, 1)[(0, 0)], 2.5);
+    }
+}

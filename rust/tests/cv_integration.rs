@@ -1,0 +1,131 @@
+//! Integration tests over the native CV stack: coordinator scheduling,
+//! config plumbing, and cross-algorithm agreement at realistic (small) sizes.
+
+use std::sync::Arc;
+
+use picholesky::config::{parse_toml, ExperimentConfig};
+use picholesky::coordinator::Coordinator;
+use picholesky::cv::solvers::SolverKind;
+use picholesky::cv::{run_cv, CvConfig, Metric};
+use picholesky::data::synthetic::{DatasetKind, SyntheticDataset};
+
+fn small_cfg() -> CvConfig {
+    CvConfig {
+        k_folds: 3,
+        q_grid: 13,
+        ..CvConfig::default()
+    }
+}
+
+#[test]
+fn pichol_speedup_and_agreement_grows_with_h() {
+    // the paper's central claim, end-to-end on the native path
+    let cfg = small_cfg();
+    let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 300, 128, 11);
+    let chol = run_cv(&ds, SolverKind::Chol, &cfg).unwrap();
+    let pi = run_cv(&ds, SolverKind::PiChol, &cfg).unwrap();
+
+    // timing: piCholesky must beat exact Cholesky at h=128, q=13
+    assert!(
+        pi.total_secs() < chol.total_secs(),
+        "pichol {:.3}s !< chol {:.3}s",
+        pi.total_secs(),
+        chol.total_secs()
+    );
+    // accuracy: best errors within 2%
+    assert!(
+        (pi.best_error - chol.best_error).abs() / chol.best_error < 0.02,
+        "errors diverge: {} vs {}",
+        pi.best_error,
+        chol.best_error
+    );
+}
+
+#[test]
+fn all_seven_solvers_complete_on_all_datasets() {
+    let cfg = CvConfig {
+        k_folds: 2,
+        q_grid: 7,
+        ..CvConfig::default()
+    };
+    for kind in DatasetKind::all() {
+        let ds = SyntheticDataset::generate(kind, 90, 13, 5);
+        for solver in [
+            SolverKind::Chol,
+            SolverKind::PiChol,
+            SolverKind::MChol,
+            SolverKind::Svd,
+            SolverKind::TSvd,
+            SolverKind::RSvd,
+            SolverKind::Pinrmse,
+        ] {
+            let rep = run_cv(&ds, solver, &cfg).unwrap();
+            assert!(
+                rep.best_error.is_finite(),
+                "{} on {} produced {}",
+                solver.name(),
+                kind.name(),
+                rep.best_error
+            );
+        }
+    }
+}
+
+#[test]
+fn misclass_metric_plumbs_through() {
+    let cfg = CvConfig {
+        k_folds: 2,
+        q_grid: 7,
+        metric: Metric::Misclass,
+        ..CvConfig::default()
+    };
+    let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 120, 17, 6);
+    let rep = run_cv(&ds, SolverKind::PiChol, &cfg).unwrap();
+    // misclassification is a rate
+    assert!(rep.best_error >= 0.0 && rep.best_error <= 1.0);
+}
+
+#[test]
+fn coordinator_pool_matches_sequential_results() {
+    let cfg = small_cfg();
+    let ds = Arc::new(SyntheticDataset::generate(DatasetKind::CoilLike, 150, 21, 7));
+    let coord = Coordinator::new(3);
+    let par = coord.run_matrix(ds.clone(), &[SolverKind::Chol, SolverKind::PiChol], &cfg);
+    let seq_chol = run_cv(&ds, SolverKind::Chol, &cfg).unwrap();
+    let par_chol = par.into_iter().next().unwrap().unwrap();
+    // identical seeds ⇒ identical folds ⇒ identical errors
+    assert_eq!(par_chol.mean_errors.len(), seq_chol.mean_errors.len());
+    for (a, b) in par_chol.mean_errors.iter().zip(&seq_chol.mean_errors) {
+        assert_eq!(a, b, "parallel and sequential runs must be bit-identical");
+    }
+}
+
+#[test]
+fn experiment_config_end_to_end() {
+    let doc = parse_toml(
+        r#"
+        dataset = "coil"
+        n = 90
+        h = 13
+        seed = 3
+        [cv]
+        k_folds = 2
+        q_grid = 5
+        "#,
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+    let ds = SyntheticDataset::generate(cfg.dataset, cfg.n, cfg.h, cfg.seed);
+    let rep = run_cv(&ds, SolverKind::PiChol, &cfg.cv).unwrap();
+    assert_eq!(rep.grid.len(), 5);
+}
+
+#[test]
+fn lambda_range_override_respected() {
+    let mut cfg = small_cfg();
+    cfg.lambda_range = Some((1e-2, 1e-1));
+    let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 90, 13, 9);
+    let rep = run_cv(&ds, SolverKind::Chol, &cfg).unwrap();
+    assert!((rep.grid[0] - 1e-2).abs() < 1e-12);
+    assert!((rep.grid.last().unwrap() - 1e-1).abs() < 1e-9);
+}

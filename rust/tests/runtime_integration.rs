@@ -1,0 +1,289 @@
+//! Integration tests: the AOT artifacts executed through PJRT, checked
+//! against the native f64 linalg substrate.
+//!
+//! These need `make artifacts` to have run; they fail with a clear message
+//! otherwise (the Makefile's `test` target orders this correctly).
+
+use picholesky::coordinator::{HloFold, HloPipeline, Metrics};
+use picholesky::data::synthetic::{DatasetKind, SyntheticDataset};
+use picholesky::linalg::cholesky::cholesky_shifted;
+use picholesky::linalg::gemm::{gemv_t, syrk_lower};
+use picholesky::linalg::triangular::solve_cholesky;
+use picholesky::runtime::{Engine, Tensor};
+use picholesky::util::subsample_indices;
+use picholesky::vectorize::{FullMatrix, VecStrategy};
+
+fn engine() -> Engine {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    Engine::new(dir).expect("run `make artifacts` before `cargo test`")
+}
+
+/// A dataset shaped exactly like the h=64 AOT config.
+fn fold64(engine: &Engine) -> (HloFold, usize) {
+    let cfg = engine.config(64, None, None).unwrap();
+    let total = cfg.n + cfg.n_val;
+    let ds = SyntheticDataset::generate(DatasetKind::MnistLike, total, cfg.h, 0xFEED);
+    (
+        HloFold {
+            xt: ds.x.slice(0, cfg.n, 0, cfg.h),
+            yt: ds.y[..cfg.n].to_vec(),
+            xv: ds.x.slice(cfg.n, total, 0, cfg.h),
+            yv: ds.y[cfg.n..].to_vec(),
+        },
+        cfg.h,
+    )
+}
+
+#[test]
+fn manifest_lists_all_artifacts() {
+    let engine = engine();
+    for cfg in &engine.manifest().configs {
+        for name in [
+            "gram",
+            "cholvec",
+            "polyfit",
+            "polyeval",
+            "sweep",
+            "chol_solve",
+            "holdout",
+            "exact_sweep",
+        ] {
+            assert!(cfg.files.contains_key(name), "{}: missing {name}", cfg.tag);
+        }
+    }
+}
+
+#[test]
+fn gram_artifact_matches_native_syrk() {
+    let engine = engine();
+    let cfg = engine.config(64, None, None).unwrap();
+    let (fold, _) = fold64(&engine);
+    let metrics = Metrics::new();
+    let pipe = HloPipeline::new(&engine, cfg, &metrics);
+
+    let (h_t, g_t) = pipe.gram(&fold).unwrap();
+    let h_native = syrk_lower(&fold.xt);
+    let g_native = gemv_t(&fold.xt, &fold.yt);
+
+    let h_hlo = h_t.to_matrix().unwrap();
+    let scale = h_native.as_slice().iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+    assert!(
+        h_hlo.max_abs_diff(&h_native) / scale < 1e-4,
+        "gram mismatch: {:.3e} (scale {scale:.3e})",
+        h_hlo.max_abs_diff(&h_native)
+    );
+    for (a, b) in g_t.to_vec_f64().iter().zip(&g_native) {
+        assert!((a - b).abs() / scale < 1e-4);
+    }
+}
+
+#[test]
+fn cholvec_rows_match_native_factors() {
+    let engine = engine();
+    let cfg = engine.config(64, None, None).unwrap();
+    let (fold, h) = fold64(&engine);
+    let h_native = syrk_lower(&fold.xt);
+
+    let lams = vec![0.01, 0.1, 0.5, 1.0];
+    let out = engine
+        .run(
+            cfg,
+            "cholvec",
+            &[
+                Tensor::from_matrix(&h_native),
+                Tensor::from_vec(&lams),
+            ],
+        )
+        .unwrap();
+    let t = out[0].to_matrix().unwrap();
+    assert_eq!(t.rows(), 4);
+    assert_eq!(t.cols(), cfg.d_vec, "full-matrix layout: rows are h² long");
+    for (s, &lam) in lams.iter().enumerate() {
+        let l_native = cholesky_shifted(&h_native, lam).unwrap();
+        let v_native = FullMatrix.vec(&l_native);
+        let mut max_rel = 0.0f64;
+        for (a, b) in t.row(s).iter().zip(&v_native) {
+            let rel = (a - b).abs() / (b.abs().max(1.0));
+            max_rel = max_rel.max(rel);
+        }
+        assert!(max_rel < 2e-3, "factor {s} (λ={lam}): max rel {max_rel:.2e}");
+    }
+    let _ = h;
+}
+
+#[test]
+fn chol_solve_artifact_matches_native_solve() {
+    let engine = engine();
+    let cfg = engine.config(64, None, None).unwrap();
+    let (fold, _) = fold64(&engine);
+    let h_native = syrk_lower(&fold.xt);
+    let g_native = gemv_t(&fold.xt, &fold.yt);
+    let lam = 0.25;
+
+    let out = engine
+        .run(
+            cfg,
+            "chol_solve",
+            &[
+                Tensor::from_matrix(&h_native),
+                Tensor::scalar(lam),
+                Tensor::from_vec(&g_native),
+            ],
+        )
+        .unwrap();
+    let theta_hlo = out[0].to_vec_f64();
+
+    let l = cholesky_shifted(&h_native, lam).unwrap();
+    let theta_native = solve_cholesky(&l, &g_native);
+    let scale = theta_native.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+    for (a, b) in theta_hlo.iter().zip(&theta_native) {
+        assert!(
+            (a - b).abs() / scale < 5e-3,
+            "θ mismatch: {a} vs {b} (scale {scale:.2e})"
+        );
+    }
+}
+
+#[test]
+fn full_fold_pipeline_agrees_with_native_cv() {
+    let engine = engine();
+    let cfg = engine.config(64, None, None).unwrap();
+    let (fold, _) = fold64(&engine);
+    let metrics = Metrics::new();
+    let pipe = HloPipeline::new(&engine, cfg, &metrics);
+
+    let hlo = pipe.run_fold(&fold, 1e-3, 1.0).unwrap();
+    let exact = pipe.run_fold_exact(&fold, 1e-3, 1.0).unwrap();
+
+    // the HLO piCholesky sweep must match the *native* piCholesky sweep
+    // (same algorithm, f32 vs f64 substrate) — this isolates implementation
+    // error from the method's own interpolation error
+    let h_native = syrk_lower(&fold.xt);
+    let g_native = gemv_t(&fold.xt, &fold.yt);
+    let data = picholesky::cv::FoldData {
+        xt: fold.xt.clone(),
+        yt: fold.yt.clone(),
+        xv: fold.xv.clone(),
+        yv: fold.yv.clone(),
+        h_mat: h_native,
+        g_vec: g_native,
+    };
+    let cv_cfg = picholesky::cv::CvConfig::default();
+    let mut timer = picholesky::util::PhaseTimer::new();
+    let native = picholesky::cv::solvers::sweep(
+        picholesky::cv::solvers::SolverKind::PiChol,
+        &data,
+        &hlo.grid,
+        &cv_cfg,
+        &mut timer,
+    )
+    .unwrap();
+    for (i, (a, b)) in hlo.rmse.iter().zip(&native.errors).enumerate() {
+        let rel = (a - b).abs() / b;
+        assert!(rel < 0.02, "grid[{i}]: hlo pichol {a:.4} vs native pichol {b:.4}");
+    }
+
+    // method-level check: the interp sweep's argmin agrees with the exact
+    // sweep's within a couple of grid steps (the paper's Table 4 criterion;
+    // curve-level deviation away from the optimum is expected, see Fig. 7)
+    assert!(
+        (hlo.best_idx as i64 - exact.best_idx as i64).abs() <= 2,
+        "selected λ differs: {} vs {}",
+        hlo.best_lambda(),
+        exact.best_lambda()
+    );
+    // and near the optimum the curves agree closely
+    let span = 3.min(exact.best_idx);
+    for i in (exact.best_idx - span)..=(exact.best_idx + span).min(hlo.rmse.len() - 1) {
+        let rel = (hlo.rmse[i] - exact.rmse[i]).abs() / exact.rmse[i];
+        assert!(rel < 0.02, "near-optimum grid[{i}]: {} vs {}", hlo.rmse[i], exact.rmse[i]);
+    }
+
+    // native (f64) exact sweep agrees with the HLO exact sweep
+    let h_native = syrk_lower(&fold.xt);
+    let g_native = gemv_t(&fold.xt, &fold.yt);
+    for (i, &lam) in exact.grid.iter().enumerate().step_by(10) {
+        let l = cholesky_shifted(&h_native, lam).unwrap();
+        let theta = solve_cholesky(&l, &g_native);
+        let err = picholesky::cv::holdout_error(
+            &fold.xv,
+            &fold.yv,
+            &theta,
+            picholesky::cv::Metric::Rmse,
+        );
+        let rel = (err - exact.rmse[i]).abs() / err;
+        assert!(rel < 5e-3, "native vs hlo exact at λ={lam}: {err} vs {}", exact.rmse[i]);
+    }
+}
+
+#[test]
+fn polyeval_artifact_interpolates() {
+    let engine = engine();
+    let cfg = engine.config(64, None, None).unwrap();
+    let (fold, _) = fold64(&engine);
+    let h_native = syrk_lower(&fold.xt);
+    let metrics = Metrics::new();
+    let pipe = HloPipeline::new(&engine, cfg, &metrics);
+
+    let grid = pipe.grid(1e-3, 1.0);
+    let sample = pipe.sample_lambdas(&grid);
+    assert_eq!(sample.len(), cfg.g);
+    assert_eq!(subsample_indices(grid.len(), cfg.g).len(), cfg.g);
+
+    let theta = pipe.fit(&Tensor::from_matrix(&h_native), &sample).unwrap();
+    assert_eq!(theta.dims, vec![cfg.r + 1, cfg.d_pad]);
+
+    let out = engine
+        .run(cfg, "polyeval", &[theta, Tensor::from_vec(&grid)])
+        .unwrap();
+    let p = out[0].to_matrix().unwrap();
+    assert_eq!((p.rows(), p.cols()), (cfg.m, cfg.d_vec));
+
+    // HLO polyeval row ≈ native pichol interpolant at the same λ (same
+    // algorithm + same full-matrix ordering, f32 vs f64)
+    let mut timer = picholesky::util::PhaseTimer::new();
+    let native = picholesky::pichol::fit(
+        &h_native,
+        &sample,
+        &picholesky::pichol::FitOptions {
+            degree: cfg.r,
+            strategy: &FullMatrix,
+        },
+        &mut timer,
+    )
+    .unwrap();
+    for &row_idx in &[0usize, cfg.m / 2, cfg.m - 1] {
+        let v_native = native.eval_vec(grid[row_idx]);
+        let mut max_rel = 0.0f64;
+        for (a, b) in p.row(row_idx).iter().zip(&v_native) {
+            max_rel = max_rel.max((a - b).abs() / b.abs().max(1.0));
+        }
+        assert!(
+            max_rel < 2e-3,
+            "interp row {row_idx}: hlo vs native max rel {max_rel:.2e}"
+        );
+    }
+}
+
+#[test]
+fn shape_validation_rejects_wrong_inputs() {
+    let engine = engine();
+    let cfg = engine.config(64, None, None).unwrap();
+    // wrong λ count into cholvec
+    let err = engine
+        .run(
+            cfg,
+            "cholvec",
+            &[
+                Tensor::new(vec![64, 64], vec![0.0; 64 * 64]),
+                Tensor::from_vec(&[0.1; 3]), // g=4 expected
+            ],
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("shape"), "got: {err}");
+    // wrong input count
+    let err = engine
+        .run(cfg, "gram", &[Tensor::scalar(1.0)])
+        .unwrap_err();
+    assert!(err.to_string().contains("expected"), "got: {err}");
+}
