@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI gate: build, test, doc-lint (broken intra-doc links fail), format check.
+# Usage: ./ci.sh   (from the repository root; fully offline)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo doc --no-deps (rustdoc warnings are errors)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "CI gate passed."

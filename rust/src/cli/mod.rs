@@ -87,9 +87,10 @@ USAGE:
   pichol <command> [--flag value]...
 
 COMMANDS:
-  cv           run one algorithm's k-fold CV
+  cv           run one algorithm's k-fold CV through the parallel sweep engine
                --dataset mnist|coil|caltech101|caltech256  --solver chol|pichol|mchol|svd|tsvd|rsvd|pinrmse
                --h <dim> --n <samples> --folds <k> --grid <q> --g <samples> --degree <r>
+               --threads <n|0=auto> --batch <λ per task|0=auto>
                --seed <u64> --config <file.toml>
   compare      run all six algorithms on one dataset (Figure 6 row)
                flags as for `cv`

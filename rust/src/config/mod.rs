@@ -201,6 +201,13 @@ impl ExperimentConfig {
         if let (Some(lo), Some(hi)) = (lo, hi) {
             cfg.cv.lambda_range = Some((lo, hi));
         }
+        // sweep-engine execution shape ([sweep] section; 0 = auto)
+        if let Some(v) = doc.get("sweep.threads").and_then(TomlValue::as_usize) {
+            cfg.cv.sweep_threads = v;
+        }
+        if let Some(v) = doc.get("sweep.batch").and_then(TomlValue::as_usize) {
+            cfg.cv.sweep_batch = v;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -287,6 +294,18 @@ mod tests {
         assert_eq!(cfg.h, 64);
         assert_eq!(cfg.cv.g_samples, 5);
         assert_eq!(cfg.cv.degree, 3);
+    }
+
+    #[test]
+    fn sweep_knobs_parse() {
+        let doc = parse_toml("[sweep]\nthreads = 4\nbatch = 8\n").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.cv.sweep_threads, 4);
+        assert_eq!(cfg.cv.sweep_batch, 8);
+        // defaults stay auto
+        let cfg = ExperimentConfig::from_doc(&parse_toml("n = 64\n").unwrap()).unwrap();
+        assert_eq!(cfg.cv.sweep_threads, 0);
+        assert_eq!(cfg.cv.sweep_batch, 0);
     }
 
     #[test]

@@ -44,6 +44,16 @@ impl Metrics {
         out
     }
 
+    /// Accumulate an already-measured duration under `name` (how the sweep
+    /// engine streams per-task wall times measured on worker threads).
+    pub fn add_secs(&self, name: &str, secs: f64) {
+        let nanos = (secs.max(0.0) * 1e9) as u64;
+        let mut map = self.durations.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(nanos, Ordering::Relaxed);
+    }
+
     /// Counter value.
     pub fn counter(&self, name: &str) -> u64 {
         self.counters
@@ -99,6 +109,14 @@ mod tests {
         m.time("phase", || std::thread::sleep(std::time::Duration::from_millis(2)));
         m.time("phase", || std::thread::sleep(std::time::Duration::from_millis(2)));
         assert!(m.seconds("phase") >= 0.004);
+    }
+
+    #[test]
+    fn add_secs_accumulates() {
+        let m = Metrics::new();
+        m.add_secs("task", 0.25);
+        m.add_secs("task", 0.5);
+        assert!((m.seconds("task") - 0.75).abs() < 1e-9);
     }
 
     #[test]

@@ -4,8 +4,13 @@
 //! (g exact factorizations serve q ≫ g candidate values); the coordinator is
 //! where that shows up operationally:
 //!
-//! - [`pool`] — a std::thread worker pool fanning fold×algorithm sweeps;
-//! - [`metrics`] — shared counters/timers, snapshotted into reports;
+//! - [`pool`] — a std::thread worker pool, the substrate for every parallel
+//!   stage (sweep tasks, matrix jobs, intra-factorization tiles);
+//! - [`sweep_engine`] — the batched fold×λ executor every native CV run
+//!   routes through ([`SweepPlan`] → [`SweepReport`], anchors-first
+//!   scheduling, bit-identical at any thread count);
+//! - [`metrics`] — shared counters/timers the engine streams per-task
+//!   timings into, snapshotted into reports;
 //! - [`hlo_pipeline`] — the AOT request path (gram → cholvec → polyfit →
 //!   fused sweep, one PJRT execution per stage, python nowhere in sight);
 //! - [`Coordinator`] — ties them together: plans folds, schedules work,
@@ -14,15 +19,17 @@
 pub mod hlo_pipeline;
 pub mod metrics;
 pub mod pool;
+pub mod sweep_engine;
 
 use std::sync::Arc;
 
 use crate::cv::solvers::SolverKind;
-use crate::cv::{run_cv, CvConfig, CvReport};
+use crate::cv::{aggregate_sweep, run_cv, CvConfig, CvReport};
 use crate::data::synthetic::{DatasetKind, SyntheticDataset};
 pub use hlo_pipeline::{HloFold, HloPipeline, HloSweepResult};
 pub use metrics::Metrics;
 pub use pool::WorkerPool;
+pub use sweep_engine::{SweepEngine, SweepPlan, SweepReport};
 
 /// The coordinator: worker pool + metrics + (lazily created) PJRT engine.
 pub struct Coordinator {
@@ -49,6 +56,13 @@ impl Coordinator {
     }
 
     /// Run one algorithm over one dataset (k-fold, native path), timed.
+    /// Routes through the sweep engine, sharing this coordinator's metrics
+    /// registry so per-task timings land in `self.metrics`.
+    ///
+    /// Thread-count precedence: an explicit `cfg.sweep_threads` wins;
+    /// `0` (auto) resolves to this coordinator's worker count, so a
+    /// `workers = 1` experiment config still bounds total CPU use the way
+    /// it did before the engine existed.
     pub fn run_one(
         &self,
         ds: &SyntheticDataset,
@@ -56,25 +70,51 @@ impl Coordinator {
         cfg: &CvConfig,
     ) -> crate::Result<CvReport> {
         self.metrics.incr("cv.runs");
-        let rep = run_cv(ds, kind, cfg)?;
+        let mut cfg = cfg.clone();
+        if cfg.sweep_threads == 0 {
+            cfg.sweep_threads = self.workers();
+        }
+        let plan = SweepPlan::new(ds, kind, &cfg);
+        let rep = self.run_plan(ds, &plan)?;
         self.metrics
             .add("cv.lambda_evals", (rep.grid.len() * cfg.k_folds) as u64);
         Ok(rep)
     }
 
+    /// Execute an explicit [`SweepPlan`] on a fresh [`SweepEngine`] wired to
+    /// this coordinator's metrics, and aggregate into a [`CvReport`].
+    ///
+    /// (A fresh engine pool is spawned per plan rather than reusing
+    /// `self.pool`: matrix jobs already occupy that pool, and the engine's
+    /// blocking waves must never run on the pool they schedule onto.)
+    pub fn run_plan(&self, ds: &SyntheticDataset, plan: &SweepPlan) -> crate::Result<CvReport> {
+        let engine = SweepEngine::with_metrics(plan.threads, self.metrics.clone());
+        Ok(aggregate_sweep(engine.run(ds, plan)?))
+    }
+
     /// Run a full algorithm matrix over one dataset, fanning algorithms
     /// across the worker pool (the Figure 6 / Table 3 workload).
+    ///
+    /// Matrix jobs already saturate the machine at algorithm granularity, so
+    /// each job's inner sweep runs single-threaded unless the caller
+    /// explicitly set `sweep_threads` — otherwise every job would spawn a
+    /// core-count engine pool, and the contention would distort exactly the
+    /// cross-algorithm wall-clock comparisons this method exists to measure.
     pub fn run_matrix(
         &self,
         ds: Arc<SyntheticDataset>,
         kinds: &[SolverKind],
         cfg: &CvConfig,
     ) -> Vec<crate::Result<CvReport>> {
+        let mut job_cfg = cfg.clone();
+        if job_cfg.sweep_threads == 0 {
+            job_cfg.sweep_threads = 1;
+        }
         let jobs: Vec<Box<dyn FnOnce() -> crate::Result<CvReport> + Send>> = kinds
             .iter()
             .map(|&kind| {
                 let ds = ds.clone();
-                let cfg = cfg.clone();
+                let cfg = job_cfg.clone();
                 let f: Box<dyn FnOnce() -> crate::Result<CvReport> + Send> =
                     Box::new(move || run_cv(&ds, kind, &cfg));
                 f
@@ -132,6 +172,24 @@ mod tests {
             assert!(rep.best_error.is_finite());
         }
         assert_eq!(coord.metrics.counter("cv.matrix_jobs"), 3);
+    }
+
+    #[test]
+    fn run_plan_streams_task_metrics_into_coordinator() {
+        let coord = Coordinator::new(2);
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 100, 15, 2);
+        let cfg = CvConfig {
+            k_folds: 2,
+            q_grid: 9,
+            sweep_threads: 2,
+            ..CvConfig::default()
+        };
+        let plan = SweepPlan::new(&ds, SolverKind::PiChol, &cfg);
+        let rep = coord.run_plan(&ds, &plan).unwrap();
+        assert!(rep.best_error.is_finite());
+        assert_eq!(coord.metrics.counter("sweep.runs"), 1);
+        assert_eq!(coord.metrics.counter("sweep.prep_tasks"), 2);
+        assert!(coord.metrics.counter("sweep.grid_tasks") > 0);
     }
 
     #[test]

@@ -1,11 +1,39 @@
-//! A small fixed-size worker pool over std::thread.
+//! A small fixed-size worker pool over `std::thread` — the substrate every
+//! parallel stage of the coordinator runs on.
 //!
 //! tokio is not in the offline crate set, and the coordinator's concurrency
-//! needs are simple: fan a batch of CPU-bound jobs (fold × algorithm sweeps)
-//! over N workers and collect results in completion order. Jobs are
-//! `FnOnce`-boxed closures; results come back tagged with their job index so
-//! callers can reassemble deterministic orderings.
+//! needs are simple: fan a batch of CPU-bound jobs over N workers and collect
+//! results in a deterministic order. Three layers consume this pool:
+//!
+//! - [`super::sweep_engine`] — fold-prep, anchor-factorization and λ-grid
+//!   tasks of the cross-validation sweep (the paper's dominant cost);
+//! - [`crate::linalg::cholesky::cholesky_in_place_pooled`] — column-panel
+//!   TRSM/SYRK tiles inside one blocked factorization (intra-factorization
+//!   parallelism for large `d`);
+//! - [`super::Coordinator::run_matrix`] — whole-algorithm jobs for the
+//!   Figure 6 / Table 3 experiment matrices.
+//!
+//! Jobs are `FnOnce`-boxed closures; results come back tagged with their job
+//! index so callers reassemble input order regardless of completion order.
+//!
+//! ## Panic semantics
+//!
+//! A panicking job never kills its worker: the worker catches the unwind and
+//! moves on to the next job, so the pool stays usable. [`WorkerPool::map`]
+//! additionally captures each job's panic payload and re-raises the first
+//! one (in input order) on the *calling* thread via
+//! `std::panic::resume_unwind`, preserving the original message — a panic in
+//! a sweep task therefore surfaces exactly like a panic in the serial path.
+//!
+//! ## Deadlock rule
+//!
+//! [`WorkerPool::map`] blocks until every job finishes. Never call it from
+//! *inside* a job running on the same pool (all workers could end up blocked
+//! waiting on jobs that no worker is free to run). The sweep engine follows
+//! this rule by driving intra-factorization parallelism only from the
+//! coordinating thread, never from within a pool task.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -32,7 +60,11 @@ impl WorkerPool {
                     .spawn(move || loop {
                         let job = { rx.lock().unwrap().recv() };
                         match job {
-                            Ok(job) => job(),
+                            // isolate panics so one bad job can't take the
+                            // worker (and every queued job behind it) down
+                            Ok(job) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
                             Err(_) => break, // sender dropped: shut down
                         }
                     })
@@ -45,7 +77,8 @@ impl WorkerPool {
         }
     }
 
-    /// Submit one job.
+    /// Submit one fire-and-forget job. If it panics, the panic is swallowed
+    /// by the worker (use [`WorkerPool::map`] when panics must propagate).
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
         self.tx
             .as_ref()
@@ -55,28 +88,35 @@ impl WorkerPool {
     }
 
     /// Run a batch of jobs and return their results **in input order**.
+    ///
+    /// If any job panicked, the first panic (by input index) is re-raised on
+    /// the calling thread with its original payload after all jobs have
+    /// settled; the pool itself remains usable.
     pub fn map<T: Send + 'static>(
         &self,
         jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
     ) -> Vec<T> {
         let n = jobs.len();
-        let (rtx, rrx) = mpsc::channel::<(usize, T)>();
+        let (rtx, rrx) = mpsc::channel::<(usize, thread::Result<T>)>();
         for (i, job) in jobs.into_iter().enumerate() {
             let rtx = rtx.clone();
             self.submit(move || {
-                let out = job();
+                let out = catch_unwind(AssertUnwindSafe(job));
                 // receiver may be gone if the caller panicked; ignore
                 let _ = rtx.send((i, out));
             });
         }
         drop(rtx);
-        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut slots: Vec<Option<thread::Result<T>>> = (0..n).map(|_| None).collect();
         for (i, out) in rrx {
             slots[i] = Some(out);
         }
         slots
             .into_iter()
-            .map(|s| s.expect("worker died before returning a result"))
+            .map(|s| match s.expect("worker died before returning a result") {
+                Ok(v) => v,
+                Err(payload) => resume_unwind(payload),
+            })
             .collect()
     }
 
@@ -96,7 +136,7 @@ impl Drop for WorkerPool {
 }
 
 /// Pick a worker count: respects `PICHOL_WORKERS`, defaults to available
-/// parallelism (this box: 1).
+/// parallelism.
 pub fn default_workers() -> usize {
     if let Ok(v) = std::env::var("PICHOL_WORKERS") {
         if let Ok(n) = v.parse::<usize>() {
@@ -151,5 +191,41 @@ mod tests {
     #[test]
     fn size_clamped_to_one() {
         assert_eq!(WorkerPool::new(0).size(), 1);
+    }
+
+    #[test]
+    fn panic_propagates_with_payload_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("task exploded")),
+            Box::new(|| 3),
+        ];
+        let caught = catch_unwind(AssertUnwindSafe(|| pool.map(jobs)));
+        let payload = caught.expect_err("map must re-raise the worker panic");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(str::to_string)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .expect("panic payload should be a string");
+        assert!(msg.contains("task exploded"), "payload: {msg}");
+
+        // the pool must still be fully functional afterwards
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..8).map(|i| {
+                let f: Box<dyn FnOnce() -> usize + Send> = Box::new(move || i + 100);
+                f
+            })
+            .collect();
+        assert_eq!(pool.map(jobs), (100..108).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn submitted_panic_does_not_kill_worker() {
+        let pool = WorkerPool::new(1); // single worker: it MUST survive
+        pool.submit(|| panic!("fire-and-forget failure"));
+        let jobs: Vec<Box<dyn FnOnce() -> u32 + Send>> = vec![Box::new(|| 7)];
+        assert_eq!(pool.map(jobs), vec![7]);
     }
 }

@@ -1,0 +1,598 @@
+//! The parallel λ×fold sweep engine: the batched executor behind
+//! [`crate::cv::run_cv`].
+//!
+//! The paper's cost model (§1, Figures 1-2) says the λ sweep — `k` folds ×
+//! `q` candidate λ's, one `chol(H + λI)` each — dominates ridge
+//! cross-validation as soon as `n < k·q·d`. The serial loops this engine
+//! replaces left every core but one idle; here the whole grid is enumerated
+//! as a work queue and fanned over a [`WorkerPool`]:
+//!
+//! ```text
+//!   SweepPlan ──► stage 1  fold prep      k tasks: materialize + H = XᵀX
+//!              ├► stage 2  anchors        k·g tasks: exact chol(H + λ_s I)
+//!              │           (PiChol only; factors Arc-cached per fold,
+//!              │            fitted into one interpolant per fold)
+//!              ├► stage 3  grid sweep     k·⌈q/batch⌉ tasks: interpolate /
+//!              │           factorize, solve, score the hold-out split
+//!              └► SweepReport             per-fold results + merged phase
+//!                                         timer + per-task metrics
+//! ```
+//!
+//! Scheduling policy:
+//!
+//! - **Anchors run first.** Interpolated grid tasks only need the fitted
+//!   interpolant, so the `O(g·d³)` exact factorizations are scheduled as
+//!   their own wave and the `O(r·d²)` interpolation wave starts once per-fold
+//!   interpolants are [`Arc`]-cached. Per-fold state ([`FoldData`], the
+//!   interpolant) is shared across tasks by reference count, never cloned.
+//! - **Few large anchors → intra-factorization parallelism.** When the
+//!   anchor wave cannot fill the pool (`k·g <` workers) and the factor is
+//!   large, anchors are factorized one at a time from the coordinating
+//!   thread with [`cholesky_shifted_pooled`], which tiles each TRSM/SYRK
+//!   trailing update into column-panel tasks on the *same* pool.
+//! - **Everything else parallelizes at fold granularity.** MChol's binary
+//!   search is inherently sequential and the SVD family factorizes once per
+//!   fold, so those solvers run one task per fold via [`solvers::sweep`].
+//!
+//! ## Determinism
+//!
+//! Results are **bit-identical for every thread count** (the
+//! `parallel_matches_serial_*` tests pin this). Tasks share no mutable
+//! state, each task body is the same code the serial path runs
+//! (`solvers::eval_exact_point` / `solvers::eval_interp_point`), the
+//! pooled factorization is bitwise-equal to the serial kernel by
+//! construction, and aggregation happens on the coordinating thread in
+//! (fold, grid-index) order.
+//!
+//! Thread count and batch shape are config knobs: `CvConfig::sweep_threads`
+//! / `CvConfig::sweep_batch`, settable from experiment TOML as
+//! `[sweep] threads = …` / `batch = …` (see [`crate::config`]).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::{default_workers, WorkerPool};
+use crate::cv::solvers::{self, SolverKind};
+use crate::cv::{CvConfig, FoldData, SweepResult};
+use crate::data::folds::kfold;
+use crate::data::synthetic::SyntheticDataset;
+use crate::linalg::cholesky::{cholesky_shifted, cholesky_shifted_pooled, CholeskyError};
+use crate::linalg::matrix::Matrix;
+use crate::pichol::{self, FitOptions, Interpolant};
+use crate::util::{logspace, subsample_indices, PhaseTimer};
+
+/// Matrices at least this large get intra-factorization parallelism when
+/// the anchor wave alone cannot fill the pool.
+const INTRA_FACTOR_MIN_DIM: usize = 192;
+
+/// A resolved description of one cross-validation sweep: solver, λ grid and
+/// execution shape (thread count, λ's per grid task).
+#[derive(Clone, Debug)]
+pub struct SweepPlan {
+    /// Algorithm to sweep.
+    pub kind: SolverKind,
+    /// Cross-validation settings the plan was derived from.
+    pub cv: CvConfig,
+    /// The candidate λ grid (`q` exponentially spaced points).
+    pub grid: Vec<f64>,
+    /// Resolved worker-thread count (≥ 1).
+    pub threads: usize,
+    /// λ grid points per sweep task (the batch shape; ≥ 1).
+    pub batch: usize,
+}
+
+impl SweepPlan {
+    /// Resolve a plan from a dataset + config: builds the grid, resolves
+    /// `sweep_threads == 0` to [`default_workers`] and `sweep_batch == 0` to
+    /// an automatic shape (~4 batches per worker per fold for load balance).
+    pub fn new(ds: &SyntheticDataset, kind: SolverKind, cfg: &CvConfig) -> Self {
+        let (lo, hi) = cfg.lambda_range.unwrap_or_else(|| ds.kind.lambda_range());
+        let grid = logspace(lo, hi, cfg.q_grid);
+        let threads = if cfg.sweep_threads == 0 {
+            default_workers()
+        } else {
+            cfg.sweep_threads
+        };
+        let batch = if cfg.sweep_batch == 0 {
+            (grid.len() / (4 * threads)).max(1)
+        } else {
+            cfg.sweep_batch
+        };
+        Self {
+            kind,
+            cv: cfg.clone(),
+            grid,
+            threads,
+            batch,
+        }
+    }
+
+    /// Number of grid tasks this plan fans out (fold-level solvers use
+    /// `k_folds` tasks instead).
+    pub fn grid_tasks(&self) -> usize {
+        self.cv.k_folds * self.grid.len().div_ceil(self.batch)
+    }
+}
+
+/// What one engine run produced: per-fold sweep results plus the merged
+/// phase timer and scheduling counters.
+pub struct SweepReport {
+    /// Algorithm that was swept.
+    pub kind: SolverKind,
+    /// The candidate λ grid.
+    pub grid: Vec<f64>,
+    /// One [`SweepResult`] per fold, in fold order.
+    pub fold_results: Vec<SweepResult>,
+    /// Phase timings summed over all tasks (deterministic merge order).
+    /// With threads > 1 this is CPU-time-like (sum over workers), not
+    /// elapsed time — see `wall_secs` for the latter.
+    pub timer: PhaseTimer,
+    /// Elapsed wall-clock seconds of the whole run, as observed by the
+    /// coordinating thread (this is what shrinks as threads grow).
+    pub wall_secs: f64,
+    /// Worker threads the run used.
+    pub threads: usize,
+    /// Total tasks executed (fold prep + anchors + grid/fold sweeps).
+    pub tasks: usize,
+}
+
+/// Output of one pool task, reassembled on the coordinating thread.
+struct TaskOut {
+    errors: Vec<f64>,
+    timer: PhaseTimer,
+    wall: f64,
+}
+
+/// The executor: a worker pool plus a metrics registry that per-task
+/// timings stream into.
+pub struct SweepEngine {
+    pool: WorkerPool,
+    metrics: Arc<Metrics>,
+}
+
+impl SweepEngine {
+    /// Engine with `threads` workers and a private metrics registry.
+    pub fn new(threads: usize) -> Self {
+        Self::with_metrics(threads, Arc::new(Metrics::new()))
+    }
+
+    /// Engine streaming its task metrics into a shared registry (how the
+    /// [`super::Coordinator`] wires the engine to its own metrics).
+    pub fn with_metrics(threads: usize, metrics: Arc<Metrics>) -> Self {
+        Self {
+            pool: WorkerPool::new(threads.max(1)),
+            metrics,
+        }
+    }
+
+    /// Worker count.
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// The metrics registry task timings stream into.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Run a task batch: inline on the calling thread when the engine is
+    /// single-threaded (no channel hops or worker handoff polluting timed
+    /// serial runs — `run_matrix` relies on this for clean cross-algorithm
+    /// comparisons), on the pool otherwise. Same input-order results and
+    /// panic propagation either way.
+    fn map_jobs<T: Send + 'static>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
+    ) -> Vec<T> {
+        if self.pool.size() == 1 {
+            jobs.into_iter().map(|job| job()).collect()
+        } else {
+            self.pool.map(jobs)
+        }
+    }
+
+    /// Execute a plan over a dataset.
+    pub fn run(&self, ds: &SyntheticDataset, plan: &SweepPlan) -> crate::Result<SweepReport> {
+        self.metrics.incr("sweep.runs");
+        let run_t0 = Instant::now();
+        let mut timer = PhaseTimer::new();
+        let mut tasks = 0usize;
+
+        // stage 1: fold prep — materialize serially (borrows the dataset),
+        // build Hessian/gradient in parallel (each task owns its split)
+        let folds = kfold(ds.n(), plan.cv.k_folds, plan.cv.seed);
+        let splits: Vec<_> = folds.iter().map(|f| f.materialize(&ds.x, &ds.y)).collect();
+        let build_jobs: Vec<Box<dyn FnOnce() -> (FoldData, PhaseTimer, f64) + Send>> = splits
+            .into_iter()
+            .map(|(xt, yt, xv, yv)| {
+                let f: Box<dyn FnOnce() -> (FoldData, PhaseTimer, f64) + Send> =
+                    Box::new(move || {
+                        let t0 = Instant::now();
+                        let mut t = PhaseTimer::new();
+                        let data = FoldData::build(xt, yt, xv, yv, &mut t);
+                        (data, t, t0.elapsed().as_secs_f64())
+                    });
+                f
+            })
+            .collect();
+        tasks += build_jobs.len();
+        let mut fold_data: Vec<Arc<FoldData>> = Vec::with_capacity(folds.len());
+        for (data, t, wall) in self.map_jobs(build_jobs) {
+            timer.merge(&t);
+            self.metrics.incr("sweep.prep_tasks");
+            self.metrics.add_secs("sweep.prep_wall", wall);
+            fold_data.push(Arc::new(data));
+        }
+
+        // stages 2-3: solver-shaped scheduling
+        let fold_results = match plan.kind {
+            SolverKind::Chol => self.run_grid(plan, &fold_data, None, &mut timer, &mut tasks)?,
+            SolverKind::PiChol => {
+                let interps = self.fit_anchors(plan, &fold_data, &mut timer, &mut tasks)?;
+                self.run_grid(plan, &fold_data, Some(&interps), &mut timer, &mut tasks)?
+            }
+            _ => self.run_fold_level(plan, &fold_data, &mut timer, &mut tasks)?,
+        };
+
+        // actual λ evaluations: grid solvers score every grid point; fold-
+        // level solvers may score fewer (MChol probes) — count what landed
+        let evals: usize = fold_results
+            .iter()
+            .map(|r| r.errors.iter().filter(|e| e.is_finite()).count())
+            .sum();
+        self.metrics.add("sweep.lambda_evals", evals as u64);
+        let wall_secs = run_t0.elapsed().as_secs_f64();
+        self.metrics.add_secs("sweep.run_wall", wall_secs);
+        Ok(SweepReport {
+            kind: plan.kind,
+            grid: plan.grid.clone(),
+            fold_results,
+            timer,
+            wall_secs,
+            threads: self.pool.size(),
+            tasks,
+        })
+    }
+
+    /// Stage 2 (PiChol): exact anchor factorizations for every fold, then
+    /// one Algorithm-1 fit per fold. Returns `Arc`-cached interpolants the
+    /// grid wave shares.
+    fn fit_anchors(
+        &self,
+        plan: &SweepPlan,
+        fold_data: &[Arc<FoldData>],
+        timer: &mut PhaseTimer,
+        tasks: &mut usize,
+    ) -> crate::Result<Vec<Arc<Interpolant>>> {
+        let sample_lams: Vec<f64> = subsample_indices(plan.grid.len(), plan.cv.g_samples)
+            .into_iter()
+            .map(|i| plan.grid[i])
+            .collect();
+        let g = sample_lams.len();
+        let k = fold_data.len();
+        let dim = fold_data[0].h_mat.rows();
+
+        // anchor factors, factors[fold][s] = chol(H_fold + λ_s I)
+        let factors: Vec<Vec<Matrix>> = if self.pool.size() >= 2
+            && k * g < self.pool.size()
+            && dim >= INTRA_FACTOR_MIN_DIM
+        {
+            // too few anchors to fill the pool and each one is big: tile
+            // *inside* each factorization instead (driven from this thread —
+            // never from a pool task, per the pool's deadlock rule)
+            let mut all = Vec::with_capacity(k);
+            for fd in fold_data {
+                let mut per = Vec::with_capacity(g);
+                for &lam in &sample_lams {
+                    let t0 = Instant::now();
+                    let l = cholesky_shifted_pooled(&fd.h_mat, lam, &self.pool)?;
+                    let wall = t0.elapsed().as_secs_f64();
+                    timer.add("chol", wall);
+                    self.metrics.incr("sweep.anchor_tasks");
+                    self.metrics.add_secs("sweep.anchor_wall", wall);
+                    *tasks += 1;
+                    per.push(l);
+                }
+                all.push(per);
+            }
+            all
+        } else {
+            // enough anchors to fill the pool: one task per (fold, λ_s)
+            type AnchorRes = Result<(Matrix, f64), CholeskyError>;
+            let mut jobs: Vec<Box<dyn FnOnce() -> AnchorRes + Send>> = Vec::new();
+            for fd in fold_data {
+                for &lam in &sample_lams {
+                    let fd = Arc::clone(fd);
+                    let job: Box<dyn FnOnce() -> AnchorRes + Send> = Box::new(move || {
+                        let t0 = Instant::now();
+                        let l = cholesky_shifted(&fd.h_mat, lam)?;
+                        Ok((l, t0.elapsed().as_secs_f64()))
+                    });
+                    jobs.push(job);
+                }
+            }
+            *tasks += jobs.len();
+            let outs = self.map_jobs(jobs);
+            let mut all = Vec::with_capacity(k);
+            let mut it = outs.into_iter();
+            for _ in 0..k {
+                let mut per = Vec::with_capacity(g);
+                for _ in 0..g {
+                    let (l, wall) = it.next().expect("anchor task count mismatch")?;
+                    timer.add("chol", wall);
+                    self.metrics.incr("sweep.anchor_tasks");
+                    self.metrics.add_secs("sweep.anchor_wall", wall);
+                    per.push(l);
+                }
+                all.push(per);
+            }
+            all
+        };
+
+        // Algorithm-1 fits: cheap (O(g·r·D)) relative to the anchors, done
+        // here in fold order so timer merge order is deterministic
+        let mut interps = Vec::with_capacity(k);
+        for per in &factors {
+            let strategy = solvers::pichol_strategy();
+            let interp = pichol::fit_from_factors(
+                &sample_lams,
+                per,
+                &FitOptions {
+                    degree: plan.cv.degree,
+                    strategy: &strategy,
+                },
+                timer,
+            );
+            interps.push(Arc::new(interp));
+        }
+        Ok(interps)
+    }
+
+    /// Stage 3: the λ-grid wave. With `interps` present each task
+    /// interpolates (piCholesky); otherwise it factorizes exactly (Chol).
+    fn run_grid(
+        &self,
+        plan: &SweepPlan,
+        fold_data: &[Arc<FoldData>],
+        interps: Option<&[Arc<Interpolant>]>,
+        timer: &mut PhaseTimer,
+        tasks: &mut usize,
+    ) -> crate::Result<Vec<SweepResult>> {
+        let grid = Arc::new(plan.grid.clone());
+        let metric = plan.cv.metric;
+        type GridRes = Result<TaskOut, CholeskyError>;
+
+        let mut jobs: Vec<Box<dyn FnOnce() -> GridRes + Send>> = Vec::new();
+        let mut spans: Vec<(usize, usize, usize)> = Vec::new(); // (fold, lo, hi)
+        for (fi, fd) in fold_data.iter().enumerate() {
+            let mut lo = 0;
+            while lo < grid.len() {
+                let hi = (lo + plan.batch).min(grid.len());
+                spans.push((fi, lo, hi));
+                let fd = Arc::clone(fd);
+                let grid = Arc::clone(&grid);
+                let interp = interps.map(|v| Arc::clone(&v[fi]));
+                let job: Box<dyn FnOnce() -> GridRes + Send> = Box::new(move || {
+                    let t0 = Instant::now();
+                    let mut t = PhaseTimer::new();
+                    let mut errors = Vec::with_capacity(hi - lo);
+                    match &interp {
+                        Some(interp) => {
+                            let strategy = solvers::pichol_strategy();
+                            let mut vbuf = vec![0.0; interp.theta.cols()];
+                            for &lam in &grid[lo..hi] {
+                                errors.push(solvers::eval_interp_point(
+                                    &fd, interp, &strategy, lam, metric, &mut vbuf, &mut t,
+                                ));
+                            }
+                        }
+                        None => {
+                            for &lam in &grid[lo..hi] {
+                                errors.push(solvers::eval_exact_point(&fd, lam, metric, &mut t)?);
+                            }
+                        }
+                    }
+                    Ok(TaskOut {
+                        errors,
+                        timer: t,
+                        wall: t0.elapsed().as_secs_f64(),
+                    })
+                });
+                jobs.push(job);
+                lo = hi;
+            }
+        }
+        *tasks += jobs.len();
+
+        let outs = self.map_jobs(jobs);
+        let mut per_fold: Vec<Vec<f64>> = fold_data
+            .iter()
+            .map(|_| vec![f64::NAN; grid.len()])
+            .collect();
+        for (&(fi, lo, hi), out) in spans.iter().zip(outs) {
+            let out = out?;
+            per_fold[fi][lo..hi].copy_from_slice(&out.errors);
+            timer.merge(&out.timer);
+            self.metrics.incr("sweep.grid_tasks");
+            self.metrics.add_secs("sweep.grid_wall", out.wall);
+        }
+
+        Ok(per_fold
+            .into_iter()
+            .map(|errors| {
+                let (bl, be) = solvers::best_of(&plan.grid, &errors);
+                SweepResult {
+                    errors,
+                    best_lambda: bl,
+                    best_error: be,
+                    probes: Vec::new(),
+                }
+            })
+            .collect())
+    }
+
+    /// Fold-granular scheduling for the solvers whose per-fold work is
+    /// sequential (MChol's binary search) or front-loaded (the SVD family,
+    /// PINRMSE): one task per fold through the serial [`solvers::sweep`].
+    fn run_fold_level(
+        &self,
+        plan: &SweepPlan,
+        fold_data: &[Arc<FoldData>],
+        timer: &mut PhaseTimer,
+        tasks: &mut usize,
+    ) -> crate::Result<Vec<SweepResult>> {
+        let grid = Arc::new(plan.grid.clone());
+        type FoldRes = (crate::Result<SweepResult>, PhaseTimer, f64);
+        let jobs: Vec<Box<dyn FnOnce() -> FoldRes + Send>> = fold_data
+            .iter()
+            .map(|fd| {
+                let fd = Arc::clone(fd);
+                let grid = Arc::clone(&grid);
+                let cfg = plan.cv.clone();
+                let kind = plan.kind;
+                let f: Box<dyn FnOnce() -> FoldRes + Send> = Box::new(move || {
+                    let t0 = Instant::now();
+                    let mut t = PhaseTimer::new();
+                    let res = solvers::sweep(kind, &fd, &grid, &cfg, &mut t);
+                    (res, t, t0.elapsed().as_secs_f64())
+                });
+                f
+            })
+            .collect();
+        *tasks += jobs.len();
+
+        let mut out = Vec::with_capacity(fold_data.len());
+        for (res, t, wall) in self.map_jobs(jobs) {
+            timer.merge(&t);
+            self.metrics.incr("sweep.fold_tasks");
+            self.metrics.add_secs("sweep.fold_wall", wall);
+            out.push(res?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::DatasetKind;
+
+    fn cfg_with_threads(threads: usize) -> CvConfig {
+        CvConfig {
+            k_folds: 5,
+            q_grid: 50,
+            sweep_threads: threads,
+            ..CvConfig::default()
+        }
+    }
+
+    fn ds() -> SyntheticDataset {
+        SyntheticDataset::generate(DatasetKind::MnistLike, 160, 17, 9)
+    }
+
+    fn run(kind: SolverKind, threads: usize) -> SweepReport {
+        let ds = ds();
+        let cfg = cfg_with_threads(threads);
+        let plan = SweepPlan::new(&ds, kind, &cfg);
+        assert_eq!(plan.threads, threads);
+        let engine = SweepEngine::new(plan.threads);
+        engine.run(&ds, &plan).unwrap()
+    }
+
+    /// The acceptance bar: a parallel sweep over a k=5, q=50 grid is
+    /// bit-identical (≪ 1e-12) to the serial path, for both the exact and
+    /// the interpolated solver, across thread counts 1/2/4.
+    #[test]
+    fn parallel_matches_serial_across_thread_counts() {
+        for kind in [SolverKind::Chol, SolverKind::PiChol] {
+            let serial = run(kind, 1);
+            for threads in [2, 4] {
+                let par = run(kind, threads);
+                assert_eq!(par.threads, threads);
+                for (fs, fp) in serial.fold_results.iter().zip(&par.fold_results) {
+                    assert_eq!(
+                        fs.best_lambda, fp.best_lambda,
+                        "{:?} best_lambda differs at {threads} threads",
+                        kind
+                    );
+                    assert_eq!(
+                        fs.best_error, fp.best_error,
+                        "{:?} best_error differs at {threads} threads",
+                        kind
+                    );
+                    for (a, b) in fs.errors.iter().zip(&fp.errors) {
+                        assert!(
+                            (a == b) || (a.is_nan() && b.is_nan()),
+                            "{:?} grid errors differ at {threads} threads: {a} vs {b}",
+                            kind
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fold_level_solvers_match_across_thread_counts() {
+        for kind in [SolverKind::Svd, SolverKind::Pinrmse] {
+            let serial = run(kind, 1);
+            let par = run(kind, 3);
+            for (fs, fp) in serial.fold_results.iter().zip(&par.fold_results) {
+                assert_eq!(fs.best_lambda, fp.best_lambda);
+                assert_eq!(fs.best_error, fp.best_error);
+            }
+        }
+    }
+
+    #[test]
+    fn report_carries_timings_and_task_counts() {
+        let rep = run(SolverKind::Chol, 2);
+        assert_eq!(rep.fold_results.len(), 5);
+        assert_eq!(rep.grid.len(), 50);
+        assert!(rep.timer.get("hessian") > 0.0);
+        assert!(rep.timer.get("chol") > 0.0);
+        assert!(rep.wall_secs > 0.0);
+        // 5 prep tasks + 5 folds × ⌈50/batch⌉ grid tasks
+        assert!(rep.tasks > 5, "tasks = {}", rep.tasks);
+    }
+
+    #[test]
+    fn engine_streams_metrics() {
+        let ds = ds();
+        let cfg = cfg_with_threads(2);
+        let plan = SweepPlan::new(&ds, SolverKind::PiChol, &cfg);
+        let engine = SweepEngine::new(plan.threads);
+        engine.run(&ds, &plan).unwrap();
+        let m = engine.metrics();
+        assert_eq!(m.counter("sweep.runs"), 1);
+        assert_eq!(m.counter("sweep.prep_tasks"), 5);
+        assert_eq!(m.counter("sweep.anchor_tasks"), 5 * 4); // k × g
+        assert!(m.counter("sweep.grid_tasks") > 0);
+        assert!(m.seconds("sweep.grid_wall") > 0.0);
+        assert_eq!(m.counter("sweep.lambda_evals"), 5 * 50);
+    }
+
+    #[test]
+    fn plan_resolves_auto_knobs() {
+        let ds = ds();
+        let cfg = CvConfig {
+            k_folds: 2,
+            q_grid: 31,
+            sweep_threads: 3,
+            sweep_batch: 0,
+            ..CvConfig::default()
+        };
+        let plan = SweepPlan::new(&ds, SolverKind::Chol, &cfg);
+        assert_eq!(plan.threads, 3);
+        assert!(plan.batch >= 1);
+        assert_eq!(plan.grid.len(), 31);
+        assert!(plan.grid_tasks() >= plan.cv.k_folds);
+
+        let explicit = CvConfig {
+            sweep_batch: 7,
+            ..cfg
+        };
+        assert_eq!(SweepPlan::new(&ds, SolverKind::Chol, &explicit).batch, 7);
+    }
+}

@@ -3,18 +3,21 @@
 //! Each fold follows the Figure 1 pipeline: materialize the split, build the
 //! Hessian `H = XᵀX` and gradient `g = Xᵀy` once (O(nd²)), then run one of
 //! the six comparative algorithms ([`solvers`]) over the candidate-λ grid and
-//! score each θ on the held-out split. [`run_cv`] aggregates over folds with
-//! per-phase wall-clock timings — the raw material for Figures 2, 6, 7-9 and
-//! Tables 3-4.
+//! score each θ on the held-out split. [`run_cv`] plans the fold×λ grid as a
+//! [`SweepPlan`] and executes it on the parallel
+//! [`crate::coordinator::sweep_engine`], then aggregates the per-fold results
+//! with per-phase wall-clock timings — the raw material for Figures 2, 6,
+//! 7-9 and Tables 3-4. Results are bit-identical for every thread count
+//! (see the engine's determinism contract).
 
 pub mod solvers;
 
-use crate::data::folds::kfold;
+use crate::coordinator::sweep_engine::{SweepEngine, SweepPlan, SweepReport};
 use crate::data::synthetic::SyntheticDataset;
 use crate::linalg::gemm::{gemv, gemv_t, syrk_lower};
 use crate::linalg::matrix::Matrix;
 use crate::pichol::mchol::Probe;
-use crate::util::{logspace, PhaseTimer};
+use crate::util::PhaseTimer;
 use solvers::SolverKind;
 
 /// Hold-out error metric.
@@ -120,6 +123,13 @@ pub struct CvConfig {
     pub rsvd_params: (usize, usize),
     /// Hold-out metric.
     pub metric: Metric,
+    /// Sweep-engine worker threads (0 = auto: `PICHOL_WORKERS` env var or
+    /// the hardware's available parallelism). Results are bit-identical for
+    /// every value.
+    pub sweep_threads: usize,
+    /// λ grid points per sweep task — the batch shape of the parallel grid
+    /// wave (0 = auto: ~4 batches per worker per fold).
+    pub sweep_batch: usize,
 }
 
 impl Default for CvConfig {
@@ -134,6 +144,8 @@ impl Default for CvConfig {
             tsvd_rank_frac: 0.15,
             rsvd_params: (8, 1),
             metric: Metric::Rmse,
+            sweep_threads: 0,
+            sweep_batch: 0,
         }
     }
 }
@@ -151,6 +163,8 @@ pub struct CvReport {
     pub best_error: f64,
     /// Cumulative phase timings over all folds.
     pub timer: PhaseTimer,
+    /// Elapsed wall-clock seconds of the sweep (what shrinks with threads).
+    pub wall_secs: f64,
     /// Per-fold (best λ, best error).
     pub fold_bests: Vec<(f64, f64)>,
     /// Probe trajectories per fold (Figure 9; empty for grid algorithms).
@@ -158,34 +172,55 @@ pub struct CvReport {
 }
 
 impl CvReport {
-    /// Total wall-clock seconds across folds and phases.
+    /// Seconds summed across folds and phases — CPU-time-like when the sweep
+    /// ran with threads > 1 (use [`CvReport::wall_secs`] for elapsed time).
+    /// With one thread the two coincide, so single-threaded timing
+    /// comparisons (Figure 6 / Table 3) are unaffected.
     pub fn total_secs(&self) -> f64 {
         self.timer.total()
     }
 }
 
 /// Run k-fold cross-validation of one algorithm over a dataset.
+///
+/// Routing: builds a [`SweepPlan`] (grid + thread/batch shape from
+/// [`CvConfig`]), executes it on a [`SweepEngine`], and folds the resulting
+/// [`SweepReport`] into a [`CvReport`] via [`aggregate_sweep`]. Thread count
+/// comes from `cfg.sweep_threads` (0 = auto); any value yields bit-identical
+/// numbers.
 pub fn run_cv(
     ds: &SyntheticDataset,
     kind: SolverKind,
     cfg: &CvConfig,
 ) -> crate::Result<CvReport> {
-    let (lo, hi) = cfg.lambda_range.unwrap_or_else(|| ds.kind.lambda_range());
-    let grid = logspace(lo, hi, cfg.q_grid);
-    let folds = kfold(ds.n(), cfg.k_folds, cfg.seed);
+    let plan = SweepPlan::new(ds, kind, cfg);
+    let engine = SweepEngine::new(plan.threads);
+    Ok(aggregate_sweep(engine.run(ds, &plan)?))
+}
 
-    let mut timer = PhaseTimer::new();
+/// Fold a [`SweepReport`] into the aggregate [`CvReport`]: NaN-aware mean
+/// error curve, geometric-mean best λ, mean best error. Aggregation iterates
+/// folds in order on the calling thread, so it is deterministic regardless
+/// of how the sweep was scheduled.
+pub fn aggregate_sweep(report: SweepReport) -> CvReport {
+    let SweepReport {
+        kind,
+        grid,
+        fold_results,
+        timer,
+        wall_secs,
+        ..
+    } = report;
+
     let mut sum_errors = vec![0.0f64; grid.len()];
     let mut cnt_errors = vec![0usize; grid.len()];
-    let mut fold_bests = Vec::with_capacity(folds.len());
+    let mut fold_bests = Vec::with_capacity(fold_results.len());
     let mut probes = Vec::new();
     let mut log_lambda_sum = 0.0;
     let mut best_err_sum = 0.0;
 
-    for fold in &folds {
-        let (xt, yt, xv, yv) = fold.materialize(&ds.x, &ds.y);
-        let data = FoldData::build(xt, yt, xv, yv, &mut timer);
-        let result = solvers::sweep(kind, &data, &grid, cfg, &mut timer)?;
+    let k = fold_results.len() as f64;
+    for result in fold_results {
         for (i, &e) in result.errors.iter().enumerate() {
             if e.is_finite() {
                 sum_errors[i] += e;
@@ -198,23 +233,23 @@ pub fn run_cv(
         probes.push(result.probes);
     }
 
-    let k = folds.len() as f64;
     let mean_errors: Vec<f64> = sum_errors
         .iter()
         .zip(&cnt_errors)
         .map(|(&s, &c)| if c > 0 { s / c as f64 } else { f64::NAN })
         .collect();
 
-    Ok(CvReport {
+    CvReport {
         kind,
         grid,
         mean_errors,
         best_lambda: (log_lambda_sum / k).exp(),
         best_error: best_err_sum / k,
         timer,
+        wall_secs,
         fold_bests,
         probes,
-    })
+    }
 }
 
 #[cfg(test)]

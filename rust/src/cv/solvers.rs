@@ -10,8 +10,9 @@
 //! | `RSvd`    | Randomized SVD | Halko sketch, then eq. 11 |
 //! | `Pinrmse` | PINRMSE | interpolate the error curve itself (Figure 10) |
 
-use super::{holdout_error, CvConfig, FoldData, SweepResult};
-use crate::linalg::cholesky::cholesky_shifted;
+use super::{holdout_error, CvConfig, FoldData, Metric, SweepResult};
+use crate::linalg::cholesky::{cholesky_shifted, CholeskyError};
+use crate::pichol::Interpolant;
 use crate::linalg::lanczos::lanczos_svd;
 use crate::linalg::randomized::randomized_svd;
 use crate::linalg::svd::{jacobi_svd, Svd};
@@ -90,7 +91,59 @@ pub fn sweep(
     }
 }
 
-fn best_of(grid: &[f64], errors: &[f64]) -> (f64, f64) {
+/// The vectorization strategy every PiChol sweep site shares. A factor
+/// fitted through one strategy must be `unvec`'d through the same one
+/// (the layout is a bijection), so the serial path and the engine's
+/// anchor-fit + grid-task sites all construct it through this single
+/// function — never inline a strategy at a PiChol call site.
+pub(crate) fn pichol_strategy() -> Recursive {
+    Recursive::default()
+}
+
+/// One exact-Cholesky grid-point evaluation — the shared task body of the
+/// serial [`sweep`] path and the sweep engine's parallel grid tasks (both
+/// must run *this* code so parallel results are bit-identical to serial).
+///
+/// A [`CholeskyError`] means `H + λI` was indefinite at this λ; the sweep
+/// propagates it (recovery is shift-and-retry with a larger λ — see
+/// [`CholeskyError`]'s docs).
+pub(crate) fn eval_exact_point(
+    data: &FoldData,
+    lam: f64,
+    metric: Metric,
+    timer: &mut PhaseTimer,
+) -> Result<f64, CholeskyError> {
+    let l = timer.time("chol", || cholesky_shifted(&data.h_mat, lam))?;
+    let theta = timer.time("solve", || solve_cholesky(&l, &data.g_vec));
+    Ok(timer.time("holdout", || {
+        holdout_error(&data.xv, &data.yv, &theta, metric)
+    }))
+}
+
+/// One interpolated grid-point evaluation (piCholesky's payoff step) —
+/// shared by the serial path and the engine's grid tasks. `strategy` must be
+/// the strategy the interpolant was fitted with; `vbuf` is a caller-owned
+/// scratch of length `interp.theta.cols()`.
+pub(crate) fn eval_interp_point(
+    data: &FoldData,
+    interp: &Interpolant,
+    strategy: &dyn VecStrategy,
+    lam: f64,
+    metric: Metric,
+    vbuf: &mut [f64],
+    timer: &mut PhaseTimer,
+) -> f64 {
+    let l = timer.time("interp", || {
+        interp.eval_vec_into(lam, vbuf);
+        strategy.unvec(vbuf, interp.h)
+    });
+    let theta = timer.time("solve", || solve_cholesky(&l, &data.g_vec));
+    timer.time("holdout", || {
+        holdout_error(&data.xv, &data.yv, &theta, metric)
+    })
+}
+
+pub(crate) fn best_of(grid: &[f64], errors: &[f64]) -> (f64, f64) {
     let (mut bl, mut be) = (grid[0], f64::INFINITY);
     for (&l, &e) in grid.iter().zip(errors) {
         if e.is_finite() && e < be {
@@ -110,12 +163,7 @@ fn sweep_chol(
 ) -> crate::Result<SweepResult> {
     let mut errors = Vec::with_capacity(grid.len());
     for &lam in grid {
-        let l = timer.time("chol", || cholesky_shifted(&data.h_mat, lam))?;
-        let theta = timer.time("solve", || solve_cholesky(&l, &data.g_vec));
-        let e = timer.time("holdout", || {
-            holdout_error(&data.xv, &data.yv, &theta, cfg.metric)
-        });
-        errors.push(e);
+        errors.push(eval_exact_point(data, lam, cfg.metric, timer)?);
     }
     let (bl, be) = best_of(grid, &errors);
     Ok(SweepResult {
@@ -133,7 +181,7 @@ fn sweep_pichol(
     cfg: &CvConfig,
     timer: &mut PhaseTimer,
 ) -> crate::Result<SweepResult> {
-    let strategy = Recursive::default();
+    let strategy = pichol_strategy();
     let sample_lams: Vec<f64> = subsample_indices(grid.len(), cfg.g_samples)
         .into_iter()
         .map(|i| grid[i])
@@ -151,15 +199,9 @@ fn sweep_pichol(
     let mut errors = Vec::with_capacity(grid.len());
     let mut vbuf = vec![0.0; interp.theta.cols()];
     for &lam in grid {
-        let l = timer.time("interp", || {
-            interp.eval_vec_into(lam, &mut vbuf);
-            strategy.unvec(&vbuf, interp.h)
-        });
-        let theta = timer.time("solve", || solve_cholesky(&l, &data.g_vec));
-        let e = timer.time("holdout", || {
-            holdout_error(&data.xv, &data.yv, &theta, cfg.metric)
-        });
-        errors.push(e);
+        errors.push(eval_interp_point(
+            data, &interp, &strategy, lam, cfg.metric, &mut vbuf, timer,
+        ));
     }
     let (bl, be) = best_of(grid, &errors);
     Ok(SweepResult {
@@ -186,6 +228,9 @@ fn sweep_mchol(
 
     let t0 = std::time::Instant::now();
     let result = crate::pichol::mchol::multilevel_search(c, params, |lam| {
+        // no shift-and-retry here: MChol's probe range is centred on the
+        // grid, bounded away from λ=0, so indefiniteness is a precondition
+        // violation rather than a recoverable state (see CholeskyError docs)
         let l = cholesky_shifted(&data.h_mat, lam).expect("H + λI not PD in MChol");
         let theta = solve_cholesky(&l, &data.g_vec);
         holdout_error(&data.xv, &data.yv, &theta, cfg.metric)

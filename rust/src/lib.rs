@@ -20,11 +20,15 @@
 //! - **L2** — JAX graphs (`python/compile/model.py`) composing the kernels,
 //!   AOT-lowered once to HLO text artifacts by `make artifacts`.
 //! - **L3** — this crate: the cross-validation coordinator ([`coordinator`],
-//!   [`cv`]), the native Algorithm-1 implementation ([`pichol`]), the
-//!   LAPACK-like substrate the paper assumes ([`linalg`]), the §5 triangular
-//!   vectorization strategies ([`vectorize`]), dataset synthesis and
-//!   Kar–Karnick random feature maps ([`data`]), and the PJRT runtime that
-//!   loads the AOT artifacts ([`runtime`]).
+//!   [`cv`]) with its parallel fold×λ sweep engine
+//!   ([`coordinator::sweep_engine`]: anchors-first scheduling over a worker
+//!   pool, bit-identical results at any thread count), the native
+//!   Algorithm-1 implementation ([`pichol`]), the LAPACK-like substrate the
+//!   paper assumes ([`linalg`], including a pool-tiled blocked Cholesky),
+//!   the §5 triangular vectorization strategies ([`vectorize`]), dataset
+//!   synthesis and Kar–Karnick random feature maps ([`data`]), and the PJRT
+//!   runtime that loads the AOT artifacts ([`runtime`] — a graceful stub
+//!   unless built with `--features pjrt`).
 //!
 //! ## Quickstart
 //!

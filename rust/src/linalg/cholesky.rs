@@ -7,9 +7,33 @@
 
 use super::gemm::Gemm;
 use super::matrix::Matrix;
+use crate::coordinator::pool::WorkerPool;
 use std::fmt;
+use std::sync::Arc;
 
 /// Factorization failure: the matrix is not (numerically) positive-definite.
+///
+/// # Recovery semantics (shift-and-retry)
+///
+/// In the cross-validation setting `A = H + λI` with `H = XᵀX ⪰ 0`, so a
+/// failure means λ is too small relative to the rank deficiency / rounding
+/// noise of `H`. The standard recovery is to **increase the shift and
+/// retry**: call [`cholesky_shifted`] again with a larger λ (e.g. the next
+/// grid point, or `λ + ε·trace(H)/d`). Every caller in this crate follows
+/// one of two policies:
+///
+/// - *grid sweeps* ([`crate::cv`], the sweep engine) propagate the error
+///   and the whole sweep aborts with it (in-flight parallel tasks drain
+///   first) — a λ grid whose low end leaves `H + λI` indefinite is a
+///   misconfigured search range, and the fix is to rerun with a larger
+///   `lambda_range` lower bound (the retry happens at the configuration
+///   level, not per grid point);
+/// - *fixed-λ call sites* (MChol probes, tests) treat the error as a
+///   precondition violation, because their λ ranges are bounded away from
+///   zero by construction.
+///
+/// The struct carries the failing pivot index and value so callers can size
+/// a retry shift if they choose to.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CholeskyError {
     /// Index of the pivot that went non-positive.
@@ -109,9 +133,143 @@ pub fn cholesky_blocked(a: &Matrix) -> Result<Matrix, CholeskyError> {
 }
 
 /// `chol(H + λI)` — the per-λ operation of the cross-validation sweep.
+///
+/// On [`CholeskyError`] the factor is unusable; see the error type's docs
+/// for the shift-and-retry recovery contract (retry with a larger λ).
 pub fn cholesky_shifted(h: &Matrix, lam: f64) -> Result<Matrix, CholeskyError> {
     let mut a = h.add_diag(lam);
     cholesky_in_place(&mut a, 64)?;
+    Ok(a)
+}
+
+/// Evenly split `lo..hi` into at most `parts` non-empty contiguous ranges.
+fn chunk_ranges(lo: usize, hi: usize, parts: usize) -> Vec<(usize, usize)> {
+    let n = hi.saturating_sub(lo);
+    let parts = parts.max(1).min(n.max(1));
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = lo;
+    for p in 0..parts {
+        let len = base + usize::from(p < rem);
+        if len == 0 {
+            continue;
+        }
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// In-place blocked Cholesky with **intra-factorization parallelism**: the
+/// TRSM and SYRK trailing updates of each panel step are tiled into
+/// independent row-panel tasks executed on `pool` (§5's "maximally exploit
+/// the compute power of modern architectures", applied to a single large
+/// factor).
+///
+/// The result is **bitwise identical** to [`cholesky_in_place`] with the
+/// same `block`, for any worker count: each TRSM tile replays the serial
+/// per-row substitution order, and each SYRK tile is produced by
+/// [`Gemm::a_bt_rows`], whose per-row schedule matches the serial
+/// [`Gemm::a_bt`]. Panel factorization (the `O(d·b²)` serial fraction) stays
+/// on the calling thread.
+///
+/// **Deadlock rule:** must be driven from a thread that is *not* itself a
+/// worker of `pool` (see the [`crate::coordinator::pool`] module docs).
+/// Falls back to the serial kernel when the pool has one worker or the
+/// matrix is too small to amortize tiling.
+pub fn cholesky_in_place_pooled(
+    a: &mut Matrix,
+    block: usize,
+    pool: &WorkerPool,
+) -> Result<(), CholeskyError> {
+    assert!(a.is_square(), "cholesky needs a square matrix");
+    let n = a.rows();
+    if pool.size() <= 1 || n <= 2 * block {
+        return cholesky_in_place(a, block);
+    }
+
+    let mut j0 = 0;
+    while j0 < n {
+        let jb = block.min(n - j0);
+
+        // 1. factor the diagonal panel on the calling thread
+        potrf_unblocked(a, j0, jb)?;
+
+        if j0 + jb < n {
+            // 2. TRSM tiles: L21 = A21 · L11⁻ᵀ, row panels in parallel.
+            // Each task owns copies of its operands (jobs must be 'static);
+            // the panel is small (jb×jb) and the row chunk is disjoint.
+            let l11 = Arc::new(a.slice(j0, j0 + jb, j0, j0 + jb));
+            let row_chunks = chunk_ranges(j0 + jb, n, pool.size());
+            let trsm_jobs: Vec<Box<dyn FnOnce() -> Matrix + Send + 'static>> = row_chunks
+                .iter()
+                .map(|&(r0, r1)| {
+                    let l11 = Arc::clone(&l11);
+                    let chunk = a.slice(r0, r1, j0, j0 + jb);
+                    let f: Box<dyn FnOnce() -> Matrix + Send + 'static> = Box::new(move || {
+                        let mut x = chunk;
+                        for i in 0..x.rows() {
+                            for j in 0..l11.rows() {
+                                let mut s = x[(i, j)];
+                                for k in 0..j {
+                                    s -= x[(i, k)] * l11[(j, k)];
+                                }
+                                x[(i, j)] = s / l11[(j, j)];
+                            }
+                        }
+                        x
+                    });
+                    f
+                })
+                .collect();
+            for (&(r0, _), solved) in row_chunks.iter().zip(pool.map(trsm_jobs)) {
+                a.set_block(r0, j0, &solved);
+            }
+
+            // 3. SYRK tiles: A22 -= L21 · L21ᵀ, row panels of the update in
+            // parallel, subtraction applied in deterministic order here.
+            let m = n - j0 - jb;
+            let l21 = Arc::new(a.slice(j0 + jb, n, j0, j0 + jb));
+            let upd_chunks = chunk_ranges(0, m, pool.size());
+            let gem_block = block;
+            let syrk_jobs: Vec<Box<dyn FnOnce() -> Matrix + Send + 'static>> = upd_chunks
+                .iter()
+                .map(|&(q0, q1)| {
+                    let l21 = Arc::clone(&l21);
+                    let f: Box<dyn FnOnce() -> Matrix + Send + 'static> = Box::new(move || {
+                        Gemm { block: gem_block }.a_bt_rows(&l21, &l21, q0, q1)
+                    });
+                    f
+                })
+                .collect();
+            for (&(q0, q1), upd) in upd_chunks.iter().zip(pool.map(syrk_jobs)) {
+                for i in q0..q1 {
+                    let gi = j0 + jb + i;
+                    let urow = upd.row(i - q0);
+                    for j in 0..=i {
+                        a[(gi, j0 + jb + j)] -= urow[j];
+                    }
+                }
+            }
+        }
+        j0 += jb;
+    }
+    a.zero_upper();
+    Ok(())
+}
+
+/// `chol(H + λI)` with the trailing updates tiled across `pool` — the
+/// anchor-factorization kernel of the sweep engine when a few large factors
+/// must be produced with many idle workers. Bitwise identical to
+/// [`cholesky_shifted`]; same shift-and-retry recovery contract.
+pub fn cholesky_shifted_pooled(
+    h: &Matrix,
+    lam: f64,
+    pool: &WorkerPool,
+) -> Result<Matrix, CholeskyError> {
+    let mut a = h.add_diag(lam);
+    cholesky_in_place_pooled(&mut a, 64, pool)?;
     Ok(a)
 }
 
@@ -180,6 +338,48 @@ mod tests {
         let _ = h; // silence
         assert!(cholesky_blocked(&hfull).is_err());
         assert!(cholesky_shifted(&hfull, 1e-3).is_ok());
+    }
+
+    #[test]
+    fn pooled_factorization_bitwise_matches_serial() {
+        use crate::coordinator::pool::WorkerPool;
+        let a = random_spd(150, 1e4, 11);
+        for workers in [1, 2, 4] {
+            let pool = WorkerPool::new(workers);
+            for block in [16, 32, 64] {
+                let mut serial = a.clone();
+                cholesky_in_place(&mut serial, block).unwrap();
+                let mut pooled = a.clone();
+                cholesky_in_place_pooled(&mut pooled, block, &pool).unwrap();
+                assert_eq!(
+                    serial.max_abs_diff(&pooled),
+                    0.0,
+                    "pooled factor differs at workers={workers} block={block}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_shifted_matches_serial_shifted() {
+        use crate::coordinator::pool::WorkerPool;
+        let x = crate::testutil::random_matrix(220, 130, 21);
+        let h = crate::linalg::gemm::syrk_lower(&x);
+        let pool = WorkerPool::new(3);
+        let serial = cholesky_shifted(&h, 0.37).unwrap();
+        let pooled = cholesky_shifted_pooled(&h, 0.37, &pool).unwrap();
+        assert_eq!(serial.max_abs_diff(&pooled), 0.0);
+    }
+
+    #[test]
+    fn pooled_rejects_indefinite_like_serial() {
+        use crate::coordinator::pool::WorkerPool;
+        let pool = WorkerPool::new(2);
+        let mut a = Matrix::eye(200);
+        a[(150, 150)] = -1.0;
+        let mut p = a.clone();
+        let err = cholesky_in_place_pooled(&mut p, 32, &pool).unwrap_err();
+        assert_eq!(err.pivot, 150);
     }
 
     #[test]

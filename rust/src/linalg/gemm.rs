@@ -82,6 +82,42 @@ impl Gemm {
         c
     }
 
+    /// Rows `r0..r1` of `A · Bᵀ`, as an `(r1-r0)×b.rows()` block.
+    ///
+    /// The per-row block schedule (j-blocks outer, k-blocks inner, dot
+    /// accumulation order within a block) matches [`Gemm::a_bt`] exactly, so
+    /// each output row is **bitwise identical** to the corresponding row of
+    /// the full product — this is what lets the pooled Cholesky's trailing
+    /// SYRK update fan row panels across workers without perturbing the
+    /// factorization by a single ulp (the sweep engine's determinism
+    /// guarantee rests on it).
+    pub fn a_bt_rows(&self, a: &Matrix, b: &Matrix, r0: usize, r1: usize) -> Matrix {
+        assert_eq!(a.cols(), b.cols(), "abt shape mismatch");
+        assert!(r0 <= r1 && r1 <= a.rows(), "row range out of bounds");
+        let (k, n) = (a.cols(), b.rows());
+        let mut c = Matrix::zeros(r1 - r0, n);
+        let bs = self.block;
+        for i in r0..r1 {
+            let ci = i - r0;
+            for j0 in (0..n).step_by(bs) {
+                let j1 = (j0 + bs).min(n);
+                for k0 in (0..k).step_by(bs) {
+                    let k1 = (k0 + bs).min(k);
+                    let arow = &a.row(i)[k0..k1];
+                    for j in j0..j1 {
+                        let brow = &b.row(j)[k0..k1];
+                        let mut dot = 0.0;
+                        for (x, y) in arow.iter().zip(brow) {
+                            dot += x * y;
+                        }
+                        c[(ci, j)] += dot;
+                    }
+                }
+            }
+        }
+        c
+    }
+
     /// `C = A · Bᵀ`.
     pub fn a_bt(&self, a: &Matrix, b: &Matrix) -> Matrix {
         assert_eq!(a.cols(), b.cols(), "abt shape mismatch");
@@ -232,6 +268,27 @@ mod tests {
         let c = Gemm::default().a_bt(&a, &b);
         let expect = gemm(&a, &b.transpose());
         assert!(c.max_abs_diff(&expect) < 1e-10);
+    }
+
+    #[test]
+    fn a_bt_rows_bitwise_matches_full_product() {
+        let a = randm(37, 29, 11);
+        let b = randm(23, 29, 12);
+        let gem = Gemm { block: 8 };
+        let full = gem.a_bt(&a, &b);
+        // arbitrary, unaligned row partitions must reproduce the exact bits
+        for (r0, r1) in [(0, 5), (5, 17), (17, 37), (0, 37), (36, 37)] {
+            let part = gem.a_bt_rows(&a, &b, r0, r1);
+            for i in r0..r1 {
+                for j in 0..23 {
+                    assert_eq!(
+                        part[(i - r0, j)],
+                        full[(i, j)],
+                        "row {i} col {j} differs for range {r0}..{r1}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

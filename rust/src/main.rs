@@ -59,6 +59,8 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.cv.q_grid = args.usize_flag("grid", cfg.cv.q_grid)?;
     cfg.cv.g_samples = args.usize_flag("g", cfg.cv.g_samples)?;
     cfg.cv.degree = args.usize_flag("degree", cfg.cv.degree)?;
+    cfg.cv.sweep_threads = args.usize_flag("threads", cfg.cv.sweep_threads)?;
+    cfg.cv.sweep_batch = args.usize_flag("batch", cfg.cv.sweep_batch)?;
     cfg.cv.seed = cfg.seed;
     if let Some(dir) = args.flag("artifacts") {
         cfg.artifacts_dir = dir.to_string();
@@ -84,9 +86,10 @@ fn cmd_cv(args: &Args) -> Result<()> {
     let ds = SyntheticDataset::generate(cfg.dataset, cfg.n, cfg.h, cfg.seed);
     let rep = coord.run_one(&ds, solver, &cfg.cv)?;
     println!(
-        "λ* = {:.4e}   holdout = {:.4}   total = {}",
+        "λ* = {:.4e}   holdout = {:.4}   wall = {}   cpu = {}",
         rep.best_lambda,
         rep.best_error,
+        fmt_secs(rep.wall_secs),
         fmt_secs(rep.total_secs())
     );
     for (phase, secs) in rep.timer.entries() {

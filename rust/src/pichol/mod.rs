@@ -99,10 +99,53 @@ pub struct FitOptions<'a> {
     pub strategy: &'a dyn VecStrategy,
 }
 
+/// Algorithm 1 lines 2-6, from exact factors the caller already holds.
+///
+/// Line 1 (the `O(g·d³)` anchor factorizations) is the parallelizable part,
+/// so the sweep engine computes the factors on its worker pool and hands
+/// them here; [`fit`] is the serial convenience wrapper that does line 1
+/// itself. Factors must be ordered like `sample_lambdas` — `factors[s]` is
+/// `chol(H + λ_s I)`.
+///
+/// Phase timings land in `timer` under the Table 1 names: `vec` (line 2),
+/// `fit` (lines 3-6).
+pub fn fit_from_factors(
+    sample_lambdas: &[f64],
+    factors: &[Matrix],
+    opts: &FitOptions,
+    timer: &mut PhaseTimer,
+) -> Interpolant {
+    let g = sample_lambdas.len();
+    let r = opts.degree;
+    assert!(g > r, "Algorithm 1 requires g > r (got g={g}, r={r})");
+    assert_eq!(factors.len(), g, "need exactly one factor per sample λ");
+    let h = factors[0].rows();
+
+    // line 2: vectorize into T (g×D)
+    let t = timer.time("vec", || build_target_matrix(opts.strategy, factors));
+
+    // lines 3-6: V, G_λ = VᵀT, H_λ = VᵀV, Θ = H_λ⁻¹G_λ — done as Θ = A·T
+    let theta = timer.time("fit", || {
+        let v = vandermonde(sample_lambdas, r);
+        let a = projector_for(&v);
+        Gemm::default().mul(&a, &t)
+    });
+
+    Interpolant {
+        theta,
+        h,
+        degree: r,
+        sample_lambdas: sample_lambdas.to_vec(),
+    }
+}
+
 /// Algorithm 1: fit the interpolant from `g` exact factorizations.
 ///
 /// Phase timings land in `timer` under the Table 1 names: `chol` (line 1),
-/// `vec` (line 2), `fit` (lines 3-6).
+/// `vec` (line 2), `fit` (lines 3-6). A [`CholeskyError`] from line 1 means
+/// some sample λ left `H + λI` indefinite — recover by resampling with
+/// larger λ's (shift-and-retry, see
+/// [`crate::linalg::cholesky::CholeskyError`]).
 pub fn fit(
     h_mat: &Matrix,
     sample_lambdas: &[f64],
@@ -112,7 +155,6 @@ pub fn fit(
     let g = sample_lambdas.len();
     let r = opts.degree;
     assert!(g > r, "Algorithm 1 requires g > r (got g={g}, r={r})");
-    let h = h_mat.rows();
 
     // line 1: the g exact factors — the O(g d³) dominant cost
     let mut factors = Vec::with_capacity(g);
@@ -121,22 +163,7 @@ pub fn fit(
         factors.push(l);
     }
 
-    // line 2: vectorize into T (g×D)
-    let t = timer.time("vec", || build_target_matrix(opts.strategy, &factors));
-
-    // lines 3-6: V, G_λ = VᵀT, H_λ = VᵀV, Θ = H_λ⁻¹G_λ — done as Θ = A·T
-    let theta = timer.time("fit", || {
-        let v = vandermonde(sample_lambdas, r);
-        let a = projector_for(&v);
-        Gemm::default().mul(&a, &t)
-    });
-
-    Ok(Interpolant {
-        theta,
-        h,
-        degree: r,
-        sample_lambdas: sample_lambdas.to_vec(),
-    })
+    Ok(fit_from_factors(sample_lambdas, &factors, opts, timer))
 }
 
 #[cfg(test)]
@@ -167,6 +194,40 @@ mod tests {
             *x -= y;
         }
         fro_norm(&d) / fro_norm(exact)
+    }
+
+    #[test]
+    fn fit_from_factors_matches_fit() {
+        // the engine's split (anchors elsewhere, lines 2-6 here) must
+        // reproduce the one-shot fit bit for bit
+        let a = random_spd(14, 1e3, 6);
+        let lams = [0.1, 0.45, 0.8, 1.2];
+        let mut t = PhaseTimer::new();
+        let whole = fit(
+            &a,
+            &lams,
+            &FitOptions {
+                degree: 2,
+                strategy: &RowWise,
+            },
+            &mut t,
+        )
+        .unwrap();
+        let factors: Vec<Matrix> = lams
+            .iter()
+            .map(|&lam| cholesky_shifted(&a, lam).unwrap())
+            .collect();
+        let split = fit_from_factors(
+            &lams,
+            &factors,
+            &FitOptions {
+                degree: 2,
+                strategy: &RowWise,
+            },
+            &mut t,
+        );
+        assert_eq!(whole.theta.as_slice(), split.theta.as_slice());
+        assert_eq!(whole.h, split.h);
     }
 
     #[test]

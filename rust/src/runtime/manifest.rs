@@ -124,6 +124,23 @@ impl Manifest {
         })
     }
 
+    /// [`Manifest::config_for`] with the standard error message — shared by
+    /// the real and stub `runtime::Engine` so the two `cfg` branches cannot
+    /// drift.
+    pub fn require_config(
+        &self,
+        h: usize,
+        g: Option<usize>,
+        r: Option<usize>,
+    ) -> anyhow::Result<&ConfigEntry> {
+        self.config_for(h, g, r).ok_or_else(|| {
+            anyhow!(
+                "no AOT config for h={h} (g={g:?}, r={r:?}); re-run `make artifacts` \
+                 with a matching shapes.CONFIGS entry"
+            )
+        })
+    }
+
     /// Absolute path of one artifact file.
     pub fn path_of(&self, info: &ArtifactInfo) -> PathBuf {
         self.dir.join(&info.file)

@@ -10,12 +10,26 @@
 //! keyed by `(artifact, config tag)` — compilation happens at most once per
 //! process, execution is the only per-request cost (python is never
 //! involved).
+//!
+//! ## The `pjrt` feature
+//!
+//! The real engine needs the `xla` bindings, which the offline build
+//! environment does not ship. Without `--features pjrt` this module compiles
+//! a **stub [`Engine`]** with the same API: it still loads and validates
+//! `manifest.json` (so `pichol info` works), but [`Engine::run`] /
+//! [`Engine::warmup`] return a descriptive error instead of executing. See
+//! the README ("PJRT runtime") and the commented `xla` dependency in
+//! `Cargo.toml` for enabling the real path.
 
 pub mod json;
 pub mod manifest;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
 use crate::linalg::matrix::Matrix;
@@ -70,12 +84,14 @@ impl Tensor {
         self.data.iter().map(|&x| x as f64).collect()
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         let lit = xla::Literal::vec1(&self.data);
         let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
         Ok(lit.reshape(&dims)?)
     }
 
+    #[cfg(feature = "pjrt")]
     fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
         let shape = lit.shape()?;
         let dims: Vec<usize> = match &shape {
@@ -88,12 +104,14 @@ impl Tensor {
 }
 
 /// Compile-once, execute-many PJRT engine over a manifest of artifacts.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Create a CPU engine over `<dir>/manifest.json`.
     pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
@@ -121,12 +139,7 @@ impl Engine {
 
     /// Resolve the config for a factor dimension h (optionally g, r).
     pub fn config(&self, h: usize, g: Option<usize>, r: Option<usize>) -> Result<&ConfigEntry> {
-        self.manifest.config_for(h, g, r).ok_or_else(|| {
-            anyhow!(
-                "no AOT config for h={h} (g={g:?}, r={r:?}); re-run `make artifacts` \
-                 with a matching shapes.CONFIGS entry"
-            )
-        })
+        self.manifest.require_config(h, g, r)
     }
 
     fn executable(
@@ -190,6 +203,55 @@ impl Engine {
             self.executable(cfg, name)?;
         }
         Ok(())
+    }
+}
+
+/// Stub engine compiled without the `pjrt` feature: same API surface as the
+/// real [`Engine`], loads and validates the artifact manifest, but cannot
+/// compile or execute HLO — [`Engine::run`] / [`Engine::warmup`] error with
+/// instructions for enabling the real runtime.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Create a stub engine over `<dir>/manifest.json` (manifest parsing and
+    /// shape validation still run; execution does not).
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Engine { manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Platform description (for the CLI `info` command).
+    pub fn platform(&self) -> String {
+        "pjrt disabled (rebuild with `--features pjrt` and the xla dependency)".to_string()
+    }
+
+    /// Resolve the config for a factor dimension h (optionally g, r).
+    pub fn config(&self, h: usize, g: Option<usize>, r: Option<usize>) -> Result<&ConfigEntry> {
+        self.manifest.require_config(h, g, r)
+    }
+
+    /// Always errors: executing artifacts needs the `pjrt` feature.
+    pub fn run(&self, _cfg: &ConfigEntry, name: &str, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        bail!(
+            "cannot execute artifact '{name}': this build has no PJRT runtime \
+             (enable the `pjrt` feature and the xla dependency in rust/Cargo.toml)"
+        )
+    }
+
+    /// Always errors: compiling artifacts needs the `pjrt` feature.
+    pub fn warmup(&self, _cfg: &ConfigEntry, names: &[&str]) -> Result<()> {
+        bail!(
+            "cannot compile artifacts {names:?}: this build has no PJRT runtime \
+             (enable the `pjrt` feature and the xla dependency in rust/Cargo.toml)"
+        )
     }
 }
 

@@ -86,6 +86,45 @@ fn misclass_metric_plumbs_through() {
 }
 
 #[test]
+fn parallel_sweep_matches_serial_k5_q50() {
+    // acceptance bar: threads ≥ 2 over a k=5, q=50 grid matches the serial
+    // path within 1e-12 on best_lambda / best_error (the engine actually
+    // guarantees bit-identity; 1e-12 is the contractual bound)
+    let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 200, 19, 13);
+    for kind in [SolverKind::Chol, SolverKind::PiChol] {
+        let serial_cfg = CvConfig {
+            k_folds: 5,
+            q_grid: 50,
+            sweep_threads: 1,
+            ..CvConfig::default()
+        };
+        let parallel_cfg = CvConfig {
+            sweep_threads: 4,
+            ..serial_cfg.clone()
+        };
+        let serial = run_cv(&ds, kind, &serial_cfg).unwrap();
+        let parallel = run_cv(&ds, kind, &parallel_cfg).unwrap();
+        assert!(
+            (serial.best_lambda - parallel.best_lambda).abs() <= 1e-12,
+            "{}: best_lambda {} vs {}",
+            kind.name(),
+            serial.best_lambda,
+            parallel.best_lambda
+        );
+        assert!(
+            (serial.best_error - parallel.best_error).abs() <= 1e-12,
+            "{}: best_error {} vs {}",
+            kind.name(),
+            serial.best_error,
+            parallel.best_error
+        );
+        for (a, b) in serial.mean_errors.iter().zip(&parallel.mean_errors) {
+            assert_eq!(a, b, "mean error curves must be bit-identical");
+        }
+    }
+}
+
+#[test]
 fn coordinator_pool_matches_sequential_results() {
     let cfg = small_cfg();
     let ds = Arc::new(SyntheticDataset::generate(DatasetKind::CoilLike, 150, 21, 7));

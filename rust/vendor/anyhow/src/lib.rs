@@ -1,0 +1,241 @@
+//! Minimal, dependency-free drop-in for the `anyhow` error crate.
+//!
+//! The build environment for this repository is fully offline, so instead of
+//! pulling `anyhow` from a registry the crate vendors the thin slice of its
+//! API that the codebase actually uses:
+//!
+//! - [`Error`]: an opaque, `Send + Sync` error value carrying a context
+//!   chain (outermost context first, root cause last);
+//! - [`Result<T>`]: alias for `std::result::Result<T, Error>`;
+//! - [`anyhow!`], [`bail!`], [`ensure!`]: the formatting macros;
+//! - [`Context`]: `.context(...)` / `.with_context(|| ...)` on any
+//!   `Result<T, E>` whose error is `std::error::Error` or already an
+//!   [`Error`];
+//! - `From<E: std::error::Error + Send + Sync + 'static>` so `?` converts
+//!   concrete errors (I/O, [`std::fmt::Error`], the crate's own typed
+//!   errors) into [`Error`].
+//!
+//! Display follows `anyhow` conventions: `{}` prints the outermost context
+//! only, `{:#}` prints the whole chain joined with `": "`, and `{:?}` prints
+//! the message plus a `Caused by:` list.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: a chain of human-readable messages, outermost context
+/// first, root cause last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The root-cause message (innermost entry of the chain).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that is
+// what makes the blanket `From` impl below coherent (the same trick the real
+// `anyhow` uses).
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+mod ext {
+    use super::{Error, StdError};
+
+    /// Anything convertible into an [`Error`] — concrete std errors or an
+    /// [`Error`] itself (mirrors `anyhow`'s private `ext::StdError`).
+    pub trait IntoAnyhow {
+        fn into_anyhow(self) -> Error;
+    }
+
+    impl<E> IntoAnyhow for E
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        fn into_anyhow(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoAnyhow for Error {
+        fn into_anyhow(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(|| ...)` to
+/// `Result`s.
+pub trait Context<T> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: ext::IntoAnyhow> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_anyhow().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_anyhow().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = io_err().into();
+        let e = e.context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: file missing");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().root_cause(), "file missing");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("root {}", 7));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: root 7");
+    }
+
+    #[test]
+    fn with_context_is_lazy_on_ok() {
+        let mut called = false;
+        let r: std::result::Result<i32, std::io::Error> = Ok(3);
+        let v = r
+            .with_context(|| {
+                called = true;
+                "never shown"
+            })
+            .unwrap();
+        assert_eq!(v, 3);
+        assert!(!called, "with_context closure ran on Ok");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 10 {
+                bail!("too big: {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative input -1");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "too big: 11");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
