@@ -1,8 +1,23 @@
 #!/usr/bin/env bash
-# CI gate: build, test, doc-lint (broken intra-doc links fail), format check.
-# Usage: ./ci.sh   (from the repository root; fully offline)
+# CI gate: build, test, doc-lint (broken intra-doc links fail), format and
+# clippy checks.
+#
+# Usage:
+#   ./ci.sh                 full gate (from the repository root; fully offline)
+#   ./ci.sh --bench-smoke   compile + run the kernel bench at tiny sizes and
+#                           validate the emitted BENCH_kernels.json
 set -euo pipefail
 cd "$(dirname "$0")"
+
+if [[ "${1:-}" == "--bench-smoke" ]]; then
+  echo "==> bench_kernels smoke (tiny sizes, JSON validity)"
+  cargo bench --bench bench_kernels -- --smoke
+  test -s BENCH_kernels.json
+  grep -q '"kernel"' BENCH_kernels.json
+  grep -q '"packed_secs"' BENCH_kernels.json
+  echo "bench smoke passed: BENCH_kernels.json present and well-formed."
+  exit 0
+fi
 
 echo "==> cargo build --release"
 cargo build --release
@@ -15,5 +30,12 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 echo "==> cargo fmt --check"
 cargo fmt --check
+
+if cargo clippy --version >/dev/null 2>&1; then
+  echo "==> cargo clippy --all-targets -- -D warnings"
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "==> cargo clippy not installed; skipping lint step"
+fi
 
 echo "CI gate passed."

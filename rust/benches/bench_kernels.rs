@@ -1,0 +1,228 @@
+//! Kernel-level perf harness: the packed register-blocked micro-kernel
+//! engine vs the legacy blocked-loop reference, plus a full-sweep
+//! end-to-end number. Seeds the repository's perf trajectory by emitting
+//! `BENCH_kernels.json` at the repository root.
+//!
+//! ```bash
+//! cargo bench --bench bench_kernels             # full sizes d ∈ {128, 256, 512}
+//! cargo bench --bench bench_kernels -- --smoke  # tiny sizes, CI harness gate
+//! ```
+//!
+//! Measured kernels (min-of-reps wall time):
+//! - `gemm`  — `C = A·B`, d×d×d: packed `Gemm::mul` vs `reference::mul`
+//! - `syrk`  — `H = XᵀX`, X 2d×d: packed `syrk_lower` vs `reference::syrk_lower`
+//! - `trsm`  — `X·L11⁻ᵀ`, d rows × 64-wide panel: blocked packed solve vs
+//!   the legacy scalar substitution loop
+//! - `cholesky` — full `chol(H + λI)` at panel width 64 (packed TRSM+SYRK
+//!   path; no legacy counterpart retained, reported packed-only)
+//! - `sweep` — end-to-end `run_cv` (PiChol, k=3) at n=2d (packed-only)
+
+use std::time::Instant;
+
+use picholesky::cv::solvers::SolverKind;
+use picholesky::cv::{run_cv, CvConfig};
+use picholesky::data::synthetic::{DatasetKind, SyntheticDataset};
+use picholesky::linalg::cholesky::{cholesky_blocked, cholesky_in_place};
+use picholesky::linalg::gemm::{reference, syrk_lower, Gemm};
+use picholesky::linalg::matrix::Matrix;
+use picholesky::linalg::triangular::trsm_right_lower_t_inplace;
+use picholesky::testutil::{random_matrix, random_spd};
+
+/// One measured comparison (reference_secs = 0 ⇒ packed-only).
+struct Row {
+    kernel: &'static str,
+    d: usize,
+    packed_secs: f64,
+    reference_secs: f64,
+}
+
+impl Row {
+    fn speedup(&self) -> f64 {
+        if self.reference_secs > 0.0 && self.packed_secs > 0.0 {
+            self.reference_secs / self.packed_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Min-of-reps wall time of `f`.
+fn time_min(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// The legacy all-scalar panel TRSM (what `cholesky_in_place` shipped
+/// before the blocked rewrite), kept here as the baseline.
+fn trsm_scalar_reference(x: &mut Matrix, l: &Matrix) {
+    let nb = l.rows();
+    for i in 0..x.rows() {
+        for j in 0..nb {
+            let mut s = x[(i, j)];
+            for k in 0..j {
+                s -= x[(i, k)] * l[(j, k)];
+            }
+            x[(i, j)] = s / l[(j, j)];
+        }
+    }
+}
+
+fn bench_size(d: usize, reps: usize, rows: &mut Vec<Row>) {
+    let gem = Gemm::default();
+
+    // GEMM: d×d×d
+    let a = random_matrix(d, d, 0xA0 + d as u64);
+    let b = random_matrix(d, d, 0xB0 + d as u64);
+    let packed = time_min(reps, || {
+        std::hint::black_box(gem.mul(&a, &b));
+    });
+    let refr = time_min(reps, || {
+        std::hint::black_box(reference::mul(64, &a, &b));
+    });
+    rows.push(Row {
+        kernel: "gemm",
+        d,
+        packed_secs: packed,
+        reference_secs: refr,
+    });
+
+    // SYRK: X is 2d×d (the Hessian-build shape)
+    let x = random_matrix(2 * d, d, 0xC0 + d as u64);
+    let packed = time_min(reps, || {
+        std::hint::black_box(syrk_lower(&x));
+    });
+    let refr = time_min(reps, || {
+        std::hint::black_box(reference::syrk_lower(64, &x));
+    });
+    rows.push(Row {
+        kernel: "syrk",
+        d,
+        packed_secs: packed,
+        reference_secs: refr,
+    });
+
+    // TRSM: d rows against a 64-wide (or d-wide, if smaller) panel
+    let nb = 64.min(d);
+    let spd = random_spd(nb, 1e3, 0xD0 + d as u64);
+    let l11 = cholesky_blocked(&spd).expect("panel chol");
+    let rhs = random_matrix(d, nb, 0xE0 + d as u64);
+    let packed = time_min(reps, || {
+        let mut t = rhs.clone();
+        trsm_right_lower_t_inplace(&mut t, 0, d, 0, &l11);
+        std::hint::black_box(t[(d - 1, nb - 1)]);
+    });
+    let refr = time_min(reps, || {
+        let mut t = rhs.clone();
+        trsm_scalar_reference(&mut t, &l11);
+        std::hint::black_box(t[(d - 1, nb - 1)]);
+    });
+    rows.push(Row {
+        kernel: "trsm",
+        d,
+        packed_secs: packed,
+        reference_secs: refr,
+    });
+
+    // full factorization, packed path only (trajectory seed)
+    let h = random_spd(d, 1e4, 0xF0 + d as u64);
+    let packed = time_min(reps, || {
+        let mut c = h.clone();
+        cholesky_in_place(&mut c, 64).expect("chol");
+        std::hint::black_box(c[(d - 1, d - 1)]);
+    });
+    rows.push(Row {
+        kernel: "cholesky",
+        d,
+        packed_secs: packed,
+        reference_secs: 0.0,
+    });
+}
+
+fn bench_sweep(d: usize, rows: &mut Vec<Row>) {
+    let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 2 * d, d, 7);
+    let cfg = CvConfig {
+        k_folds: 3,
+        q_grid: 20,
+        sweep_threads: 1, // single-threaded: kernel speed, not parallelism
+        ..CvConfig::default()
+    };
+    let t0 = Instant::now();
+    let rep = run_cv(&ds, SolverKind::PiChol, &cfg).expect("sweep");
+    std::hint::black_box(rep.best_lambda);
+    rows.push(Row {
+        kernel: "sweep",
+        d,
+        packed_secs: t0.elapsed().as_secs_f64(),
+        reference_secs: 0.0,
+    });
+}
+
+fn emit_json(rows: &[Row], smoke: bool, path: &str) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"kernels\",\n");
+    s.push_str(&format!("  \"smoke\": {smoke},\n"));
+    s.push_str("  \"unit\": \"seconds (min of reps)\",\n");
+    s.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"d\": {}, \"packed_secs\": {:.6e}, \
+             \"reference_secs\": {:.6e}, \"speedup\": {:.3}}}{}\n",
+            r.kernel,
+            r.d,
+            r.packed_secs,
+            r.reference_secs,
+            r.speedup(),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s).expect("write BENCH_kernels.json");
+    println!("\nwrote {path}");
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (sizes, reps): (Vec<usize>, usize) = if smoke {
+        (vec![32, 48], 1)
+    } else {
+        (vec![128, 256, 512], 3)
+    };
+
+    let mut rows = Vec::new();
+    for &d in &sizes {
+        eprintln!("benching d = {d} …");
+        bench_size(d, reps, &mut rows);
+    }
+    // end-to-end sweep at the middle size (the trajectory headline number)
+    bench_sweep(if smoke { 32 } else { 256 }, &mut rows);
+
+    println!("\n| kernel | d | packed | reference | speedup |");
+    println!("|---|---|---|---|---|");
+    for r in &rows {
+        println!(
+            "| {} | {} | {:.3}ms | {} | {} |",
+            r.kernel,
+            r.d,
+            r.packed_secs * 1e3,
+            if r.reference_secs > 0.0 {
+                format!("{:.3}ms", r.reference_secs * 1e3)
+            } else {
+                "—".to_string()
+            },
+            if r.speedup() > 0.0 {
+                format!("{:.2}×", r.speedup())
+            } else {
+                "—".to_string()
+            },
+        );
+    }
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
+    emit_json(&rows, smoke, path);
+}

@@ -16,6 +16,18 @@
 //! Jobs are `FnOnce`-boxed closures; results come back tagged with their job
 //! index so callers reassemble input order regardless of completion order.
 //!
+//! ## Per-worker scratch arena
+//!
+//! Every worker owns one [`Scratch`] for its whole life and passes `&mut` to
+//! each job it runs. Jobs submitted through [`WorkerPool::map_scratch`] (the
+//! sweep engine's grid wave) reuse the worker's warm factor/eval/solve
+//! buffers task after task — the steady-state fold×λ sweep allocates
+//! nothing per task. The kernel-side half of the arena (packed-GEMM pack
+//! panels) is thread-local inside [`crate::linalg::kernel`], which lands on
+//! the same per-worker ownership because workers are long-lived threads.
+//! Scratch reuse cannot leak state between tasks: every buffer is fully
+//! overwritten before use, so determinism is unaffected.
+//!
 //! ## Panic semantics
 //!
 //! A panicking job never kills its worker: the worker catches the unwind and
@@ -24,6 +36,8 @@
 //! one (in input order) on the *calling* thread via
 //! `std::panic::resume_unwind`, preserving the original message — a panic in
 //! a sweep task therefore surfaces exactly like a panic in the serial path.
+//! (A panic may leave the worker's scratch buffers at odd sizes; that is
+//! harmless, the next job resizes them.)
 //!
 //! ## Deadlock rule
 //!
@@ -33,12 +47,13 @@
 //! this rule by driving intra-factorization parallelism only from the
 //! coordinating thread, never from within a pool task.
 
+use crate::linalg::scratch::Scratch;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+type Job = Box<dyn FnOnce(&mut Scratch) + Send + 'static>;
 
 /// Fixed-size worker pool. Dropping the pool joins all workers.
 pub struct WorkerPool {
@@ -47,7 +62,7 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    /// Spawn `n` workers (at least 1).
+    /// Spawn `n` workers (at least 1), each owning a [`Scratch`] arena.
     pub fn new(n: usize) -> Self {
         let n = n.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
@@ -57,15 +72,19 @@ impl WorkerPool {
                 let rx = rx.clone();
                 thread::Builder::new()
                     .name(format!("pichol-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = { rx.lock().unwrap().recv() };
-                        match job {
-                            // isolate panics so one bad job can't take the
-                            // worker (and every queued job behind it) down
-                            Ok(job) => {
-                                let _ = catch_unwind(AssertUnwindSafe(job));
+                    .spawn(move || {
+                        let mut scratch = Scratch::new();
+                        loop {
+                            let job = { rx.lock().unwrap().recv() };
+                            match job {
+                                // isolate panics so one bad job can't take
+                                // the worker (and every queued job) down
+                                Ok(job) => {
+                                    let _ =
+                                        catch_unwind(AssertUnwindSafe(|| job(&mut scratch)));
+                                }
+                                Err(_) => break, // sender dropped: shut down
                             }
-                            Err(_) => break, // sender dropped: shut down
                         }
                     })
                     .expect("spawning worker thread")
@@ -77,14 +96,24 @@ impl WorkerPool {
         }
     }
 
-    /// Submit one fire-and-forget job. If it panics, the panic is swallowed
-    /// by the worker (use [`WorkerPool::map`] when panics must propagate).
-    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+    fn send(&self, job: Job) {
         self.tx
             .as_ref()
             .expect("pool already shut down")
-            .send(Box::new(job))
+            .send(job)
             .expect("worker pool channel closed");
+    }
+
+    /// Submit one fire-and-forget job. If it panics, the panic is swallowed
+    /// by the worker (use [`WorkerPool::map`] when panics must propagate).
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.send(Box::new(move |_scratch| job()));
+    }
+
+    /// Submit one fire-and-forget job with access to the worker's
+    /// [`Scratch`].
+    pub fn submit_with(&self, job: impl FnOnce(&mut Scratch) + Send + 'static) {
+        self.send(Box::new(job));
     }
 
     /// Run a batch of jobs and return their results **in input order**.
@@ -96,12 +125,31 @@ impl WorkerPool {
         &self,
         jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
     ) -> Vec<T> {
+        self.map_scratch(
+            jobs.into_iter()
+                .map(|job| {
+                    let f: Box<dyn FnOnce(&mut Scratch) -> T + Send + 'static> =
+                        Box::new(move |_scratch| job());
+                    f
+                })
+                .collect(),
+        )
+    }
+
+    /// [`WorkerPool::map`] for jobs that use the executing worker's
+    /// [`Scratch`] arena — the sweep engine's grid tasks run through this so
+    /// their factor/eval/solve buffers persist across tasks. Same
+    /// input-order results and panic propagation as `map`.
+    pub fn map_scratch<T: Send + 'static>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> T + Send + 'static>>,
+    ) -> Vec<T> {
         let n = jobs.len();
         let (rtx, rrx) = mpsc::channel::<(usize, thread::Result<T>)>();
         for (i, job) in jobs.into_iter().enumerate() {
             let rtx = rtx.clone();
-            self.submit(move || {
-                let out = catch_unwind(AssertUnwindSafe(job));
+            self.submit_with(move |scratch| {
+                let out = catch_unwind(AssertUnwindSafe(|| job(scratch)));
                 // receiver may be gone if the caller panicked; ignore
                 let _ = rtx.send((i, out));
             });
@@ -179,6 +227,31 @@ mod tests {
             .collect();
         pool.map(jobs);
         assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn scratch_persists_across_tasks_on_a_worker() {
+        // single worker: a buffer grown by task 1 must arrive warm (same
+        // capacity, no reallocation) in task 2
+        let pool = WorkerPool::new(1);
+        let jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> (usize, usize) + Send>> = (0..4)
+            .map(|_| {
+                let f: Box<dyn FnOnce(&mut Scratch) -> (usize, usize) + Send> =
+                    Box::new(|scratch: &mut Scratch| {
+                        let before = scratch.vbuf.capacity();
+                        scratch.vbuf.clear();
+                        scratch.vbuf.resize(1000, 1.0);
+                        (before, scratch.vbuf.capacity())
+                    });
+                f
+            })
+            .collect();
+        let outs = pool.map_scratch(jobs);
+        assert_eq!(outs[0].0, 0, "first task sees a cold arena");
+        for (before, after) in &outs[1..] {
+            assert!(*before >= 1000, "later tasks must see the warm arena");
+            assert_eq!(before, after, "warm arena must not reallocate");
+        }
     }
 
     #[test]

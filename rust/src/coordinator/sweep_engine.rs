@@ -42,7 +42,11 @@
 //! (`solvers::eval_exact_point` / `solvers::eval_interp_point`), the
 //! pooled factorization is bitwise-equal to the serial kernel by
 //! construction, and aggregation happens on the coordinating thread in
-//! (fold, grid-index) order.
+//! (fold, grid-index) order. Grid tasks draw their factor/eval/solve
+//! buffers from the executing worker's [`Scratch`] arena
+//! ([`WorkerPool::map_scratch`]) — every buffer is fully overwritten
+//! before use, so the steady-state sweep allocates nothing per task
+//! without perturbing a single bit.
 //!
 //! Thread count and batch shape are config knobs: `CvConfig::sweep_threads`
 //! / `CvConfig::sweep_batch`, settable from experiment TOML as
@@ -59,6 +63,7 @@ use crate::data::folds::kfold;
 use crate::data::synthetic::SyntheticDataset;
 use crate::linalg::cholesky::{cholesky_shifted, cholesky_shifted_pooled, CholeskyError};
 use crate::linalg::matrix::Matrix;
+use crate::linalg::scratch::Scratch;
 use crate::pichol::{self, FitOptions, Interpolant};
 use crate::util::{logspace, subsample_indices, PhaseTimer};
 
@@ -180,15 +185,19 @@ impl SweepEngine {
     /// single-threaded (no channel hops or worker handoff polluting timed
     /// serial runs — `run_matrix` relies on this for clean cross-algorithm
     /// comparisons), on the pool otherwise. Same input-order results and
-    /// panic propagation either way.
+    /// panic propagation either way. Jobs receive a [`Scratch`] arena: the
+    /// executing worker's on the pool path, one arena shared sequentially
+    /// across all jobs on the inline path — either way the buffers are warm
+    /// after the first task and no further heap allocation happens.
     fn map_jobs<T: Send + 'static>(
         &self,
-        jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
+        jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> T + Send + 'static>>,
     ) -> Vec<T> {
         if self.pool.size() == 1 {
-            jobs.into_iter().map(|job| job()).collect()
+            let mut scratch = Scratch::new();
+            jobs.into_iter().map(|job| job(&mut scratch)).collect()
         } else {
-            self.pool.map(jobs)
+            self.pool.map_scratch(jobs)
         }
     }
 
@@ -203,11 +212,12 @@ impl SweepEngine {
         // build Hessian/gradient in parallel (each task owns its split)
         let folds = kfold(ds.n(), plan.cv.k_folds, plan.cv.seed);
         let splits: Vec<_> = folds.iter().map(|f| f.materialize(&ds.x, &ds.y)).collect();
-        let build_jobs: Vec<Box<dyn FnOnce() -> (FoldData, PhaseTimer, f64) + Send>> = splits
+        type PrepRes = (FoldData, PhaseTimer, f64);
+        let build_jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> PrepRes + Send>> = splits
             .into_iter()
             .map(|(xt, yt, xv, yv)| {
-                let f: Box<dyn FnOnce() -> (FoldData, PhaseTimer, f64) + Send> =
-                    Box::new(move || {
+                let f: Box<dyn FnOnce(&mut Scratch) -> PrepRes + Send> =
+                    Box::new(move |_scratch| {
                         let t0 = Instant::now();
                         let mut t = PhaseTimer::new();
                         let data = FoldData::build(xt, yt, xv, yv, &mut t);
@@ -300,15 +310,16 @@ impl SweepEngine {
         } else {
             // enough anchors to fill the pool: one task per (fold, λ_s)
             type AnchorRes = Result<(Matrix, f64), CholeskyError>;
-            let mut jobs: Vec<Box<dyn FnOnce() -> AnchorRes + Send>> = Vec::new();
+            let mut jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> AnchorRes + Send>> = Vec::new();
             for fd in fold_data {
                 for &lam in &sample_lams {
                     let fd = Arc::clone(fd);
-                    let job: Box<dyn FnOnce() -> AnchorRes + Send> = Box::new(move || {
-                        let t0 = Instant::now();
-                        let l = cholesky_shifted(&fd.h_mat, lam)?;
-                        Ok((l, t0.elapsed().as_secs_f64()))
-                    });
+                    let job: Box<dyn FnOnce(&mut Scratch) -> AnchorRes + Send> =
+                        Box::new(move |_scratch| {
+                            let t0 = Instant::now();
+                            let l = cholesky_shifted(&fd.h_mat, lam)?;
+                            Ok((l, t0.elapsed().as_secs_f64()))
+                        });
                     jobs.push(job);
                 }
             }
@@ -363,7 +374,7 @@ impl SweepEngine {
         let metric = plan.cv.metric;
         type GridRes = Result<TaskOut, CholeskyError>;
 
-        let mut jobs: Vec<Box<dyn FnOnce() -> GridRes + Send>> = Vec::new();
+        let mut jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> GridRes + Send>> = Vec::new();
         let mut spans: Vec<(usize, usize, usize)> = Vec::new(); // (fold, lo, hi)
         for (fi, fd) in fold_data.iter().enumerate() {
             let mut lo = 0;
@@ -373,32 +384,38 @@ impl SweepEngine {
                 let fd = Arc::clone(fd);
                 let grid = Arc::clone(&grid);
                 let interp = interps.map(|v| Arc::clone(&v[fi]));
-                let job: Box<dyn FnOnce() -> GridRes + Send> = Box::new(move || {
-                    let t0 = Instant::now();
-                    let mut t = PhaseTimer::new();
-                    let mut errors = Vec::with_capacity(hi - lo);
-                    match &interp {
-                        Some(interp) => {
-                            let strategy = solvers::pichol_strategy();
-                            let mut vbuf = vec![0.0; interp.theta.cols()];
-                            for &lam in &grid[lo..hi] {
-                                errors.push(solvers::eval_interp_point(
-                                    &fd, interp, &strategy, lam, metric, &mut vbuf, &mut t,
-                                ));
+                // the task body borrows the executing worker's Scratch: the
+                // factor/eval/solve buffers are warm after the worker's
+                // first task, so the steady-state sweep allocates nothing
+                // per λ evaluation
+                let job: Box<dyn FnOnce(&mut Scratch) -> GridRes + Send> =
+                    Box::new(move |scratch| {
+                        let t0 = Instant::now();
+                        let mut t = PhaseTimer::new();
+                        let mut errors = Vec::with_capacity(hi - lo);
+                        match &interp {
+                            Some(interp) => {
+                                let strategy = solvers::pichol_strategy();
+                                for &lam in &grid[lo..hi] {
+                                    errors.push(solvers::eval_interp_point(
+                                        &fd, interp, &strategy, lam, metric, scratch, &mut t,
+                                    ));
+                                }
+                            }
+                            None => {
+                                for &lam in &grid[lo..hi] {
+                                    errors.push(solvers::eval_exact_point(
+                                        &fd, lam, metric, scratch, &mut t,
+                                    )?);
+                                }
                             }
                         }
-                        None => {
-                            for &lam in &grid[lo..hi] {
-                                errors.push(solvers::eval_exact_point(&fd, lam, metric, &mut t)?);
-                            }
-                        }
-                    }
-                    Ok(TaskOut {
-                        errors,
-                        timer: t,
-                        wall: t0.elapsed().as_secs_f64(),
-                    })
-                });
+                        Ok(TaskOut {
+                            errors,
+                            timer: t,
+                            wall: t0.elapsed().as_secs_f64(),
+                        })
+                    });
                 jobs.push(job);
                 lo = hi;
             }
@@ -444,19 +461,20 @@ impl SweepEngine {
     ) -> crate::Result<Vec<SweepResult>> {
         let grid = Arc::new(plan.grid.clone());
         type FoldRes = (crate::Result<SweepResult>, PhaseTimer, f64);
-        let jobs: Vec<Box<dyn FnOnce() -> FoldRes + Send>> = fold_data
+        let jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> FoldRes + Send>> = fold_data
             .iter()
             .map(|fd| {
                 let fd = Arc::clone(fd);
                 let grid = Arc::clone(&grid);
                 let cfg = plan.cv.clone();
                 let kind = plan.kind;
-                let f: Box<dyn FnOnce() -> FoldRes + Send> = Box::new(move || {
-                    let t0 = Instant::now();
-                    let mut t = PhaseTimer::new();
-                    let res = solvers::sweep(kind, &fd, &grid, &cfg, &mut t);
-                    (res, t, t0.elapsed().as_secs_f64())
-                });
+                let f: Box<dyn FnOnce(&mut Scratch) -> FoldRes + Send> =
+                    Box::new(move |_scratch| {
+                        let t0 = Instant::now();
+                        let mut t = PhaseTimer::new();
+                        let res = solvers::sweep(kind, &fd, &grid, &cfg, &mut t);
+                        (res, t, t0.elapsed().as_secs_f64())
+                    });
                 f
             })
             .collect();

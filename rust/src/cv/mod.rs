@@ -14,7 +14,7 @@ pub mod solvers;
 
 use crate::coordinator::sweep_engine::{SweepEngine, SweepPlan, SweepReport};
 use crate::data::synthetic::SyntheticDataset;
-use crate::linalg::gemm::{gemv, gemv_t, syrk_lower};
+use crate::linalg::gemm::{gemv_into, gemv_t, syrk_lower};
 use crate::linalg::matrix::Matrix;
 use crate::pichol::mchol::Probe;
 use crate::util::PhaseTimer;
@@ -32,7 +32,21 @@ pub enum Metric {
 
 /// Score one coefficient vector on the validation split.
 pub fn holdout_error(xv: &Matrix, yv: &[f64], theta: &[f64], metric: Metric) -> f64 {
-    let pred = gemv(xv, theta);
+    let mut pred = Vec::new();
+    holdout_error_with(xv, yv, theta, metric, &mut pred)
+}
+
+/// [`holdout_error`] with a caller-provided prediction buffer (the
+/// per-worker [`crate::linalg::scratch::Scratch`] on the sweep hot path —
+/// no allocation once warm).
+pub fn holdout_error_with(
+    xv: &Matrix,
+    yv: &[f64],
+    theta: &[f64],
+    metric: Metric,
+    pred: &mut Vec<f64>,
+) -> f64 {
+    gemv_into(xv, theta, pred);
     match metric {
         Metric::Rmse => {
             let mse: f64 = pred

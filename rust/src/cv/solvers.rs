@@ -10,13 +10,14 @@
 //! | `RSvd`    | Randomized SVD | Halko sketch, then eq. 11 |
 //! | `Pinrmse` | PINRMSE | interpolate the error curve itself (Figure 10) |
 
-use super::{holdout_error, CvConfig, FoldData, Metric, SweepResult};
-use crate::linalg::cholesky::{cholesky_shifted, CholeskyError};
+use super::{holdout_error, holdout_error_with, CvConfig, FoldData, Metric, SweepResult};
+use crate::linalg::cholesky::{cholesky_shifted, cholesky_shifted_into, CholeskyError};
 use crate::pichol::Interpolant;
 use crate::linalg::lanczos::lanczos_svd;
 use crate::linalg::randomized::randomized_svd;
+use crate::linalg::scratch::Scratch;
 use crate::linalg::svd::{jacobi_svd, Svd};
-use crate::linalg::triangular::solve_cholesky;
+use crate::linalg::triangular::{solve_cholesky, solve_cholesky_into};
 use crate::pichol::{self, FitOptions};
 use crate::util::{subsample_indices, PhaseTimer};
 use crate::vectorize::{Recursive, VecStrategy};
@@ -103,6 +104,9 @@ pub(crate) fn pichol_strategy() -> Recursive {
 /// One exact-Cholesky grid-point evaluation — the shared task body of the
 /// serial [`sweep`] path and the sweep engine's parallel grid tasks (both
 /// must run *this* code so parallel results are bit-identical to serial).
+/// Factor, solve and prediction buffers come from the caller's [`Scratch`]
+/// arena (the executing worker's, on the parallel path) — zero heap
+/// allocation once the arena is warm.
 ///
 /// A [`CholeskyError`] means `H + λI` was indefinite at this λ; the sweep
 /// propagates it (recovery is shift-and-retry with a larger λ — see
@@ -111,35 +115,53 @@ pub(crate) fn eval_exact_point(
     data: &FoldData,
     lam: f64,
     metric: Metric,
+    scratch: &mut Scratch,
     timer: &mut PhaseTimer,
 ) -> Result<f64, CholeskyError> {
-    let l = timer.time("chol", || cholesky_shifted(&data.h_mat, lam))?;
-    let theta = timer.time("solve", || solve_cholesky(&l, &data.g_vec));
+    timer.time("chol", || {
+        cholesky_shifted_into(&data.h_mat, lam, &mut scratch.factor)
+    })?;
+    timer.time("solve", || {
+        solve_cholesky_into(
+            &scratch.factor,
+            &data.g_vec,
+            &mut scratch.work,
+            &mut scratch.theta,
+        )
+    });
     Ok(timer.time("holdout", || {
-        holdout_error(&data.xv, &data.yv, &theta, metric)
+        holdout_error_with(&data.xv, &data.yv, &scratch.theta, metric, &mut scratch.pred)
     }))
 }
 
 /// One interpolated grid-point evaluation (piCholesky's payoff step) —
 /// shared by the serial path and the engine's grid tasks. `strategy` must be
-/// the strategy the interpolant was fitted with; `vbuf` is a caller-owned
-/// scratch of length `interp.theta.cols()`.
+/// the strategy the interpolant was fitted with; all buffers (the D-length
+/// eval vector, the reconstructed factor, the solve and prediction vectors)
+/// come from the caller's [`Scratch`] arena — zero heap allocation once
+/// warm.
 pub(crate) fn eval_interp_point(
     data: &FoldData,
     interp: &Interpolant,
     strategy: &dyn VecStrategy,
     lam: f64,
     metric: Metric,
-    vbuf: &mut [f64],
+    scratch: &mut Scratch,
     timer: &mut PhaseTimer,
 ) -> f64 {
-    let l = timer.time("interp", || {
-        interp.eval_vec_into(lam, vbuf);
-        strategy.unvec(vbuf, interp.h)
+    timer.time("interp", || {
+        interp.eval_factor_into(lam, strategy, &mut scratch.vbuf, &mut scratch.factor)
     });
-    let theta = timer.time("solve", || solve_cholesky(&l, &data.g_vec));
+    timer.time("solve", || {
+        solve_cholesky_into(
+            &scratch.factor,
+            &data.g_vec,
+            &mut scratch.work,
+            &mut scratch.theta,
+        )
+    });
     timer.time("holdout", || {
-        holdout_error(&data.xv, &data.yv, &theta, metric)
+        holdout_error_with(&data.xv, &data.yv, &scratch.theta, metric, &mut scratch.pred)
     })
 }
 
@@ -161,9 +183,10 @@ fn sweep_chol(
     cfg: &CvConfig,
     timer: &mut PhaseTimer,
 ) -> crate::Result<SweepResult> {
+    let mut scratch = Scratch::new();
     let mut errors = Vec::with_capacity(grid.len());
     for &lam in grid {
-        errors.push(eval_exact_point(data, lam, cfg.metric, timer)?);
+        errors.push(eval_exact_point(data, lam, cfg.metric, &mut scratch, timer)?);
     }
     let (bl, be) = best_of(grid, &errors);
     Ok(SweepResult {
@@ -196,11 +219,17 @@ fn sweep_pichol(
         timer,
     )?;
 
+    let mut scratch = Scratch::new();
     let mut errors = Vec::with_capacity(grid.len());
-    let mut vbuf = vec![0.0; interp.theta.cols()];
     for &lam in grid {
         errors.push(eval_interp_point(
-            data, &interp, &strategy, lam, cfg.metric, &mut vbuf, timer,
+            data,
+            &interp,
+            &strategy,
+            lam,
+            cfg.metric,
+            &mut scratch,
+            timer,
         ));
     }
     let (bl, be) = best_of(grid, &errors);

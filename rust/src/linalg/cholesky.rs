@@ -2,11 +2,18 @@
 //!
 //! This is the paper's dominant cost: each fold×λ pair needs one
 //! `chol(H + λI)` at `(1/3)d³` flops (§1, Figure 1). The right-looking
-//! blocked form does panel factorization + TRSM + SYRK trailing update so
-//! ~all flops land in the BLAS-3 kernels of [`super::gemm`].
+//! blocked form does panel factorization + TRSM + SYRK trailing update, and
+//! both BLAS-3 steps route through the packed micro-kernel engine
+//! ([`super::kernel`]): the TRSM via the column-blocked
+//! [`trsm_right_lower_t_inplace`], the SYRK via the row-chunked
+//! [`Gemm::a_bt_rows`] schedule — the same schedule the pooled variant fans
+//! across workers, so serial and pooled factors are bitwise identical by
+//! construction.
 
 use super::gemm::Gemm;
+use super::kernel::{self, Acc, Src};
 use super::matrix::Matrix;
+use super::triangular::trsm_right_lower_t_inplace;
 use crate::coordinator::pool::WorkerPool;
 use std::fmt;
 use std::sync::Arc;
@@ -54,13 +61,18 @@ impl fmt::Display for CholeskyError {
 
 impl std::error::Error for CholeskyError {}
 
-/// Unblocked in-place Cholesky of the leading `n×n` of `a` (lower triangle).
-/// Used for panels; the strict upper triangle is left untouched.
+/// Unblocked in-place Cholesky of the leading `n×n` of `a` at offset `off`
+/// (lower triangle). Used for panels; the strict upper triangle is left
+/// untouched. All inner loops run on contiguous row slices (`split_at_mut`
+/// around the pivot row) — no bounds-checked `a[(i, j)]` indexing survives
+/// in the hot loops.
 fn potrf_unblocked(a: &mut Matrix, off: usize, n: usize) -> Result<(), CholeskyError> {
+    let stride = a.cols();
+    let data = a.as_mut_slice();
     for j in 0..n {
-        let mut diag = a[(off + j, off + j)];
-        for k in 0..j {
-            let v = a[(off + j, off + k)];
+        let jrow = (off + j) * stride + off;
+        let mut diag = data[jrow + j];
+        for &v in &data[jrow..jrow + j] {
             diag -= v * v;
         }
         if diag <= 0.0 || !diag.is_finite() {
@@ -70,24 +82,35 @@ fn potrf_unblocked(a: &mut Matrix, off: usize, n: usize) -> Result<(), CholeskyE
             });
         }
         let ljj = diag.sqrt();
-        a[(off + j, off + j)] = ljj;
+        data[jrow + j] = ljj;
+        // rows below the pivot: s = a[i][j] - Σ_k a[i][k]·a[j][k], then /ljj.
+        // split keeps row j immutable while rows i > j are written.
+        let (head, tail) = data.split_at_mut(jrow + j + 1);
+        let lrow_j = &head[jrow..jrow + j];
         for i in (j + 1)..n {
-            let mut s = a[(off + i, off + j)];
-            for k in 0..j {
-                s -= a[(off + i, off + k)] * a[(off + j, off + k)];
+            let t0 = (off + i) * stride + off - (jrow + j + 1);
+            let row_i = &mut tail[t0..t0 + j + 1];
+            let mut s = row_i[j];
+            for (x, y) in row_i[..j].iter().zip(lrow_j) {
+                s -= x * y;
             }
-            a[(off + i, off + j)] = s / ljj;
+            row_i[j] = s / ljj;
         }
     }
     Ok(())
 }
+
+/// Row chunk height for the serial trailing update — the SYRK is streamed
+/// through the packed kernel one chunk at a time (bounded temp footprint;
+/// bitwise identical to any other chunking, see [`Gemm::a_bt_rows`]).
+const SYRK_CHUNK: usize = 128;
 
 /// In-place blocked Cholesky: on success the lower triangle of `a` holds L
 /// (strict upper is zeroed). `block` = panel width.
 pub fn cholesky_in_place(a: &mut Matrix, block: usize) -> Result<(), CholeskyError> {
     assert!(a.is_square(), "cholesky needs a square matrix");
     let n = a.rows();
-    let gem = Gemm { block };
+    let stride = n;
 
     let mut j0 = 0;
     while j0 < n {
@@ -97,26 +120,46 @@ pub fn cholesky_in_place(a: &mut Matrix, block: usize) -> Result<(), CholeskyErr
         potrf_unblocked(a, j0, jb)?;
 
         if j0 + jb < n {
-            // 2. TRSM: L21 = A21 · L11⁻ᵀ  (solve x·L11ᵀ = a for each row)
-            for i in (j0 + jb)..n {
-                for j in 0..jb {
-                    let mut s = a[(i, j0 + j)];
-                    for k in 0..j {
-                        s -= a[(i, j0 + k)] * a[(j0 + j, j0 + k)];
-                    }
-                    a[(i, j0 + j)] = s / a[(j0 + j, j0 + j)];
-                }
-            }
+            // 2. TRSM: L21 = A21 · L11⁻ᵀ, column-blocked through the packed
+            // kernel (the panel copy decouples the borrow; jb×jb is small)
+            let l11 = a.slice(j0, j0 + jb, j0, j0 + jb);
+            trsm_right_lower_t_inplace(a, j0 + jb, n, j0, &l11);
 
-            // 3. SYRK trailing update: A22 -= L21 · L21ᵀ (lower triangle only)
+            // 3. SYRK trailing update: A22 -= L21·L21ᵀ (lower triangle),
+            // streamed in row chunks with the a_bt_rows schedule
             let m = n - j0 - jb;
             let l21 = a.slice(j0 + jb, n, j0, j0 + jb);
-            let upd = gem.a_bt(&l21, &l21);
-            for i in 0..m {
-                let gi = j0 + jb + i;
-                for j in 0..=i {
-                    a[(gi, j0 + jb + j)] -= upd[(i, j)];
-                }
+            for q0 in (0..m).step_by(SYRK_CHUNK) {
+                let q1 = (q0 + SYRK_CHUNK).min(m);
+                let rows = q1 - q0;
+                kernel::with_tmp(rows * m, |tmp| {
+                    kernel::gemm_into(
+                        rows,
+                        m,
+                        jb,
+                        Src::N {
+                            data: l21.as_slice(),
+                            stride: jb,
+                            r0: q0,
+                            c0: 0,
+                        },
+                        Src::t(l21.as_slice(), jb),
+                        tmp,
+                        m,
+                        0,
+                        0,
+                        Acc::Set,
+                    );
+                    let data = a.as_mut_slice();
+                    for i in 0..rows {
+                        let gi = j0 + jb + q0 + i;
+                        let take = q0 + i + 1; // lower triangle only
+                        let dst = &mut data[gi * stride + j0 + jb..][..take];
+                        for (d, &u) in dst.iter_mut().zip(&tmp[i * m..i * m + take]) {
+                            *d -= u;
+                        }
+                    }
+                });
             }
         }
         j0 += jb;
@@ -140,6 +183,18 @@ pub fn cholesky_shifted(h: &Matrix, lam: f64) -> Result<Matrix, CholeskyError> {
     let mut a = h.add_diag(lam);
     cholesky_in_place(&mut a, 64)?;
     Ok(a)
+}
+
+/// `chol(H + λI)` into a caller-provided matrix (the per-worker
+/// [`super::scratch::Scratch`] factor buffer on the sweep hot path): `out`
+/// is overwritten with `H + λI` reusing its allocation, then factorized in
+/// place — the steady-state exact-Cholesky grid task allocates nothing.
+/// Bitwise identical to [`cholesky_shifted`]. On error `out` holds an
+/// unusable partial factor.
+pub fn cholesky_shifted_into(h: &Matrix, lam: f64, out: &mut Matrix) -> Result<(), CholeskyError> {
+    out.copy_from(h);
+    out.add_diag_in_place(lam);
+    cholesky_in_place(out, 64)
 }
 
 /// Evenly split `lo..hi` into at most `parts` non-empty contiguous ranges.
@@ -168,11 +223,12 @@ fn chunk_ranges(lo: usize, hi: usize, parts: usize) -> Vec<(usize, usize)> {
 /// factor).
 ///
 /// The result is **bitwise identical** to [`cholesky_in_place`] with the
-/// same `block`, for any worker count: each TRSM tile replays the serial
-/// per-row substitution order, and each SYRK tile is produced by
-/// [`Gemm::a_bt_rows`], whose per-row schedule matches the serial
-/// [`Gemm::a_bt`]. Panel factorization (the `O(d·b²)` serial fraction) stays
-/// on the calling thread.
+/// same `block`, for any worker count: each TRSM tile runs the same
+/// column-blocked [`trsm_right_lower_t_inplace`] the serial kernel runs
+/// (row-partition independent by construction), and each SYRK tile is
+/// produced by [`Gemm::a_bt_rows`], whose packed accumulation schedule is
+/// independent of the row partition. Panel factorization (the `O(d·b²)`
+/// serial fraction) stays on the calling thread.
 ///
 /// **Deadlock rule:** must be driven from a thread that is *not* itself a
 /// worker of `pool` (see the [`crate::coordinator::pool`] module docs).
@@ -209,15 +265,8 @@ pub fn cholesky_in_place_pooled(
                     let chunk = a.slice(r0, r1, j0, j0 + jb);
                     let f: Box<dyn FnOnce() -> Matrix + Send + 'static> = Box::new(move || {
                         let mut x = chunk;
-                        for i in 0..x.rows() {
-                            for j in 0..l11.rows() {
-                                let mut s = x[(i, j)];
-                                for k in 0..j {
-                                    s -= x[(i, k)] * l11[(j, k)];
-                                }
-                                x[(i, j)] = s / l11[(j, j)];
-                            }
-                        }
+                        let rows = x.rows();
+                        trsm_right_lower_t_inplace(&mut x, 0, rows, 0, &l11);
                         x
                     });
                     f
@@ -232,14 +281,12 @@ pub fn cholesky_in_place_pooled(
             let m = n - j0 - jb;
             let l21 = Arc::new(a.slice(j0 + jb, n, j0, j0 + jb));
             let upd_chunks = chunk_ranges(0, m, pool.size());
-            let gem_block = block;
             let syrk_jobs: Vec<Box<dyn FnOnce() -> Matrix + Send + 'static>> = upd_chunks
                 .iter()
                 .map(|&(q0, q1)| {
                     let l21 = Arc::clone(&l21);
-                    let f: Box<dyn FnOnce() -> Matrix + Send + 'static> = Box::new(move || {
-                        Gemm { block: gem_block }.a_bt_rows(&l21, &l21, q0, q1)
-                    });
+                    let f: Box<dyn FnOnce() -> Matrix + Send + 'static> =
+                        Box::new(move || Gemm::default().a_bt_rows(&l21, &l21, q0, q1));
                     f
                 })
                 .collect();
@@ -277,7 +324,7 @@ pub fn cholesky_shifted_pooled(
 mod tests {
     use super::*;
     use crate::linalg::gemm::gemm;
-    use crate::testutil::{random_spd, assert_matrix_close};
+    use crate::testutil::{assert_matrix_close, random_spd};
 
     #[test]
     fn reconstructs_spd() {
@@ -341,6 +388,25 @@ mod tests {
     }
 
     #[test]
+    fn shifted_into_bitwise_matches_and_reuses_buffer() {
+        let x = crate::testutil::random_matrix(90, 40, 31);
+        let h = crate::linalg::gemm::syrk_lower(&x);
+        let fresh = cholesky_shifted(&h, 0.2).unwrap();
+        let mut out = Matrix::zeros(40, 40); // right-sized: must not realloc
+        let ptr = out.as_slice().as_ptr();
+        cholesky_shifted_into(&h, 0.2, &mut out).unwrap();
+        assert_eq!(out.as_slice(), fresh.as_slice());
+        assert_eq!(out.as_slice().as_ptr(), ptr, "factor buffer must be reused");
+        // reuse with different λ — previous contents must not leak
+        let fresh2 = cholesky_shifted(&h, 0.9).unwrap();
+        cholesky_shifted_into(&h, 0.9, &mut out).unwrap();
+        assert_eq!(out.as_slice(), fresh2.as_slice());
+    }
+
+    /// The regression pinned by the packed rewrite: at any panel width, the
+    /// factorization is bitwise identical across worker counts 1/2/4 (and to
+    /// the serial kernel).
+    #[test]
     fn pooled_factorization_bitwise_matches_serial() {
         use crate::coordinator::pool::WorkerPool;
         let a = random_spd(150, 1e4, 11);
@@ -355,6 +421,28 @@ mod tests {
                     serial.max_abs_diff(&pooled),
                     0.0,
                     "pooled factor differs at workers={workers} block={block}"
+                );
+            }
+        }
+    }
+
+    /// Odd panel widths (not multiples of the micro-kernel MR/NR or the TRSM
+    /// column block) must keep the bitwise thread-count invariance.
+    #[test]
+    fn pooled_bitwise_invariance_at_odd_blocks() {
+        use crate::coordinator::pool::WorkerPool;
+        let a = random_spd(131, 1e4, 17);
+        for block in [5, 23, 50] {
+            let mut serial = a.clone();
+            cholesky_in_place(&mut serial, block).unwrap();
+            for workers in [2, 3, 4] {
+                let pool = WorkerPool::new(workers);
+                let mut pooled = a.clone();
+                cholesky_in_place_pooled(&mut pooled, block, &pool).unwrap();
+                assert_eq!(
+                    serial.max_abs_diff(&pooled),
+                    0.0,
+                    "differs at workers={workers} block={block}"
                 );
             }
         }

@@ -1,19 +1,35 @@
-//! Blocked BLAS-3 kernels: GEMM, SYRK, GEMV.
+//! BLAS-3 entry points: GEMM, SYRK, GEMV.
 //!
 //! The paper's whole efficiency story rides on keeping the heavy steps at
-//! BLAS-3 granularity (§1a, §5). These kernels use the classic
-//! cache-blocking scheme — pack nothing, block for L1/L2, keep the innermost
-//! loop a contiguous `axpy` over the output row so the compiler can
-//! auto-vectorize it.
+//! BLAS-3 granularity (§1a, §5). Every matrix-matrix product here routes
+//! through the packed, register-blocked micro-kernel engine in
+//! [`super::kernel`]: operand panels are packed into contiguous aligned
+//! scratch (absorbing any transposition), and an `MR×NR` register tile is
+//! driven over them with a fixed, partition-independent accumulation
+//! schedule — see that module's docs for the layout and the determinism
+//! contract.
+//!
+//! The previous generation of kernels — unpacked cache-blocked loops with an
+//! auto-vectorized axpy/dot innermost — is preserved verbatim in
+//! [`reference`]: it is the correctness oracle for the packed path's tests
+//! and the baseline `bench_kernels` measures the packed speedup against.
 
+use super::kernel::{self, Acc, Src};
 use super::matrix::Matrix;
 
-/// Cache block edge. 64×64 f64 blocks = 32 KiB per operand — L1-resident on
-/// any modern core. The ablation bench (`bench_ablations`) sweeps this.
+/// Legacy cache block edge (used by the [`reference`] kernels; the packed
+/// engine blocks at [`kernel::MC`]/[`kernel::KC`]/[`kernel::NC`] instead).
 pub const BLOCK: usize = 64;
 
-/// Blocked general matrix multiply with optional transposes.
+/// General matrix multiply with optional transposes, packed micro-kernel
+/// backed.
 pub struct Gemm {
+    /// Legacy cache-block knob, retained **only** so existing
+    /// `Gemm { block }` construction sites keep compiling. The packed
+    /// engine's tile sizes are fixed in [`super::kernel`] and this field is
+    /// never read, so results are bitwise identical for every value. (The
+    /// [`reference`] kernels take their block size as an explicit
+    /// parameter.)
     pub block: usize,
 }
 
@@ -26,17 +42,217 @@ impl Default for Gemm {
 impl Gemm {
     /// `C = A · B`.
     pub fn mul(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        self.mul_into(a, b, &mut c);
+        c
+    }
+
+    /// `C = A · B` into a caller-provided output (no allocation).
+    pub fn mul_into(&self, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+        assert_eq!(a.cols(), b.rows(), "gemm shape mismatch");
+        assert_eq!(
+            (c.rows(), c.cols()),
+            (a.rows(), b.cols()),
+            "gemm output shape mismatch"
+        );
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        kernel::gemm_into(
+            m,
+            n,
+            k,
+            Src::n(a.as_slice(), a.cols()),
+            Src::n(b.as_slice(), b.cols()),
+            c.as_mut_slice(),
+            n,
+            0,
+            0,
+            Acc::Set,
+        );
+    }
+
+    /// `C = Aᵀ · B` without materializing the transpose (the Gram-matrix
+    /// access pattern; the transposition is absorbed by the A-panel
+    /// packing).
+    pub fn at_b(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.cols(), b.cols());
+        self.at_b_into(a, b, &mut c);
+        c
+    }
+
+    /// `C = Aᵀ · B` into a caller-provided output (no allocation).
+    pub fn at_b_into(&self, a: &Matrix, b: &Matrix, c: &mut Matrix) {
+        assert_eq!(a.rows(), b.rows(), "atb shape mismatch");
+        assert_eq!(
+            (c.rows(), c.cols()),
+            (a.cols(), b.cols()),
+            "atb output shape mismatch"
+        );
+        let (k, m, n) = (a.rows(), a.cols(), b.cols());
+        kernel::gemm_into(
+            m,
+            n,
+            k,
+            Src::t(a.as_slice(), a.cols()),
+            Src::n(b.as_slice(), b.cols()),
+            c.as_mut_slice(),
+            n,
+            0,
+            0,
+            Acc::Set,
+        );
+    }
+
+    /// Rows `r0..r1` of `A · Bᵀ`, as an `(r1-r0)×b.rows()` block.
+    ///
+    /// **Bitwise identical** to the corresponding rows of the full
+    /// [`Gemm::a_bt`] product, for *any* row partition: the packed engine's
+    /// `k` chunking depends only on the (full, shared) `k` extent, and each
+    /// output element gets one ascending-order scalar accumulator per chunk,
+    /// so an element's bits are a pure function of its row/column data (see
+    /// [`super::kernel`]'s determinism schedule). This is what lets the
+    /// pooled Cholesky's trailing SYRK update fan row panels across workers
+    /// without perturbing the factorization by a single ulp — the sweep
+    /// engine's determinism guarantee rests on it.
+    pub fn a_bt_rows(&self, a: &Matrix, b: &Matrix, r0: usize, r1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= a.rows(), "row range out of bounds");
+        let mut c = Matrix::zeros(r1 - r0, b.rows());
+        self.a_bt_rows_into(a, b, r0, r1, &mut c);
+        c
+    }
+
+    /// Row-block `A · Bᵀ` into a caller-provided output (no allocation).
+    pub fn a_bt_rows_into(&self, a: &Matrix, b: &Matrix, r0: usize, r1: usize, c: &mut Matrix) {
+        assert_eq!(a.cols(), b.cols(), "abt shape mismatch");
+        assert!(r0 <= r1 && r1 <= a.rows(), "row range out of bounds");
+        assert_eq!(
+            (c.rows(), c.cols()),
+            (r1 - r0, b.rows()),
+            "abt output shape mismatch"
+        );
+        let (k, n) = (a.cols(), b.rows());
+        kernel::gemm_into(
+            r1 - r0,
+            n,
+            k,
+            Src::N {
+                data: a.as_slice(),
+                stride: a.cols(),
+                r0,
+                c0: 0,
+            },
+            Src::t(b.as_slice(), b.cols()),
+            c.as_mut_slice(),
+            n,
+            0,
+            0,
+            Acc::Set,
+        );
+    }
+
+    /// `C = A · Bᵀ`.
+    pub fn a_bt(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        self.a_bt_rows(a, b, 0, a.rows())
+    }
+}
+
+/// `C = A · B` with the default configuration.
+pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    Gemm::default().mul(a, b)
+}
+
+/// `y = A · x`.
+pub fn gemv(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    let mut y = Vec::new();
+    gemv_into(a, x, &mut y);
+    y
+}
+
+/// `y = A · x` into a caller-provided buffer (no steady-state allocation).
+pub fn gemv_into(a: &Matrix, x: &[f64], y: &mut Vec<f64>) {
+    assert_eq!(a.cols(), x.len());
+    y.clear();
+    y.extend(
+        (0..a.rows()).map(|i| a.row(i).iter().zip(x).map(|(&aij, &xj)| aij * xj).sum::<f64>()),
+    );
+}
+
+/// `y = Aᵀ · x` without materializing the transpose.
+pub fn gemv_t(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows(), x.len());
+    let mut y = vec![0.0; a.cols()];
+    for (i, &xi) in x.iter().enumerate() {
+        for (yj, &aij) in y.iter_mut().zip(a.row(i)) {
+            *yj += xi * aij;
+        }
+    }
+    y
+}
+
+/// Column band width of the packed SYRK: each band is one `gemm_into` call
+/// covering rows `j0..h` of the lower triangle.
+const SYRK_BAND: usize = 48;
+
+/// Symmetric rank-k update: `C = XᵀX` (the Hessian build, Figure 1 step 2).
+/// Computed band-by-band over the lower triangle through the packed engine —
+/// only rows at or below each column band are formed, then mirrored, keeping
+/// LAPACK `syrk`'s ~2× saving over a plain gemm.
+pub fn syrk_lower(x: &Matrix) -> Matrix {
+    let (n, h) = (x.rows(), x.cols());
+    let mut c = Matrix::zeros(h, h);
+    for j0 in (0..h).step_by(SYRK_BAND) {
+        let j1 = (j0 + SYRK_BAND).min(h);
+        // C[j0..h, j0..j1] = Xᵀ[j0..h, :] · X[:, j0..j1]
+        kernel::gemm_into(
+            h - j0,
+            j1 - j0,
+            n,
+            Src::T {
+                data: x.as_slice(),
+                stride: h,
+                r0: 0,
+                c0: j0,
+            },
+            Src::N {
+                data: x.as_slice(),
+                stride: h,
+                r0: 0,
+                c0: j0,
+            },
+            c.as_mut_slice(),
+            h,
+            j0,
+            j0,
+            Acc::Set,
+        );
+    }
+    // mirror to the upper triangle
+    for i in 0..h {
+        for j in (i + 1)..h {
+            c[(i, j)] = c[(j, i)];
+        }
+    }
+    c
+}
+
+/// The previous-generation blocked kernels, kept verbatim as the packed
+/// engine's correctness oracle and perf baseline (`bench_kernels` measures
+/// the packed speedup against these).
+pub mod reference {
+    use super::super::matrix::Matrix;
+
+    /// Legacy blocked `C = A · B` (row-of-A broadcast against rows of B,
+    /// contiguous axpy innermost).
+    pub fn mul(block: usize, a: &Matrix, b: &Matrix) -> Matrix {
         assert_eq!(a.cols(), b.rows(), "gemm shape mismatch");
         let (m, k, n) = (a.rows(), a.cols(), b.cols());
         let mut c = Matrix::zeros(m, n);
-        let bs = self.block;
+        let bs = block;
         for i0 in (0..m).step_by(bs) {
             let i1 = (i0 + bs).min(m);
             for k0 in (0..k).step_by(bs) {
                 let k1 = (k0 + bs).min(k);
                 for j0 in (0..n).step_by(bs) {
                     let j1 = (j0 + bs).min(n);
-                    // micro-kernel: row of A broadcast against rows of B
                     for i in i0..i1 {
                         let arow = &a.row(i)[k0..k1];
                         let crow = &mut c.row_mut(i)[j0..j1];
@@ -53,13 +269,12 @@ impl Gemm {
         c
     }
 
-    /// `C = Aᵀ · B` without materializing the transpose (the Gram-matrix
-    /// access pattern: both operands walked row-wise).
-    pub fn at_b(&self, a: &Matrix, b: &Matrix) -> Matrix {
+    /// Legacy blocked `C = Aᵀ · B`.
+    pub fn at_b(block: usize, a: &Matrix, b: &Matrix) -> Matrix {
         assert_eq!(a.rows(), b.rows(), "atb shape mismatch");
         let (k, m, n) = (a.rows(), a.cols(), b.cols());
         let mut c = Matrix::zeros(m, n);
-        let bs = self.block;
+        let bs = block;
         for k0 in (0..k).step_by(bs) {
             let k1 = (k0 + bs).min(k);
             for i0 in (0..m).step_by(bs) {
@@ -82,48 +297,12 @@ impl Gemm {
         c
     }
 
-    /// Rows `r0..r1` of `A · Bᵀ`, as an `(r1-r0)×b.rows()` block.
-    ///
-    /// The per-row block schedule (j-blocks outer, k-blocks inner, dot
-    /// accumulation order within a block) matches [`Gemm::a_bt`] exactly, so
-    /// each output row is **bitwise identical** to the corresponding row of
-    /// the full product — this is what lets the pooled Cholesky's trailing
-    /// SYRK update fan row panels across workers without perturbing the
-    /// factorization by a single ulp (the sweep engine's determinism
-    /// guarantee rests on it).
-    pub fn a_bt_rows(&self, a: &Matrix, b: &Matrix, r0: usize, r1: usize) -> Matrix {
-        assert_eq!(a.cols(), b.cols(), "abt shape mismatch");
-        assert!(r0 <= r1 && r1 <= a.rows(), "row range out of bounds");
-        let (k, n) = (a.cols(), b.rows());
-        let mut c = Matrix::zeros(r1 - r0, n);
-        let bs = self.block;
-        for i in r0..r1 {
-            let ci = i - r0;
-            for j0 in (0..n).step_by(bs) {
-                let j1 = (j0 + bs).min(n);
-                for k0 in (0..k).step_by(bs) {
-                    let k1 = (k0 + bs).min(k);
-                    let arow = &a.row(i)[k0..k1];
-                    for j in j0..j1 {
-                        let brow = &b.row(j)[k0..k1];
-                        let mut dot = 0.0;
-                        for (x, y) in arow.iter().zip(brow) {
-                            dot += x * y;
-                        }
-                        c[(ci, j)] += dot;
-                    }
-                }
-            }
-        }
-        c
-    }
-
-    /// `C = A · Bᵀ`.
-    pub fn a_bt(&self, a: &Matrix, b: &Matrix) -> Matrix {
+    /// Legacy blocked `C = A · Bᵀ` (dot-product innermost).
+    pub fn a_bt(block: usize, a: &Matrix, b: &Matrix) -> Matrix {
         assert_eq!(a.cols(), b.cols(), "abt shape mismatch");
         let (m, k, n) = (a.rows(), a.cols(), b.rows());
         let mut c = Matrix::zeros(m, n);
-        let bs = self.block;
+        let bs = block;
         for i0 in (0..m).step_by(bs) {
             let i1 = (i0 + bs).min(m);
             for j0 in (0..n).step_by(bs) {
@@ -146,71 +325,43 @@ impl Gemm {
         }
         c
     }
-}
 
-/// `C = A · B` with the default block size.
-pub fn gemm(a: &Matrix, b: &Matrix) -> Matrix {
-    Gemm::default().mul(a, b)
-}
-
-/// `y = A · x`.
-pub fn gemv(a: &Matrix, x: &[f64]) -> Vec<f64> {
-    assert_eq!(a.cols(), x.len());
-    (0..a.rows())
-        .map(|i| a.row(i).iter().zip(x).map(|(&aij, &xj)| aij * xj).sum())
-        .collect()
-}
-
-/// `y = Aᵀ · x` without materializing the transpose.
-pub fn gemv_t(a: &Matrix, x: &[f64]) -> Vec<f64> {
-    assert_eq!(a.rows(), x.len());
-    let mut y = vec![0.0; a.cols()];
-    for (i, &xi) in x.iter().enumerate() {
-        for (yj, &aij) in y.iter_mut().zip(a.row(i)) {
-            *yj += xi * aij;
-        }
-    }
-    y
-}
-
-/// Symmetric rank-k update: lower triangle of `C = XᵀX` (the Hessian build,
-/// Figure 1 step 2). Only the lower half is computed, then mirrored — this is
-/// the ~2× saving over a plain gemm that LAPACK's `syrk` gives the paper.
-pub fn syrk_lower(x: &Matrix) -> Matrix {
-    let (n, h) = (x.rows(), x.cols());
-    let mut c = Matrix::zeros(h, h);
-    let bs = BLOCK;
-    for k0 in (0..n).step_by(bs) {
-        let k1 = (k0 + bs).min(n);
-        for i0 in (0..h).step_by(bs) {
-            let i1 = (i0 + bs).min(h);
-            for j0 in (0..=i0).step_by(bs) {
-                let j1 = (j0 + bs).min(h);
-                for kk in k0..k1 {
-                    let xrow = x.row(kk);
-                    for i in i0..i1 {
-                        let xki = xrow[i];
-                        if xki == 0.0 {
-                            continue;
-                        }
-                        let jhi = j1.min(i + 1);
-                        let crow = &mut c.row_mut(i)[j0..jhi];
-                        let xseg = &xrow[j0..jhi];
-                        for (cij, &xkj) in crow.iter_mut().zip(xseg) {
-                            *cij += xki * xkj;
+    /// Legacy blocked lower-triangle SYRK.
+    pub fn syrk_lower(block: usize, x: &Matrix) -> Matrix {
+        let (n, h) = (x.rows(), x.cols());
+        let mut c = Matrix::zeros(h, h);
+        let bs = block;
+        for k0 in (0..n).step_by(bs) {
+            let k1 = (k0 + bs).min(n);
+            for i0 in (0..h).step_by(bs) {
+                let i1 = (i0 + bs).min(h);
+                for j0 in (0..=i0).step_by(bs) {
+                    let j1 = (j0 + bs).min(h);
+                    for kk in k0..k1 {
+                        let xrow = x.row(kk);
+                        for i in i0..i1 {
+                            let xki = xrow[i];
+                            if xki == 0.0 {
+                                continue;
+                            }
+                            let jhi = j1.min(i + 1);
+                            let crow = &mut c.row_mut(i)[j0..jhi];
+                            let xseg = &xrow[j0..jhi];
+                            for (cij, &xkj) in crow.iter_mut().zip(xseg) {
+                                *cij += xki * xkj;
+                            }
                         }
                     }
                 }
             }
         }
-    }
-    // mirror to the upper triangle
-    for i in 0..h {
-        for j in (i + 1)..h {
-            c[(i, j)] = c[(j, i)];
+        for i in 0..h {
+            for j in (i + 1)..h {
+                c[(i, j)] = c[(j, i)];
+            }
         }
+        c
     }
-    c
 }
 
 #[cfg(test)]
@@ -270,14 +421,19 @@ mod tests {
         assert!(c.max_abs_diff(&expect) < 1e-10);
     }
 
+    /// The determinism keystone: every row partition of the packed product —
+    /// including one-row slivers that land mid register tile — must
+    /// reproduce the exact bits of the full product.
     #[test]
     fn a_bt_rows_bitwise_matches_full_product() {
         let a = randm(37, 29, 11);
         let b = randm(23, 29, 12);
-        let gem = Gemm { block: 8 };
+        let gem = Gemm::default();
         let full = gem.a_bt(&a, &b);
-        // arbitrary, unaligned row partitions must reproduce the exact bits
-        for (r0, r1) in [(0, 5), (5, 17), (17, 37), (0, 37), (36, 37)] {
+        let mut parts: Vec<(usize, usize)> =
+            vec![(0, 5), (5, 17), (17, 37), (0, 37), (36, 37), (3, 4)];
+        parts.extend((0..37).map(|r| (r, r + 1))); // every single-row sliver
+        for (r0, r1) in parts {
             let part = gem.a_bt_rows(&a, &b, r0, r1);
             for i in r0..r1 {
                 for j in 0..23 {
@@ -291,12 +447,119 @@ mod tests {
         }
     }
 
+    /// Same keystone at a size that crosses the MC/NC/KC cache-block edges.
+    #[test]
+    fn a_bt_rows_bitwise_across_cache_block_edges() {
+        use crate::linalg::kernel::{KC, MC};
+        let a = randm(MC + 9, KC + 7, 21);
+        let b = randm(40, KC + 7, 22);
+        let gem = Gemm::default();
+        let full = gem.a_bt(&a, &b);
+        for (r0, r1) in [(0, MC), (MC, MC + 9), (MC - 1, MC + 1), (7, MC + 3)] {
+            let part = gem.a_bt_rows(&a, &b, r0, r1);
+            for i in r0..r1 {
+                for j in 0..40 {
+                    assert_eq!(part[(i - r0, j)], full[(i, j)]);
+                }
+            }
+        }
+    }
+
+    /// Packed kernels vs the naive oracle on degenerate and odd shapes:
+    /// single rows/columns, empties, and sizes that are not multiples of
+    /// MR/NR/KC.
+    #[test]
+    fn packed_matches_naive_on_degenerate_shapes() {
+        let gem = Gemm::default();
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (1, 7, 13),
+            (13, 7, 1),
+            (1, 1, 9),
+            (9, 1, 1),
+            (5, 1, 3),
+            (3, 0, 4),
+            (0, 5, 4),
+            (4, 5, 0),
+            (4, 9, 8),
+            (8, 9, 4),
+            (31, 17, 23),
+        ] {
+            let a = randm(m, k, (m * 100 + k * 10 + n) as u64 + 1);
+            let b = randm(k, n, (m * 100 + k * 10 + n) as u64 + 2);
+            let c = gem.mul(&a, &b);
+            assert_eq!((c.rows(), c.cols()), (m, n));
+            assert!(
+                c.max_abs_diff(&naive_mul(&a, &b)) < 1e-12,
+                "mul mismatch at ({m},{k},{n})"
+            );
+
+            let at = randm(k, m, (m * 100 + k * 10 + n) as u64 + 3);
+            let catb = gem.at_b(&at, &b);
+            assert!(
+                catb.max_abs_diff(&naive_mul(&at.transpose(), &b)) < 1e-12,
+                "at_b mismatch at ({m},{k},{n})"
+            );
+
+            let bt = randm(n, k, (m * 100 + k * 10 + n) as u64 + 4);
+            let cabt = gem.a_bt(&a, &bt);
+            assert!(
+                cabt.max_abs_diff(&naive_mul(&a, &bt.transpose())) < 1e-12,
+                "a_bt mismatch at ({m},{k},{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_matches_reference_kernels() {
+        let a = randm(67, 45, 31);
+        let b = randm(45, 52, 32);
+        assert!(gemm(&a, &b).max_abs_diff(&reference::mul(64, &a, &b)) < 1e-10);
+        let x = randm(80, 37, 33);
+        assert!(syrk_lower(&x).max_abs_diff(&reference::syrk_lower(64, &x)) < 1e-10);
+        let c = randm(67, 29, 34);
+        assert!(Gemm::default().at_b(&a, &c).max_abs_diff(&reference::at_b(64, &a, &c)) < 1e-10);
+        let d = randm(28, 45, 35);
+        assert!(Gemm::default().a_bt(&a, &d).max_abs_diff(&reference::a_bt(64, &a, &d)) < 1e-10);
+    }
+
+    #[test]
+    fn mul_into_reuses_buffer_bitwise() {
+        let a = randm(19, 11, 41);
+        let b = randm(11, 17, 42);
+        let fresh = gemm(&a, &b);
+        let mut c = Matrix::zeros(19, 17);
+        // fill with garbage first: Set must fully overwrite
+        for v in c.as_mut_slice() {
+            *v = f64::NAN;
+        }
+        Gemm::default().mul_into(&a, &b, &mut c);
+        // raw-slice equality: NaN-propagating, unlike max_abs_diff (whose
+        // f64::max fold would silently drop a leftover NaN)
+        assert_eq!(c.as_slice(), fresh.as_slice());
+    }
+
     #[test]
     fn syrk_matches_atb() {
         let x = randm(100, 33, 9);
         let c = syrk_lower(&x);
         let expect = Gemm::default().at_b(&x, &x);
         assert!(c.max_abs_diff(&expect) < 1e-9);
+    }
+
+    #[test]
+    fn syrk_is_symmetric_and_handles_odd_shapes() {
+        for &(n, h) in &[(1, 1), (3, 1), (1, 3), (7, 50), (100, 49)] {
+            let x = randm(n, h, (n * 100 + h) as u64);
+            let c = syrk_lower(&x);
+            assert_eq!((c.rows(), c.cols()), (h, h));
+            for i in 0..h {
+                for j in 0..h {
+                    assert_eq!(c[(i, j)], c[(j, i)], "asymmetry at ({i},{j}) n={n} h={h}");
+                }
+            }
+            assert!(c.max_abs_diff(&naive_mul(&x.transpose(), &x)) < 1e-10);
+        }
     }
 
     #[test]
@@ -314,5 +577,15 @@ mod tests {
         for j in 0..7 {
             assert!((w[j] - expect_t[(j, 0)]).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn gemv_into_reuses_buffer() {
+        let a = randm(9, 5, 51);
+        let x: Vec<f64> = (0..5).map(|i| (i as f64).cos()).collect();
+        let mut y = vec![99.0; 30];
+        gemv_into(&a, &x, &mut y);
+        assert_eq!(y.len(), 9);
+        assert_eq!(y, gemv(&a, &x));
     }
 }

@@ -1,0 +1,465 @@
+//! The packed, register-blocked GEMM micro-kernel engine (BLIS-style).
+//!
+//! Every BLAS-3 entry point in [`super::gemm`] — and the GEMM-shaped updates
+//! inside the blocked Cholesky/TRSM — funnels into the crate-internal
+//! `gemm_into` driver, which:
+//!
+//! 1. **packs** panels of both operands into contiguous, cache-line-aligned
+//!    scratch buffers (transposition is absorbed by the packing, so the
+//!    micro-kernel never sees a strided operand);
+//! 2. drives an `MR×NR` register-tile **micro-kernel** whose inner loop is a
+//!    rank-1 update of a `[[f64; NR]; MR]` accumulator block — the shape
+//!    LLVM auto-vectorizes into broadcast-multiply-accumulate over the full
+//!    output tile (12 memory ops per 64 flops, vs ~3 per 2 for the legacy
+//!    axpy loops kept in [`super::gemm::reference`]);
+//! 3. blocks the three loops at `MC×KC×NC` so the packed A panel stays
+//!    L2-resident and the B sliver streams through L1.
+//!
+//! ## Determinism schedule
+//!
+//! The sweep engine's bit-identical-at-any-thread-count guarantee requires
+//! that tiling the *output row space* across workers never change a single
+//! bit. The engine therefore fixes the accumulation schedule per output
+//! element, independent of how rows/columns are partitioned across calls:
+//!
+//! - the `k` dimension is chunked into `KC` blocks as a pure function of
+//!   the call's `k` extent (`0..KC, KC..2KC, …` within the call);
+//! - within a chunk, each output element owns exactly one scalar register
+//!   accumulator, added to in strictly ascending `k` order;
+//! - chunk partials are folded into C in ascending chunk order.
+//!
+//! An output element's value is thus a pure function of its row of op(A),
+//! its column of op(B), and the call's `k` extent — **rows and columns**
+//! can be regrouped into arbitrary panels (e.g.
+//! [`super::gemm::Gemm::a_bt_rows`] fanned across the pool) without
+//! perturbing any result bit. The guarantee does *not* extend to splitting
+//! the `k` dimension across separate accumulate calls: chunk boundaries
+//! would shift relative to the full product and the fold order would
+//! change. Every caller in this crate passes its full `k` extent per
+//! product. Pinned by `a_bt_rows_bitwise_matches_full_product` and the
+//! pooled-Cholesky bitwise tests.
+//!
+//! ## Scratch ownership
+//!
+//! Pack buffers live in a **thread-local arena** (`PACKS` below): each
+//! worker thread of the pool owns one pair of pack buffers (plus a `TMP`
+//! output panel for in-place consumers like TRSM), grown on first use and
+//! reused for the life of the thread — the steady-state fold×λ sweep packs
+//! into warm buffers with zero heap allocation. The solver-side half of the
+//! per-worker arena is [`super::scratch::Scratch`], threaded through
+//! [`crate::coordinator::pool::WorkerPool`] explicitly.
+
+use std::cell::RefCell;
+
+/// Micro-kernel register-tile rows (per A sliver).
+pub const MR: usize = 4;
+/// Micro-kernel register-tile columns (per B sliver).
+pub const NR: usize = 8;
+/// k-dimension cache block (absolute-index chunking — see module docs).
+pub const KC: usize = 256;
+/// Row cache block (packed A panel: `MC×KC` ≤ 256 KiB, L2-resident).
+pub const MC: usize = 128;
+/// Column cache block (packed B panel: `KC×NC` streamed sliver by sliver).
+pub const NC: usize = 512;
+
+/// Cache-line alignment (bytes) for the pack buffers.
+const ALIGN: usize = 64;
+
+/// One operand of the packed driver: a row-major buffer viewed either
+/// normally or transposed, with a (row, col) offset. The *effective* matrix
+/// element `E[r][c]` is:
+///
+/// - `N`: `data[(r0 + r) * stride + c0 + c]`
+/// - `T`: `data[(r0 + c) * stride + c0 + r]`
+#[derive(Clone, Copy)]
+pub(crate) enum Src<'a> {
+    N {
+        data: &'a [f64],
+        stride: usize,
+        r0: usize,
+        c0: usize,
+    },
+    T {
+        data: &'a [f64],
+        stride: usize,
+        r0: usize,
+        c0: usize,
+    },
+}
+
+impl<'a> Src<'a> {
+    /// Normal view of a whole row-major buffer.
+    pub(crate) fn n(data: &'a [f64], stride: usize) -> Self {
+        Src::N {
+            data,
+            stride,
+            r0: 0,
+            c0: 0,
+        }
+    }
+
+    /// Transposed view of a whole row-major buffer.
+    pub(crate) fn t(data: &'a [f64], stride: usize) -> Self {
+        Src::T {
+            data,
+            stride,
+            r0: 0,
+            c0: 0,
+        }
+    }
+}
+
+/// How a computed tile is folded into C.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Acc {
+    /// Overwrite C (the first k-chunk stores, later chunks add).
+    Set,
+    /// `C += A·B`.
+    Add,
+    /// `C -= A·B`.
+    Sub,
+}
+
+/// A `Vec<f64>` whose exposed slice starts on a cache-line boundary.
+struct AlignedBuf {
+    raw: Vec<f64>,
+    off: usize,
+    len: usize,
+}
+
+impl AlignedBuf {
+    const fn new() -> Self {
+        Self {
+            raw: Vec::new(),
+            off: 0,
+            len: 0,
+        }
+    }
+
+    /// Ensure capacity for `len` aligned f64s; contents are unspecified.
+    fn ensure(&mut self, len: usize) -> &mut [f64] {
+        let pad = ALIGN / std::mem::size_of::<f64>();
+        if self.raw.len() < len + pad {
+            self.raw.resize(len + pad, 0.0);
+            let addr = self.raw.as_ptr() as usize;
+            self.off = (ALIGN - addr % ALIGN) % ALIGN / std::mem::size_of::<f64>();
+        }
+        self.len = len;
+        &mut self.raw[self.off..self.off + len]
+    }
+
+    fn slice(&self) -> &[f64] {
+        &self.raw[self.off..self.off + self.len]
+    }
+}
+
+thread_local! {
+    /// Per-thread pack arena: (A panel, B panel). Grown on first use, then
+    /// reused for the life of the thread (= the life of a pool worker).
+    static PACKS: RefCell<(AlignedBuf, AlignedBuf)> =
+        const { RefCell::new((AlignedBuf::new(), AlignedBuf::new())) };
+
+    /// Per-thread output panel for consumers whose destination aliases an
+    /// operand (blocked TRSM, the Cholesky trailing update).
+    static TMP: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` over a `len`-long slice of the per-thread temporary output panel
+/// (contents unspecified on entry; no allocation once the panel is warm).
+/// Reentrant calls are not allowed; [`gemm_into`] may be called inside `f`.
+pub(crate) fn with_tmp<R>(len: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
+    TMP.with(|cell| {
+        let mut guard = cell.borrow_mut();
+        let buf = &mut *guard;
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        f(&mut buf[..len])
+    })
+}
+
+/// Pack the `mc×kc` panel of effective-A at (ic, pc) into MR-row slivers,
+/// sliver-major, column-major within a sliver (`buf[s][p][r]`), zero-padding
+/// the tail sliver to MR rows.
+fn pack_a(a: &Src<'_>, ic: usize, mc: usize, pc: usize, kc: usize, buf: &mut [f64]) {
+    let slivers = mc.div_ceil(MR);
+    match *a {
+        Src::N {
+            data,
+            stride,
+            r0,
+            c0,
+        } => {
+            for s in 0..slivers {
+                let base = s * kc * MR;
+                let rows = MR.min(mc - s * MR);
+                for r in 0..rows {
+                    let src = &data[(r0 + ic + s * MR + r) * stride + c0 + pc..][..kc];
+                    for (p, &v) in src.iter().enumerate() {
+                        buf[base + p * MR + r] = v;
+                    }
+                }
+            }
+        }
+        Src::T {
+            data,
+            stride,
+            r0,
+            c0,
+        } => {
+            for s in 0..slivers {
+                let base = s * kc * MR;
+                let rows = MR.min(mc - s * MR);
+                for p in 0..kc {
+                    let src = &data[(r0 + pc + p) * stride + c0 + ic + s * MR..][..rows];
+                    buf[base + p * MR..base + p * MR + rows].copy_from_slice(src);
+                }
+            }
+        }
+    }
+    // zero the pad lanes of the tail sliver so padded rows accumulate zeros
+    let tail_rows = mc - (slivers - 1) * MR;
+    if tail_rows < MR {
+        let base = (slivers - 1) * kc * MR;
+        for p in 0..kc {
+            for r in tail_rows..MR {
+                buf[base + p * MR + r] = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack the `kc×nc` panel of effective-B at (pc, jc) into NR-column slivers,
+/// sliver-major, row-major within a sliver (`buf[s][p][c]`), zero-padding
+/// the tail sliver to NR columns.
+fn pack_b(b: &Src<'_>, jc: usize, nc: usize, pc: usize, kc: usize, buf: &mut [f64]) {
+    let slivers = nc.div_ceil(NR);
+    match *b {
+        Src::N {
+            data,
+            stride,
+            r0,
+            c0,
+        } => {
+            for s in 0..slivers {
+                let base = s * kc * NR;
+                let cols = NR.min(nc - s * NR);
+                for p in 0..kc {
+                    let src = &data[(r0 + pc + p) * stride + c0 + jc + s * NR..][..cols];
+                    let dst = &mut buf[base + p * NR..base + (p + 1) * NR];
+                    dst[..cols].copy_from_slice(src);
+                    for v in &mut dst[cols..] {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+        Src::T {
+            data,
+            stride,
+            r0,
+            c0,
+        } => {
+            for s in 0..slivers {
+                let base = s * kc * NR;
+                let cols = NR.min(nc - s * NR);
+                for j in 0..cols {
+                    let src = &data[(r0 + jc + s * NR + j) * stride + c0 + pc..][..kc];
+                    for (p, &v) in src.iter().enumerate() {
+                        buf[base + p * NR + j] = v;
+                    }
+                }
+                if cols < NR {
+                    for p in 0..kc {
+                        for j in cols..NR {
+                            buf[base + p * NR + j] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The register-tile micro-kernel: `acc += Aᵖ·Bᵖ` over one packed sliver
+/// pair. `a` is kc×MR column-major, `b` is kc×NR row-major; each of the
+/// MR×NR accumulators is updated in strictly ascending `p` order (the
+/// determinism schedule — see module docs).
+#[inline(always)]
+fn micro_kernel(kc: usize, a: &[f64], b: &[f64], acc: &mut [[f64; NR]; MR]) {
+    for p in 0..kc {
+        let av: &[f64; MR] = a[p * MR..p * MR + MR].try_into().unwrap();
+        let bv: &[f64; NR] = b[p * NR..p * NR + NR].try_into().unwrap();
+        for r in 0..MR {
+            let ar = av[r];
+            let row = &mut acc[r];
+            for c in 0..NR {
+                row[c] += ar * bv[c];
+            }
+        }
+    }
+}
+
+/// Sweep the packed panels with the micro-kernel, folding each tile into C
+/// at (row0, col0) according to `acc`.
+fn macro_kernel(
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    pa: &[f64],
+    pb: &[f64],
+    c: &mut [f64],
+    c_stride: usize,
+    row0: usize,
+    col0: usize,
+    acc: Acc,
+) {
+    for js in 0..nc.div_ceil(NR) {
+        let bs = &pb[js * kc * NR..][..kc * NR];
+        let cols = NR.min(nc - js * NR);
+        for is in 0..mc.div_ceil(MR) {
+            let asl = &pa[is * kc * MR..][..kc * MR];
+            let rows = MR.min(mc - is * MR);
+            let mut tile = [[0.0f64; NR]; MR];
+            micro_kernel(kc, asl, bs, &mut tile);
+            for (r, trow) in tile.iter().enumerate().take(rows) {
+                let dst = &mut c[(row0 + is * MR + r) * c_stride + col0 + js * NR..][..cols];
+                let src = &trow[..cols];
+                match acc {
+                    Acc::Set => dst.copy_from_slice(src),
+                    Acc::Add => {
+                        for (d, &s) in dst.iter_mut().zip(src) {
+                            *d += s;
+                        }
+                    }
+                    Acc::Sub => {
+                        for (d, &s) in dst.iter_mut().zip(src) {
+                            *d -= s;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Packed GEMM driver: fold `op(A)·op(B)` (an `m×k` by `k×n` product) into
+/// the `m×n` region of `c` at (c_r0, c_c0), row stride `c_stride`.
+///
+/// Handles all degenerate shapes (`m`, `n` or `k` zero; `k == 0` with
+/// [`Acc::Set`] zero-fills the region). Pack buffers come from the
+/// per-thread arena; the call performs no heap allocation once the arena is
+/// warm. Must not be called reentrantly from inside another `gemm_into` (it
+/// never is — this is leaf code).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_into(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: Src<'_>,
+    b: Src<'_>,
+    c: &mut [f64],
+    c_stride: usize,
+    c_r0: usize,
+    c_c0: usize,
+    acc: Acc,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if acc == Acc::Set {
+            for i in 0..m {
+                for v in &mut c[(c_r0 + i) * c_stride + c_c0..][..n] {
+                    *v = 0.0;
+                }
+            }
+        }
+        return;
+    }
+    PACKS.with(|cell| {
+        let mut packs = cell.borrow_mut();
+        let (pa, pb) = &mut *packs;
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            let mut first = true;
+            for pc in (0..k).step_by(KC) {
+                let kc = KC.min(k - pc);
+                let pbuf = pb.ensure(nc.div_ceil(NR) * kc * NR);
+                pack_b(&b, jc, nc, pc, kc, pbuf);
+                let eff = match acc {
+                    Acc::Set if !first => Acc::Add,
+                    other => other,
+                };
+                for ic in (0..m).step_by(MC) {
+                    let mc = MC.min(m - ic);
+                    let pbuf_a = pa.ensure(mc.div_ceil(MR) * kc * MR);
+                    pack_a(&a, ic, mc, pc, kc, pbuf_a);
+                    macro_kernel(
+                        mc,
+                        nc,
+                        kc,
+                        pa.slice(),
+                        pb.slice(),
+                        c,
+                        c_stride,
+                        c_r0 + ic,
+                        c_c0 + jc,
+                        eff,
+                    );
+                }
+                first = false;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_buf_is_cache_line_aligned() {
+        let mut b = AlignedBuf::new();
+        let s = b.ensure(100);
+        assert_eq!(s.as_ptr() as usize % ALIGN, 0);
+        s[99] = 1.0;
+        // growing keeps alignment
+        let s2 = b.ensure(10_000);
+        assert_eq!(s2.as_ptr() as usize % ALIGN, 0);
+    }
+
+    #[test]
+    fn tiny_product_matches_by_hand() {
+        // [1 2; 3 4] · [5 6; 7 8] = [19 22; 43 50]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut c = [0.0; 4];
+        gemm_into(2, 2, 2, Src::n(&a, 2), Src::n(&b, 2), &mut c, 2, 0, 0, Acc::Set);
+        assert_eq!(c, [19.0, 22.0, 43.0, 50.0]);
+        // Sub folds the product back out
+        gemm_into(2, 2, 2, Src::n(&a, 2), Src::n(&b, 2), &mut c, 2, 0, 0, Acc::Sub);
+        assert_eq!(c, [0.0; 4]);
+    }
+
+    #[test]
+    fn transposed_views_match_normal() {
+        // E = [1 2; 3 4]ᵀ via T view of the same buffer
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let eye = [1.0, 0.0, 0.0, 1.0];
+        let mut c = [0.0; 4];
+        gemm_into(2, 2, 2, Src::t(&a, 2), Src::n(&eye, 2), &mut c, 2, 0, 0, Acc::Set);
+        assert_eq!(c, [1.0, 3.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn k_zero_set_clears_region_and_add_is_noop() {
+        let a: [f64; 0] = [];
+        let b: [f64; 0] = [];
+        let mut c = [7.0; 6];
+        gemm_into(2, 3, 0, Src::n(&a, 1), Src::n(&b, 3), &mut c, 3, 0, 0, Acc::Add);
+        assert_eq!(c, [7.0; 6]);
+        gemm_into(2, 3, 0, Src::n(&a, 1), Src::n(&b, 3), &mut c, 3, 0, 0, Acc::Set);
+        assert_eq!(c, [0.0; 6]);
+    }
+}

@@ -145,6 +145,34 @@ impl Matrix {
         }
     }
 
+    /// Copy `other`'s shape and contents into `self`, reusing the existing
+    /// allocation when it has capacity — the arena-friendly alternative to
+    /// `clone()` on hot paths (zero heap traffic in steady state).
+    pub fn copy_from(&mut self, other: &Matrix) {
+        self.rows = other.rows;
+        self.cols = other.cols;
+        self.data.clone_from(&other.data);
+    }
+
+    /// Reshape to `rows×cols` with all entries zero, reusing the allocation
+    /// when it has capacity (the arena-friendly `Matrix::zeros`).
+    pub fn reset_zeroed(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Reshape to `rows×cols` taking all entries from `v` (one copy pass, no
+    /// intermediate zero fill), reusing the allocation when it has capacity.
+    pub fn reset_from_slice(&mut self, rows: usize, cols: usize, v: &[f64]) {
+        assert_eq!(v.len(), rows * cols, "buffer/shape mismatch");
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.extend_from_slice(v);
+    }
+
     /// `self + λI` (the paper's regularized Hessian `A = H + λI`).
     pub fn add_diag(&self, lam: f64) -> Matrix {
         assert!(self.is_square());
@@ -278,6 +306,20 @@ mod tests {
         b[0] = 7.0;
         assert_eq!(m[(0, 0)], 9.0);
         assert_eq!(m[(2, 0)], 7.0);
+    }
+
+    #[test]
+    fn copy_from_and_reset_reuse_allocation() {
+        let src = Matrix::from_fn(3, 4, |i, j| (i * 4 + j) as f64);
+        let mut dst = Matrix::zeros(3, 4);
+        let cap_ptr = dst.as_slice().as_ptr();
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+        assert_eq!(dst.as_slice().as_ptr(), cap_ptr, "copy_from must not reallocate");
+        dst.reset_zeroed(2, 5);
+        assert_eq!((dst.rows(), dst.cols()), (2, 5));
+        assert!(dst.as_slice().iter().all(|&v| v == 0.0));
+        assert_eq!(dst.as_slice().as_ptr(), cap_ptr, "reset_zeroed must not reallocate");
     }
 
     #[test]

@@ -6,9 +6,15 @@
 //! the pieces from scratch, in the same cache-blocked style:
 //!
 //! - [`matrix`] — the row-major `Matrix` type and views
-//! - [`gemm`] — blocked matmul / syrk / matvec (the BLAS-3 core)
+//! - [`kernel`] — the packed, register-blocked micro-kernel engine every
+//!   BLAS-3 product runs on (pack buffers in a per-thread arena, fixed
+//!   partition-independent accumulation schedule)
+//! - [`gemm`] — blocked matmul / syrk / matvec (the BLAS-3 entry points,
+//!   packed-kernel backed; the legacy loops live on in `gemm::reference`)
 //! - [`cholesky`] — blocked right-looking Cholesky (LAPACK `potrf` shape)
 //! - [`triangular`] — forward/backward substitution and block TRSM
+//! - [`scratch`] — the per-worker solver scratch arena (factor, eval and
+//!   solve buffers reused across sweep tasks)
 //! - [`qr`] — Householder QR (thin Q), used by the randomized SVD
 //! - [`svd`] — one-sided Jacobi SVD (the paper's `SVD` baseline)
 //! - [`lanczos`] — Lanczos-bidiagonalization truncated SVD (`t-SVD` baseline)
@@ -20,12 +26,14 @@
 
 pub mod cholesky;
 pub mod gemm;
+pub mod kernel;
 pub mod lanczos;
 pub mod lu;
 pub mod matrix;
 pub mod norms;
 pub mod qr;
 pub mod randomized;
+pub mod scratch;
 pub mod svd;
 pub mod triangular;
 
@@ -35,5 +43,6 @@ pub use matrix::Matrix;
 pub use norms::{fro_norm, spectral_norm_est};
 pub use qr::householder_qr_thin;
 pub use randomized::randomized_svd;
+pub use scratch::Scratch;
 pub use svd::jacobi_svd;
 pub use triangular::{solve_cholesky, trsm_left_lower, trsv_lower, trsv_upper};

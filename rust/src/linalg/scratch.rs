@@ -1,0 +1,61 @@
+//! The per-worker scratch arena: every buffer a steady-state fold×λ sweep
+//! task needs, owned by the worker and reused across tasks.
+//!
+//! The sweep engine's grid tasks each evaluate a batch of λ's; per λ they
+//! reconstruct (or factorize) an `h×h` factor, run two `O(h²)` triangular
+//! solves, and score the hold-out split. Before this arena existed, every
+//! one of those steps allocated: a `D`-length eval vector, an `h×h`
+//! `Matrix`, two solve vectors and a prediction vector — five heap
+//! round-trips per λ, thousands per sweep. Now each
+//! [`crate::coordinator::pool::WorkerPool`] worker owns one `Scratch` for
+//! its whole life and hands `&mut` to every job it runs
+//! ([`crate::coordinator::pool::WorkerPool::map_scratch`]); buffers grow to
+//! their steady-state sizes on the first task and are reused verbatim after
+//! that — zero allocations per task.
+//!
+//! This is the *solver-side* half of the per-worker arena. The *kernel-side*
+//! half — the packed GEMM pack panels and the TRSM/SYRK output panel — lives
+//! in thread-local storage inside [`super::kernel`], which amounts to the
+//! same per-worker ownership because pool workers are long-lived threads.
+//!
+//! Every buffer is fully overwritten before each read (`copy_from`,
+//! `reset_zeroed`, `clear`+`extend` idioms), so reuse can never leak state
+//! between tasks — the engine's bit-identical-at-any-thread-count guarantee
+//! is preserved by construction.
+
+use super::matrix::Matrix;
+
+/// Reusable per-worker buffers for the sweep hot path. See the module docs
+/// for the ownership story.
+pub struct Scratch {
+    /// `D`-length interpolant evaluation buffer (`vec(L)` at λ).
+    pub vbuf: Vec<f64>,
+    /// The `h×h` factor: interpolated (`eval_factor_into`) or exact
+    /// (`cholesky_shifted_into`), fully overwritten per λ.
+    pub factor: Matrix,
+    /// Forward-substitution intermediate `w` of the `L Lᵀ θ = g` solve.
+    pub work: Vec<f64>,
+    /// The solution vector θ.
+    pub theta: Vec<f64>,
+    /// Hold-out prediction buffer (`Xv · θ`).
+    pub pred: Vec<f64>,
+}
+
+impl Scratch {
+    /// An empty arena; buffers grow to steady-state sizes on first use.
+    pub fn new() -> Self {
+        Self {
+            vbuf: Vec::new(),
+            factor: Matrix::zeros(0, 0),
+            work: Vec::new(),
+            theta: Vec::new(),
+            pred: Vec::new(),
+        }
+    }
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}

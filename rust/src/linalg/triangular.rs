@@ -3,48 +3,85 @@
 //! Once a factor L (exact or interpolated) is in hand, solving
 //! `L Lᵀ θ = g` is a forward substitution followed by a backward one —
 //! `O(d²)` each, which is exactly why interpolating L (instead of the
-//! solution θ) preserves the cheap per-λ cost structure.
+//! solution θ) preserves the cheap per-λ cost structure. The `_into`
+//! variants write into caller-provided buffers (the per-worker
+//! [`super::scratch::Scratch`] arena on the sweep hot path) so the
+//! steady-state grid tasks solve with zero heap allocation.
+//!
+//! [`trsm_right_lower_t_inplace`] is the factorization-side TRSM: the
+//! `L21 = A21·L11⁻ᵀ` panel solve of the blocked Cholesky, column-blocked so
+//! the bulk of its work is GEMM-shaped updates routed through the packed
+//! micro-kernel engine.
 
+use super::kernel::{self, Acc, Src};
 use super::matrix::Matrix;
 
 /// Forward substitution: solve `L w = b` for lower-triangular L.
 pub fn trsv_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let mut w = Vec::new();
+    trsv_lower_into(l, b, &mut w);
+    w
+}
+
+/// Forward substitution into a caller-provided buffer (resized to `n`; no
+/// allocation once warm).
+pub fn trsv_lower_into(l: &Matrix, b: &[f64], w: &mut Vec<f64>) {
     let n = l.rows();
     assert!(l.is_square() && b.len() == n);
-    let mut w = vec![0.0; n];
+    w.clear();
+    w.resize(n, 0.0);
     for i in 0..n {
         let row = l.row(i);
         let mut s = b[i];
         // contiguous dot over the already-solved prefix
-        for k in 0..i {
-            s -= row[k] * w[k];
+        for (x, y) in row[..i].iter().zip(&w[..i]) {
+            s -= x * y;
         }
         w[i] = s / row[i];
     }
-    w
 }
 
 /// Backward substitution: solve `Lᵀ x = b` given lower-triangular L
 /// (reads L column-wise, i.e. Lᵀ row-wise).
 pub fn trsv_upper(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let mut x = Vec::new();
+    trsv_upper_into(l, b, &mut x);
+    x
+}
+
+/// Backward substitution into a caller-provided buffer (no allocation once
+/// warm).
+pub fn trsv_upper_into(l: &Matrix, b: &[f64], x: &mut Vec<f64>) {
     let n = l.rows();
     assert!(l.is_square() && b.len() == n);
-    let mut x = b.to_vec();
+    x.clear();
+    x.extend_from_slice(b);
     for i in (0..n).rev() {
         let xi = x[i] / l[(i, i)];
         x[i] = xi;
         // eliminate xi from all earlier equations: x[k] -= L[i][k] * xi
         let row = l.row(i);
-        for k in 0..i {
-            x[k] -= row[k] * xi;
+        for (xk, &lik) in x[..i].iter_mut().zip(row) {
+            *xk -= lik * xi;
         }
     }
-    x
 }
 
 /// Solve `L Lᵀ θ = g` — the complete per-λ ridge solve.
 pub fn solve_cholesky(l: &Matrix, g: &[f64]) -> Vec<f64> {
-    trsv_upper(l, &trsv_lower(l, g))
+    let mut w = Vec::new();
+    let mut x = Vec::new();
+    solve_cholesky_into(l, g, &mut w, &mut x);
+    x
+}
+
+/// `L Lᵀ θ = g` into caller-provided buffers: `work` receives the forward
+/// intermediate, `theta` the solution. Zero allocation once both are warm —
+/// this is what the sweep engine's grid tasks call with their worker's
+/// [`super::scratch::Scratch`].
+pub fn solve_cholesky_into(l: &Matrix, g: &[f64], work: &mut Vec<f64>, theta: &mut Vec<f64>) {
+    trsv_lower_into(l, g, work);
+    trsv_upper_into(l, work, theta);
 }
 
 /// Block TRSM: solve `L X = B` for a multi-column right-hand side
@@ -100,6 +137,92 @@ pub fn trsm_left_lower_t(l: &Matrix, b: &Matrix) -> Matrix {
     x
 }
 
+/// Column block width of the blocked right-TRSM: the substitution triangle
+/// stays this small while everything left of it is GEMM-shaped.
+const TRSM_TB: usize = 32;
+
+/// Blocked right-side TRSM: solve `X · Lᵀ = B` **in place** over the row
+/// block `rows r0..r1` of `a`, where X/B occupy columns `c0..c0+l.rows()`
+/// and `l` is the lower-triangular diagonal panel (the Cholesky L11).
+///
+/// Column-blocked at `TRSM_TB` (32): for each column block, the contribution of
+/// the already-solved columns is one GEMM-shaped update
+/// (`X[:, solved] · L[block, solved]ᵀ`) routed through the packed
+/// micro-kernel into the per-thread output panel and subtracted row-wise;
+/// only the small remaining triangle is solved by scalar forward
+/// substitution on row slices. This replaces the previous all-scalar
+/// bounds-checked triple loop — for a `b`-wide panel, `(TB/b)`-fraction of
+/// the flops stay scalar and the rest run at micro-kernel speed.
+///
+/// **Row-partition independent, bitwise**: each row's arithmetic touches
+/// only that row and `l`, the column blocking depends only on `l.rows()`,
+/// and the packed updates accumulate per element in fixed ascending-k order
+/// (see [`super::kernel`]). Solving `r0..r1` in one call or as any set of
+/// disjoint sub-ranges produces identical bits — the pooled Cholesky's TRSM
+/// tiles rely on this to match the serial factorization exactly.
+pub fn trsm_right_lower_t_inplace(a: &mut Matrix, r0: usize, r1: usize, c0: usize, l: &Matrix) {
+    let nb = l.rows();
+    debug_assert!(l.is_square());
+    assert!(r1 <= a.rows() && c0 + nb <= a.cols() && r0 <= r1);
+    if r0 == r1 || nb == 0 {
+        return;
+    }
+    let stride = a.cols();
+    let m = r1 - r0;
+    for cb in (0..nb).step_by(TRSM_TB) {
+        let ce = (cb + TRSM_TB).min(nb);
+        let w = ce - cb;
+        if cb > 0 {
+            // A[r0..r1, c0+cb..c0+ce] -= X[r0..r1, c0..c0+cb] · L[cb..ce, 0..cb]ᵀ
+            kernel::with_tmp(m * w, |tmp| {
+                kernel::gemm_into(
+                    m,
+                    w,
+                    cb,
+                    Src::N {
+                        data: a.as_slice(),
+                        stride,
+                        r0,
+                        c0,
+                    },
+                    Src::T {
+                        data: l.as_slice(),
+                        stride: nb,
+                        r0: cb,
+                        c0: 0,
+                    },
+                    tmp,
+                    w,
+                    0,
+                    0,
+                    Acc::Set,
+                );
+                let data = a.as_mut_slice();
+                for i in 0..m {
+                    let dst = &mut data[(r0 + i) * stride + c0 + cb..][..w];
+                    for (d, &u) in dst.iter_mut().zip(&tmp[i * w..(i + 1) * w]) {
+                        *d -= u;
+                    }
+                }
+            });
+        }
+        // scalar forward substitution on the small triangle, row slices only
+        let data = a.as_mut_slice();
+        let ld = l.as_slice();
+        for i in 0..m {
+            let row = &mut data[(r0 + i) * stride + c0..][..ce];
+            for j in cb..ce {
+                let lrow = &ld[j * nb..j * nb + j];
+                let mut s = row[j];
+                for (x, y) in row[cb..j].iter().zip(&lrow[cb..]) {
+                    s -= x * y;
+                }
+                row[j] = s / ld[j * nb + j];
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +267,19 @@ mod tests {
     }
 
     #[test]
+    fn solve_into_matches_allocating_bitwise() {
+        let a = random_spd(30, 1e4, 9);
+        let l = cholesky_blocked(&a).unwrap();
+        let g: Vec<f64> = (0..30).map(|i| (i as f64 * 0.3).sin()).collect();
+        let fresh = solve_cholesky(&l, &g);
+        // pre-dirtied, wrong-sized buffers must converge to the same bits
+        let mut w = vec![f64::NAN; 7];
+        let mut th = vec![f64::NAN; 91];
+        solve_cholesky_into(&l, &g, &mut w, &mut th);
+        assert_eq!(th, fresh);
+    }
+
+    #[test]
     fn trsm_matches_columnwise_trsv() {
         let a = random_spd(16, 1e2, 4);
         let l = cholesky_blocked(&a).unwrap();
@@ -174,5 +310,63 @@ mod tests {
         let x = trsm_left_lower(&l, &b);
         let lb = gemm(&l, &x);
         assert!(lb.max_abs_diff(&b) < 1e-10);
+    }
+
+    /// The factorization-side TRSM solves X·L11ᵀ = B: verify against L
+    /// applied from the right.
+    #[test]
+    fn right_trsm_solves_and_is_row_partition_independent() {
+        for nb in [1, 7, 32, 51] {
+            let spd = random_spd(nb, 1e3, 40 + nb as u64);
+            let l = cholesky_blocked(&spd).unwrap();
+            let b = random_matrix(60, nb, 41 + nb as u64);
+
+            let mut whole = b.clone();
+            trsm_right_lower_t_inplace(&mut whole, 0, 60, 0, &l);
+
+            // X · Lᵀ must reconstruct B
+            let rec = gemm(&whole, &l.transpose());
+            assert!(rec.max_abs_diff(&b) < 1e-8, "nb={nb}");
+
+            // any row partition reproduces the exact bits
+            for splits in [vec![0, 60], vec![0, 1, 60], vec![0, 13, 29, 44, 60]] {
+                let mut parts = b.clone();
+                for win in splits.windows(2) {
+                    trsm_right_lower_t_inplace(&mut parts, win[0], win[1], 0, &l);
+                }
+                // slice equality is NaN-propagating (max_abs_diff is not)
+                assert_eq!(parts.as_slice(), whole.as_slice(), "nb={nb} splits={splits:?}");
+            }
+        }
+    }
+
+    /// The column-offset form (solving inside a wider matrix, as the blocked
+    /// Cholesky does) must match the compact form bitwise.
+    #[test]
+    fn right_trsm_column_offset_matches_compact() {
+        let nb = 24;
+        let spd = random_spd(nb, 1e3, 77);
+        let l = cholesky_blocked(&spd).unwrap();
+        let wide = random_matrix(30, 40, 78);
+
+        let mut compact = wide.slice(0, 30, 9, 9 + nb);
+        trsm_right_lower_t_inplace(&mut compact, 0, 30, 0, &l);
+
+        let mut inplace = wide.clone();
+        trsm_right_lower_t_inplace(&mut inplace, 0, 30, 9, &l);
+        for i in 0..30 {
+            for j in 0..nb {
+                assert_eq!(inplace[(i, 9 + j)], compact[(i, j)]);
+            }
+        }
+        // columns outside the panel untouched
+        for i in 0..30 {
+            for j in 0..9 {
+                assert_eq!(inplace[(i, j)], wide[(i, j)]);
+            }
+            for j in 9 + nb..40 {
+                assert_eq!(inplace[(i, j)], wide[(i, j)]);
+            }
+        }
     }
 }

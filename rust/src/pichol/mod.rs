@@ -61,18 +61,20 @@ pub struct Interpolant {
 }
 
 impl Interpolant {
-    /// Interpolated vectorized factor at λ: `vec(L) = [1 λ … λ^r] Θ`.
-    /// `O(r·D)` — the paper's payoff step.
+    /// Interpolated vectorized factor at λ: `vec(L) = [1 λ … λ^r] Θ`,
+    /// evaluated by **Horner's rule** — `r` fused sweeps of
+    /// `out = out·λ + Θ[p]` over the D axis, one multiply-add per
+    /// coefficient instead of the monomial form's separate power tracking,
+    /// and better conditioned for λ near the grid edges. `O(r·D)` — the
+    /// paper's payoff step.
     pub fn eval_vec_into(&self, lam: f64, out: &mut [f64]) {
         let d = self.theta.cols();
         debug_assert_eq!(out.len(), d);
-        out.copy_from_slice(self.theta.row(0));
-        let mut pw = 1.0;
-        for p in 1..=self.degree {
-            pw *= lam;
+        out.copy_from_slice(self.theta.row(self.degree));
+        for p in (0..self.degree).rev() {
             let row = self.theta.row(p);
             for (o, &c) in out.iter_mut().zip(row) {
-                *o += pw * c;
+                *o = *o * lam + c;
             }
         }
     }
@@ -87,7 +89,34 @@ impl Interpolant {
     /// Interpolated factor as a matrix (unvec through the given strategy —
     /// must be the same strategy the fit used).
     pub fn eval_factor(&self, lam: f64, strategy: &dyn VecStrategy) -> Matrix {
-        strategy.unvec(&self.eval_vec(lam), self.h)
+        let mut vbuf = Vec::new();
+        let mut out = Matrix::zeros(0, 0);
+        self.eval_factor_into(lam, strategy, &mut vbuf, &mut out);
+        out
+    }
+
+    /// Interpolated factor into caller-provided buffers: `vbuf` is the
+    /// D-length evaluation scratch, `out` is reshaped to `h×h` and fully
+    /// overwritten. On the sweep hot path both live in the per-worker
+    /// [`crate::linalg::scratch::Scratch`], so steady-state grid tasks
+    /// reconstruct factors with **zero heap allocation** (this is what
+    /// [`Interpolant::eval_factor`] cost per λ before: one `Vec` + one
+    /// `Matrix`). Bitwise identical to [`Interpolant::eval_factor`].
+    pub fn eval_factor_into(
+        &self,
+        lam: f64,
+        strategy: &dyn VecStrategy,
+        vbuf: &mut Vec<f64>,
+        out: &mut Matrix,
+    ) {
+        let d = self.theta.cols();
+        if vbuf.len() != d {
+            // size fix only; eval_vec_into fully overwrites the contents
+            vbuf.clear();
+            vbuf.resize(d, 0.0);
+        }
+        self.eval_vec_into(lam, vbuf);
+        strategy.unvec_into(vbuf, self.h, out);
     }
 }
 
@@ -228,6 +257,39 @@ mod tests {
         );
         assert_eq!(whole.theta.as_slice(), split.theta.as_slice());
         assert_eq!(whole.h, split.h);
+    }
+
+    #[test]
+    fn horner_matches_monomial_eval() {
+        let a = random_spd(12, 1e3, 9);
+        let lams = [0.1, 0.4, 0.8, 1.1];
+        let interp = fit_default(&a, &lams);
+        for &lam in &[0.05, 0.3, 0.77, 1.3] {
+            let v = interp.eval_vec(lam);
+            // monomial reference: Σ_p λ^p · Θ[p]
+            for (j, &got) in v.iter().enumerate() {
+                let mut expect = 0.0;
+                for p in 0..=interp.degree {
+                    expect += lam.powi(p as i32) * interp.theta[(p, j)];
+                }
+                assert!((got - expect).abs() < 1e-10, "λ={lam} entry {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn eval_factor_into_bitwise_matches_eval_factor() {
+        let a = random_spd(20, 1e3, 10);
+        let lams = [0.1, 0.5, 0.9, 1.2];
+        let interp = fit_default(&a, &lams);
+        let mut vbuf = vec![f64::NAN; 3]; // dirty + wrong-sized on purpose
+        let mut out = Matrix::zeros(7, 7);
+        for &lam in &[0.2, 0.6, 1.0] {
+            let fresh = interp.eval_factor(lam, &RowWise);
+            interp.eval_factor_into(lam, &RowWise, &mut vbuf, &mut out);
+            // slice equality is NaN-propagating (max_abs_diff is not)
+            assert_eq!(out.as_slice(), fresh.as_slice(), "λ={lam}");
+        }
     }
 
     #[test]

@@ -26,13 +26,12 @@ impl VecStrategy for FullMatrix {
         out.copy_from_slice(l.as_slice());
     }
 
-    fn unvec(&self, v: &[f64], h: usize) -> Matrix {
+    fn unvec_into(&self, v: &[f64], h: usize, out: &mut Matrix) {
         assert_eq!(v.len(), h * h);
-        let mut m = Matrix::from_vec(h, h, v.to_vec());
+        out.reset_from_slice(h, h, v);
         // the interpolated upper triangle is numerically ~0 but may carry
         // roundoff from the fit; clamp it to keep the factor triangular
-        m.zero_upper();
-        m
+        out.zero_upper();
     }
 }
 

@@ -52,7 +52,18 @@ pub trait VecStrategy: Send + Sync {
     fn vec_into(&self, l: &Matrix, out: &mut [f64]);
 
     /// Inverse: rebuild the lower-triangular factor from its vector form.
-    fn unvec(&self, v: &[f64], h: usize) -> Matrix;
+    fn unvec(&self, v: &[f64], h: usize) -> Matrix {
+        let mut out = Matrix::zeros(0, 0);
+        self.unvec_into(v, h, &mut out);
+        out
+    }
+
+    /// Inverse into a caller-provided matrix: `out` is reshaped to `h×h` and
+    /// **fully overwritten** (zeros included), reusing its allocation — the
+    /// sweep engine's grid tasks rebuild factors into their worker's
+    /// [`crate::linalg::scratch::Scratch`] with zero heap traffic. Bitwise
+    /// identical to [`VecStrategy::unvec`].
+    fn unvec_into(&self, v: &[f64], h: usize, out: &mut Matrix);
 
     /// Convenience allocating wrapper around [`VecStrategy::vec_into`].
     fn vec(&self, l: &Matrix) -> Vec<f64> {
@@ -95,6 +106,24 @@ mod tests {
         assert_eq!(RowWise.dim(4), 10);
         assert_eq!(FullMatrix.dim(4), 16);
         assert_eq!(Recursive::default().dim(4), 10);
+    }
+
+    #[test]
+    fn unvec_into_dirty_buffer_matches_unvec_bitwise() {
+        // reuse must fully overwrite: seed the target with a larger, dirty
+        // factor first and require bit-equality with a fresh unvec
+        for h in [1, 2, 5, 17, 64, 65] {
+            let l = random_lower_factor(h, 0xD1B + h as u64);
+            for s in all_strategies() {
+                let v = s.vec(&l);
+                let fresh = s.unvec(&v, h);
+                let mut out = random_lower_factor(h + 13, 0xBAD);
+                s.unvec_into(&v, h, &mut out);
+                assert_eq!((out.rows(), out.cols()), (h, h));
+                // slice equality is NaN-propagating (max_abs_diff is not)
+                assert_eq!(out.as_slice(), fresh.as_slice(), "{} h={h}", s.name());
+            }
+        }
     }
 
     #[test]

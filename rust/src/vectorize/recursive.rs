@@ -108,12 +108,11 @@ impl VecStrategy for Recursive {
         debug_assert_eq!(end, tri_d(h));
     }
 
-    fn unvec(&self, v: &[f64], h: usize) -> Matrix {
+    fn unvec_into(&self, v: &[f64], h: usize, out: &mut Matrix) {
         assert_eq!(v.len(), tri_d(h));
-        let mut l = Matrix::zeros(h, h);
-        let end = self.unvec_rec(v, &mut l, 0, h, 0);
+        out.reset_zeroed(h, h);
+        let end = self.unvec_rec(v, out, 0, h, 0);
         debug_assert_eq!(end, tri_d(h));
-        l
     }
 }
 

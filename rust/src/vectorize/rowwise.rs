@@ -34,16 +34,15 @@ impl VecStrategy for RowWise {
         }
     }
 
-    fn unvec(&self, v: &[f64], h: usize) -> Matrix {
+    fn unvec_into(&self, v: &[f64], h: usize, out: &mut Matrix) {
         assert_eq!(v.len(), tri_d(h));
-        let mut l = Matrix::zeros(h, h);
+        out.reset_zeroed(h, h);
         let mut off = 0;
         for i in 0..h {
             let take = i + 1;
-            l.row_mut(i)[..take].copy_from_slice(&v[off..off + take]);
+            out.row_mut(i)[..take].copy_from_slice(&v[off..off + take]);
             off += take;
         }
-        l
     }
 }
 
