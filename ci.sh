@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
-# CI gate: build, test, doc-lint (broken intra-doc links fail), format and
-# clippy checks.
+# CI gate: build, test, quickstart end-to-end smoke, doc-lint (broken
+# intra-doc links fail), format and clippy checks.
 #
 # Usage:
 #   ./ci.sh                 full gate (from the repository root; fully offline)
@@ -24,6 +24,9 @@ cargo build --release
 
 echo "==> cargo test -q"
 cargo test -q
+
+echo "==> cargo run --release --example quickstart (end-to-end smoke gate)"
+cargo run --release --example quickstart
 
 echo "==> cargo doc --no-deps (rustdoc warnings are errors)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -8,8 +8,9 @@
 
 use picholesky::cv::{holdout_error, CvConfig, FoldData, Metric};
 use picholesky::data::folds::kfold;
+use picholesky::data::gram::GramCache;
 use picholesky::data::synthetic::{DatasetKind, SyntheticDataset};
-use picholesky::linalg::cholesky::cholesky_shifted;
+use picholesky::linalg::cholesky::{cholesky_shifted, CholeskyError};
 use picholesky::linalg::triangular::solve_cholesky;
 use picholesky::pichol::mchol::{multilevel_search, MCholParams};
 use picholesky::util::{fmt_secs, logspace, PhaseTimer};
@@ -17,19 +18,21 @@ use picholesky::util::{fmt_secs, logspace, PhaseTimer};
 fn main() -> picholesky::Result<()> {
     let ds = SyntheticDataset::generate(DatasetKind::CoilLike, 600, 128, 3);
     let folds = kfold(ds.n(), 5, 1);
-    let (xt, yt, xv, yv) = folds[0].materialize(&ds.x, &ds.y);
+    // shared-Gram data pipeline: G = XᵀX once, fold Hessian by downdate
+    let gram = GramCache::assemble(&ds.x, &ds.y);
+    let (xv, yv) = folds[0].materialize_val(&ds.x, &ds.y);
     let mut timer = PhaseTimer::new();
-    let data = FoldData::build(xt, yt, xv, yv, &mut timer);
+    let data = FoldData::from_gram(&gram, xv, yv, None, &mut timer);
 
     // the paper's setting: s = 1.5, s0 = 0.0025, centred on the range middle
     let params = MCholParams { s: 1.5, s0: 0.0025 };
     println!("multi-level search: s = {}, s0 = {}", params.s, params.s0);
 
-    let result = multilevel_search(-1.5, params, |lam| {
-        let l = cholesky_shifted(&data.h_mat, lam).expect("PD");
+    let result = multilevel_search(-1.5, params, |lam| -> Result<f64, CholeskyError> {
+        let l = cholesky_shifted(&data.h_mat, lam)?;
         let theta = solve_cholesky(&l, &data.g_vec);
-        holdout_error(&data.xv, &data.yv, &theta, Metric::Rmse)
-    });
+        Ok(holdout_error(&data.xv, &data.yv, &theta, Metric::Rmse))
+    })?;
 
     println!("\nprobe trajectory ({} probes, {} factorizations):", result.probes.len(), result.factorizations);
     for (i, p) in result.probes.iter().enumerate() {
@@ -52,8 +55,15 @@ fn main() -> picholesky::Result<()> {
     let cfg = CvConfig::default();
     let grid = logspace(1e-3, 1.0, cfg.q_grid);
     let mut t2 = PhaseTimer::new();
-    let sweep =
-        picholesky::cv::solvers::sweep(picholesky::cv::solvers::SolverKind::PiChol, &data, &grid, &cfg, &mut t2)?;
+    let mut scratch = picholesky::linalg::Scratch::new();
+    let sweep = picholesky::cv::solvers::sweep(
+        picholesky::cv::solvers::SolverKind::PiChol,
+        &data,
+        &grid,
+        &cfg,
+        &mut scratch,
+        &mut t2,
+    )?;
     println!(
         "\npiCholesky on the same fold: λ = {:.4e} (err {:.5}) with {} exact factorizations in {}",
         sweep.best_lambda,

@@ -15,15 +15,20 @@
 //!   the legacy scalar substitution loop
 //! - `cholesky` — full `chol(H + λI)` at panel width 64 (packed TRSM+SYRK
 //!   path; no legacy counterpart retained, reported packed-only)
+//! - `gram_k5` / `gram_k10` — fold-prep data path at k ∈ {5, 10}: one
+//!   shared-Gram assembly + k downdates (packed) vs k per-fold
+//!   materialize+SYRK builds (reference) — the O(k·nd²) → O(nd²) change
 //! - `sweep` — end-to-end `run_cv` (PiChol, k=3) at n=2d (packed-only)
 
 use std::time::Instant;
 
 use picholesky::cv::solvers::SolverKind;
 use picholesky::cv::{run_cv, CvConfig};
+use picholesky::data::folds::kfold;
+use picholesky::data::gram::GramCache;
 use picholesky::data::synthetic::{DatasetKind, SyntheticDataset};
 use picholesky::linalg::cholesky::{cholesky_blocked, cholesky_in_place};
-use picholesky::linalg::gemm::{reference, syrk_lower, Gemm};
+use picholesky::linalg::gemm::{gemv_t, gram_downdate, reference, syrk_lower, Gemm};
 use picholesky::linalg::matrix::Matrix;
 use picholesky::linalg::triangular::trsm_right_lower_t_inplace;
 use picholesky::testutil::{random_matrix, random_spd};
@@ -143,6 +148,41 @@ fn bench_size(d: usize, reps: usize, rows: &mut Vec<Row>) {
     });
 }
 
+/// The fold-prep data path at n = 2d: shared-Gram assembly + k downdates
+/// (the pipeline) vs k per-fold materialize+SYRK builds (what it replaced).
+fn bench_gram(d: usize, reps: usize, rows: &mut Vec<Row>) {
+    let n = 2 * d;
+    let x = random_matrix(n, d, 0x6A + d as u64);
+    let y: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    for &(k, label) in &[(5usize, "gram_k5"), (10usize, "gram_k10")] {
+        let folds = kfold(n, k, 7);
+        let packed = time_min(reps, || {
+            let gram = GramCache::assemble(&x, &y);
+            let mut h_out = Matrix::zeros(0, 0);
+            let mut g_out = Vec::new();
+            for f in &folds {
+                let (xv, yv) = f.materialize_val(&x, &y);
+                gram_downdate(gram.hessian(), gram.gradient(), &xv, &yv, &mut h_out, &mut g_out);
+                std::hint::black_box(h_out[(d - 1, d - 1)]);
+            }
+        });
+        let refr = time_min(reps, || {
+            for f in &folds {
+                let (xt, yt) = f.materialize_train(&x, &y);
+                let h = syrk_lower(&xt);
+                let g = gemv_t(&xt, &yt);
+                std::hint::black_box((h[(d - 1, d - 1)], g[0]));
+            }
+        });
+        rows.push(Row {
+            kernel: label,
+            d,
+            packed_secs: packed,
+            reference_secs: refr,
+        });
+    }
+}
+
 fn bench_sweep(d: usize, rows: &mut Vec<Row>) {
     let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 2 * d, d, 7);
     let cfg = CvConfig {
@@ -198,6 +238,7 @@ fn main() {
     for &d in &sizes {
         eprintln!("benching d = {d} …");
         bench_size(d, reps, &mut rows);
+        bench_gram(d, reps, &mut rows);
     }
     // end-to-end sweep at the middle size (the trajectory headline number)
     bench_sweep(if smoke { 32 } else { 256 }, &mut rows);

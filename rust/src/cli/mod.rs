@@ -91,6 +91,7 @@ COMMANDS:
                --dataset mnist|coil|caltech101|caltech256  --solver chol|pichol|mchol|svd|tsvd|rsvd|pinrmse
                --h <dim> --n <samples> --folds <k> --grid <q> --g <samples> --degree <r>
                --threads <n|0=auto> --batch <λ per task|0=auto>
+               --chunk-rows <Gram stream block|0=auto>
                --seed <u64> --config <file.toml>
   compare      run all six algorithms on one dataset (Figure 6 row)
                flags as for `cv`

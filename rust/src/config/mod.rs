@@ -208,6 +208,12 @@ impl ExperimentConfig {
         if let Some(v) = doc.get("sweep.batch").and_then(TomlValue::as_usize) {
             cfg.cv.sweep_batch = v;
         }
+        // data-pipeline shape ([data] section; 0 = auto). The knob is
+        // bit-neutral by construction (see `data::gram`), so it needs no
+        // cross-validation against other settings.
+        if let Some(v) = doc.get("data.chunk_rows").and_then(TomlValue::as_usize) {
+            cfg.cv.chunk_rows = v;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -306,6 +312,14 @@ mod tests {
         let cfg = ExperimentConfig::from_doc(&parse_toml("n = 64\n").unwrap()).unwrap();
         assert_eq!(cfg.cv.sweep_threads, 0);
         assert_eq!(cfg.cv.sweep_batch, 0);
+        assert_eq!(cfg.cv.chunk_rows, 0);
+    }
+
+    #[test]
+    fn data_chunk_rows_parses() {
+        let doc = parse_toml("[data]\nchunk_rows = 512\n").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.cv.chunk_rows, 512);
     }
 
     #[test]

@@ -8,7 +8,11 @@
 //! as a work queue and fanned over a [`WorkerPool`]:
 //!
 //! ```text
-//!   SweepPlan ──► stage 1  fold prep      k tasks: materialize + H = XᵀX
+//!   SweepPlan ──► stage 0  shared Gram    ⌈n/chunk⌉ tasks: G = XᵀX, g = Xᵀy
+//!              │           (streamed row blocks, ordered segment fold —
+//!              │            assembled exactly ONCE per dataset)
+//!              ├► stage 1  fold prep      k tasks: gather X_v + downdate
+//!              │           H_f = G − X_vᵀX_v, g_f = g − X_vᵀy_v
 //!              ├► stage 2  anchors        k·g tasks: exact chol(H + λ_s I)
 //!              │           (PiChol only; factors Arc-cached per fold,
 //!              │            fitted into one interpolant per fold)
@@ -20,6 +24,12 @@
 //!
 //! Scheduling policy:
 //!
+//! - **The Gram is global.** Stage 0 assembles `(XᵀX, Xᵀy)` once per run
+//!   ([`GramCache`], pool-parallel over row blocks) and shares it across all
+//!   folds behind one `Arc`; fold prep costs `O(n_v·d²)` per fold — the
+//!   `O(k·n·d²)` of per-fold SYRKs (and the k near-full dataset copies) are
+//!   gone. The training split is gathered only for the SVD-family solvers,
+//!   which need `X` itself.
 //! - **Anchors run first.** Interpolated grid tasks only need the fitted
 //!   interpolant, so the `O(g·d³)` exact factorizations are scheduled as
 //!   their own wave and the `O(r·d²)` interpolation wave starts once per-fold
@@ -58,8 +68,9 @@ use std::time::Instant;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::{default_workers, WorkerPool};
 use crate::cv::solvers::{self, SolverKind};
-use crate::cv::{CvConfig, FoldData, SweepResult};
+use crate::cv::{CvConfig, FoldData, SweepResult, TrainSplit};
 use crate::data::folds::kfold;
+use crate::data::gram::{self, GramCache};
 use crate::data::synthetic::SyntheticDataset;
 use crate::linalg::cholesky::{cholesky_shifted, cholesky_shifted_pooled, CholeskyError};
 use crate::linalg::matrix::Matrix;
@@ -138,7 +149,8 @@ pub struct SweepReport {
     pub wall_secs: f64,
     /// Worker threads the run used.
     pub threads: usize,
-    /// Total tasks executed (fold prep + anchors + grid/fold sweeps).
+    /// Total tasks executed (Gram chunks + fold prep + anchors + grid/fold
+    /// sweeps).
     pub tasks: usize,
 }
 
@@ -208,19 +220,62 @@ impl SweepEngine {
         let mut timer = PhaseTimer::new();
         let mut tasks = 0usize;
 
-        // stage 1: fold prep — materialize serially (borrows the dataset),
-        // build Hessian/gradient in parallel (each task owns its split)
+        // stage 0: the shared Gram — G = XᵀX and g = Xᵀy, assembled exactly
+        // once per dataset (streamed in row blocks over the pool when
+        // workers > 1; serial and pooled assembly are bitwise identical).
+        // For the SVD-family solvers the Hessian itself goes unused, but the
+        // one O(n·d²) assembly keeps FoldData uniform and still undercuts
+        // the k per-fold SYRKs the old path spent on those solvers.
+        let pooled_gram = self.pool.size() >= 2;
+        let gram_chunks = if pooled_gram {
+            gram::chunk_ranges(ds.n(), plan.cv.chunk_rows).len()
+        } else {
+            // the serial path streams one segment at a time and ignores the
+            // chunk knob — count what actually runs
+            gram::chunk_ranges(ds.n(), gram::SEGMENT_ROWS).len()
+        };
+        let gram = timer.time("gram", || {
+            if pooled_gram {
+                GramCache::assemble_pooled(&ds.x, &ds.y, plan.cv.chunk_rows, &self.pool)
+            } else {
+                GramCache::assemble(&ds.x, &ds.y)
+            }
+        });
+        let gram = Arc::new(gram);
+        tasks += gram_chunks;
+        self.metrics.incr("sweep.gram_builds");
+        self.metrics.add("sweep.gram_chunks", gram_chunks as u64);
+
+        // stage 1: fold prep — gather each fold's validation block serially
+        // (borrows the dataset; the training split is gathered only for the
+        // SVD family, which needs X itself), then downdate H_f/g_f from the
+        // shared Gram in parallel (each task owns its gather + an Arc)
         let folds = kfold(ds.n(), plan.cv.k_folds, plan.cv.seed);
-        let splits: Vec<_> = folds.iter().map(|f| f.materialize(&ds.x, &ds.y)).collect();
+        let needs_x = matches!(
+            plan.kind,
+            SolverKind::Svd | SolverKind::TSvd | SolverKind::RSvd
+        );
+        let gathers: Vec<(Matrix, Vec<f64>, Option<TrainSplit>)> = folds
+            .iter()
+            .map(|f| {
+                let (xv, yv) = f.materialize_val(&ds.x, &ds.y);
+                let train = needs_x.then(|| {
+                    let (xt, yt) = f.materialize_train(&ds.x, &ds.y);
+                    TrainSplit { xt, yt }
+                });
+                (xv, yv, train)
+            })
+            .collect();
         type PrepRes = (FoldData, PhaseTimer, f64);
-        let build_jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> PrepRes + Send>> = splits
+        let build_jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> PrepRes + Send>> = gathers
             .into_iter()
-            .map(|(xt, yt, xv, yv)| {
+            .map(|(xv, yv, train)| {
+                let gram = Arc::clone(&gram);
                 let f: Box<dyn FnOnce(&mut Scratch) -> PrepRes + Send> =
                     Box::new(move |_scratch| {
                         let t0 = Instant::now();
                         let mut t = PhaseTimer::new();
-                        let data = FoldData::build(xt, yt, xv, yv, &mut t);
+                        let data = FoldData::from_gram(&gram, xv, yv, train, &mut t);
                         (data, t, t0.elapsed().as_secs_f64())
                     });
                 f
@@ -451,7 +506,9 @@ impl SweepEngine {
 
     /// Fold-granular scheduling for the solvers whose per-fold work is
     /// sequential (MChol's binary search) or front-loaded (the SVD family,
-    /// PINRMSE): one task per fold through the serial [`solvers::sweep`].
+    /// PINRMSE): one task per fold through the serial [`solvers::sweep`],
+    /// fed by the executing worker's [`Scratch`] arena so even the cold-path
+    /// solvers allocate nothing per grid point.
     fn run_fold_level(
         &self,
         plan: &SweepPlan,
@@ -469,10 +526,10 @@ impl SweepEngine {
                 let cfg = plan.cv.clone();
                 let kind = plan.kind;
                 let f: Box<dyn FnOnce(&mut Scratch) -> FoldRes + Send> =
-                    Box::new(move |_scratch| {
+                    Box::new(move |scratch| {
                         let t0 = Instant::now();
                         let mut t = PhaseTimer::new();
-                        let res = solvers::sweep(kind, &fd, &grid, &cfg, &mut t);
+                        let res = solvers::sweep(kind, &fd, &grid, &cfg, scratch, &mut t);
                         (res, t, t0.elapsed().as_secs_f64())
                     });
                 f
@@ -568,11 +625,65 @@ mod tests {
         let rep = run(SolverKind::Chol, 2);
         assert_eq!(rep.fold_results.len(), 5);
         assert_eq!(rep.grid.len(), 50);
-        assert!(rep.timer.get("hessian") > 0.0);
+        assert!(rep.timer.get("gram") > 0.0);
         assert!(rep.timer.get("chol") > 0.0);
         assert!(rep.wall_secs > 0.0);
-        // 5 prep tasks + 5 folds × ⌈50/batch⌉ grid tasks
-        assert!(rep.tasks > 5, "tasks = {}", rep.tasks);
+        // 1+ gram tasks + 5 prep tasks + 5 folds × ⌈50/batch⌉ grid tasks
+        assert!(rep.tasks > 6, "tasks = {}", rep.tasks);
+    }
+
+    /// The tentpole acceptance assertion: fold prep never SYRKs X_train —
+    /// the Gram is assembled exactly once per dataset (one `gram` phase
+    /// invocation) and every fold's Hessian comes from the downdate path
+    /// (one `downdate` invocation per fold, zero `hessian` invocations).
+    #[test]
+    fn gram_assembled_once_and_folds_downdate() {
+        for kind in [SolverKind::Chol, SolverKind::PiChol, SolverKind::Svd] {
+            for threads in [1, 3] {
+                let rep = run(kind, threads);
+                assert_eq!(
+                    rep.timer.count("gram"),
+                    1,
+                    "{kind:?}@{threads}: Gram must be assembled exactly once"
+                );
+                assert_eq!(
+                    rep.timer.count("downdate"),
+                    5,
+                    "{kind:?}@{threads}: one downdate per fold"
+                );
+                assert_eq!(
+                    rep.timer.count("hessian"),
+                    0,
+                    "{kind:?}@{threads}: no per-fold SYRK on X_train may remain"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_rows_knob_does_not_change_results() {
+        // n = 600 spans three accumulation segments, so the chunk plans
+        // genuinely differ between these knob values
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 600, 17, 9);
+        let mut reference: Option<SweepReport> = None;
+        for chunk_rows in [0usize, 7, 64, 600] {
+            let cfg = CvConfig {
+                chunk_rows,
+                ..cfg_with_threads(2)
+            };
+            let plan = SweepPlan::new(&ds, SolverKind::Chol, &cfg);
+            let engine = SweepEngine::new(plan.threads);
+            let rep = engine.run(&ds, &plan).unwrap();
+            if let Some(r) = &reference {
+                for (a, b) in r.fold_results.iter().zip(&rep.fold_results) {
+                    assert_eq!(a.best_lambda, b.best_lambda);
+                    assert_eq!(a.best_error, b.best_error);
+                    assert_eq!(a.errors, b.errors, "chunk_rows={chunk_rows} drifted");
+                }
+            } else {
+                reference = Some(rep);
+            }
+        }
     }
 
     #[test]
@@ -584,6 +695,8 @@ mod tests {
         engine.run(&ds, &plan).unwrap();
         let m = engine.metrics();
         assert_eq!(m.counter("sweep.runs"), 1);
+        assert_eq!(m.counter("sweep.gram_builds"), 1);
+        assert!(m.counter("sweep.gram_chunks") >= 1);
         assert_eq!(m.counter("sweep.prep_tasks"), 5);
         assert_eq!(m.counter("sweep.anchor_tasks"), 5 * 4); // k × g
         assert!(m.counter("sweep.grid_tasks") > 0);

@@ -1,20 +1,25 @@
 //! Cross-validation framework: the paper's §6 experimental machinery.
 //!
-//! Each fold follows the Figure 1 pipeline: materialize the split, build the
-//! Hessian `H = XᵀX` and gradient `g = Xᵀy` once (O(nd²)), then run one of
-//! the six comparative algorithms ([`solvers`]) over the candidate-λ grid and
-//! score each θ on the held-out split. [`run_cv`] plans the fold×λ grid as a
-//! [`SweepPlan`] and executes it on the parallel
-//! [`crate::coordinator::sweep_engine`], then aggregates the per-fold results
-//! with per-phase wall-clock timings — the raw material for Figures 2, 6,
-//! 7-9 and Tables 3-4. Results are bit-identical for every thread count
-//! (see the engine's determinism contract).
+//! The data path is the **shared-Gram pipeline**: `G = XᵀX` and `g = Xᵀy`
+//! are assembled exactly once per dataset ([`crate::data::gram::GramCache`],
+//! streamed in row blocks), and each fold's Hessian/gradient come from the
+//! hold-out downdate `H_f = G − X_vᵀX_v`, `g_f = g − X_vᵀy_v`
+//! ([`FoldData::from_gram`]) — `O(n·d²/k)` per fold instead of the
+//! `O(n·d²)` per-fold SYRK of the literal Figure-1 pipeline. Each fold then
+//! runs one of the six comparative algorithms ([`solvers`]) over the
+//! candidate-λ grid, scoring θ on the held-out split. [`run_cv`] plans the
+//! fold×λ grid as a [`SweepPlan`] and executes it on the parallel
+//! [`crate::coordinator::sweep_engine`], then aggregates the per-fold
+//! results with per-phase wall-clock timings — the raw material for
+//! Figures 2, 6, 7-9 and Tables 3-4. Results are bit-identical for every
+//! thread count (see the engine's determinism contract).
 
 pub mod solvers;
 
 use crate::coordinator::sweep_engine::{SweepEngine, SweepPlan, SweepReport};
+use crate::data::gram::GramCache;
 use crate::data::synthetic::SyntheticDataset;
-use crate::linalg::gemm::{gemv_into, gemv_t, syrk_lower};
+use crate::linalg::gemm::{gemv_into, gemv_t, gram_downdate, syrk_lower};
 use crate::linalg::matrix::Matrix;
 use crate::pichol::mchol::Probe;
 use crate::util::PhaseTimer;
@@ -68,21 +73,70 @@ pub fn holdout_error_with(
     }
 }
 
-/// Everything a solver needs for one fold (Hessian/gradient precomputed and
-/// timed under the `hessian` phase by the runner).
-pub struct FoldData {
+/// A materialized training split — only carried by folds whose solver needs
+/// the design matrix `X` itself (the SVD family); every Hessian-based solver
+/// works from the downdated `(H_f, g_f)` pair alone.
+pub struct TrainSplit {
     pub xt: Matrix,
     pub yt: Vec<f64>,
+}
+
+/// Everything a solver needs for one fold: the gathered validation block,
+/// the fold Hessian/gradient (owned, downdated from the shared Gram on the
+/// fast path), and — only when the solver genuinely needs `X` itself — the
+/// materialized training split.
+pub struct FoldData {
+    /// Gathered validation block.
     pub xv: Matrix,
     pub yv: Vec<f64>,
-    /// `H = XᵀX` over the training split.
+    /// `H_f = X_tᵀX_t` over the training split (downdated:
+    /// `G − X_vᵀX_v`).
     pub h_mat: Matrix,
-    /// `g = Xᵀy` over the training split.
+    /// `g_f = X_tᵀy_t` over the training split (downdated:
+    /// `g − X_vᵀy_v`).
     pub g_vec: Vec<f64>,
+    /// Training split, materialized only for the SVD-family solvers; `None`
+    /// on the Gram-downdate fast path (no near-full dataset copy per fold).
+    pub train: Option<TrainSplit>,
 }
 
 impl FoldData {
-    /// Build from a materialized split, timing the Hessian phase.
+    /// The fast path: derive `(H_f, g_f)` from the shared [`GramCache`] by
+    /// hold-out downdate, timed under the `downdate` phase — `O(n_v·d²)`,
+    /// touching only the validation block. `train` is whatever the solver
+    /// requires (`None` for every Hessian-based algorithm).
+    pub fn from_gram(
+        gram: &GramCache,
+        xv: Matrix,
+        yv: Vec<f64>,
+        train: Option<TrainSplit>,
+        timer: &mut PhaseTimer,
+    ) -> Self {
+        let mut h_mat = Matrix::zeros(0, 0);
+        let mut g_vec = Vec::new();
+        timer.time("downdate", || {
+            gram_downdate(
+                gram.hessian(),
+                gram.gradient(),
+                &xv,
+                &yv,
+                &mut h_mat,
+                &mut g_vec,
+            )
+        });
+        Self {
+            xv,
+            yv,
+            h_mat,
+            g_vec,
+            train,
+        }
+    }
+
+    /// The direct path: build `(H, g)` straight from a materialized split
+    /// with a per-fold SYRK, timed under the `hessian` phase. Kept for
+    /// single-fold drivers (Figure 9, the HLO comparison tests); the sweep
+    /// engine always goes through [`FoldData::from_gram`].
     pub fn build(
         xt: Matrix,
         yt: Vec<f64>,
@@ -93,13 +147,20 @@ impl FoldData {
         let h_mat = timer.time("hessian", || syrk_lower(&xt));
         let g_vec = timer.time("hessian", || gemv_t(&xt, &yt));
         Self {
-            xt,
-            yt,
             xv,
             yv,
             h_mat,
             g_vec,
+            train: Some(TrainSplit { xt, yt }),
         }
+    }
+
+    /// The materialized training split; panics if this fold was prepared on
+    /// the fast path without one (only the SVD family asks).
+    pub fn train_split(&self) -> &TrainSplit {
+        self.train
+            .as_ref()
+            .expect("solver needs the materialized training split, but this fold was prepared on the Gram-downdate fast path")
     }
 }
 
@@ -144,6 +205,13 @@ pub struct CvConfig {
     /// λ grid points per sweep task — the batch shape of the parallel grid
     /// wave (0 = auto: ~4 batches per worker per fold).
     pub sweep_batch: usize,
+    /// Row-block size of the streaming Gram assembly (0 = auto). Snapped up
+    /// to the fixed accumulation grid
+    /// ([`crate::data::gram::SEGMENT_ROWS`]-aligned segments), so any value
+    /// yields bit-identical results — the knob trades scheduling granularity
+    /// against per-task block footprint only. TOML: `[data] chunk_rows`;
+    /// CLI: `--chunk-rows`.
+    pub chunk_rows: usize,
 }
 
 impl Default for CvConfig {
@@ -160,6 +228,7 @@ impl Default for CvConfig {
             metric: Metric::Rmse,
             sweep_threads: 0,
             sweep_batch: 0,
+            chunk_rows: 0,
         }
     }
 }
@@ -294,6 +363,31 @@ mod tests {
         assert!(rep.mean_errors.iter().all(|e| e.is_finite()));
         assert!(rep.best_error > 0.0 && rep.best_error < 2.0);
         assert!(rep.timer.get("chol") > 0.0);
-        assert!(rep.timer.get("hessian") > 0.0);
+        // shared-Gram pipeline: one assembly per run, one downdate per fold,
+        // and no per-fold `hessian` SYRK anywhere
+        assert_eq!(rep.timer.count("gram"), 1);
+        assert_eq!(rep.timer.count("downdate"), 3);
+        assert_eq!(rep.timer.count("hessian"), 0);
+    }
+
+    #[test]
+    fn fold_data_from_gram_matches_direct_build() {
+        use crate::data::kfold;
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 103, 9, 4);
+        let gram = crate::data::gram::GramCache::assemble(&ds.x, &ds.y);
+        let mut t = PhaseTimer::new();
+        for fold in kfold(ds.n(), 5, 1) {
+            let (xt, yt, xv, yv) = fold.materialize(&ds.x, &ds.y);
+            let direct = FoldData::build(xt, yt, xv.clone(), yv.clone(), &mut t);
+            let fast = FoldData::from_gram(&gram, xv, yv, None, &mut t);
+            assert!(fast.h_mat.max_abs_diff(&direct.h_mat) < 1e-10);
+            for (a, b) in fast.g_vec.iter().zip(&direct.g_vec) {
+                assert!((a - b).abs() < 1e-10);
+            }
+            assert!(fast.train.is_none());
+            assert!(direct.train.is_some());
+        }
+        assert_eq!(t.count("downdate"), 5);
+        assert_eq!(t.count("hessian"), 10); // build times H and g separately
     }
 }

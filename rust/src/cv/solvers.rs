@@ -10,14 +10,14 @@
 //! | `RSvd`    | Randomized SVD | Halko sketch, then eq. 11 |
 //! | `Pinrmse` | PINRMSE | interpolate the error curve itself (Figure 10) |
 
-use super::{holdout_error, holdout_error_with, CvConfig, FoldData, Metric, SweepResult};
-use crate::linalg::cholesky::{cholesky_shifted, cholesky_shifted_into, CholeskyError};
+use super::{holdout_error_with, CvConfig, FoldData, Metric, SweepResult};
+use crate::linalg::cholesky::{cholesky_shifted_into, CholeskyError};
 use crate::pichol::Interpolant;
 use crate::linalg::lanczos::lanczos_svd;
 use crate::linalg::randomized::randomized_svd;
 use crate::linalg::scratch::Scratch;
 use crate::linalg::svd::{jacobi_svd, Svd};
-use crate::linalg::triangular::{solve_cholesky, solve_cholesky_into};
+use crate::linalg::triangular::solve_cholesky_into;
 use crate::pichol::{self, FitOptions};
 use crate::util::{subsample_indices, PhaseTimer};
 use crate::vectorize::{Recursive, VecStrategy};
@@ -73,22 +73,28 @@ impl SolverKind {
     }
 }
 
-/// Dispatch one fold's λ sweep to the chosen algorithm.
+/// Dispatch one fold's λ sweep to the chosen algorithm. `scratch` is the
+/// caller's arena (the executing worker's, on the engine's fold-level path)
+/// — every solver draws its factor/solve/prediction buffers from it, so no
+/// solver allocates per grid point.
 pub fn sweep(
     kind: SolverKind,
     data: &FoldData,
     grid: &[f64],
     cfg: &CvConfig,
+    scratch: &mut Scratch,
     timer: &mut PhaseTimer,
 ) -> crate::Result<SweepResult> {
     match kind {
-        SolverKind::Chol => sweep_chol(data, grid, cfg, timer),
-        SolverKind::PiChol => sweep_pichol(data, grid, cfg, timer),
-        SolverKind::MChol => sweep_mchol(data, grid, cfg, timer),
-        SolverKind::Svd => sweep_svd_like(data, grid, cfg, timer, SvdFlavor::Full),
-        SolverKind::TSvd => sweep_svd_like(data, grid, cfg, timer, SvdFlavor::Truncated),
-        SolverKind::RSvd => sweep_svd_like(data, grid, cfg, timer, SvdFlavor::Randomized),
-        SolverKind::Pinrmse => sweep_pinrmse(data, grid, cfg, timer),
+        SolverKind::Chol => sweep_chol(data, grid, cfg, scratch, timer),
+        SolverKind::PiChol => sweep_pichol(data, grid, cfg, scratch, timer),
+        SolverKind::MChol => sweep_mchol(data, grid, cfg, scratch, timer),
+        SolverKind::Svd => sweep_svd_like(data, grid, cfg, scratch, timer, SvdFlavor::Full),
+        SolverKind::TSvd => sweep_svd_like(data, grid, cfg, scratch, timer, SvdFlavor::Truncated),
+        SolverKind::RSvd => {
+            sweep_svd_like(data, grid, cfg, scratch, timer, SvdFlavor::Randomized)
+        }
+        SolverKind::Pinrmse => sweep_pinrmse(data, grid, cfg, scratch, timer),
     }
 }
 
@@ -181,12 +187,12 @@ fn sweep_chol(
     data: &FoldData,
     grid: &[f64],
     cfg: &CvConfig,
+    scratch: &mut Scratch,
     timer: &mut PhaseTimer,
 ) -> crate::Result<SweepResult> {
-    let mut scratch = Scratch::new();
     let mut errors = Vec::with_capacity(grid.len());
     for &lam in grid {
-        errors.push(eval_exact_point(data, lam, cfg.metric, &mut scratch, timer)?);
+        errors.push(eval_exact_point(data, lam, cfg.metric, scratch, timer)?);
     }
     let (bl, be) = best_of(grid, &errors);
     Ok(SweepResult {
@@ -202,6 +208,7 @@ fn sweep_pichol(
     data: &FoldData,
     grid: &[f64],
     cfg: &CvConfig,
+    scratch: &mut Scratch,
     timer: &mut PhaseTimer,
 ) -> crate::Result<SweepResult> {
     let strategy = pichol_strategy();
@@ -219,7 +226,6 @@ fn sweep_pichol(
         timer,
     )?;
 
-    let mut scratch = Scratch::new();
     let mut errors = Vec::with_capacity(grid.len());
     for &lam in grid {
         errors.push(eval_interp_point(
@@ -228,7 +234,7 @@ fn sweep_pichol(
             &strategy,
             lam,
             cfg.metric,
-            &mut scratch,
+            scratch,
             timer,
         ));
     }
@@ -247,6 +253,7 @@ fn sweep_mchol(
     data: &FoldData,
     grid: &[f64],
     cfg: &CvConfig,
+    scratch: &mut Scratch,
     timer: &mut PhaseTimer,
 ) -> crate::Result<SweepResult> {
     // centre the search on the middle of the grid range (log scale); the
@@ -256,14 +263,30 @@ fn sweep_mchol(
     let params = crate::pichol::mchol::MCholParams { s, s0: 0.0025 };
 
     let t0 = std::time::Instant::now();
-    let result = crate::pichol::mchol::multilevel_search(c, params, |lam| {
-        // no shift-and-retry here: MChol's probe range is centred on the
-        // grid, bounded away from λ=0, so indefiniteness is a precondition
-        // violation rather than a recoverable state (see CholeskyError docs)
-        let l = cholesky_shifted(&data.h_mat, lam).expect("H + λI not PD in MChol");
-        let theta = solve_cholesky(&l, &data.g_vec);
-        holdout_error(&data.xv, &data.yv, &theta, cfg.metric)
-    });
+    // an indefinite probe propagates as CholeskyError and fails the sweep
+    // cleanly (shift-and-retry happens at the configuration level — see the
+    // CholeskyError docs); probe buffers come from the worker's arena, so
+    // the search allocates nothing per probe
+    let result = crate::pichol::mchol::multilevel_search(
+        c,
+        params,
+        |lam| -> Result<f64, CholeskyError> {
+            cholesky_shifted_into(&data.h_mat, lam, &mut scratch.factor)?;
+            solve_cholesky_into(
+                &scratch.factor,
+                &data.g_vec,
+                &mut scratch.work,
+                &mut scratch.theta,
+            );
+            Ok(holdout_error_with(
+                &data.xv,
+                &data.yv,
+                &scratch.theta,
+                cfg.metric,
+                &mut scratch.pred,
+            ))
+        },
+    )?;
     timer.add("chol", t0.elapsed().as_secs_f64());
 
     // scatter probes onto the grid for the mean-curve plots
@@ -300,30 +323,36 @@ enum SvdFlavor {
 
 /// The three SVD baselines share the eq. 11 sweep; they differ only in how
 /// the factorization is obtained (and how much of the spectrum it carries).
+/// These are the only solvers that touch `X` itself, so they require the
+/// fold's materialized [`super::TrainSplit`].
 fn sweep_svd_like(
     data: &FoldData,
     grid: &[f64],
     cfg: &CvConfig,
+    scratch: &mut Scratch,
     timer: &mut PhaseTimer,
     flavor: SvdFlavor,
 ) -> crate::Result<SweepResult> {
-    let h = data.xt.cols();
+    let split = data.train_split();
+    let h = split.xt.cols();
     let k = ((h as f64 * cfg.tsvd_rank_frac).round() as usize).clamp(1, h);
     let svd: Svd = match flavor {
-        SvdFlavor::Full => timer.time("svd", || jacobi_svd(&data.xt)),
-        SvdFlavor::Truncated => timer.time("svd", || lanczos_svd(&data.xt, k, 10, cfg.seed)),
+        SvdFlavor::Full => timer.time("svd", || jacobi_svd(&split.xt)),
+        SvdFlavor::Truncated => timer.time("svd", || lanczos_svd(&split.xt, k, 10, cfg.seed)),
         SvdFlavor::Randomized => {
             let (p, q) = cfg.rsvd_params;
-            timer.time("svd", || randomized_svd(&data.xt, k, p, q, cfg.seed))
+            timer.time("svd", || randomized_svd(&split.xt, k, p, q, cfg.seed))
         }
     };
-    let uty = timer.time("svd", || svd.project_y(&data.yt));
+    let uty = timer.time("svd", || svd.project_y(&split.yt));
 
     let mut errors = Vec::with_capacity(grid.len());
     for &lam in grid {
-        let theta = timer.time("solve", || svd.ridge_solve(&uty, lam));
+        timer.time("solve", || {
+            svd.ridge_solve_into(&uty, lam, &mut scratch.work, &mut scratch.theta)
+        });
         let e = timer.time("holdout", || {
-            holdout_error(&data.xv, &data.yv, &theta, cfg.metric)
+            holdout_error_with(&data.xv, &data.yv, &scratch.theta, cfg.metric, &mut scratch.pred)
         });
         errors.push(e);
     }
@@ -342,16 +371,26 @@ fn sweep_pinrmse(
     data: &FoldData,
     grid: &[f64],
     cfg: &CvConfig,
+    scratch: &mut Scratch,
     timer: &mut PhaseTimer,
 ) -> crate::Result<SweepResult> {
     let sample_idx = subsample_indices(grid.len(), cfg.g_samples);
     let sample_lams: Vec<f64> = sample_idx.iter().map(|&i| grid[i]).collect();
     let mut sample_errs = Vec::with_capacity(sample_lams.len());
     for &lam in &sample_lams {
-        let l = timer.time("chol", || cholesky_shifted(&data.h_mat, lam))?;
-        let theta = timer.time("solve", || solve_cholesky(&l, &data.g_vec));
+        timer.time("chol", || {
+            cholesky_shifted_into(&data.h_mat, lam, &mut scratch.factor)
+        })?;
+        timer.time("solve", || {
+            solve_cholesky_into(
+                &scratch.factor,
+                &data.g_vec,
+                &mut scratch.work,
+                &mut scratch.theta,
+            )
+        });
         let e = timer.time("holdout", || {
-            holdout_error(&data.xv, &data.yv, &theta, cfg.metric)
+            holdout_error_with(&data.xv, &data.yv, &scratch.theta, cfg.metric, &mut scratch.pred)
         });
         sample_errs.push(e);
     }

@@ -30,22 +30,41 @@ pub fn kfold(n: usize, k: usize, seed: u64) -> Vec<Fold> {
     folds
 }
 
+/// Gather the rows of `x`/`y` named by `idx` into a fresh owned split.
+pub fn gather_rows(idx: &[usize], x: &Matrix, y: &[f64]) -> (Matrix, Vec<f64>) {
+    let h = x.cols();
+    let mut xm = Matrix::zeros(idx.len(), h);
+    let mut ym = Vec::with_capacity(idx.len());
+    for (r, &i) in idx.iter().enumerate() {
+        xm.row_mut(r).copy_from_slice(x.row(i));
+        ym.push(y[i]);
+    }
+    (xm, ym)
+}
+
 impl Fold {
     /// Materialize (X_train, y_train, X_val, y_val) for this fold.
+    ///
+    /// On the shared-Gram pipeline this is the *slow* path: the sweep engine
+    /// gathers only the validation block ([`Fold::materialize_val`]) and
+    /// derives the fold Hessian by downdating the global Gram
+    /// ([`crate::data::gram::GramCache`]); the training split is gathered
+    /// only for solvers that need `X` itself (the SVD family).
     pub fn materialize(&self, x: &Matrix, y: &[f64]) -> (Matrix, Vec<f64>, Matrix, Vec<f64>) {
-        let h = x.cols();
-        let gather = |idx: &[usize]| {
-            let mut xm = Matrix::zeros(idx.len(), h);
-            let mut ym = Vec::with_capacity(idx.len());
-            for (r, &i) in idx.iter().enumerate() {
-                xm.row_mut(r).copy_from_slice(x.row(i));
-                ym.push(y[i]);
-            }
-            (xm, ym)
-        };
-        let (xt, yt) = gather(&self.train);
-        let (xv, yv) = gather(&self.val);
+        let (xt, yt) = self.materialize_train(x, y);
+        let (xv, yv) = self.materialize_val(x, y);
         (xt, yt, xv, yv)
+    }
+
+    /// Gather only the training split (X_train, y_train).
+    pub fn materialize_train(&self, x: &Matrix, y: &[f64]) -> (Matrix, Vec<f64>) {
+        gather_rows(&self.train, x, y)
+    }
+
+    /// Gather only the validation split (X_val, y_val) — all a fold needs on
+    /// the Gram-downdate fast path.
+    pub fn materialize_val(&self, x: &Matrix, y: &[f64]) -> (Matrix, Vec<f64>) {
+        gather_rows(&self.val, x, y)
     }
 }
 

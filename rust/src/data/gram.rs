@@ -1,0 +1,379 @@
+//! The shared-Gram data pipeline: assemble `G = XᵀX` and `g = Xᵀy` exactly
+//! once per dataset, streaming rows in blocks.
+//!
+//! ## Why
+//!
+//! The Figure-1 pipeline used to rebuild `H = X_tᵀX_t` from scratch for
+//! every fold — `O(k·n·d²)` of Gram work plus `k` near-full copies of the
+//! dataset. Standard hold-out algebra collapses that: with one global Gram
+//! `G = XᵀX`, each fold's Hessian is the cheap **downdate**
+//! `H_f = G − X_vᵀX_v` (and `g_f = g − X_vᵀy_v`), touching only the small
+//! validation block — `O(n·d²/k)` per fold, `O(n·d²)` total. The assembly
+//! itself streams `X` in row blocks, so only one block (not the dataset)
+//! needs to be resident per task: the seam an out-of-core / sharded backend
+//! plugs into.
+//!
+//! ## Determinism contract — why the streamed Gram is bitwise exact
+//!
+//! The packed kernel ([`crate::linalg::kernel`]) chunks its `k` extent at
+//! absolute `KC`-multiples (`0..KC, KC..2KC, …`), accumulates each chunk
+//! into a fresh register tile in ascending `k` order, and folds chunk
+//! partials into the output in ascending chunk order (`Set` first, `+=`
+//! after). The streaming accumulator reproduces *exactly that schedule* from
+//! outside the kernel: row **segments are aligned to the same global
+//! `KC`-multiples** ([`SEGMENT_ROWS`] `==` [`kernel::KC`]), each segment's
+//! partial is one packed SYRK whose `k` extent fits in a single internal
+//! chunk (so its bits equal the corresponding chunk tile of a full-extent
+//! call), and the reduction folds segment partials **in ascending segment
+//! order** — first segment copied, later ones `+=`, the same scalar ops in
+//! the same order as the kernel's own fold. Consequences, pinned by tests:
+//!
+//! - `GramCache` assembly is **bitwise identical to a single
+//!   [`syrk_lower`]** over the whole dataset;
+//! - it is bitwise independent of the `chunk_rows` knob (chunks snap to
+//!   whole segments, and the reduction is per *segment*, not per chunk) and
+//!   of the worker count (any worker may compute any segment — a segment's
+//!   bits are a pure function of its rows — and
+//!   [`WorkerPool::map_scratch`] returns results in input order, so the
+//!   fold order never depends on scheduling).
+//!
+//! The gradient `g = Xᵀy` uses the same fixed per-segment fold (its own
+//! schedule, a pure function of `n` alone): bitwise stable across chunk
+//! sizes and worker counts, and within ordinary rounding of a monolithic
+//! [`gemv_t`].
+//!
+//! The per-fold consumers are the downdate kernels
+//! ([`crate::linalg::gemm::gram_downdate`] /
+//! [`crate::linalg::gemm::syrk_lower_downdate_into`]) wired up by
+//! [`crate::cv::FoldData::from_gram`] and scheduled by the sweep engine's
+//! fold-prep wave.
+
+use crate::coordinator::pool::WorkerPool;
+use crate::linalg::gemm::{gemv_t, syrk_lower, syrk_lower_bands_into};
+use crate::linalg::kernel::{self, Acc};
+use crate::linalg::matrix::Matrix;
+use crate::linalg::scratch::Scratch;
+
+/// Row-segment length of the streaming accumulator — equal to the packed
+/// kernel's `KC` so every segment is exactly one internal k-chunk of a
+/// full-extent SYRK (the keystone of the bitwise-exactness argument above).
+pub const SEGMENT_ROWS: usize = kernel::KC;
+
+/// The dataset-global Gram pair: `G = XᵀX` (full symmetric) and `g = Xᵀy`,
+/// assembled once and shared (behind an `Arc`) by every fold's downdate.
+pub struct GramCache {
+    h: Matrix,
+    g: Vec<f64>,
+    n: usize,
+}
+
+/// Resolve the `chunk_rows` knob: `0` = auto (one segment per task); any
+/// other value is rounded **up** to a whole number of [`SEGMENT_ROWS`]
+/// segments, so chunk boundaries always land on the fixed accumulation
+/// grid and the knob can never perturb a result bit.
+pub fn effective_chunk_rows(chunk_rows: usize) -> usize {
+    if chunk_rows == 0 {
+        SEGMENT_ROWS
+    } else {
+        chunk_rows.div_ceil(SEGMENT_ROWS) * SEGMENT_ROWS
+    }
+}
+
+/// The task plan: contiguous `[lo, hi)` row ranges, one per pool task, each
+/// covering whole segments of the fixed accumulation grid.
+pub fn chunk_ranges(n: usize, chunk_rows: usize) -> Vec<(usize, usize)> {
+    let eff = effective_chunk_rows(chunk_rows);
+    (0..n)
+        .step_by(eff)
+        .map(|lo| (lo, (lo + eff).min(n)))
+        .collect()
+}
+
+/// One segment's Gram contribution over global rows `[lo, hi)` of `x`:
+/// lower-triangle SYRK bands (k extent ≤ [`SEGMENT_ROWS`] — a single kernel
+/// chunk) plus the matching `Xᵀy` slice. `ph`/`pg` are fully overwritten.
+fn segment_partial_into(
+    x: &Matrix,
+    y: &[f64],
+    lo: usize,
+    hi: usize,
+    ph: &mut Matrix,
+    pg: &mut [f64],
+) {
+    debug_assert!(hi - lo <= SEGMENT_ROWS);
+    syrk_lower_bands_into(x, lo, hi, ph, Acc::Set);
+    pg.fill(0.0);
+    for i in lo..hi {
+        let yi = y[i];
+        for (o, &xij) in pg.iter_mut().zip(x.row(i)) {
+            *o += yi * xij;
+        }
+    }
+}
+
+/// The ordered reduction: fold per-segment partials into the running
+/// accumulators in ascending segment order (copy the first, `+=` the rest —
+/// the same op sequence as the packed kernel's internal chunk fold).
+struct GramReducer {
+    h: Matrix,
+    g: Vec<f64>,
+    seen: usize,
+}
+
+impl GramReducer {
+    fn new(hdim: usize) -> Self {
+        Self {
+            h: Matrix::zeros(hdim, hdim),
+            g: vec![0.0; hdim],
+            seen: 0,
+        }
+    }
+
+    fn fold(&mut self, ph: &Matrix, pg: &[f64]) {
+        if self.seen == 0 {
+            self.h.copy_from(ph);
+            self.g.copy_from_slice(pg);
+        } else {
+            for (d, &s) in self.h.as_mut_slice().iter_mut().zip(ph.as_slice()) {
+                *d += s;
+            }
+            for (d, &s) in self.g.iter_mut().zip(pg) {
+                *d += s;
+            }
+        }
+        self.seen += 1;
+    }
+
+    fn finish(mut self, n: usize) -> GramCache {
+        self.h.mirror_lower();
+        GramCache {
+            h: self.h,
+            g: self.g,
+            n,
+        }
+    }
+}
+
+impl GramCache {
+    /// Serial streaming assembly: one pass over `X` in [`SEGMENT_ROWS`]
+    /// blocks, ordered fold. Bitwise identical to [`Self::assemble_pooled`]
+    /// at any chunk size / worker count, and to a monolithic
+    /// [`syrk_lower`] of the whole dataset.
+    pub fn assemble(x: &Matrix, y: &[f64]) -> GramCache {
+        assert_eq!(x.rows(), y.len(), "dataset shape mismatch");
+        let hdim = x.cols();
+        let mut red = GramReducer::new(hdim);
+        let mut ph = Matrix::zeros(hdim, hdim);
+        let mut pg = vec![0.0; hdim];
+        for (lo, hi) in chunk_ranges(x.rows(), SEGMENT_ROWS) {
+            segment_partial_into(x, y, lo, hi, &mut ph, &mut pg);
+            red.fold(&ph, &pg);
+        }
+        red.finish(x.rows())
+    }
+
+    /// Pool-parallel streaming assembly: each task owns a gathered row
+    /// block of `ceil(chunk_rows / SEGMENT_ROWS)` segments and returns its
+    /// per-segment partials; the coordinating thread folds them in
+    /// ascending segment order. Tasks are dispatched in **waves of one
+    /// chunk per worker** and each wave is folded before the next is
+    /// gathered, so peak residency is bounded by `workers` row blocks plus
+    /// their partials — never the whole dataset (the streaming claim an
+    /// out-of-core backend inherits). See the module docs for why the
+    /// result is bitwise independent of both knobs.
+    pub fn assemble_pooled(
+        x: &Matrix,
+        y: &[f64],
+        chunk_rows: usize,
+        pool: &WorkerPool,
+    ) -> GramCache {
+        assert_eq!(x.rows(), y.len(), "dataset shape mismatch");
+        let hdim = x.cols();
+        type ChunkOut = Vec<(Matrix, Vec<f64>)>;
+        let ranges = chunk_ranges(x.rows(), chunk_rows);
+        let mut red = GramReducer::new(hdim);
+        for wave in ranges.chunks(pool.size().max(1)) {
+            let jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> ChunkOut + Send>> = wave
+                .iter()
+                .map(|&(lo, hi)| {
+                    // stream: gather this task's row block; the job owns it
+                    let block = x.slice(lo, hi, 0, hdim);
+                    let yb = y[lo..hi].to_vec();
+                    let f: Box<dyn FnOnce(&mut Scratch) -> ChunkOut + Send> =
+                        Box::new(move |_scratch| {
+                            let rows = block.rows();
+                            (0..rows)
+                                .step_by(SEGMENT_ROWS)
+                                .map(|slo| {
+                                    let shi = (slo + SEGMENT_ROWS).min(rows);
+                                    let mut ph = Matrix::zeros(hdim, hdim);
+                                    let mut pg = vec![0.0; hdim];
+                                    segment_partial_into(
+                                        &block, &yb, slo, shi, &mut ph, &mut pg,
+                                    );
+                                    (ph, pg)
+                                })
+                                .collect()
+                        });
+                    f
+                })
+                .collect();
+            // map_scratch returns task results in input order, waves run in
+            // range order, and segments within a task are ascending → the
+            // fold is globally ascending
+            for chunk in pool.map_scratch(jobs) {
+                for (ph, pg) in &chunk {
+                    red.fold(ph, pg);
+                }
+            }
+        }
+        red.finish(x.rows())
+    }
+
+    /// The global Gram `G = XᵀX` (full symmetric).
+    pub fn hessian(&self) -> &Matrix {
+        &self.h
+    }
+
+    /// The global gradient `g = Xᵀy`.
+    pub fn gradient(&self) -> &[f64] {
+        &self.g
+    }
+
+    /// Rows of the dataset the cache was assembled from.
+    pub fn n_rows(&self) -> usize {
+        self.n
+    }
+
+    /// Consume into `(G, g)` (the Figure-2 pipeline measures these
+    /// directly).
+    pub fn into_parts(self) -> (Matrix, Vec<f64>) {
+        (self.h, self.g)
+    }
+}
+
+/// Convenience: the full-dataset reference pair `(XᵀX, Xᵀy)` via the
+/// monolithic kernels — the oracle the streamed assembly is tested against.
+pub fn reference_gram(x: &Matrix, y: &[f64]) -> (Matrix, Vec<f64>) {
+    (syrk_lower(x), gemv_t(x, y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::random_matrix;
+
+    fn dataset(n: usize, h: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let x = random_matrix(n, h, seed);
+        let y: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn chunk_ranges_cover_and_align() {
+        for &(n, chunk) in &[(1000, 0), (1000, 7), (1000, 64), (1000, 1000), (3, 0), (513, 512)] {
+            let ranges = chunk_ranges(n, chunk);
+            assert_eq!(ranges.first().unwrap().0, 0);
+            assert_eq!(ranges.last().unwrap().1, n);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "ranges must tile contiguously");
+            }
+            for &(lo, _) in &ranges {
+                assert_eq!(lo % SEGMENT_ROWS, 0, "chunk starts must be segment-aligned");
+            }
+        }
+        assert!(chunk_ranges(0, 0).is_empty());
+    }
+
+    #[test]
+    fn streamed_gram_is_bitwise_the_monolithic_syrk() {
+        // the keystone: segment-aligned streaming reproduces the packed
+        // kernel's own internal chunk fold, bit for bit — across sizes that
+        // are below, at, and past the KC boundary
+        for &(n, h) in &[(37, 9), (SEGMENT_ROWS, 17), (SEGMENT_ROWS + 3, 17), (700, 33)] {
+            let (x, y) = dataset(n, h, 0x6AA + n as u64);
+            let cache = GramCache::assemble(&x, &y);
+            let (href, gref) = reference_gram(&x, &y);
+            assert_eq!(
+                cache.hessian().as_slice(),
+                href.as_slice(),
+                "streamed Gram must be bitwise identical to syrk_lower at n={n} h={h}"
+            );
+            // the gradient has its own fixed fold — rounding-level equal
+            for (a, b) in cache.gradient().iter().zip(&gref) {
+                assert!((a - b).abs() < 1e-11, "n={n} h={h}: {a} vs {b}");
+            }
+            assert_eq!(cache.n_rows(), n);
+        }
+    }
+
+    #[test]
+    fn assembly_bitwise_identical_across_chunk_sizes_and_worker_counts() {
+        // the satellite acceptance grid: chunks {7, 64, n} × workers {1, 2, 4}
+        let n = 700;
+        let (x, y) = dataset(n, 21, 0xC0FFEE);
+        let serial = GramCache::assemble(&x, &y);
+        for workers in [1usize, 2, 4] {
+            let pool = WorkerPool::new(workers);
+            for chunk in [7usize, 64, n] {
+                let pooled = GramCache::assemble_pooled(&x, &y, chunk, &pool);
+                assert_eq!(
+                    pooled.hessian().as_slice(),
+                    serial.hessian().as_slice(),
+                    "Gram bits drifted at chunk={chunk} workers={workers}"
+                );
+                assert_eq!(
+                    pooled.gradient(),
+                    serial.gradient(),
+                    "gradient bits drifted at chunk={chunk} workers={workers}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric() {
+        let (x, y) = dataset(130, 11, 5);
+        let cache = GramCache::assemble(&x, &y);
+        let h = cache.hessian();
+        for i in 0..11 {
+            for j in 0..11 {
+                assert_eq!(h[(i, j)], h[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn downdate_agrees_with_direct_fold_hessians_on_odd_folds() {
+        use crate::data::folds::kfold;
+        use crate::linalg::gemm::gram_downdate;
+        // n not divisible by k, including k == n (single-row validation)
+        for &(n, k) in &[(103usize, 5usize), (10, 10), (67, 4)] {
+            let (x, y) = dataset(n, 13, 0xF01D + n as u64);
+            let cache = GramCache::assemble(&x, &y);
+            let mut h_out = Matrix::zeros(0, 0);
+            let mut g_out = Vec::new();
+            for fold in kfold(n, k, 3) {
+                let (xt, yt) = fold.materialize_train(&x, &y);
+                let (xv, yv) = fold.materialize_val(&x, &y);
+                gram_downdate(
+                    cache.hessian(),
+                    cache.gradient(),
+                    &xv,
+                    &yv,
+                    &mut h_out,
+                    &mut g_out,
+                );
+                let (hd, gd) = reference_gram(&xt, &yt);
+                assert!(
+                    h_out.max_abs_diff(&hd) < 1e-10,
+                    "H_f mismatch at n={n} k={k}: {:.2e}",
+                    h_out.max_abs_diff(&hd)
+                );
+                for (a, b) in g_out.iter().zip(&gd) {
+                    assert!((a - b).abs() < 1e-10, "g_f mismatch at n={n} k={k}");
+                }
+            }
+        }
+    }
+}

@@ -11,11 +11,15 @@
 //! every algorithm under test touches the data only through `H = XᵀX` and
 //! `g = Xᵀy`). [`features`] implements the Kar–Karnick map itself — the same
 //! construction the paper runs, not a stand-in. [`folds`] does the k-fold
-//! splitting.
+//! splitting, and [`gram`] is the shared-Gram pipeline: `XᵀX`/`Xᵀy`
+//! assembled once per dataset (streamed in row blocks, bitwise-deterministic
+//! reduction), from which every fold's Hessian is derived by downdate.
 
 pub mod features;
 pub mod folds;
+pub mod gram;
 pub mod synthetic;
 
 pub use folds::{kfold, Fold};
+pub use gram::GramCache;
 pub use synthetic::{DatasetKind, SyntheticDataset};

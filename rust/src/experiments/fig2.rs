@@ -5,9 +5,9 @@
 //! The paper's point: once `n < k·q·d`, the k·q factorizations dominate —
 //! which is exactly the regime piCholesky attacks.
 
+use crate::data::gram::GramCache;
 use crate::data::synthetic::{DatasetKind, SyntheticDataset};
 use crate::linalg::cholesky::cholesky_shifted;
-use crate::linalg::gemm::{gemv_t, syrk_lower};
 use crate::linalg::triangular::solve_cholesky;
 use crate::util::{logspace, timed};
 
@@ -39,11 +39,10 @@ pub fn measure_cell(n: usize, h: usize, q: usize, seed: u64) -> Split {
     let ds = SyntheticDataset::generate(DatasetKind::MnistLike, n, h, seed);
     let grid = logspace(1e-3, 1.0, q);
 
-    let ((h_mat, g_vec), hessian_s) = timed(|| {
-        let hm = syrk_lower(&ds.x);
-        let gv = gemv_t(&ds.x, &ds.y);
-        (hm, gv)
-    });
+    // the production data path: one streamed Gram assembly (bitwise equal
+    // to a monolithic syrk_lower + gemv_t — see data::gram)
+    let (gram, hessian_s) = timed(|| GramCache::assemble(&ds.x, &ds.y));
+    let (h_mat, g_vec) = gram.into_parts();
 
     let mut chol_sweep_s = 0.0;
     let mut other_s = 0.0;

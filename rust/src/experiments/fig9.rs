@@ -9,8 +9,9 @@
 use crate::cv::solvers::SolverKind;
 use crate::cv::{holdout_error, CvConfig, FoldData};
 use crate::data::folds::kfold;
+use crate::data::gram::GramCache;
 use crate::data::synthetic::{DatasetKind, SyntheticDataset};
-use crate::linalg::cholesky::cholesky_shifted;
+use crate::linalg::cholesky::{cholesky_shifted, CholeskyError};
 use crate::linalg::triangular::solve_cholesky;
 use crate::pichol::{fit, FitOptions};
 use crate::util::{logspace, subsample_indices, PhaseTimer};
@@ -111,12 +112,13 @@ fn mchol_trajectory(data: &FoldData, grid: &[f64], opt: f64, cfg: &CvConfig) -> 
     let result = crate::pichol::mchol::multilevel_search(
         c,
         crate::pichol::mchol::MCholParams { s, s0: 0.0025 },
-        |lam| {
-            let l = cholesky_shifted(&data.h_mat, lam).expect("PD");
+        |lam| -> Result<f64, CholeskyError> {
+            let l = cholesky_shifted(&data.h_mat, lam)?;
             let th = solve_cholesky(&l, &data.g_vec);
-            holdout_error(&data.xv, &data.yv, &th, cfg.metric)
+            Ok(holdout_error(&data.xv, &data.yv, &th, cfg.metric))
         },
-    );
+    )
+    .expect("H + λI not PD inside the Figure 9 probe range");
     let mut best = (result.probes[0].lambda, f64::INFINITY);
     let mut points = Vec::new();
     for p in &result.probes {
@@ -137,9 +139,11 @@ pub fn run(kind: DatasetKind, n: usize, h: usize, cfg: &CvConfig, seed: u64) -> 
     let (lo, hi) = cfg.lambda_range.unwrap_or_else(|| kind.lambda_range());
     let grid = logspace(lo, hi, cfg.q_grid);
     let folds = kfold(ds.n(), cfg.k_folds, cfg.seed);
-    let (xt, yt, xv, yv) = folds[0].materialize(&ds.x, &ds.y);
+    // the shared-Gram pipeline, single-fold edition: assemble once, downdate
+    let gram = GramCache::assemble(&ds.x, &ds.y);
+    let (xv, yv) = folds[0].materialize_val(&ds.x, &ds.y);
     let mut timer = PhaseTimer::new();
-    let data = FoldData::build(xt, yt, xv, yv, &mut timer);
+    let data = FoldData::from_gram(&gram, xv, yv, None, &mut timer);
 
     let opt = reference_lambda(&data, &grid, cfg);
     let trajectories = vec![

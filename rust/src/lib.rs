@@ -22,13 +22,15 @@
 //! - **L3** — this crate: the cross-validation coordinator ([`coordinator`],
 //!   [`cv`]) with its parallel fold×λ sweep engine
 //!   ([`coordinator::sweep_engine`]: anchors-first scheduling over a worker
-//!   pool, bit-identical results at any thread count), the native
-//!   Algorithm-1 implementation ([`pichol`]), the LAPACK-like substrate the
-//!   paper assumes ([`linalg`], including a pool-tiled blocked Cholesky),
-//!   the §5 triangular vectorization strategies ([`vectorize`]), dataset
-//!   synthesis and Kar–Karnick random feature maps ([`data`]), and the PJRT
-//!   runtime that loads the AOT artifacts ([`runtime`] — a graceful stub
-//!   unless built with `--features pjrt`).
+//!   pool, bit-identical results at any thread count), the shared-Gram data
+//!   pipeline ([`data::gram`]: `XᵀX` assembled once per dataset, per-fold
+//!   Hessians by hold-out downdate), the native Algorithm-1 implementation
+//!   ([`pichol`]), the LAPACK-like substrate the paper assumes ([`linalg`],
+//!   including a pool-tiled blocked Cholesky), the §5 triangular
+//!   vectorization strategies ([`vectorize`]), dataset synthesis and
+//!   Kar–Karnick random feature maps ([`data`]), and the PJRT runtime that
+//!   loads the AOT artifacts ([`runtime`] — a graceful stub unless built
+//!   with `--features pjrt`).
 //!
 //! ## Quickstart
 //!

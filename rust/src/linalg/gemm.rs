@@ -192,46 +192,114 @@ pub fn gemv_t(a: &Matrix, x: &[f64]) -> Vec<f64> {
 /// covering rows `j0..h` of the lower triangle.
 const SYRK_BAND: usize = 48;
 
-/// Symmetric rank-k update: `C = XᵀX` (the Hessian build, Figure 1 step 2).
-/// Computed band-by-band over the lower triangle through the packed engine —
-/// only rows at or below each column band are formed, then mirrored, keeping
-/// LAPACK `syrk`'s ~2× saving over a plain gemm.
-pub fn syrk_lower(x: &Matrix) -> Matrix {
-    let (n, h) = (x.rows(), x.cols());
-    let mut c = Matrix::zeros(h, h);
+/// Fold the lower triangle of `Xᵀ[·, r0..r1] · X[r0..r1, ·]` into `out`
+/// band-by-band through the packed engine, with accumulation mode `acc`.
+/// Each band writes the full `out[j0..h, j0..j1]` rectangle — so
+/// strictly-upper entries *inside a diagonal band block* are written (with
+/// their symmetric values), while upper entries *above* the band blocks are
+/// never touched; every caller mirrors the lower triangle afterwards. This
+/// is the shared core of [`syrk_lower`] (`Set` over all rows), the
+/// streaming Gram accumulator's per-segment partials
+/// ([`crate::data::gram`]), and the hold-out downdate
+/// ([`syrk_lower_downdate_into`], `Sub` over the validation block).
+pub(crate) fn syrk_lower_bands_into(
+    x: &Matrix,
+    r0: usize,
+    r1: usize,
+    out: &mut Matrix,
+    acc: Acc,
+) {
+    let h = x.cols();
+    debug_assert!(r0 <= r1 && r1 <= x.rows());
+    debug_assert_eq!((out.rows(), out.cols()), (h, h));
     for j0 in (0..h).step_by(SYRK_BAND) {
         let j1 = (j0 + SYRK_BAND).min(h);
-        // C[j0..h, j0..j1] = Xᵀ[j0..h, :] · X[:, j0..j1]
+        // out[j0..h, j0..j1] (acc)= Xᵀ[j0..h, r0..r1] · X[r0..r1, j0..j1]
         kernel::gemm_into(
             h - j0,
             j1 - j0,
-            n,
+            r1 - r0,
             Src::T {
                 data: x.as_slice(),
                 stride: h,
-                r0: 0,
+                r0,
                 c0: j0,
             },
             Src::N {
                 data: x.as_slice(),
                 stride: h,
-                r0: 0,
+                r0,
                 c0: j0,
             },
-            c.as_mut_slice(),
+            out.as_mut_slice(),
             h,
             j0,
             j0,
-            Acc::Set,
+            acc,
         );
     }
-    // mirror to the upper triangle
-    for i in 0..h {
-        for j in (i + 1)..h {
-            c[(i, j)] = c[(j, i)];
+}
+
+/// Symmetric rank-k update: `C = XᵀX` (the Hessian build, Figure 1 step 2).
+/// Computed band-by-band over the lower triangle through the packed engine —
+/// only rows at or below each column band are formed, then mirrored, keeping
+/// LAPACK `syrk`'s ~2× saving over a plain gemm.
+pub fn syrk_lower(x: &Matrix) -> Matrix {
+    let h = x.cols();
+    let mut c = Matrix::zeros(h, h);
+    syrk_lower_bands_into(x, 0, x.rows(), &mut c, Acc::Set);
+    c.mirror_lower();
+    c
+}
+
+/// Symmetric rank-k **downdate**: `out = G − XᵀX`, the hold-out identity
+/// `H_fold = XᵀX − X_vᵀX_v` that derives every fold's Hessian from one
+/// shared Gram matrix (see [`crate::data::gram::GramCache`]). `G` must be
+/// the full symmetric Gram; the subtraction runs band-by-band over the
+/// lower triangle through the packed kernel (`Acc::Sub`) and is mirrored,
+/// so `out` comes back full-symmetric. `out` is reshaped and fully
+/// overwritten (arena-friendly: no allocation once warm).
+pub fn syrk_lower_downdate_into(gram: &Matrix, x: &Matrix, out: &mut Matrix) {
+    assert!(gram.is_square(), "gram must be square");
+    assert_eq!(x.cols(), gram.rows(), "downdate shape mismatch");
+    out.copy_from(gram);
+    syrk_lower_bands_into(x, 0, x.rows(), out, Acc::Sub);
+    out.mirror_lower();
+}
+
+/// Fused hold-out downdate of the shared Gram pair: `h_out = G − X_vᵀX_v`
+/// and `g_out = g − X_vᵀy_v` — one call turns the global `(XᵀX, Xᵀy)` into a
+/// fold's `(H_f, g_f)` using only the small validation block (`O(n_v·d²)`
+/// instead of the `O(n_t·d²)` per-fold SYRK it replaces). Output buffers are
+/// reshaped and fully overwritten.
+///
+/// Numerics: the subtraction carries absolute error `~eps·‖G‖`, so on data
+/// where one fold's validation rows dominate the Gram (`‖H_f‖ ≪ ‖G‖`) the
+/// downdated Hessian is less accurate than a direct `X_tᵀX_t` build and, at
+/// extreme λ→0, can tip a barely-PD `H_f + λI` into a
+/// [`super::cholesky::CholeskyError`] — which propagates under the usual
+/// shift-and-retry contract. For the
+/// balanced k-fold splits this crate generates, `‖H_f‖ ≈ (1−1/k)·‖G‖`, so
+/// the loss is a few ulps ([`crate::data::gram`]'s tests pin 1e-10
+/// agreement with the direct build).
+pub fn gram_downdate(
+    gram_h: &Matrix,
+    gram_g: &[f64],
+    xv: &Matrix,
+    yv: &[f64],
+    h_out: &mut Matrix,
+    g_out: &mut Vec<f64>,
+) {
+    assert_eq!(xv.rows(), yv.len(), "validation block shape mismatch");
+    assert_eq!(gram_g.len(), xv.cols(), "gradient length mismatch");
+    syrk_lower_downdate_into(gram_h, xv, h_out);
+    g_out.clear();
+    g_out.extend_from_slice(gram_g);
+    for (i, &yi) in yv.iter().enumerate() {
+        for (o, &xij) in g_out.iter_mut().zip(xv.row(i)) {
+            *o -= yi * xij;
         }
     }
-    c
 }
 
 /// The previous-generation blocked kernels, kept verbatim as the packed
@@ -560,6 +628,55 @@ mod tests {
             }
             assert!(c.max_abs_diff(&naive_mul(&x.transpose(), &x)) < 1e-10);
         }
+    }
+
+    #[test]
+    fn syrk_downdate_matches_direct_train_syrk() {
+        // the hold-out identity: G − X_vᵀX_v == X_tᵀX_t (within rounding)
+        for &(n, nv, h) in &[(60, 12, 17), (33, 1, 9), (9, 8, 5)] {
+            let x = randm(n, h, (n * 1000 + nv * 10 + h) as u64);
+            let xt = x.slice(0, n - nv, 0, h);
+            let xv = x.slice(n - nv, n, 0, h);
+            let gram = syrk_lower(&x);
+            let mut down = Matrix::zeros(0, 0);
+            syrk_lower_downdate_into(&gram, &xv, &mut down);
+            let direct = syrk_lower(&xt);
+            assert!(
+                down.max_abs_diff(&direct) < 1e-10,
+                "downdate mismatch at n={n} nv={nv} h={h}: {:.2e}",
+                down.max_abs_diff(&direct)
+            );
+            // symmetric output
+            for i in 0..h {
+                for j in 0..h {
+                    assert_eq!(down[(i, j)], down[(j, i)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gram_downdate_fuses_hessian_and_gradient() {
+        let (n, nv, h) = (50, 10, 13);
+        let x = randm(n, h, 77);
+        let y: Vec<f64> = (0..n).map(|i| (i as f64 * 0.31).sin()).collect();
+        let xt = x.slice(0, n - nv, 0, h);
+        let xv = x.slice(n - nv, n, 0, h);
+        let gram_h = syrk_lower(&x);
+        let gram_g = gemv_t(&x, &y);
+        let mut h_out = Matrix::zeros(0, 0);
+        let mut g_out = Vec::new();
+        gram_downdate(&gram_h, &gram_g, &xv, &y[n - nv..], &mut h_out, &mut g_out);
+        let h_direct = syrk_lower(&xt);
+        let g_direct = gemv_t(&xt, &y[..n - nv]);
+        assert!(h_out.max_abs_diff(&h_direct) < 1e-10);
+        for (a, b) in g_out.iter().zip(&g_direct) {
+            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+        }
+        // output buffers are reshaped + fully overwritten on reuse
+        gram_downdate(&gram_h, &gram_g, &xv, &y[n - nv..], &mut h_out, &mut g_out);
+        assert!(h_out.max_abs_diff(&h_direct) < 1e-10);
+        assert_eq!(g_out.len(), h);
     }
 
     #[test]

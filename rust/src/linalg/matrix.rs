@@ -191,6 +191,18 @@ impl Matrix {
         }
     }
 
+    /// Copy the strict lower triangle onto the strict upper one, making the
+    /// matrix symmetric (the finishing step of lower-triangle SYRK
+    /// assembly/downdates).
+    pub fn mirror_lower(&mut self) {
+        assert!(self.is_square());
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                self[(i, j)] = self[(j, i)];
+            }
+        }
+    }
+
     /// Zero out the strict upper triangle (tidy a factor after in-place potrf).
     pub fn zero_upper(&mut self) {
         for i in 0..self.rows {

@@ -11,7 +11,10 @@
 //! its whole life and hands `&mut` to every job it runs
 //! ([`crate::coordinator::pool::WorkerPool::map_scratch`]); buffers grow to
 //! their steady-state sizes on the first task and are reused verbatim after
-//! that — zero allocations per task.
+//! that — zero allocations per task. The fold-level solvers (MChol's probe
+//! loop, the SVD family's eq. 11 sweep, PINRMSE's sparse solves) draw from
+//! the same arena through [`crate::cv::solvers::sweep`], so no solver
+//! allocates per grid point.
 //!
 //! This is the *solver-side* half of the per-worker arena. The *kernel-side*
 //! half — the packed GEMM pack panels and the TRSM/SYRK output panel — lives

@@ -108,15 +108,32 @@ impl Svd {
     /// Ridge solution for one λ: `θ = V diag(σᵢ/(σᵢ²+λ)) Uᵀ y` — the paper's
     /// eq. 11, reusing the factorization across the whole λ sweep.
     pub fn ridge_solve(&self, uty: &[f64], lam: f64) -> Vec<f64> {
+        let mut scaled = Vec::new();
+        let mut theta = Vec::new();
+        self.ridge_solve_into(uty, lam, &mut scaled, &mut theta);
+        theta
+    }
+
+    /// [`Svd::ridge_solve`] into caller-provided buffers (`scaled` holds the
+    /// k-length spectrum reweighting, `theta` the solution) — the sweep hot
+    /// path feeds these from the per-worker
+    /// [`crate::linalg::scratch::Scratch`], so the eq. 11 λ sweep allocates
+    /// nothing per grid point. Bitwise identical to the allocating form.
+    pub fn ridge_solve_into(
+        &self,
+        uty: &[f64],
+        lam: f64,
+        scaled: &mut Vec<f64>,
+        theta: &mut Vec<f64>,
+    ) {
         let k = self.s.len();
         assert_eq!(uty.len(), k);
-        let scaled: Vec<f64> = (0..k)
-            .map(|i| {
-                let sig = self.s[i];
-                uty[i] * sig / (sig * sig + lam)
-            })
-            .collect();
-        super::gemm::gemv(&self.v, &scaled)
+        scaled.clear();
+        scaled.extend((0..k).map(|i| {
+            let sig = self.s[i];
+            uty[i] * sig / (sig * sig + lam)
+        }));
+        super::gemm::gemv_into(&self.v, scaled, theta);
     }
 
     /// `Uᵀ y` — computed once per fold, shared across λ's.

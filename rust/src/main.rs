@@ -61,6 +61,7 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.cv.degree = args.usize_flag("degree", cfg.cv.degree)?;
     cfg.cv.sweep_threads = args.usize_flag("threads", cfg.cv.sweep_threads)?;
     cfg.cv.sweep_batch = args.usize_flag("batch", cfg.cv.sweep_batch)?;
+    cfg.cv.chunk_rows = args.usize_flag("chunk-rows", cfg.cv.chunk_rows)?;
     cfg.cv.seed = cfg.seed;
     if let Some(dir) = args.flag("artifacts") {
         cfg.artifacts_dir = dir.to_string();

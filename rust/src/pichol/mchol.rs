@@ -52,11 +52,16 @@ impl Default for MCholParams {
 /// Run the multi-level search. `eval` maps λ to hold-out error (each call is
 /// expected to do an exact factorization — the paper's step (a)); results are
 /// memoized so re-probed grid points are free.
-pub fn multilevel_search(
+///
+/// `eval` is fallible: a probe that cannot be evaluated (typically a
+/// [`crate::linalg::cholesky::CholeskyError`] from an indefinite `H + λI`)
+/// aborts the search and the error propagates to the caller — the sweep
+/// fails cleanly instead of panicking inside a pool worker.
+pub fn multilevel_search<E>(
     center_log10: f64,
     params: MCholParams,
-    mut eval: impl FnMut(f64) -> f64,
-) -> MCholResult {
+    mut eval: impl FnMut(f64) -> Result<f64, E>,
+) -> Result<MCholResult, E> {
     let mut c = center_log10;
     let mut s = params.s;
     let mut probes = Vec::new();
@@ -69,10 +74,15 @@ pub fn multilevel_search(
         for exp in [c - s, c, c + s] {
             let lam = 10f64.powf(exp);
             let key = lam.to_bits();
-            let err = *cache.entry(key).or_insert_with(|| {
-                factorizations += 1;
-                eval(lam)
-            });
+            let err = match cache.get(&key) {
+                Some(&e) => e,
+                None => {
+                    factorizations += 1;
+                    let e = eval(lam)?;
+                    cache.insert(key, e);
+                    e
+                }
+            };
             probes.push(Probe {
                 lambda: lam,
                 error: err,
@@ -87,13 +97,13 @@ pub fn multilevel_search(
         s /= 2.0;
     }
 
-    MCholResult {
+    Ok(MCholResult {
         best_lambda: best.0,
         best_error: best.1,
         probes,
         final_range: (10f64.powf(c - params.s0), 10f64.powf(c + params.s0)),
         factorizations,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -101,14 +111,14 @@ mod tests {
     use super::*;
 
     /// Convex error curve with known minimizer λ* = 10^(-1.3).
-    fn synthetic_err(lam: f64) -> f64 {
+    fn synthetic_err(lam: f64) -> Result<f64, ()> {
         let l = lam.log10();
-        (l + 1.3) * (l + 1.3) + 0.25
+        Ok((l + 1.3) * (l + 1.3) + 0.25)
     }
 
     #[test]
     fn converges_to_minimum_of_convex_curve() {
-        let r = multilevel_search(0.0, MCholParams { s: 1.5, s0: 1e-3 }, synthetic_err);
+        let r = multilevel_search(0.0, MCholParams { s: 1.5, s0: 1e-3 }, synthetic_err).unwrap();
         assert!(
             (r.best_lambda.log10() + 1.3).abs() < 5e-3,
             "found λ = 1e{:.4}",
@@ -120,7 +130,7 @@ mod tests {
     #[test]
     fn halving_schedule_length() {
         // levels = ceil(log2(s/s0)); each level probes 3 points
-        let r = multilevel_search(0.0, MCholParams { s: 1.6, s0: 0.05 }, synthetic_err);
+        let r = multilevel_search(0.0, MCholParams { s: 1.6, s0: 0.05 }, synthetic_err).unwrap();
         let levels = (1.6f64 / 0.05).log2().ceil() as usize;
         assert_eq!(r.probes.len(), 3 * levels);
     }
@@ -128,14 +138,11 @@ mod tests {
     #[test]
     fn memoization_avoids_repeat_factorizations() {
         let mut calls = 0usize;
-        let r = multilevel_search(
-            0.0,
-            MCholParams { s: 1.5, s0: 0.01 },
-            |lam| {
-                calls += 1;
-                synthetic_err(lam)
-            },
-        );
+        let r = multilevel_search(0.0, MCholParams { s: 1.5, s0: 0.01 }, |lam| {
+            calls += 1;
+            synthetic_err(lam)
+        })
+        .unwrap();
         assert_eq!(calls, r.factorizations);
         // the centre point repeats between levels → strictly fewer evals than probes
         assert!(r.factorizations < r.probes.len());
@@ -143,7 +150,7 @@ mod tests {
 
     #[test]
     fn probes_have_monotone_timestamps() {
-        let r = multilevel_search(0.0, MCholParams::default(), synthetic_err);
+        let r = multilevel_search(0.0, MCholParams::default(), synthetic_err).unwrap();
         for w in r.probes.windows(2) {
             assert!(w[1].elapsed >= w[0].elapsed);
         }
@@ -151,7 +158,25 @@ mod tests {
 
     #[test]
     fn final_range_brackets_best() {
-        let r = multilevel_search(0.0, MCholParams { s: 1.5, s0: 0.01 }, synthetic_err);
+        let r = multilevel_search(0.0, MCholParams { s: 1.5, s0: 0.01 }, synthetic_err).unwrap();
         assert!(r.final_range.0 <= r.best_lambda && r.best_lambda <= r.final_range.1);
+    }
+
+    #[test]
+    fn probe_error_aborts_search_and_propagates() {
+        let mut calls = 0usize;
+        let out = multilevel_search(0.0, MCholParams { s: 1.5, s0: 0.01 }, |lam| {
+            calls += 1;
+            if calls == 2 {
+                Err("indefinite")
+            } else {
+                synthetic_err(lam).map_err(|_| "unreachable")
+            }
+        });
+        match out {
+            Err(e) => assert_eq!(e, "indefinite"),
+            Ok(_) => panic!("search must fail when a probe fails"),
+        }
+        assert_eq!(calls, 2, "search must stop at the first failing probe");
     }
 }

@@ -10,10 +10,14 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
 }
 
 /// A cumulative named timer: the per-phase instrumentation behind Table 1 and
-/// Figure 2 (vec / fit / interp / hessian / cholesky / solve / holdout).
+/// Figure 2 (vec / fit / interp / gram / downdate / cholesky / solve /
+/// holdout). Each phase also carries an **invocation count** — how many times
+/// it was timed — which is what lets tests assert structural properties like
+/// "the Gram was assembled exactly once per sweep".
 #[derive(Default, Debug, Clone)]
 pub struct PhaseTimer {
     entries: Vec<(String, f64)>,
+    counts: Vec<(String, u64)>,
 }
 
 impl PhaseTimer {
@@ -28,13 +32,24 @@ impl PhaseTimer {
         out
     }
 
-    /// Add seconds to a phase directly.
-    pub fn add(&mut self, phase: &str, secs: f64) {
+    fn bump(&mut self, phase: &str, secs: f64, invocations: u64) {
         if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == phase) {
             e.1 += secs;
         } else {
             self.entries.push((phase.to_string(), secs));
         }
+        if invocations > 0 {
+            if let Some(c) = self.counts.iter_mut().find(|(n, _)| n == phase) {
+                c.1 += invocations;
+            } else {
+                self.counts.push((phase.to_string(), invocations));
+            }
+        }
+    }
+
+    /// Add seconds to a phase directly (counts as one invocation).
+    pub fn add(&mut self, phase: &str, secs: f64) {
+        self.bump(phase, secs, 1);
     }
 
     /// Seconds accumulated under `phase` (0 if never timed).
@@ -44,6 +59,15 @@ impl PhaseTimer {
             .find(|(n, _)| n == phase)
             .map(|(_, s)| *s)
             .unwrap_or(0.0)
+    }
+
+    /// Times `phase` was timed/added, summed across merges (0 if never).
+    pub fn count(&self, phase: &str) -> u64 {
+        self.counts
+            .iter()
+            .find(|(n, _)| n == phase)
+            .map(|(_, c)| *c)
+            .unwrap_or(0)
     }
 
     /// Total across phases.
@@ -56,10 +80,14 @@ impl PhaseTimer {
         &self.entries
     }
 
-    /// Merge another timer into this one.
+    /// Merge another timer into this one (seconds and invocation counts both
+    /// accumulate; merging never counts as a fresh invocation).
     pub fn merge(&mut self, other: &PhaseTimer) {
         for (name, secs) in &other.entries {
-            self.add(name, *secs);
+            self.bump(name, *secs, 0);
+        }
+        for (name, n) in &other.counts {
+            self.bump(name, 0.0, *n);
         }
     }
 }
@@ -145,10 +173,16 @@ mod tests {
         t.add("vec", 0.5);
         assert!((t.get("vec") - 1.5).abs() < 1e-12);
         assert!((t.total() - 3.5).abs() < 1e-12);
+        assert_eq!(t.count("vec"), 2);
+        assert_eq!(t.count("fit"), 1);
+        assert_eq!(t.count("nope"), 0);
         let mut u = PhaseTimer::new();
         u.add("vec", 1.0);
         u.merge(&t);
         assert!((u.get("vec") - 2.5).abs() < 1e-12);
+        // merge sums invocation counts; it is not itself an invocation
+        assert_eq!(u.count("vec"), 3);
+        assert_eq!(u.count("fit"), 1);
     }
 
     #[test]

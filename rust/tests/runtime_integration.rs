@@ -164,20 +164,24 @@ fn full_fold_pipeline_agrees_with_native_cv() {
     let h_native = syrk_lower(&fold.xt);
     let g_native = gemv_t(&fold.xt, &fold.yt);
     let data = picholesky::cv::FoldData {
-        xt: fold.xt.clone(),
-        yt: fold.yt.clone(),
         xv: fold.xv.clone(),
         yv: fold.yv.clone(),
         h_mat: h_native,
         g_vec: g_native,
+        train: Some(picholesky::cv::TrainSplit {
+            xt: fold.xt.clone(),
+            yt: fold.yt.clone(),
+        }),
     };
     let cv_cfg = picholesky::cv::CvConfig::default();
     let mut timer = picholesky::util::PhaseTimer::new();
+    let mut scratch = picholesky::linalg::Scratch::new();
     let native = picholesky::cv::solvers::sweep(
         picholesky::cv::solvers::SolverKind::PiChol,
         &data,
         &hlo.grid,
         &cv_cfg,
+        &mut scratch,
         &mut timer,
     )
     .unwrap();
