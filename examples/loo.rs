@@ -1,0 +1,57 @@
+//! Leave-one-out CV quickstart: the factor-update subsystem at work.
+//!
+//! One exact `chol(G + λI)` per anchor λ, then every one of the n held-out
+//! factors by a rank-1 hyperbolic downdate (`O(d²)` each) — the LOO error
+//! curve costs `O(n·d²)` per λ instead of the `O(n·d³)` of per-row
+//! refactorization.
+//!
+//! ```bash
+//! cargo run --release --example loo
+//! ```
+
+use picholesky::cv::loo::run_loo;
+use picholesky::cv::CvConfig;
+use picholesky::data::synthetic::{DatasetKind, SyntheticDataset};
+use picholesky::util::fmt_secs;
+
+fn main() -> picholesky::Result<()> {
+    // 1. a synthetic dataset (same generator as the k-fold quickstart)
+    let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 400, 48, 42);
+    println!("dataset: {} — n = {}, h = {}", ds.kind.name(), ds.n(), ds.h());
+
+    // 2. exact LOO at g = 4 anchor λ's, PINRMSE-interpolated over the
+    //    31-point grid
+    let cfg = CvConfig::default();
+    let rep = run_loo(&ds, &cfg)?;
+
+    println!(
+        "\nselected λ* = {:.4}   LOO-RMSE = {:.4}   ({} held-out solves, wall {})",
+        rep.best_lambda,
+        rep.best_error,
+        rep.n * rep.anchor_lambdas.len(),
+        fmt_secs(rep.wall_secs),
+    );
+    for (lam, rmse) in rep.anchor_lambdas.iter().zip(&rep.anchor_rmse) {
+        println!("  anchor λ = {lam:.4}   exact LOO-RMSE = {rmse:.4}");
+    }
+    println!("phase breakdown:");
+    for (phase, secs) in rep.timer.entries() {
+        println!("  {phase:<10} {}", fmt_secs(*secs));
+    }
+
+    // 3. smoke-gate sanity (ci.sh runs this example): the structural
+    //    invariant of the subsystem — one O(d³) factorization per anchor,
+    //    one O(d²) downdate per (row, anchor), zero per-row factorizations
+    let anchors = rep.anchor_lambdas.len() as u64;
+    assert_eq!(rep.timer.count("factor"), anchors, "factor != anchors");
+    assert_eq!(
+        rep.timer.count("downdate"),
+        rep.n as u64 * anchors,
+        "downdate != n per anchor"
+    );
+    assert_eq!(rep.timer.count("chol"), 0, "a per-row O(d³) path crept in");
+    assert!(rep.best_error.is_finite() && rep.best_lambda > 0.0);
+    assert!(rep.skipped.is_empty(), "unexpected downdate breakdowns");
+    println!("\nphase counts OK: factor == {anchors} anchors, downdate == n × anchors");
+    Ok(())
+}

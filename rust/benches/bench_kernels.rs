@@ -18,16 +18,27 @@
 //! - `gram_k5` / `gram_k10` — fold-prep data path at k ∈ {5, 10}: one
 //!   shared-Gram assembly + k downdates (packed) vs k per-fold
 //!   materialize+SYRK builds (reference) — the O(k·nd²) → O(nd²) change
+//! - `chud_r1` / `chud_rk` — the factor-update subsystem: rank-1 / rank-16
+//!   Cholesky downdate of a held factor (packed trailing panels) vs a full
+//!   O(d³) refactorization of the perturbed matrix (reference)
+//! - `loo_sweep` — exact leave-one-out CV at n=2d through the downdate
+//!   engine vs brute-force per-row refactorization (reference at small d
+//!   only; the point of the subsystem is that brute force stops scaling).
+//!   Also emits and asserts the structural phase counts (`factor ==
+//!   anchors`, `downdate == n` per anchor, zero per-row factorizations) as
+//!   a `loo_phases` object in the JSON.
 //! - `sweep` — end-to-end `run_cv` (PiChol, k=3) at n=2d (packed-only)
 
 use std::time::Instant;
 
+use picholesky::cv::loo::{brute_force_loo_rmse, run_loo};
 use picholesky::cv::solvers::SolverKind;
 use picholesky::cv::{run_cv, CvConfig};
 use picholesky::data::folds::kfold;
 use picholesky::data::gram::GramCache;
 use picholesky::data::synthetic::{DatasetKind, SyntheticDataset};
 use picholesky::linalg::cholesky::{cholesky_blocked, cholesky_in_place};
+use picholesky::linalg::chud::{chol_downdate, chol_downdate_rank1};
 use picholesky::linalg::gemm::{gemv_t, gram_downdate, reference, syrk_lower, Gemm};
 use picholesky::linalg::matrix::Matrix;
 use picholesky::linalg::triangular::trsm_right_lower_t_inplace;
@@ -183,6 +194,126 @@ fn bench_gram(d: usize, reps: usize, rows: &mut Vec<Row>) {
     }
 }
 
+/// The factor-update subsystem: rank-1 and rank-16 downdate of a held
+/// factor (the LOO / streaming-window kernels) vs refactorizing the
+/// perturbed matrix from scratch — the O(d²) vs O(d³) trade the subsystem
+/// exists for. Factor copy included on the packed side: that is the real
+/// per-held-out-row operation.
+fn bench_chud(d: usize, reps: usize, rows: &mut Vec<Row>) {
+    let x = random_matrix(2 * d, d, 0x1C0 + d as u64);
+    let mut a = syrk_lower(&x);
+    a.add_diag_in_place(1.0); // A − U·Uᵀ stays safely PD
+    let l0 = cholesky_blocked(&a).expect("base factor");
+    let mut trans = Matrix::zeros(0, 0);
+
+    // rank-1: downdate by one row of X
+    let v: Vec<f64> = x.row(0).to_vec();
+    let mut lbuf = l0.clone();
+    let mut vbuf = v.clone();
+    let packed = time_min(reps, || {
+        lbuf.copy_from(&l0);
+        vbuf.clear();
+        vbuf.extend_from_slice(&v);
+        chol_downdate_rank1(&mut lbuf, &mut vbuf, &mut trans).expect("r1 downdate");
+        std::hint::black_box(lbuf[(d - 1, d - 1)]);
+    });
+    let mut abuf = a.clone();
+    let refr = time_min(reps, || {
+        abuf.copy_from(&a);
+        for i in 0..d {
+            for j in 0..d {
+                abuf[(i, j)] -= v[i] * v[j];
+            }
+        }
+        cholesky_in_place(&mut abuf, 64).expect("refactorization");
+        std::hint::black_box(abuf[(d - 1, d - 1)]);
+    });
+    rows.push(Row {
+        kernel: "chud_r1",
+        d,
+        packed_secs: packed,
+        reference_secs: refr,
+    });
+
+    // rank-k (k = 16): a retired row block, one blocked downdate
+    let k = d.min(16);
+    let u0 = x.slice(0, k, 0, d).transpose(); // d×k
+    let mut ubuf = u0.clone();
+    let packed = time_min(reps, || {
+        lbuf.copy_from(&l0);
+        ubuf.copy_from(&u0);
+        chol_downdate(&mut lbuf, &mut ubuf, &mut trans).expect("rk downdate");
+        std::hint::black_box(lbuf[(d - 1, d - 1)]);
+    });
+    let uut = Gemm::default().a_bt(&u0, &u0);
+    let refr = time_min(reps, || {
+        abuf.copy_from(&a);
+        for i in 0..d {
+            for j in 0..d {
+                abuf[(i, j)] -= uut[(i, j)];
+            }
+        }
+        cholesky_in_place(&mut abuf, 64).expect("refactorization");
+        std::hint::black_box(abuf[(d - 1, d - 1)]);
+    });
+    rows.push(Row {
+        kernel: "chud_rk",
+        d,
+        packed_secs: packed,
+        reference_secs: refr,
+    });
+}
+
+/// End-to-end LOO sweep at n = 2d through the downdate engine. Brute-force
+/// per-row refactorization baseline only at small d (it is the O(n·d³)
+/// path the engine exists to avoid). Returns the `loo_phases` JSON object
+/// proving the downdate path did zero per-row O(d³) factorizations.
+fn bench_loo(d: usize, rows: &mut Vec<Row>) -> String {
+    let n = 2 * d;
+    let ds = SyntheticDataset::generate(DatasetKind::MnistLike, n, d, 7);
+    let cfg = CvConfig {
+        q_grid: 20,
+        g_samples: 4,
+        lambda_range: Some((0.1, 1.0)),
+        sweep_threads: 1, // single-threaded: kernel speed, not parallelism
+        ..CvConfig::default()
+    };
+    let t0 = Instant::now();
+    let rep = run_loo(&ds, &cfg).expect("loo sweep");
+    let packed = t0.elapsed().as_secs_f64();
+    std::hint::black_box(rep.best_lambda);
+
+    let refr = if d <= 64 {
+        let t0 = Instant::now();
+        std::hint::black_box(brute_force_loo_rmse(&ds, &rep.anchor_lambdas));
+        t0.elapsed().as_secs_f64()
+    } else {
+        0.0 // O(n·d³): pointless to wait on at full sizes
+    };
+    rows.push(Row {
+        kernel: "loo_sweep",
+        d,
+        packed_secs: packed,
+        reference_secs: refr,
+    });
+
+    // the acceptance invariant, asserted AND recorded in the trajectory
+    let anchors = rep.anchor_lambdas.len() as u64;
+    let factor = rep.timer.count("factor");
+    let downdate = rep.timer.count("downdate");
+    assert_eq!(factor, anchors, "factor phase must run once per anchor");
+    assert_eq!(
+        downdate,
+        n as u64 * anchors,
+        "downdate phase must run once per (row, anchor)"
+    );
+    assert_eq!(rep.timer.count("chol"), 0, "no per-row O(d³) factorization");
+    format!(
+        "{{\"d\": {d}, \"n\": {n}, \"anchors\": {anchors}, \"factor\": {factor}, \
+         \"downdate\": {downdate}, \"per_row_chol\": 0}}"
+    )
+}
+
 fn bench_sweep(d: usize, rows: &mut Vec<Row>) {
     let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 2 * d, d, 7);
     let cfg = CvConfig {
@@ -202,12 +333,13 @@ fn bench_sweep(d: usize, rows: &mut Vec<Row>) {
     });
 }
 
-fn emit_json(rows: &[Row], smoke: bool, path: &str) {
+fn emit_json(rows: &[Row], smoke: bool, loo_phases: &str, path: &str) {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"kernels\",\n");
     s.push_str(&format!("  \"smoke\": {smoke},\n"));
     s.push_str("  \"unit\": \"seconds (min of reps)\",\n");
+    s.push_str(&format!("  \"loo_phases\": {loo_phases},\n"));
     s.push_str("  \"results\": [\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
@@ -227,7 +359,16 @@ fn emit_json(rows: &[Row], smoke: bool, path: &str) {
 }
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    // --out <path>: divert the JSON (ci.sh validates smoke runs into an
+    // untracked scratch file so they never overwrite the full-size
+    // BENCH_kernels.json perf trajectory)
+    let out_override = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let (sizes, reps): (Vec<usize>, usize) = if smoke {
         (vec![32, 48], 1)
     } else {
@@ -239,9 +380,11 @@ fn main() {
         eprintln!("benching d = {d} …");
         bench_size(d, reps, &mut rows);
         bench_gram(d, reps, &mut rows);
+        bench_chud(d, reps, &mut rows);
     }
-    // end-to-end sweep at the middle size (the trajectory headline number)
+    // end-to-end sweeps at the middle size (the trajectory headline numbers)
     bench_sweep(if smoke { 32 } else { 256 }, &mut rows);
+    let loo_phases = bench_loo(if smoke { 32 } else { 256 }, &mut rows);
 
     println!("\n| kernel | d | packed | reference | speedup |");
     println!("|---|---|---|---|---|");
@@ -264,6 +407,8 @@ fn main() {
         );
     }
 
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
-    emit_json(&rows, smoke, path);
+    println!("\nloo phase counts: {loo_phases}");
+    let default_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
+    let path = out_override.as_deref().unwrap_or(default_path);
+    emit_json(&rows, smoke, &loo_phases, path);
 }

@@ -89,8 +89,10 @@ USAGE:
 COMMANDS:
   cv           run one algorithm's k-fold CV through the parallel sweep engine
                --dataset mnist|coil|caltech101|caltech256  --solver chol|pichol|mchol|svd|tsvd|rsvd|pinrmse
+               --mode kfold|loo   (loo = exact leave-one-out via rank-1 factor
+               downdates: one exact factor per λ anchor, n downdates each)
                --h <dim> --n <samples> --folds <k> --grid <q> --g <samples> --degree <r>
-               --threads <n|0=auto> --batch <λ per task|0=auto>
+               --threads <n|0=auto> --batch <λ per task; LOO: rows per task|0=auto>
                --chunk-rows <Gram stream block|0=auto>
                --seed <u64> --config <file.toml>
   compare      run all six algorithms on one dataset (Figure 6 row)

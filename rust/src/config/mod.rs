@@ -8,7 +8,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 
-use crate::cv::{CvConfig, Metric};
+use crate::cv::{CvConfig, CvMode, Metric};
 use crate::data::synthetic::DatasetKind;
 
 /// A parsed scalar-or-array TOML value.
@@ -189,6 +189,10 @@ impl ExperimentConfig {
         if let Some(v) = doc.get("cv.degree").and_then(TomlValue::as_usize) {
             cfg.cv.degree = v;
         }
+        if let Some(v) = doc.get("cv.mode").and_then(TomlValue::as_str) {
+            cfg.cv.mode = CvMode::parse(v)
+                .ok_or_else(|| anyhow!("unknown cv mode '{v}' (kfold | loo)"))?;
+        }
         if let Some(v) = doc.get("cv.metric").and_then(TomlValue::as_str) {
             cfg.cv.metric = match v {
                 "rmse" => Metric::Rmse,
@@ -320,6 +324,18 @@ mod tests {
         let doc = parse_toml("[data]\nchunk_rows = 512\n").unwrap();
         let cfg = ExperimentConfig::from_doc(&doc).unwrap();
         assert_eq!(cfg.cv.chunk_rows, 512);
+    }
+
+    #[test]
+    fn cv_mode_parses() {
+        let doc = parse_toml("[cv]\nmode = \"loo\"\n").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.cv.mode, CvMode::Loo);
+        // default stays k-fold; junk rejected
+        let cfg = ExperimentConfig::from_doc(&parse_toml("n = 64\n").unwrap()).unwrap();
+        assert_eq!(cfg.cv.mode, CvMode::KFold);
+        assert!(ExperimentConfig::from_doc(&parse_toml("[cv]\nmode = \"hmm\"\n").unwrap())
+            .is_err());
     }
 
     #[test]

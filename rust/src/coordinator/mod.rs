@@ -29,7 +29,7 @@ use crate::data::synthetic::{DatasetKind, SyntheticDataset};
 pub use hlo_pipeline::{HloFold, HloPipeline, HloSweepResult};
 pub use metrics::Metrics;
 pub use pool::WorkerPool;
-pub use sweep_engine::{SweepEngine, SweepPlan, SweepReport};
+pub use sweep_engine::{LooPlan, SweepEngine, SweepPlan, SweepReport};
 
 /// The coordinator: worker pool + metrics + (lazily created) PJRT engine.
 pub struct Coordinator {
@@ -69,6 +69,12 @@ impl Coordinator {
         kind: SolverKind,
         cfg: &CvConfig,
     ) -> crate::Result<CvReport> {
+        if cfg.mode == crate::cv::CvMode::Loo {
+            anyhow::bail!(
+                "cfg.mode is 'loo' but run_one executes k-fold sweeps; \
+                 call Coordinator::run_loo instead"
+            );
+        }
         self.metrics.incr("cv.runs");
         let mut cfg = cfg.clone();
         if cfg.sweep_threads == 0 {
@@ -79,6 +85,25 @@ impl Coordinator {
         self.metrics
             .add("cv.lambda_evals", (rep.grid.len() * cfg.k_folds) as u64);
         Ok(rep)
+    }
+
+    /// Run exact leave-one-out CV over one dataset (the factor-update
+    /// subsystem's workload — see [`crate::cv::loo`]), wired to this
+    /// coordinator's metrics. Thread-count precedence as in
+    /// [`Coordinator::run_one`].
+    pub fn run_loo(
+        &self,
+        ds: &SyntheticDataset,
+        cfg: &CvConfig,
+    ) -> crate::Result<crate::cv::loo::LooReport> {
+        self.metrics.incr("cv.loo_runs");
+        let mut cfg = cfg.clone();
+        if cfg.sweep_threads == 0 {
+            cfg.sweep_threads = self.workers();
+        }
+        let plan = LooPlan::new(ds, &cfg);
+        let engine = SweepEngine::with_metrics(plan.threads, self.metrics.clone());
+        engine.run_loo(ds, &plan)
     }
 
     /// Execute an explicit [`SweepPlan`] on a fresh [`SweepEngine`] wired to

@@ -43,6 +43,11 @@
 //! - **Everything else parallelizes at fold granularity.** MChol's binary
 //!   search is inherently sequential and the SVD family factorizes once per
 //!   fold, so those solvers run one task per fold via [`solvers::sweep`].
+//! - **Leave-one-out is its own task kind.** [`SweepEngine::run_loo`]
+//!   executes a [`LooPlan`]: shared Gram, one exact anchor factor per λ,
+//!   then *per-i downdate* batches (copy anchor → rank-1 hyperbolic
+//!   downdate by the held-out row → solve → score) fanned over the same
+//!   pool — see [`crate::cv::loo`].
 //!
 //! ## Determinism
 //!
@@ -67,6 +72,7 @@ use std::time::Instant;
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::{default_workers, WorkerPool};
+use crate::cv::loo::{self, LooReport, LooSkip};
 use crate::cv::solvers::{self, SolverKind};
 use crate::cv::{CvConfig, FoldData, SweepResult, TrainSplit};
 use crate::data::folds::kfold;
@@ -75,12 +81,23 @@ use crate::data::synthetic::SyntheticDataset;
 use crate::linalg::cholesky::{cholesky_shifted, cholesky_shifted_pooled, CholeskyError};
 use crate::linalg::matrix::Matrix;
 use crate::linalg::scratch::Scratch;
+use crate::pichol::pinrmse::fit_error_curve;
 use crate::pichol::{self, FitOptions, Interpolant};
 use crate::util::{logspace, subsample_indices, PhaseTimer};
 
 /// Matrices at least this large get intra-factorization parallelism when
 /// the anchor wave alone cannot fill the pool.
 const INTRA_FACTOR_MIN_DIM: usize = 192;
+
+/// Hessian accessors for the shared anchor wave (`fn` pointers so the wave
+/// helper stays generic without boxing).
+fn fold_hessian(fd: &FoldData) -> &Matrix {
+    &fd.h_mat
+}
+
+fn gram_hessian(gram: &GramCache) -> &Matrix {
+    gram.hessian()
+}
 
 /// A resolved description of one cross-validation sweep: solver, λ grid and
 /// execution shape (thread count, λ's per grid task).
@@ -128,6 +145,55 @@ impl SweepPlan {
     /// `k_folds` tasks instead).
     pub fn grid_tasks(&self) -> usize {
         self.cv.k_folds * self.grid.len().div_ceil(self.batch)
+    }
+}
+
+/// A resolved leave-one-out sweep: the candidate grid, the `g` anchor λ's
+/// that get exact factors (the same `subsample_indices` schedule piCholesky
+/// uses for its sample points), and the execution shape.
+#[derive(Clone, Debug)]
+pub struct LooPlan {
+    /// Cross-validation settings the plan was derived from.
+    pub cv: CvConfig,
+    /// The candidate λ grid (`q` exponentially spaced points).
+    pub grid: Vec<f64>,
+    /// The anchor λ's factored exactly (one `chol(G + λI)` each).
+    pub anchors: Vec<f64>,
+    /// Resolved worker-thread count (≥ 1).
+    pub threads: usize,
+    /// Held-out rows per per-i task (the batch shape; ≥ 1).
+    pub batch: usize,
+}
+
+impl LooPlan {
+    /// Resolve a plan from a dataset + config: grid from
+    /// `q_grid`/`lambda_range`, anchors from `g_samples`,
+    /// `sweep_threads == 0` → [`default_workers`], `sweep_batch == 0` → ~4
+    /// row batches per worker.
+    pub fn new(ds: &SyntheticDataset, cfg: &CvConfig) -> Self {
+        let (lo, hi) = cfg.lambda_range.unwrap_or_else(|| ds.kind.lambda_range());
+        let grid = logspace(lo, hi, cfg.q_grid);
+        let anchors: Vec<f64> = subsample_indices(grid.len(), cfg.g_samples)
+            .into_iter()
+            .map(|i| grid[i])
+            .collect();
+        let threads = if cfg.sweep_threads == 0 {
+            default_workers()
+        } else {
+            cfg.sweep_threads
+        };
+        let batch = if cfg.sweep_batch == 0 {
+            (ds.n() / (4 * threads)).max(1)
+        } else {
+            cfg.sweep_batch
+        };
+        Self {
+            cv: cfg.clone(),
+            grid,
+            anchors,
+            threads,
+            batch,
+        }
     }
 }
 
@@ -213,6 +279,102 @@ impl SweepEngine {
         }
     }
 
+    /// Stage 0 of every run: assemble the shared Gram pair `(XᵀX, Xᵀy)`
+    /// exactly once (streamed in row blocks over the pool when workers > 1;
+    /// serial and pooled assembly are bitwise identical), timed under the
+    /// `gram` phase. Returns the cache plus the chunk-task count.
+    fn assemble_gram(
+        &self,
+        ds: &SyntheticDataset,
+        chunk_rows: usize,
+        timer: &mut PhaseTimer,
+    ) -> (Arc<GramCache>, usize) {
+        let pooled_gram = self.pool.size() >= 2;
+        let gram_chunks = if pooled_gram {
+            gram::chunk_ranges(ds.n(), chunk_rows).len()
+        } else {
+            // the serial path streams one segment at a time and ignores the
+            // chunk knob — count what actually runs
+            gram::chunk_ranges(ds.n(), gram::SEGMENT_ROWS).len()
+        };
+        let gram = timer.time("gram", || {
+            if pooled_gram {
+                GramCache::assemble_pooled(&ds.x, &ds.y, chunk_rows, &self.pool)
+            } else {
+                GramCache::assemble(&ds.x, &ds.y)
+            }
+        });
+        self.metrics.incr("sweep.gram_builds");
+        self.metrics.add("sweep.gram_chunks", gram_chunks as u64);
+        (Arc::new(gram), gram_chunks)
+    }
+
+    /// The shared anchor-factorization wave: one exact `chol(hmat(m) + λI)`
+    /// per `(m, λ)` item, returned in item order. Both anchor consumers —
+    /// the PiChol per-fold wave (`fit_anchors`, phase `chol`) and the LOO
+    /// per-dataset wave (`run_loo`, phase `factor`) — run through this one
+    /// dispatcher, so the pool-vs-intra-factor heuristic and the
+    /// `sweep.anchor_*` metrics cannot drift apart. When the wave cannot
+    /// fill the pool and the factor is large, anchors are factorized one at
+    /// a time from this thread with [`cholesky_shifted_pooled`] (bitwise
+    /// equal to the serial kernel); otherwise one pool task per anchor.
+    fn anchor_wave<M: Send + Sync + 'static>(
+        &self,
+        items: Vec<(Arc<M>, f64)>,
+        hmat: fn(&M) -> &Matrix,
+        phase: &'static str,
+        timer: &mut PhaseTimer,
+        tasks: &mut usize,
+    ) -> crate::Result<Vec<Matrix>> {
+        let few_large = self.pool.size() >= 2
+            && items.len() < self.pool.size()
+            && items
+                .first()
+                .is_some_and(|(m, _)| hmat(m).rows() >= INTRA_FACTOR_MIN_DIM);
+        let mut out = Vec::with_capacity(items.len());
+        if few_large {
+            // too few anchors to fill the pool and each one is big: tile
+            // *inside* each factorization instead (driven from this thread —
+            // never from a pool task, per the pool's deadlock rule)
+            for (m, lam) in &items {
+                let t0 = Instant::now();
+                let l = cholesky_shifted_pooled(hmat(m), *lam, &self.pool)?;
+                let wall = t0.elapsed().as_secs_f64();
+                timer.add(phase, wall);
+                self.metrics.incr("sweep.anchor_tasks");
+                self.metrics.add_secs("sweep.anchor_wall", wall);
+                *tasks += 1;
+                out.push(l);
+            }
+        } else {
+            // enough anchors to fill the pool: one task per item
+            type AnchorRes = Result<(Matrix, f64), CholeskyError>;
+            let jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> AnchorRes + Send>> = items
+                .iter()
+                .map(|(m, lam)| {
+                    let m = Arc::clone(m);
+                    let lam = *lam;
+                    let f: Box<dyn FnOnce(&mut Scratch) -> AnchorRes + Send> =
+                        Box::new(move |_scratch| {
+                            let t0 = Instant::now();
+                            let l = cholesky_shifted(hmat(&m), lam)?;
+                            Ok((l, t0.elapsed().as_secs_f64()))
+                        });
+                    f
+                })
+                .collect();
+            *tasks += jobs.len();
+            for res in self.map_jobs(jobs) {
+                let (l, wall) = res?;
+                timer.add(phase, wall);
+                self.metrics.incr("sweep.anchor_tasks");
+                self.metrics.add_secs("sweep.anchor_wall", wall);
+                out.push(l);
+            }
+        }
+        Ok(out)
+    }
+
     /// Execute a plan over a dataset.
     pub fn run(&self, ds: &SyntheticDataset, plan: &SweepPlan) -> crate::Result<SweepReport> {
         self.metrics.incr("sweep.runs");
@@ -221,30 +383,12 @@ impl SweepEngine {
         let mut tasks = 0usize;
 
         // stage 0: the shared Gram — G = XᵀX and g = Xᵀy, assembled exactly
-        // once per dataset (streamed in row blocks over the pool when
-        // workers > 1; serial and pooled assembly are bitwise identical).
-        // For the SVD-family solvers the Hessian itself goes unused, but the
-        // one O(n·d²) assembly keeps FoldData uniform and still undercuts
-        // the k per-fold SYRKs the old path spent on those solvers.
-        let pooled_gram = self.pool.size() >= 2;
-        let gram_chunks = if pooled_gram {
-            gram::chunk_ranges(ds.n(), plan.cv.chunk_rows).len()
-        } else {
-            // the serial path streams one segment at a time and ignores the
-            // chunk knob — count what actually runs
-            gram::chunk_ranges(ds.n(), gram::SEGMENT_ROWS).len()
-        };
-        let gram = timer.time("gram", || {
-            if pooled_gram {
-                GramCache::assemble_pooled(&ds.x, &ds.y, plan.cv.chunk_rows, &self.pool)
-            } else {
-                GramCache::assemble(&ds.x, &ds.y)
-            }
-        });
-        let gram = Arc::new(gram);
+        // once per dataset. For the SVD-family solvers the Hessian itself
+        // goes unused, but the one O(n·d²) assembly keeps FoldData uniform
+        // and still undercuts the k per-fold SYRKs the old path spent on
+        // those solvers.
+        let (gram, gram_chunks) = self.assemble_gram(ds, plan.cv.chunk_rows, &mut timer);
         tasks += gram_chunks;
-        self.metrics.incr("sweep.gram_builds");
-        self.metrics.add("sweep.gram_chunks", gram_chunks as u64);
 
         // stage 1: fold prep — gather each fold's validation block serially
         // (borrows the dataset; the training split is gathered only for the
@@ -320,6 +464,169 @@ impl SweepEngine {
         })
     }
 
+    /// Execute a leave-one-out plan: the factor-update subsystem's workload
+    /// (see [`crate::cv::loo`] for the math and skip semantics).
+    ///
+    /// ```text
+    ///   LooPlan ──► stage 0  shared Gram     ⌈n/chunk⌉ tasks: G = XᵀX, g = Xᵀy
+    ///            ├► stage 1  anchor factors  g tasks: exact chol(G + λ_s I)
+    ///            │           (pool-wide, or intra-factor tiling when a few
+    ///            │            large anchors cannot fill the pool)
+    ///            ├► stage 2  per-i downdates ⌈n/batch⌉ tasks: copy anchor,
+    ///            │           rank-1 downdate by x_i, solve, score — the new
+    ///            │           task kind; breakdowns recorded, not fatal
+    ///            └► stage 3  curve fit       exact anchor RMSE → PINRMSE
+    ///                                        polynomial over the full grid
+    /// ```
+    ///
+    /// Bitwise independent of the worker count like every other path: tasks
+    /// share no mutable state, anchor factors are bitwise equal serial or
+    /// pooled, per-i results merge in ascending row order on the
+    /// coordinating thread, and the per-(row, anchor) arithmetic is the
+    /// serial `loo::eval_heldout_point` body verbatim.
+    pub fn run_loo(&self, ds: &SyntheticDataset, plan: &LooPlan) -> crate::Result<LooReport> {
+        self.metrics.incr("sweep.loo_runs");
+        let run_t0 = Instant::now();
+        let mut timer = PhaseTimer::new();
+        let mut tasks = 0usize;
+        let n = ds.n();
+
+        // stage 0: the shared Gram (assembled exactly once, like k-fold)
+        let (gram, gram_chunks) = self.assemble_gram(ds, plan.cv.chunk_rows, &mut timer);
+        tasks += gram_chunks;
+
+        // stage 1: anchor factors L_s = chol(G + λ_s I) — the only O(d³)
+        // work in the whole sweep, exactly one per anchor ("factor" phase),
+        // scheduled by the shared anchor wave
+        let g = plan.anchors.len();
+        let items: Vec<(Arc<GramCache>, f64)> = plan
+            .anchors
+            .iter()
+            .map(|&lam| (Arc::clone(&gram), lam))
+            .collect();
+        let factors = Arc::new(self.anchor_wave(
+            items,
+            gram_hessian,
+            "factor",
+            &mut timer,
+            &mut tasks,
+        )?);
+
+        // stage 2: the per-i downdate wave — the new task kind. Each task
+        // owns a gathered row batch and, per (row, anchor), copies the
+        // anchor factor into worker scratch, downdates by x_i, solves and
+        // scores (loo::eval_heldout_point). A breakdown becomes an Err cell
+        // to record, never a failed task.
+        type CellRes = Result<f64, CholeskyError>;
+        type LooTaskRes = (Vec<Vec<CellRes>>, PhaseTimer, f64);
+        let mut jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> LooTaskRes + Send>> = Vec::new();
+        let mut spans: Vec<usize> = Vec::new(); // batch start rows
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + plan.batch).min(n);
+            spans.push(lo);
+            let xblock = ds.x.slice(lo, hi, 0, ds.h());
+            let yblock = ds.y[lo..hi].to_vec();
+            let gram = Arc::clone(&gram);
+            let factors = Arc::clone(&factors);
+            let job: Box<dyn FnOnce(&mut Scratch) -> LooTaskRes + Send> =
+                Box::new(move |scratch| {
+                    let t0 = Instant::now();
+                    let mut t = PhaseTimer::new();
+                    let mut per_rows = Vec::with_capacity(xblock.rows());
+                    for r in 0..xblock.rows() {
+                        let yi = yblock[r];
+                        let mut per_anchor = Vec::with_capacity(factors.len());
+                        for anchor in factors.iter() {
+                            per_anchor.push(loo::eval_heldout_point(
+                                anchor,
+                                gram.gradient(),
+                                xblock.row(r),
+                                yi,
+                                scratch,
+                                &mut t,
+                            ));
+                        }
+                        per_rows.push(per_anchor);
+                    }
+                    (per_rows, t, t0.elapsed().as_secs_f64())
+                });
+            jobs.push(job);
+            lo = hi;
+        }
+        tasks += jobs.len();
+
+        // merge in ascending row order on this thread — scheduling never
+        // touches the sums
+        let mut sums = vec![0.0f64; g];
+        let mut counts = vec![0usize; g];
+        let mut skipped: Vec<LooSkip> = Vec::new();
+        for (&lo, (per_rows, t, wall)) in spans.iter().zip(self.map_jobs(jobs)) {
+            timer.merge(&t);
+            self.metrics.incr("sweep.loo_tasks");
+            self.metrics.add_secs("sweep.loo_wall", wall);
+            for (local, per_anchor) in per_rows.into_iter().enumerate() {
+                for (s, cell) in per_anchor.into_iter().enumerate() {
+                    match cell {
+                        Ok(sqerr) => {
+                            sums[s] += sqerr;
+                            counts[s] += 1;
+                        }
+                        Err(error) => skipped.push(LooSkip {
+                            row: lo + local,
+                            lambda: plan.anchors[s],
+                            error,
+                        }),
+                    }
+                }
+            }
+        }
+        self.metrics
+            .add("sweep.loo_evals", counts.iter().sum::<usize>() as u64);
+        self.metrics.add("sweep.loo_skips", skipped.len() as u64);
+
+        // stage 3: exact anchor RMSE, then the PINRMSE polynomial over the
+        // full grid (fitted on the anchors that survived)
+        let anchor_rmse: Vec<f64> = sums
+            .iter()
+            .zip(&counts)
+            .map(|(&s, &c)| if c > 0 { (s / c as f64).sqrt() } else { f64::NAN })
+            .collect();
+        let usable: (Vec<f64>, Vec<f64>) = plan
+            .anchors
+            .iter()
+            .zip(&anchor_rmse)
+            .filter(|(_, e)| e.is_finite())
+            .map(|(&l, &e)| (l, e))
+            .unzip();
+        let (best_lambda, best_error, curve) = if usable.0.len() > plan.cv.degree {
+            let poly = timer.time("fit", || {
+                fit_error_curve(&usable.0, &usable.1, plan.cv.degree)
+            });
+            timer.time("interp", || poly.sweep(&plan.grid))
+        } else {
+            // every anchor lost all its rows: nothing to interpolate from
+            (f64::NAN, f64::NAN, vec![f64::NAN; plan.grid.len()])
+        };
+
+        let wall_secs = run_t0.elapsed().as_secs_f64();
+        self.metrics.add_secs("sweep.run_wall", wall_secs);
+        Ok(LooReport {
+            grid: plan.grid.clone(),
+            curve,
+            anchor_lambdas: plan.anchors.clone(),
+            anchor_rmse,
+            best_lambda,
+            best_error,
+            skipped,
+            timer,
+            wall_secs,
+            threads: self.pool.size(),
+            tasks,
+            n,
+        })
+    }
+
     /// Stage 2 (PiChol): exact anchor factorizations for every fold, then
     /// one Algorithm-1 fit per fold. Returns `Arc`-cached interpolants the
     /// grid wave shares.
@@ -336,65 +643,19 @@ impl SweepEngine {
             .collect();
         let g = sample_lams.len();
         let k = fold_data.len();
-        let dim = fold_data[0].h_mat.rows();
 
-        // anchor factors, factors[fold][s] = chol(H_fold + λ_s I)
-        let factors: Vec<Vec<Matrix>> = if self.pool.size() >= 2
-            && k * g < self.pool.size()
-            && dim >= INTRA_FACTOR_MIN_DIM
-        {
-            // too few anchors to fill the pool and each one is big: tile
-            // *inside* each factorization instead (driven from this thread —
-            // never from a pool task, per the pool's deadlock rule)
-            let mut all = Vec::with_capacity(k);
-            for fd in fold_data {
-                let mut per = Vec::with_capacity(g);
-                for &lam in &sample_lams {
-                    let t0 = Instant::now();
-                    let l = cholesky_shifted_pooled(&fd.h_mat, lam, &self.pool)?;
-                    let wall = t0.elapsed().as_secs_f64();
-                    timer.add("chol", wall);
-                    self.metrics.incr("sweep.anchor_tasks");
-                    self.metrics.add_secs("sweep.anchor_wall", wall);
-                    *tasks += 1;
-                    per.push(l);
-                }
-                all.push(per);
-            }
-            all
-        } else {
-            // enough anchors to fill the pool: one task per (fold, λ_s)
-            type AnchorRes = Result<(Matrix, f64), CholeskyError>;
-            let mut jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> AnchorRes + Send>> = Vec::new();
-            for fd in fold_data {
-                for &lam in &sample_lams {
-                    let fd = Arc::clone(fd);
-                    let job: Box<dyn FnOnce(&mut Scratch) -> AnchorRes + Send> =
-                        Box::new(move |_scratch| {
-                            let t0 = Instant::now();
-                            let l = cholesky_shifted(&fd.h_mat, lam)?;
-                            Ok((l, t0.elapsed().as_secs_f64()))
-                        });
-                    jobs.push(job);
-                }
-            }
-            *tasks += jobs.len();
-            let outs = self.map_jobs(jobs);
-            let mut all = Vec::with_capacity(k);
-            let mut it = outs.into_iter();
-            for _ in 0..k {
-                let mut per = Vec::with_capacity(g);
-                for _ in 0..g {
-                    let (l, wall) = it.next().expect("anchor task count mismatch")?;
-                    timer.add("chol", wall);
-                    self.metrics.incr("sweep.anchor_tasks");
-                    self.metrics.add_secs("sweep.anchor_wall", wall);
-                    per.push(l);
-                }
-                all.push(per);
-            }
-            all
-        };
+        // anchor factors, factors[fold][s] = chol(H_fold + λ_s I): one flat
+        // (fold, λ_s) wave through the shared anchor scheduler, regrouped
+        // per fold (anchor_wave returns results in item order)
+        let items: Vec<(Arc<FoldData>, f64)> = fold_data
+            .iter()
+            .flat_map(|fd| sample_lams.iter().map(move |&lam| (Arc::clone(fd), lam)))
+            .collect();
+        let flat = self.anchor_wave(items, fold_hessian, "chol", timer, tasks)?;
+        let mut flat = flat.into_iter();
+        let factors: Vec<Vec<Matrix>> = (0..k)
+            .map(|_| flat.by_ref().take(g).collect())
+            .collect();
 
         // Algorithm-1 fits: cheap (O(g·r·D)) relative to the anchors, done
         // here in fold order so timer merge order is deterministic
@@ -702,6 +963,34 @@ mod tests {
         assert!(m.counter("sweep.grid_tasks") > 0);
         assert!(m.seconds("sweep.grid_wall") > 0.0);
         assert_eq!(m.counter("sweep.lambda_evals"), 5 * 50);
+    }
+
+    #[test]
+    fn loo_plan_resolves_anchors_and_knobs() {
+        let ds = ds();
+        let cfg = CvConfig {
+            q_grid: 31,
+            g_samples: 5,
+            sweep_threads: 3,
+            sweep_batch: 0,
+            ..CvConfig::default()
+        };
+        let plan = LooPlan::new(&ds, &cfg);
+        assert_eq!(plan.grid.len(), 31);
+        assert_eq!(plan.anchors.len(), 5);
+        assert_eq!(plan.threads, 3);
+        assert!(plan.batch >= 1);
+        // anchors are grid points, ascending, endpoints included
+        assert_eq!(plan.anchors[0], plan.grid[0]);
+        assert_eq!(*plan.anchors.last().unwrap(), *plan.grid.last().unwrap());
+        for w in plan.anchors.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        let explicit = CvConfig {
+            sweep_batch: 9,
+            ..cfg
+        };
+        assert_eq!(LooPlan::new(&ds, &explicit).batch, 9);
     }
 
     #[test]

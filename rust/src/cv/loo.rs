@@ -1,0 +1,437 @@
+//! Exact leave-one-out cross-validation on the factor-update subsystem.
+//!
+//! ## The workload
+//!
+//! Leave-one-out CV evaluates the ridge solution with each single sample
+//! held out: `θ_i = (H_i + λI)⁻¹ g_i` with `H_i = G − x_i x_iᵀ` and
+//! `g_i = g − y_i x_i`, scored by the prediction `x_iᵀθ_i` against `y_i`.
+//! The naive engine refactorizes per held-out row — `O(n·d³)` per λ. The
+//! key identity is that the hold-out downdate **commutes with the λ
+//! shift**:
+//!
+//! ```text
+//!   H_i + λI = (G + λI) − x_i x_iᵀ
+//! ```
+//!
+//! so one **anchor factor** `L_λ = chol(G + λI)` per λ serves every
+//! held-out row by a rank-1 hyperbolic downdate
+//! ([`crate::linalg::chud::chol_downdate_rank1`], `O(d²)`): the LOO sweep
+//! at one λ costs `O(n·d²)` instead of `O(n·d³)` — the same amortization
+//! move the paper makes for the λ axis, applied to the sample axis.
+//!
+//! ## The λ axis — feeding the interpolation machinery
+//!
+//! Like piCholesky, the engine factors only `g ≪ q` anchor λ's (the same
+//! `subsample_indices` schedule Algorithm 1 uses), computes the **exact**
+//! LOO-RMSE at each anchor, and interpolates the error curve over the full
+//! q-point grid with the existing PINRMSE polynomial machinery
+//! ([`crate::pichol::pinrmse::fit_error_curve`]). PINRMSE is a poor
+//! stand-in for *hold-out* curves interpolated from 4 points of a single
+//! split (Figure 10), but the LOO curve is an *average over n splits* —
+//! much smoother, so the same machinery serves it well; crank
+//! `g_samples` up to `q_grid` for a fully exact curve.
+//!
+//! ## Breakdown semantics
+//!
+//! A held-out row whose removal makes `G − x_i x_iᵀ + λI` numerically
+//! indefinite (λ at or below the Gram's rounding noise) surfaces as a
+//! [`CholeskyError`] from the downdate, carrying the failing column index.
+//! The sweep **skips that (row, λ) cell and records it** in
+//! [`LooReport::skipped`] — one bad row never poisons the other `n−1`
+//! contributions, and the anchor's RMSE is the mean over the rows that
+//! factored. The engine copies the anchor factor into worker scratch
+//! before each downdate, so a breakdown poisons only the scratch copy.
+//!
+//! Scheduling (per-i batches over the worker pool, bitwise independent of
+//! the worker count) lives in
+//! [`crate::coordinator::sweep_engine::SweepEngine::run_loo`]; this module
+//! owns the task body (`eval_heldout_point`), the report shape, the
+//! brute-force oracle the tests compare against, and the
+//! [`AnchorFactors`] cache that keeps anchor factors fresh under
+//! streaming-row arrivals by rank-k update instead of refactorization.
+
+use crate::coordinator::sweep_engine::{LooPlan, SweepEngine};
+use crate::data::gram::GramCache;
+use crate::data::synthetic::SyntheticDataset;
+use crate::linalg::cholesky::{cholesky_shifted, CholeskyError};
+use crate::linalg::chud::{chol_downdate, chol_downdate_rank1, chol_update};
+use crate::linalg::matrix::Matrix;
+use crate::linalg::scratch::Scratch;
+use crate::linalg::triangular::solve_cholesky_into;
+use crate::util::PhaseTimer;
+
+use super::CvConfig;
+
+/// One skipped (held-out row, anchor λ) cell: the downdate hit a
+/// numerically indefinite `G − x_i x_iᵀ + λI`. The error carries the
+/// failing column index ([`CholeskyError::pivot`]).
+#[derive(Debug, Clone)]
+pub struct LooSkip {
+    /// The held-out row index.
+    pub row: usize,
+    /// The anchor λ at which the downdate broke down.
+    pub lambda: f64,
+    /// The breakdown, with the failing column index in `pivot`.
+    pub error: CholeskyError,
+}
+
+/// What a leave-one-out run produced.
+pub struct LooReport {
+    /// The candidate λ grid (`q` points).
+    pub grid: Vec<f64>,
+    /// Interpolated LOO-RMSE over the grid (NaN when too few anchors
+    /// survived to fit the curve).
+    pub curve: Vec<f64>,
+    /// The anchor λ's that were factored exactly (`g` of them).
+    pub anchor_lambdas: Vec<f64>,
+    /// Exact LOO-RMSE at each anchor (mean over the rows that factored;
+    /// NaN if every row broke down at that anchor).
+    pub anchor_rmse: Vec<f64>,
+    /// Grid minimizer of the interpolated curve.
+    pub best_lambda: f64,
+    /// Curve value at `best_lambda`.
+    pub best_error: f64,
+    /// Skipped (row, λ) cells — breakdowns recorded, not fatal.
+    pub skipped: Vec<LooSkip>,
+    /// Phase timings summed over all tasks (`gram` / `factor` / `downdate`
+    /// / `solve` / `holdout` / `fit` / `interp`). The structural
+    /// invariants — `factor` counted once per anchor, `downdate` once per
+    /// (row, anchor), zero per-row `chol` — are what the acceptance tests
+    /// and `bench_kernels` assert.
+    pub timer: PhaseTimer,
+    /// Elapsed wall-clock seconds of the run.
+    pub wall_secs: f64,
+    /// Worker threads the run used.
+    pub threads: usize,
+    /// Total tasks executed (Gram chunks + anchor factors + per-i batches).
+    pub tasks: usize,
+    /// Rows of the dataset (the number of held-out evaluations per anchor).
+    pub n: usize,
+}
+
+/// Run leave-one-out CV over a dataset: plans the anchors/grid from `cfg`
+/// (`q_grid`, `g_samples`, `lambda_range`, threads/batch knobs), executes
+/// on a [`SweepEngine`] — Gram assembly, anchor factorizations, per-i
+/// downdate batches — and fits the LOO error curve. Results are
+/// bit-identical for every thread count.
+pub fn run_loo(ds: &SyntheticDataset, cfg: &CvConfig) -> crate::Result<LooReport> {
+    let plan = LooPlan::new(ds, cfg);
+    let engine = SweepEngine::new(plan.threads);
+    engine.run_loo(ds, &plan)
+}
+
+/// One held-out evaluation at one anchor — the body of the sweep engine's
+/// per-i tasks (and of the serial path: both run *this* code, which is why
+/// parallel results are bit-identical to serial). Copies the anchor factor
+/// into `scratch.factor`, downdates by `x_i`, solves, and returns the
+/// squared prediction error; a downdate breakdown comes back as
+/// `Err(CholeskyError)` for the caller to record. Every buffer is worker
+/// scratch — zero heap allocation once warm.
+pub(crate) fn eval_heldout_point(
+    anchor: &Matrix,
+    gram_g: &[f64],
+    xi: &[f64],
+    yi: f64,
+    scratch: &mut Scratch,
+    timer: &mut PhaseTimer,
+) -> Result<f64, CholeskyError> {
+    timer.time("downdate", || {
+        scratch.factor.copy_from(anchor);
+        scratch.vbuf.clear();
+        scratch.vbuf.extend_from_slice(xi);
+        chol_downdate_rank1(&mut scratch.factor, &mut scratch.vbuf, &mut scratch.trans)
+    })?;
+    timer.time("solve", || {
+        scratch.gvec.clear();
+        scratch.gvec.extend_from_slice(gram_g);
+        for (gj, &xj) in scratch.gvec.iter_mut().zip(xi) {
+            *gj -= yi * xj;
+        }
+        solve_cholesky_into(
+            &scratch.factor,
+            &scratch.gvec,
+            &mut scratch.work,
+            &mut scratch.theta,
+        );
+    });
+    Ok(timer.time("holdout", || {
+        let pred: f64 = xi.iter().zip(&scratch.theta).map(|(x, t)| x * t).sum();
+        let r = pred - yi;
+        r * r
+    }))
+}
+
+/// The brute-force oracle: LOO-RMSE at each λ by per-row refactorization
+/// (`n` exact `chol(H_i + λI)` per λ — the `O(n·d³)` path the downdate
+/// engine replaces). Used by tests and `bench_kernels` as the correctness
+/// and timing baseline; rows whose factorization fails are skipped, like
+/// the engine skips downdate breakdowns.
+pub fn brute_force_loo_rmse(ds: &SyntheticDataset, lambdas: &[f64]) -> Vec<f64> {
+    let (n, h) = (ds.n(), ds.h());
+    let mut out = Vec::with_capacity(lambdas.len());
+    for &lam in lambdas {
+        let mut sum = 0.0;
+        let mut cnt = 0usize;
+        for i in 0..n {
+            // gather every row but i
+            let mut xt = Matrix::zeros(n - 1, h);
+            let mut yt = Vec::with_capacity(n - 1);
+            let mut r = 0;
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                xt.row_mut(r).copy_from_slice(ds.x.row(j));
+                yt.push(ds.y[j]);
+                r += 1;
+            }
+            let hmat = crate::linalg::gemm::syrk_lower(&xt);
+            let gvec = crate::linalg::gemm::gemv_t(&xt, &yt);
+            let Ok(l) = cholesky_shifted(&hmat, lam) else {
+                continue;
+            };
+            let theta = crate::linalg::triangular::solve_cholesky(&l, &gvec);
+            let pred: f64 = ds.x.row(i).iter().zip(&theta).map(|(x, t)| x * t).sum();
+            sum += (pred - ds.y[i]) * (pred - ds.y[i]);
+            cnt += 1;
+        }
+        out.push(if cnt > 0 {
+            (sum / cnt as f64).sqrt()
+        } else {
+            f64::NAN
+        });
+    }
+    out
+}
+
+/// A cache of anchor factors `chol(G + λ_s I)` that stays fresh under
+/// dataset growth/shrinkage **by rank-k update/downdate instead of
+/// refactorization**: the λ shift commutes with the row-block perturbation
+/// (`(G ± XᵀX) + λI = (G + λI) ± XᵀX`), so appending `m` rows costs
+/// `O(g·m·d²)` against the `O(g·d³)` of refactoring every anchor. Pairs
+/// with [`GramCache::append_rows`] / [`GramCache::retire_rows`], which keep
+/// `(G, g)` themselves incremental.
+pub struct AnchorFactors {
+    /// The anchor λ's, in the order the factors are stored.
+    pub lambdas: Vec<f64>,
+    /// `factors[s] = chol(G + lambdas[s]·I)`.
+    pub factors: Vec<Matrix>,
+}
+
+impl AnchorFactors {
+    /// Factor every anchor from scratch (the cold start).
+    pub fn factor(gram: &GramCache, lambdas: &[f64]) -> Result<Self, CholeskyError> {
+        let factors = lambdas
+            .iter()
+            .map(|&lam| cholesky_shifted(gram.hessian(), lam))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Self {
+            lambdas: lambdas.to_vec(),
+            factors,
+        })
+    }
+
+    /// Fold `m` appended rows into every anchor factor by rank-m update
+    /// (`O(g·m·d²)`). Call alongside [`GramCache::append_rows`] with the
+    /// same block. `trans` is the rotation-transform buffer
+    /// (`Scratch::trans` on worker paths).
+    pub fn append_rows(&mut self, x_new: &Matrix, trans: &mut Matrix) {
+        for f in &mut self.factors {
+            let mut u = x_new.transpose(); // d×m: one update vector per column
+            chol_update(f, &mut u, trans);
+        }
+    }
+
+    /// Remove `m` retired rows from every anchor factor by rank-m
+    /// downdate. **Transactional**: downdates land on copies and are
+    /// committed only when every anchor succeeds, so on
+    /// [`CholeskyError`] (some factor numerically indefinite — retire
+    /// fewer rows at a time, or refactor from the downdated Gram) the
+    /// cache is left exactly as it was; a half-downdated cache would
+    /// silently corrupt every later solve.
+    pub fn retire_rows(&mut self, x_old: &Matrix, trans: &mut Matrix) -> Result<(), CholeskyError> {
+        let mut fresh = Vec::with_capacity(self.factors.len());
+        for f in &self.factors {
+            let mut l = f.clone();
+            let mut u = x_old.transpose();
+            chol_downdate(&mut l, &mut u, trans)?;
+            fresh.push(l);
+        }
+        self.factors = fresh;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::DatasetKind;
+
+    fn cfg(threads: usize) -> CvConfig {
+        CvConfig {
+            q_grid: 21,
+            g_samples: 4,
+            lambda_range: Some((0.1, 1.0)),
+            sweep_threads: threads,
+            ..CvConfig::default()
+        }
+    }
+
+    /// The tentpole acceptance bar: the downdate engine's exact per-anchor
+    /// LOO-RMSE matches brute-force per-row refactorization to ≤ 1e-9 RMS.
+    #[test]
+    fn loo_matches_brute_force_refactorization() {
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 60, 9, 11);
+        let rep = run_loo(&ds, &cfg(1)).unwrap();
+        assert!(rep.skipped.is_empty(), "no breakdowns expected: {:?}", rep.skipped);
+        let brute = brute_force_loo_rmse(&ds, &rep.anchor_lambdas);
+        let rms = (rep
+            .anchor_rmse
+            .iter()
+            .zip(&brute)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            / brute.len() as f64)
+            .sqrt();
+        assert!(rms <= 1e-9, "LOO vs brute-force RMS {rms:.2e}");
+        // and the interpolated curve is finite everywhere
+        assert!(rep.curve.iter().all(|e| e.is_finite()));
+        assert!(rep.best_error.is_finite() && rep.best_lambda > 0.0);
+    }
+
+    /// Per-i downdate tasks are scheduled across the pool but results are
+    /// bitwise independent of the worker count, like every other engine
+    /// path.
+    #[test]
+    fn loo_bitwise_identical_across_worker_counts() {
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 90, 13, 7);
+        let serial = run_loo(&ds, &cfg(1)).unwrap();
+        for threads in [2usize, 4] {
+            let par = run_loo(&ds, &cfg(threads)).unwrap();
+            assert_eq!(par.threads, threads);
+            assert_eq!(serial.anchor_rmse, par.anchor_rmse, "threads={threads}");
+            assert_eq!(serial.curve, par.curve, "threads={threads}");
+            assert_eq!(serial.best_lambda, par.best_lambda);
+            assert_eq!(serial.best_error, par.best_error);
+            assert_eq!(serial.skipped.len(), par.skipped.len());
+        }
+    }
+
+    /// The structural invariant behind the whole subsystem: exactly one
+    /// O(d³) factorization per anchor, one downdate per (row, anchor), and
+    /// zero per-row factorizations anywhere.
+    #[test]
+    fn loo_phase_counts_prove_no_per_row_refactorization() {
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 50, 8, 3);
+        for threads in [1usize, 3] {
+            let rep = run_loo(&ds, &cfg(threads)).unwrap();
+            let anchors = rep.anchor_lambdas.len() as u64;
+            assert_eq!(rep.timer.count("gram"), 1);
+            assert_eq!(rep.timer.count("factor"), anchors, "factor == anchors");
+            assert_eq!(
+                rep.timer.count("downdate"),
+                ds.n() as u64 * anchors,
+                "downdate == n per anchor"
+            );
+            assert_eq!(rep.timer.count("chol"), 0, "no per-row factorization");
+            assert_eq!(rep.n, ds.n());
+        }
+    }
+
+    /// A held-out row that makes `G − x_i x_iᵀ + λI` numerically indefinite
+    /// is skipped and recorded — never fatal. Coordinate 0 is zeroed for
+    /// every row, then row 0 gets a lone 1e9 spike there: the Gram's column
+    /// 0 becomes exactly `1e18·e₀` (all cross products are exact 0's, 1e18
+    /// is exact in f64, and the λ shift rounds away below its 256-wide
+    /// ulp), so holding out row 0 makes the first downdate pivot exactly
+    /// `1e18 − 1e18 = 0` — deterministic breakdown at column 0, at every
+    /// anchor, while the other 39 rows sweep fine.
+    #[test]
+    fn loo_breakdown_is_skipped_and_recorded() {
+        let mut ds = SyntheticDataset::generate(DatasetKind::MnistLike, 40, 8, 5);
+        for i in 0..ds.n() {
+            ds.x[(i, 0)] = 0.0;
+        }
+        for v in ds.x.row_mut(0) {
+            *v = 0.0;
+        }
+        ds.x[(0, 0)] = 1e9;
+        ds.y[0] = 1.0;
+        let rep = run_loo(&ds, &cfg(2)).unwrap();
+        let anchors = rep.anchor_lambdas.len();
+        assert_eq!(
+            rep.skipped.len(),
+            anchors,
+            "row 0 must break down at every anchor"
+        );
+        for skip in &rep.skipped {
+            assert_eq!(skip.row, 0);
+            assert_eq!(skip.error.pivot, 0, "failing column index must be carried");
+            assert!(skip.error.value <= 0.0);
+        }
+        // the other 39 rows still produce a usable report
+        assert!(rep.anchor_rmse.iter().all(|e| e.is_finite()));
+        assert!(rep.curve.iter().all(|e| e.is_finite()));
+    }
+
+    /// Streaming growth: GramCache::append_rows + AnchorFactors::append_rows
+    /// track a fresh assemble+factor of the grown dataset; retiring the same
+    /// rows returns to the original factors.
+    #[test]
+    fn anchor_factors_follow_appended_and_retired_rows() {
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 80, 11, 9);
+        let (split, h) = (64usize, ds.h());
+        let x0 = ds.x.slice(0, split, 0, h);
+        let y0 = ds.y[..split].to_vec();
+        let x_new = ds.x.slice(split, ds.n(), 0, h);
+        let y_new = ds.y[split..].to_vec();
+        let lambdas = [0.2, 0.8];
+
+        let mut gram = GramCache::assemble(&x0, &y0);
+        let mut anchors = AnchorFactors::factor(&gram, &lambdas).unwrap();
+        let originals: Vec<Matrix> = anchors.factors.clone();
+        let mut trans = Matrix::zeros(0, 0);
+
+        // grow: incremental must track the fresh build of the full dataset
+        gram.append_rows(&x_new, &y_new);
+        anchors.append_rows(&x_new, &mut trans);
+        let full = GramCache::assemble(&ds.x, &ds.y);
+        assert_eq!(gram.n_rows(), ds.n());
+        assert!(gram.hessian().max_abs_diff(full.hessian()) < 1e-8);
+        let fresh = AnchorFactors::factor(&full, &lambdas).unwrap();
+        for (inc, fr) in anchors.factors.iter().zip(&fresh.factors) {
+            assert!(inc.max_abs_diff(fr) < 1e-7, "{:.2e}", inc.max_abs_diff(fr));
+        }
+
+        // shrink back: retire the same rows, return to the original factors
+        gram.retire_rows(&x_new, &y_new);
+        anchors.retire_rows(&x_new, &mut trans).unwrap();
+        assert_eq!(gram.n_rows(), split);
+        let base = GramCache::assemble(&x0, &y0);
+        assert!(gram.hessian().max_abs_diff(base.hessian()) < 1e-8);
+        for (inc, orig) in anchors.factors.iter().zip(&originals) {
+            assert!(
+                inc.max_abs_diff(orig) < 1e-7,
+                "retire drift {:.2e}",
+                inc.max_abs_diff(orig)
+            );
+        }
+
+        // failed retire must be transactional: downdating rows that are not
+        // in the Gram breaks down, and the cache must come back untouched
+        let before: Vec<Matrix> = anchors.factors.clone();
+        let mut huge = Matrix::zeros(2, h);
+        for v in huge.as_mut_slice() {
+            *v = 1e6;
+        }
+        let err = anchors.retire_rows(&huge, &mut trans);
+        assert!(err.is_err(), "retiring foreign huge rows must break down");
+        for (now, b) in anchors.factors.iter().zip(&before) {
+            assert_eq!(
+                now.as_slice(),
+                b.as_slice(),
+                "failed retire must leave every anchor factor untouched"
+            );
+        }
+    }
+}

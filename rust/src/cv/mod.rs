@@ -13,7 +13,12 @@
 //! results with per-phase wall-clock timings — the raw material for
 //! Figures 2, 6, 7-9 and Tables 3-4. Results are bit-identical for every
 //! thread count (see the engine's determinism contract).
+//!
+//! Besides k-fold, the crate runs **exact leave-one-out CV** ([`loo`]) on
+//! the factor-update subsystem: one anchor factor per λ, every held-out
+//! factor by rank-1 downdate — select with [`CvMode::Loo`].
 
+pub mod loo;
 pub mod solvers;
 
 use crate::coordinator::sweep_engine::{SweepEngine, SweepPlan, SweepReport};
@@ -24,6 +29,34 @@ use crate::linalg::matrix::Matrix;
 use crate::pichol::mchol::Probe;
 use crate::util::PhaseTimer;
 use solvers::SolverKind;
+
+/// Which cross-validation scheme a run executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CvMode {
+    /// k-fold CV — the paper's §6 scheme (folds, solvers, the fold×λ grid).
+    KFold,
+    /// Exact leave-one-out CV on the factor-update subsystem ([`loo`]):
+    /// anchor factors once per λ, every held-out factor by rank-1 downdate.
+    Loo,
+}
+
+impl CvMode {
+    /// Parse a mode name (TOML `cv.mode`, CLI `--mode`).
+    pub fn parse(s: &str) -> Option<CvMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "kfold" | "k-fold" => Some(CvMode::KFold),
+            "loo" | "leave-one-out" => Some(CvMode::Loo),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CvMode::KFold => "kfold",
+            CvMode::Loo => "loo",
+        }
+    }
+}
 
 /// Hold-out error metric.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -212,6 +245,11 @@ pub struct CvConfig {
     /// against per-task block footprint only. TOML: `[data] chunk_rows`;
     /// CLI: `--chunk-rows`.
     pub chunk_rows: usize,
+    /// Cross-validation scheme: k-fold (default) or leave-one-out on the
+    /// factor-update subsystem. TOML: `[cv] mode = "loo"`; CLI:
+    /// `--mode loo`. In LOO mode `g_samples` picks the anchor count and
+    /// `sweep_batch` the held-out rows per task (0 = auto).
+    pub mode: CvMode,
 }
 
 impl Default for CvConfig {
@@ -229,6 +267,7 @@ impl Default for CvConfig {
             sweep_threads: 0,
             sweep_batch: 0,
             chunk_rows: 0,
+            mode: CvMode::KFold,
         }
     }
 }
@@ -276,6 +315,13 @@ pub fn run_cv(
     kind: SolverKind,
     cfg: &CvConfig,
 ) -> crate::Result<CvReport> {
+    if cfg.mode == CvMode::Loo {
+        // a k-fold report cannot masquerade as a LOO run — route explicitly
+        anyhow::bail!(
+            "cfg.mode is 'loo' but run_cv executes k-fold sweeps; \
+             call cv::loo::run_loo (or Coordinator::run_loo) instead"
+        );
+    }
     let plan = SweepPlan::new(ds, kind, cfg);
     let engine = SweepEngine::new(plan.threads);
     Ok(aggregate_sweep(engine.run(ds, &plan)?))
@@ -368,6 +414,19 @@ mod tests {
         assert_eq!(rep.timer.count("gram"), 1);
         assert_eq!(rep.timer.count("downdate"), 3);
         assert_eq!(rep.timer.count("hessian"), 0);
+    }
+
+    #[test]
+    fn run_cv_rejects_loo_mode() {
+        // LOO must be routed explicitly — a k-fold report must never come
+        // back silently labeled as a LOO run
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 60, 9, 1);
+        let cfg = CvConfig {
+            mode: CvMode::Loo,
+            ..CvConfig::default()
+        };
+        let err = run_cv(&ds, SolverKind::Chol, &cfg).unwrap_err();
+        assert!(err.to_string().contains("run_loo"), "{err}");
     }
 
     #[test]

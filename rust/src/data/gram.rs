@@ -11,7 +11,11 @@
 //! validation block — `O(n·d²/k)` per fold, `O(n·d²)` total. The assembly
 //! itself streams `X` in row blocks, so only one block (not the dataset)
 //! needs to be resident per task: the seam an out-of-core / sharded backend
-//! plugs into.
+//! plugs into. A *grown or shrunk* dataset never reassembles either:
+//! [`GramCache::append_rows`] / [`GramCache::retire_rows`] fold a row block
+//! in or out at `O(m·d²)`, and
+//! [`crate::cv::loo::AnchorFactors`] keeps cached `chol(G + λI)` anchor
+//! factors in step by rank-m update/downdate ([`crate::linalg::chud`]).
 //!
 //! ## Determinism contract — why the streamed Gram is bitwise exact
 //!
@@ -230,6 +234,50 @@ impl GramCache {
         red.finish(x.rows())
     }
 
+    /// Fold `m` newly arrived rows into the cache **incrementally**:
+    /// `G += X_newᵀX_new` (one rank-m SYRK over just the new block, through
+    /// the packed kernel) and `g += X_newᵀy_new` — `O(m·d²)` instead of the
+    /// `O(n·d²)` reassembly. The companion
+    /// [`crate::cv::loo::AnchorFactors::append_rows`] keeps cached anchor
+    /// factors fresh the same way (rank-m Cholesky update).
+    ///
+    /// Incremental accumulation inserts the new block *after* the original
+    /// fold sequence, so the result is rounding-level (not bitwise) equal to
+    /// a fresh assembly of the grown dataset — same contract as the
+    /// per-fold downdates.
+    pub fn append_rows(&mut self, x_new: &Matrix, y_new: &[f64]) {
+        assert_eq!(x_new.rows(), y_new.len(), "appended block shape mismatch");
+        assert_eq!(x_new.cols(), self.h.rows(), "appended block dim mismatch");
+        syrk_lower_bands_into(x_new, 0, x_new.rows(), &mut self.h, Acc::Add);
+        self.h.mirror_lower();
+        for (i, &yi) in y_new.iter().enumerate() {
+            for (gj, &xij) in self.g.iter_mut().zip(x_new.row(i)) {
+                *gj += yi * xij;
+            }
+        }
+        self.n += x_new.rows();
+    }
+
+    /// Remove `m` retired rows incrementally: `G −= X_oldᵀX_old`,
+    /// `g −= X_oldᵀy_old` (the streaming-window counterpart of
+    /// [`GramCache::append_rows`]; the subtraction is the same banded SYRK
+    /// downdate the per-fold Hessians use). The caller is responsible for
+    /// passing rows that are actually in the cache — the Gram itself cannot
+    /// check.
+    pub fn retire_rows(&mut self, x_old: &Matrix, y_old: &[f64]) {
+        assert_eq!(x_old.rows(), y_old.len(), "retired block shape mismatch");
+        assert_eq!(x_old.cols(), self.h.rows(), "retired block dim mismatch");
+        assert!(x_old.rows() <= self.n, "cannot retire more rows than held");
+        syrk_lower_bands_into(x_old, 0, x_old.rows(), &mut self.h, Acc::Sub);
+        self.h.mirror_lower();
+        for (i, &yi) in y_old.iter().enumerate() {
+            for (gj, &xij) in self.g.iter_mut().zip(x_old.row(i)) {
+                *gj -= yi * xij;
+            }
+        }
+        self.n -= x_old.rows();
+    }
+
     /// The global Gram `G = XᵀX` (full symmetric).
     pub fn hessian(&self) -> &Matrix {
         &self.h
@@ -328,6 +376,44 @@ mod tests {
                     "gradient bits drifted at chunk={chunk} workers={workers}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn append_and_retire_rows_track_fresh_assembly() {
+        let (n, h, m) = (300usize, 13usize, 45usize);
+        let (x, y) = dataset(n + m, h, 0xA99);
+        let x0 = x.slice(0, n, 0, h);
+        let y0 = y[..n].to_vec();
+        let x_new = x.slice(n, n + m, 0, h);
+        let y_new = y[n..].to_vec();
+
+        let mut cache = GramCache::assemble(&x0, &y0);
+        cache.append_rows(&x_new, &y_new);
+        assert_eq!(cache.n_rows(), n + m);
+        let full = GramCache::assemble(&x, &y);
+        assert!(
+            cache.hessian().max_abs_diff(full.hessian()) < 1e-9,
+            "grown Gram drift {:.2e}",
+            cache.hessian().max_abs_diff(full.hessian())
+        );
+        for (a, b) in cache.gradient().iter().zip(full.gradient()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+        // symmetry survives the incremental band update + mirror
+        for i in 0..h {
+            for j in 0..h {
+                assert_eq!(cache.hessian()[(i, j)], cache.hessian()[(j, i)]);
+            }
+        }
+
+        // retire the same block: back to the original window
+        cache.retire_rows(&x_new, &y_new);
+        assert_eq!(cache.n_rows(), n);
+        let base = GramCache::assemble(&x0, &y0);
+        assert!(cache.hessian().max_abs_diff(base.hessian()) < 1e-9);
+        for (a, b) in cache.gradient().iter().zip(base.gradient()) {
+            assert!((a - b).abs() < 1e-10);
         }
     }
 

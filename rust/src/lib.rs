@@ -24,7 +24,10 @@
 //!   ([`coordinator::sweep_engine`]: anchors-first scheduling over a worker
 //!   pool, bit-identical results at any thread count), the shared-Gram data
 //!   pipeline ([`data::gram`]: `XᵀX` assembled once per dataset, per-fold
-//!   Hessians by hold-out downdate), the native Algorithm-1 implementation
+//!   Hessians by hold-out downdate), the rank-k factor-update subsystem and
+//!   its exact leave-one-out engine ([`linalg::chud`], [`cv::loo`]: anchor
+//!   factors once per λ, held-out factors by rank-1 downdate), the native
+//!   Algorithm-1 implementation
 //!   ([`pichol`]), the LAPACK-like substrate the paper assumes ([`linalg`],
 //!   including a pool-tiled blocked Cholesky), the §5 triangular
 //!   vectorization strategies ([`vectorize`]), dataset synthesis and

@@ -1,0 +1,552 @@
+//! Rank-1 / rank-k Cholesky update and downdate — the factor-update
+//! subsystem.
+//!
+//! The whole premise of the paper is that refactorizing the Hessian
+//! dominates cross-validation cost. The update/downdate kernels attack the
+//! workloads where a factor we *already hold* is perturbed by a low-rank
+//! term, so a fresh `O(d³)` factorization is pure waste:
+//!
+//! - **leave-one-out CV** ([`crate::cv::loo`]): `H_i + λI = (G + λI) − x_i
+//!   x_iᵀ` — every held-out factor is a rank-1 *downdate* of the per-λ
+//!   anchor factor `chol(G + λI)`, `O(d²)` instead of `O(d³)`;
+//! - **streaming data** ([`crate::data::gram::GramCache::append_rows`]):
+//!   `m` new rows turn `G + λI` into `(G + λI) + X_newᵀX_new` — a rank-m
+//!   *update* of each cached anchor factor.
+//!
+//! ## The kernels
+//!
+//! Given `L` with `L·Lᵀ = A` and an update block `U` (`n×k`, one update
+//! vector per column):
+//!
+//! - [`chol_update`] rewrites `L` in place so `L·Lᵀ = A + U·Uᵀ`, via a
+//!   sequence of **Givens rotations**: per (column `j`, vector `q`),
+//!   `r = √(L[j][j]² + v[j]²)`, `c = r/L[j][j]`, `s = v[j]/L[j][j]`, then
+//!   each affected pair transforms as `l ← (l + s·v)/c`, `v ← c·v − s·l`.
+//!   Rotations are orthogonal, so the update can never break down.
+//! - [`chol_downdate`] rewrites `L` so `L·Lᵀ = A − U·Uᵀ`, via **hyperbolic
+//!   rotations**: the same recurrence with `r = √(L[j][j]² − v[j]²)` and
+//!   `l ← (l − s·v)/c`. When `A − U·Uᵀ` is not (numerically)
+//!   positive-definite some pivot satisfies `L[j][j]² − v[j]² ≤ 0`; the
+//!   kernel stops and reports the failing **column index** as a
+//!   [`CholeskyError`] (`pivot = j`, `value` = the non-positive `r²`) —
+//!   it never panics, so a pool worker survives a breakdown and the caller
+//!   can skip/record the bad perturbation (the LOO sweep does exactly
+//!   that).
+//!
+//! ## Blocking — trailing panels run on the packed kernel engine
+//!
+//! The scalar recurrence is BLAS-1. The blocked form processes panels of
+//! [`CHUD_BLOCK`] columns: the rotations for a panel depend only on the
+//! panel's diagonal block and the matching rows of `U`, so they are
+//! computed by the scalar recurrence on those rows **while being
+//! accumulated into one `(jb+k)×(jb+k)` transform matrix `T`** (each
+//! rotation is a linear map on the row space `[L[i, panel] | U[i, :]]`, and
+//! `T` is their product, built with the very same scalar operations applied
+//! to `T`'s columns). The trailing rows then apply `T` in one shot:
+//!
+//! ```text
+//!   [L[i, panel] | U[i, :]] ← [L[i, panel] | U[i, :]] · T    for i > panel
+//! ```
+//!
+//! — two GEMM-shaped products per row chunk (`L`-part and `U`-part of the
+//! input, `Acc::Set` + `Acc::Add`) routed through the packed
+//! register-blocked engine ([`super::kernel`]), exactly like the blocked
+//! Cholesky's TRSM/SYRK trailing updates. The transform buffer `T` is drawn
+//! from the per-worker [`Scratch`](super::scratch::Scratch) arena
+//! (`scratch.trans`, passed explicitly so callers can borrow other scratch
+//! fields at the same time); the GEMM output panel uses the kernel's
+//! thread-local arena — steady-state downdates allocate nothing.
+//!
+//! ## Determinism
+//!
+//! Each kernel is a pure serial function of `(L, U)`: no pool, no shared
+//! state, and the packed products use the engine's fixed accumulation
+//! schedule. Fanning independent downdates across workers (the LOO sweep's
+//! per-i tasks) therefore yields bitwise identical results at any worker
+//! count — pinned by `round_trip_bitwise_across_worker_counts`.
+//!
+//! ## Breakdown contract
+//!
+//! On `Err`, `L` (and `U`) hold a partially-transformed state and are
+//! unusable — same contract as [`super::cholesky::cholesky_in_place`]. The
+//! LOO engine copies the anchor factor into scratch before every downdate,
+//! so a breakdown only poisons the scratch copy, never the shared anchor.
+
+use super::cholesky::CholeskyError;
+use super::kernel::{self, Acc, Src};
+use super::matrix::Matrix;
+
+/// Panel width of the blocked kernels. Small enough that the `(jb+k)²`
+/// transform stays register/L1-friendly and the extra flops of the composed
+/// transform (vs the scalar recurrence) stay bounded, large enough that the
+/// trailing work is GEMM-shaped.
+pub const CHUD_BLOCK: usize = 16;
+
+/// Row chunk of the trailing transform application (bounds the kernel's
+/// thread-local output panel, like the blocked Cholesky's `SYRK_CHUNK`).
+const CHUD_ROW_CHUNK: usize = 128;
+
+/// Update (`A + U·Uᵀ`, Givens) or downdate (`A − U·Uᵀ`, hyperbolic)?
+#[derive(Clone, Copy, PartialEq)]
+enum Dir {
+    Update,
+    Downdate,
+}
+
+/// The shared blocked core. `u` is the row-major `n×k` update block (one
+/// vector per column), destroyed in the process; `block` is the panel
+/// width; `trans` is the reusable transform buffer (reshaped and fully
+/// overwritten per panel).
+fn chud_in_place(
+    l: &mut Matrix,
+    u: &mut [f64],
+    k: usize,
+    block: usize,
+    dir: Dir,
+    trans: &mut Matrix,
+) -> Result<(), CholeskyError> {
+    assert!(l.is_square(), "chud needs a square factor");
+    let n = l.rows();
+    assert_eq!(u.len(), n * k, "update block shape mismatch");
+    if n == 0 || k == 0 {
+        return Ok(());
+    }
+    let block = block.max(1);
+    let stride = n;
+
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + block).min(n);
+        let jb = j1 - j0;
+        let w = jb + k;
+
+        // T ← I. Each rotation below is also applied to T's columns, so T
+        // ends up as the composed linear map the trailing rows need.
+        trans.reset_zeroed(w, w);
+        for t in 0..w {
+            trans[(t, t)] = 1.0;
+        }
+
+        // panel pass: the scalar recurrence on rows j0..j1, in the same
+        // (vector-major, ascending-column) order the unblocked algorithm
+        // uses — with block ≥ n this IS the unblocked algorithm.
+        {
+            let ld = l.as_mut_slice();
+            for q in 0..k {
+                for j in j0..j1 {
+                    let ljj = ld[j * stride + j];
+                    let vqj = u[j * k + q];
+                    let r = match dir {
+                        Dir::Update => (ljj * ljj + vqj * vqj).sqrt(),
+                        Dir::Downdate => {
+                            let r2 = ljj * ljj - vqj * vqj;
+                            if r2 <= 0.0 || !r2.is_finite() {
+                                // numerically indefinite at column j: stop
+                                // and report the failing column
+                                return Err(CholeskyError { pivot: j, value: r2 });
+                            }
+                            r2.sqrt()
+                        }
+                    };
+                    let c = r / ljj;
+                    let s = vqj / ljj;
+                    ld[j * stride + j] = r;
+                    // panel rows below the pivot, scalar
+                    for i in (j + 1)..j1 {
+                        let lij = ld[i * stride + j];
+                        let viq = u[i * k + q];
+                        let lij_new = match dir {
+                            Dir::Update => (lij + s * viq) / c,
+                            Dir::Downdate => (lij - s * viq) / c,
+                        };
+                        u[i * k + q] = c * viq - s * lij_new;
+                        ld[i * stride + j] = lij_new;
+                    }
+                    // fold the rotation into T (columns j−j0 and jb+q),
+                    // with the exact same scalar ops as the row transform
+                    let (cj, cb) = (j - j0, jb + q);
+                    for t in 0..w {
+                        let a = trans[(t, cj)];
+                        let b = trans[(t, cb)];
+                        let a_new = match dir {
+                            Dir::Update => (a + s * b) / c,
+                            Dir::Downdate => (a - s * b) / c,
+                        };
+                        trans[(t, cb)] = c * b - s * a_new;
+                        trans[(t, cj)] = a_new;
+                    }
+                }
+            }
+        }
+
+        // trailing rows: [L[i, j0..j1] | U[i, :]] · T through the packed
+        // kernel, chunked to bound the thread-local output panel
+        if j1 < n {
+            let m_total = n - j1;
+            for q0 in (0..m_total).step_by(CHUD_ROW_CHUNK) {
+                let q1 = (q0 + CHUD_ROW_CHUNK).min(m_total);
+                let rows = q1 - q0;
+                kernel::with_tmp(rows * w, |tmp| {
+                    // tmp = L[j1+q0.., j0..j1] · T[0..jb, :]
+                    kernel::gemm_into(
+                        rows,
+                        w,
+                        jb,
+                        Src::N {
+                            data: l.as_slice(),
+                            stride,
+                            r0: j1 + q0,
+                            c0: j0,
+                        },
+                        Src::N {
+                            data: trans.as_slice(),
+                            stride: w,
+                            r0: 0,
+                            c0: 0,
+                        },
+                        tmp,
+                        w,
+                        0,
+                        0,
+                        Acc::Set,
+                    );
+                    // tmp += U[j1+q0.., :] · T[jb.., :]
+                    kernel::gemm_into(
+                        rows,
+                        w,
+                        k,
+                        Src::N {
+                            data: &*u,
+                            stride: k,
+                            r0: j1 + q0,
+                            c0: 0,
+                        },
+                        Src::N {
+                            data: trans.as_slice(),
+                            stride: w,
+                            r0: jb,
+                            c0: 0,
+                        },
+                        tmp,
+                        w,
+                        0,
+                        0,
+                        Acc::Add,
+                    );
+                    // scatter back into the factor panel and U
+                    let ld = l.as_mut_slice();
+                    for i in 0..rows {
+                        let gi = j1 + q0 + i;
+                        ld[gi * stride + j0..gi * stride + j1]
+                            .copy_from_slice(&tmp[i * w..i * w + jb]);
+                        u[gi * k..(gi + 1) * k].copy_from_slice(&tmp[i * w + jb..(i + 1) * w]);
+                    }
+                });
+            }
+        }
+        j0 = j1;
+    }
+    Ok(())
+}
+
+/// Rank-k Cholesky **update**: rewrite `L` in place so `L·Lᵀ = A + U·Uᵀ`,
+/// where `U` is `n×k` (one update vector per column; destroyed). `trans` is
+/// the per-worker transform buffer (`Scratch::trans` on the pool paths).
+/// Givens rotations are orthogonal, so the update cannot break down.
+pub fn chol_update(l: &mut Matrix, u: &mut Matrix, trans: &mut Matrix) {
+    assert_eq!(u.rows(), l.rows(), "update block must have n rows");
+    let k = u.cols();
+    chud_in_place(l, u.as_mut_slice(), k, CHUD_BLOCK, Dir::Update, trans)
+        .expect("rank-k Cholesky update cannot break down");
+}
+
+/// Rank-k Cholesky **downdate**: rewrite `L` in place so `L·Lᵀ = A − U·Uᵀ`
+/// (`U` destroyed). Returns [`CholeskyError`] with the failing column index
+/// when `A − U·Uᵀ` is numerically indefinite; `L`/`U` are then unusable
+/// (copy first if you need to recover — see the module docs).
+pub fn chol_downdate(
+    l: &mut Matrix,
+    u: &mut Matrix,
+    trans: &mut Matrix,
+) -> Result<(), CholeskyError> {
+    assert_eq!(u.rows(), l.rows(), "update block must have n rows");
+    let k = u.cols();
+    chud_in_place(l, u.as_mut_slice(), k, CHUD_BLOCK, Dir::Downdate, trans)
+}
+
+/// Rank-1 update: `L·Lᵀ ← A + v·vᵀ` (`v` destroyed). The streaming-row
+/// fast path of [`chol_update`].
+pub fn chol_update_rank1(l: &mut Matrix, v: &mut [f64], trans: &mut Matrix) {
+    chud_in_place(l, v, 1, CHUD_BLOCK, Dir::Update, trans)
+        .expect("rank-1 Cholesky update cannot break down");
+}
+
+/// Rank-1 downdate: `L·Lᵀ ← A − v·vᵀ` (`v` destroyed) — the leave-one-out
+/// kernel (`chol(G + λI) → chol(G − x_ix_iᵀ + λI)` at `O(d²)`). Errors as
+/// [`chol_downdate`].
+pub fn chol_downdate_rank1(
+    l: &mut Matrix,
+    v: &mut [f64],
+    trans: &mut Matrix,
+) -> Result<(), CholeskyError> {
+    chud_in_place(l, v, 1, CHUD_BLOCK, Dir::Downdate, trans)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky::cholesky_blocked;
+    use crate::linalg::gemm::{syrk_lower, Gemm};
+    use crate::testutil::{random_matrix, random_spd};
+
+    /// Textbook unblocked rank-1 recurrence — the oracle the blocked core's
+    /// `block ≥ n` path must match bitwise.
+    fn rank1_reference(l: &mut Matrix, v: &mut [f64], down: bool) -> Result<(), CholeskyError> {
+        let n = l.rows();
+        for j in 0..n {
+            let ljj = l[(j, j)];
+            let r = if down {
+                let r2 = ljj * ljj - v[j] * v[j];
+                if r2 <= 0.0 || !r2.is_finite() {
+                    return Err(CholeskyError { pivot: j, value: r2 });
+                }
+                r2.sqrt()
+            } else {
+                (ljj * ljj + v[j] * v[j]).sqrt()
+            };
+            let c = r / ljj;
+            let s = v[j] / ljj;
+            l[(j, j)] = r;
+            for i in (j + 1)..n {
+                let lij = l[(i, j)];
+                let lij_new = if down {
+                    (lij - s * v[i]) / c
+                } else {
+                    (lij + s * v[i]) / c
+                };
+                v[i] = c * v[i] - s * lij_new;
+                l[(i, j)] = lij_new;
+            }
+        }
+        Ok(())
+    }
+
+    /// `A + v·vᵀ` (sign = ±1).
+    fn rank1_perturbed(a: &Matrix, v: &[f64], sign: f64) -> Matrix {
+        let n = a.rows();
+        Matrix::from_fn(n, n, |i, j| a[(i, j)] + sign * v[i] * v[j])
+    }
+
+    #[test]
+    fn update_rank1_matches_refactorization() {
+        for &n in &[1usize, 2, 7, 23, 40] {
+            let a = random_spd(n, 1e3, 100 + n as u64);
+            let l0 = cholesky_blocked(&a).unwrap();
+            let v: Vec<f64> = (0..n).map(|i| ((i + 1) as f64 * 0.37).sin()).collect();
+            let mut l = l0.clone();
+            let mut vv = v.clone();
+            let mut trans = Matrix::zeros(0, 0);
+            chol_update_rank1(&mut l, &mut vv, &mut trans);
+            let exact = cholesky_blocked(&rank1_perturbed(&a, &v, 1.0)).unwrap();
+            assert!(
+                l.max_abs_diff(&exact) < 1e-9,
+                "n={n}: {:.2e}",
+                l.max_abs_diff(&exact)
+            );
+        }
+    }
+
+    #[test]
+    fn downdate_rank1_matches_refactorization() {
+        // A = XᵀX + I and v = a row of X: A − v·vᵀ ⪰ I is safely PD
+        for &(n, d) in &[(8usize, 1usize), (30, 9), (80, 31)] {
+            let x = random_matrix(n, d, 200 + d as u64);
+            let mut a = syrk_lower(&x);
+            a.add_diag_in_place(1.0);
+            let l0 = cholesky_blocked(&a).unwrap();
+            let v: Vec<f64> = x.row(n / 2).to_vec();
+            let mut l = l0.clone();
+            let mut vv = v.clone();
+            let mut trans = Matrix::zeros(0, 0);
+            chol_downdate_rank1(&mut l, &mut vv, &mut trans).unwrap();
+            let exact = cholesky_blocked(&rank1_perturbed(&a, &v, -1.0)).unwrap();
+            assert!(
+                l.max_abs_diff(&exact) < 1e-9,
+                "d={d}: {:.2e}",
+                l.max_abs_diff(&exact)
+            );
+        }
+    }
+
+    #[test]
+    fn rank_k_update_and_downdate_match_refactorization() {
+        // k spans: below, at, and above the panel width (and k > d)
+        for &(d, k) in &[(13usize, 3usize), (33, 5), (20, CHUD_BLOCK + 3), (4, 9)] {
+            let x = random_matrix(3 * d + k, d, 300 + (d * k) as u64);
+            let mut a = syrk_lower(&x);
+            a.add_diag_in_place(1.0);
+            let l0 = cholesky_blocked(&a).unwrap();
+            let u = x.slice(0, k, 0, d).transpose(); // d×k, one vector per col
+            let uut = Gemm::default().a_bt(&u, &u);
+
+            // update: A + U·Uᵀ
+            let mut l = l0.clone();
+            let mut uu = u.clone();
+            let mut trans = Matrix::zeros(0, 0);
+            chol_update(&mut l, &mut uu, &mut trans);
+            let plus = Matrix::from_fn(d, d, |i, j| a[(i, j)] + uut[(i, j)]);
+            let exact = cholesky_blocked(&plus).unwrap();
+            assert!(
+                l.max_abs_diff(&exact) < 1e-8,
+                "update d={d} k={k}: {:.2e}",
+                l.max_abs_diff(&exact)
+            );
+
+            // downdate: A − U·Uᵀ (PD because A = XᵀX + I ⊇ U·Uᵀ + I)
+            let mut l = l0.clone();
+            let mut uu = u.clone();
+            chol_downdate(&mut l, &mut uu, &mut trans).unwrap();
+            let minus = Matrix::from_fn(d, d, |i, j| a[(i, j)] - uut[(i, j)]);
+            let exact = cholesky_blocked(&minus).unwrap();
+            assert!(
+                l.max_abs_diff(&exact) < 1e-8,
+                "downdate d={d} k={k}: {:.2e}",
+                l.max_abs_diff(&exact)
+            );
+        }
+    }
+
+    /// The satellite round-trip: `downdate(update(L, v), v)` returns to `L`
+    /// within refactorization tolerance — including d=1 and a vector that
+    /// only touches the last column.
+    #[test]
+    fn update_then_downdate_round_trips() {
+        for &n in &[1usize, 2, 13, 40] {
+            let a = random_spd(n, 1e3, 400 + n as u64);
+            let l0 = cholesky_blocked(&a).unwrap();
+            let mut trans = Matrix::zeros(0, 0);
+            let vecs: Vec<Vec<f64>> = vec![
+                (0..n).map(|i| ((i + 2) as f64 * 0.61).cos()).collect(),
+                // last-column edge case: only the final coordinate is hit,
+                // so the whole perturbation lands on the last pivot
+                (0..n)
+                    .map(|i| if i + 1 == n { 0.75 } else { 0.0 })
+                    .collect(),
+            ];
+            for v in vecs {
+                let mut l = l0.clone();
+                let mut vv = v.clone();
+                chol_update_rank1(&mut l, &mut vv, &mut trans);
+                let mut vv = v.clone();
+                chol_downdate_rank1(&mut l, &mut vv, &mut trans).unwrap();
+                assert!(
+                    l.max_abs_diff(&l0) < 1e-9,
+                    "n={n}: round-trip drift {:.2e}",
+                    l.max_abs_diff(&l0)
+                );
+            }
+        }
+    }
+
+    /// With `block ≥ n` the blocked core degenerates to the scalar
+    /// recurrence — it must match an independently written unblocked
+    /// reference bitwise; smaller blocks agree within rounding.
+    #[test]
+    fn blocked_core_matches_unblocked_reference() {
+        let n = 37;
+        let x = random_matrix(2 * n, n, 500);
+        let mut a = syrk_lower(&x);
+        a.add_diag_in_place(1.0);
+        let l0 = cholesky_blocked(&a).unwrap();
+        let v: Vec<f64> = x.row(3).to_vec();
+        let mut trans = Matrix::zeros(0, 0);
+
+        for down in [false, true] {
+            let mut l_ref = l0.clone();
+            let mut v_ref = v.clone();
+            rank1_reference(&mut l_ref, &mut v_ref, down).unwrap();
+
+            // block ≥ n: single panel, no trailing GEMM — bitwise equal
+            let mut l_one = l0.clone();
+            let mut v_one = v.clone();
+            let dir = if down { Dir::Downdate } else { Dir::Update };
+            chud_in_place(&mut l_one, &mut v_one, 1, n, dir, &mut trans).unwrap();
+            assert_eq!(
+                l_one.as_slice(),
+                l_ref.as_slice(),
+                "single-panel path must be bitwise the scalar recurrence (down={down})"
+            );
+
+            // smaller panels: same factor within rounding
+            for block in [1usize, 5, CHUD_BLOCK] {
+                let mut l_b = l0.clone();
+                let mut v_b = v.clone();
+                chud_in_place(&mut l_b, &mut v_b, 1, block, dir, &mut trans).unwrap();
+                assert!(
+                    l_b.max_abs_diff(&l_ref) < 1e-10,
+                    "block={block} down={down}: {:.2e}",
+                    l_b.max_abs_diff(&l_ref)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn downdate_breakdown_reports_failing_column() {
+        // L = chol(I) = I; downdating by 2·e_j makes pivot j² − 4 < 0,
+        // deterministically, at the first, a middle, and the LAST column
+        let n = 9;
+        for &col in &[0usize, 4, n - 1] {
+            let mut l = Matrix::eye(n);
+            let mut v = vec![0.0; n];
+            v[col] = 2.0;
+            let mut trans = Matrix::zeros(0, 0);
+            let err = chol_downdate_rank1(&mut l, &mut v, &mut trans).unwrap_err();
+            assert_eq!(err.pivot, col, "breakdown must report the failing column");
+            assert!(err.value <= 0.0);
+        }
+        // d=1 breakdown
+        let mut l = Matrix::eye(1);
+        let mut v = vec![3.0];
+        let mut trans = Matrix::zeros(0, 0);
+        let err = chol_downdate_rank1(&mut l, &mut v, &mut trans).unwrap_err();
+        assert_eq!(err.pivot, 0);
+    }
+
+    /// Round-trips executed as pool tasks are bitwise identical at workers
+    /// 1/2/4: the kernels are pure serial functions of their inputs, and
+    /// worker scratch reuse never leaks a bit.
+    #[test]
+    fn round_trip_bitwise_across_worker_counts() {
+        use crate::coordinator::pool::WorkerPool;
+        use crate::linalg::scratch::Scratch;
+        let n = 31;
+        let a = random_spd(n, 1e3, 77);
+        let l0 = std::sync::Arc::new(cholesky_blocked(&a).unwrap());
+        let run = |workers: usize| -> Vec<Vec<f64>> {
+            let pool = WorkerPool::new(workers);
+            let jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> Vec<f64> + Send>> = (0..8)
+                .map(|t| {
+                    let l0 = std::sync::Arc::clone(&l0);
+                    let f: Box<dyn FnOnce(&mut Scratch) -> Vec<f64> + Send> =
+                        Box::new(move |scratch| {
+                            let mut l = (*l0).clone();
+                            let v: Vec<f64> =
+                                (0..n).map(|i| ((i + t) as f64 * 0.29).sin()).collect();
+                            let mut vv = v.clone();
+                            chol_update_rank1(&mut l, &mut vv, &mut scratch.trans);
+                            let mut vv = v;
+                            chol_downdate_rank1(&mut l, &mut vv, &mut scratch.trans).unwrap();
+                            l.into_vec()
+                        });
+                    f
+                })
+                .collect();
+            pool.map_scratch(jobs)
+        };
+        let serial = run(1);
+        for workers in [2usize, 4] {
+            assert_eq!(run(workers), serial, "bits drifted at workers={workers}");
+        }
+    }
+}

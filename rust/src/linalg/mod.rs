@@ -12,6 +12,9 @@
 //! - [`gemm`] — blocked matmul / syrk / matvec (the BLAS-3 entry points,
 //!   packed-kernel backed; the legacy loops live on in `gemm::reference`)
 //! - [`cholesky`] — blocked right-looking Cholesky (LAPACK `potrf` shape)
+//! - [`chud`] — blocked rank-1/rank-k Cholesky update (Givens) and downdate
+//!   (hyperbolic rotations): perturb an existing factor at `O(k·d²)` instead
+//!   of refactorizing — the leave-one-out and streaming-data kernel
 //! - [`triangular`] — forward/backward substitution and block TRSM
 //! - [`scratch`] — the per-worker solver scratch arena (factor, eval and
 //!   solve buffers reused across sweep tasks)
@@ -25,6 +28,7 @@
 //! fp32 HLO path is compared against.
 
 pub mod cholesky;
+pub mod chud;
 pub mod gemm;
 pub mod kernel;
 pub mod lanczos;
@@ -38,6 +42,7 @@ pub mod svd;
 pub mod triangular;
 
 pub use cholesky::{cholesky_blocked, cholesky_in_place, CholeskyError};
+pub use chud::{chol_downdate, chol_downdate_rank1, chol_update, chol_update_rank1};
 pub use gemm::{gemm, gemv, syrk_lower, Gemm};
 pub use matrix::Matrix;
 pub use norms::{fro_norm, spectral_norm_est};

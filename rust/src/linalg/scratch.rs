@@ -42,6 +42,14 @@ pub struct Scratch {
     pub theta: Vec<f64>,
     /// Hold-out prediction buffer (`Xv · θ`).
     pub pred: Vec<f64>,
+    /// The `(jb+k)²` panel-transform accumulator of the rank-k Cholesky
+    /// update/downdate kernels ([`crate::linalg::chud`]), reshaped and fully
+    /// overwritten per panel. Passed explicitly (`&mut scratch.trans`) so
+    /// callers can borrow `factor`/`vbuf` for the same kernel call.
+    pub trans: Matrix,
+    /// Downdated per-row gradient `g_i = g − y_i·x_i` of the leave-one-out
+    /// sweep ([`crate::cv::loo`]), fully overwritten per held-out row.
+    pub gvec: Vec<f64>,
 }
 
 impl Scratch {
@@ -53,6 +61,8 @@ impl Scratch {
             work: Vec::new(),
             theta: Vec::new(),
             pred: Vec::new(),
+            trans: Matrix::zeros(0, 0),
+            gvec: Vec::new(),
         }
     }
 }

@@ -8,7 +8,7 @@ use picholesky::cli::{Args, USAGE};
 use picholesky::config::{parse_dataset, ExperimentConfig};
 use picholesky::coordinator::{Coordinator, HloFold, HloPipeline};
 use picholesky::cv::solvers::SolverKind;
-use picholesky::cv::CvConfig;
+use picholesky::cv::{CvConfig, CvMode};
 use picholesky::data::synthetic::{DatasetKind, SyntheticDataset};
 use picholesky::experiments;
 use picholesky::runtime::Engine;
@@ -62,6 +62,10 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.cv.sweep_threads = args.usize_flag("threads", cfg.cv.sweep_threads)?;
     cfg.cv.sweep_batch = args.usize_flag("batch", cfg.cv.sweep_batch)?;
     cfg.cv.chunk_rows = args.usize_flag("chunk-rows", cfg.cv.chunk_rows)?;
+    if let Some(mode) = args.flag("mode") {
+        cfg.cv.mode = CvMode::parse(mode)
+            .ok_or_else(|| anyhow::anyhow!("unknown --mode '{mode}' (kfold | loo)"))?;
+    }
     cfg.cv.seed = cfg.seed;
     if let Some(dir) = args.flag("artifacts") {
         cfg.artifacts_dir = dir.to_string();
@@ -75,6 +79,38 @@ fn cmd_cv(args: &Args) -> Result<()> {
     let solver = SolverKind::parse(args.flag("solver").unwrap_or("pichol"))
         .ok_or_else(|| anyhow::anyhow!("unknown --solver"))?;
     let coord = Coordinator::new(cfg.workers.max(1));
+    if cfg.cv.mode == CvMode::Loo {
+        // leave-one-out: the factor-update subsystem (anchors + downdates);
+        // the solver flag does not apply — every solve is Hessian-exact
+        println!(
+            "dataset={} n={} h={} mode=loo anchors={} grid={}",
+            cfg.dataset.name(),
+            cfg.n,
+            cfg.h,
+            cfg.cv.g_samples,
+            cfg.cv.q_grid
+        );
+        let ds = SyntheticDataset::generate(cfg.dataset, cfg.n, cfg.h, cfg.seed);
+        let rep = coord.run_loo(&ds, &cfg.cv)?;
+        println!(
+            "λ* = {:.4e}   LOO-RMSE = {:.4}   wall = {}   skipped = {}/{}",
+            rep.best_lambda,
+            rep.best_error,
+            fmt_secs(rep.wall_secs),
+            rep.skipped.len(),
+            rep.n * rep.anchor_lambdas.len()
+        );
+        for (lam, rmse) in rep.anchor_lambdas.iter().zip(&rep.anchor_rmse) {
+            println!("  anchor λ = {lam:.4e}   exact LOO-RMSE = {rmse:.4}");
+        }
+        for (phase, secs) in rep.timer.entries() {
+            println!("  {phase:<10} {}", fmt_secs(*secs));
+        }
+        if args.switch("metrics") {
+            print!("{}", coord.metrics.snapshot());
+        }
+        return Ok(());
+    }
     println!(
         "dataset={} n={} h={} solver={} folds={} grid={}",
         cfg.dataset.name(),
