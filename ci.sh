@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI gate: build, test, quickstart + LOO end-to-end smokes, doc-lint (broken
+# CI gate: build, test, quickstart + LOO + factor-level-k-fold (fig2)
+# end-to-end smokes, the cross-mode conformance suite, doc-lint (broken
 # intra-doc links fail), format and clippy checks (both guarded: skipped
 # when the component is not installed), and the kernel-bench smoke that
 # emits the BENCH_kernels.json perf trajectory.
@@ -7,8 +8,20 @@
 # Usage:
 #   ./ci.sh                 full gate (from the repository root; fully offline)
 #   ./ci.sh --bench-smoke   only the kernel bench at tiny sizes + JSON validation
+#   ./ci.sh --conformance   only the cross-mode conformance suite
+#                           (fold_strategy refactor|downdate × --mode loo,
+#                           bitwise at workers 1/2/4)
 set -euo pipefail
 cd "$(dirname "$0")"
+
+conformance() {
+  # the cross-mode conformance suite: fold_strategy=refactor vs =downdate vs
+  # --mode loo on the seeded problem generators, λ*/curve agreement ≤1e-9
+  # RMS, bitwise worker invariance at {1,2,4}, and the fold-granular
+  # breakdown-fallback injection — tests/conformance.rs end to end
+  echo "==> cross-mode conformance suite (refactor | downdate | loo, workers 1/2/4)"
+  cargo test -q --test conformance
+}
 
 bench_smoke() {
   # smoke runs validate the harness + JSON shape into an UNTRACKED scratch
@@ -25,6 +38,7 @@ bench_smoke() {
   # the factor-update subsystem stages and the LOO structural phase counts
   grep -q '"chud_r1"' "$out"
   grep -q '"chud_rk"' "$out"
+  grep -q '"kfold_downdate"' "$out"
   grep -q '"loo_sweep"' "$out"
   grep -q '"loo_phases"' "$out"
   grep -q '"per_row_chol": 0' "$out"
@@ -36,17 +50,29 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
   exit 0
 fi
 
+if [[ "${1:-}" == "--conformance" ]]; then
+  conformance
+  exit 0
+fi
+
 echo "==> cargo build --release"
 cargo build --release
 
 echo "==> cargo test -q"
 cargo test -q
 
+# the conformance stage re-runs the cross-mode suite as its own named gate
+# (guarded like clippy/fmt in spirit: it only needs cargo, so it always runs)
+conformance
+
 echo "==> cargo run --release --example quickstart (end-to-end smoke gate)"
 cargo run --release --example quickstart
 
 echo "==> cargo run --release --example loo (LOO downdate-engine smoke gate)"
 cargo run --release --example loo
+
+echo "==> cargo run --release --example fig2 (fold_strategy=downdate smoke gate)"
+cargo run --release --example fig2
 
 echo "==> cargo doc --no-deps (rustdoc warnings are errors)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

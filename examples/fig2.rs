@@ -1,0 +1,97 @@
+//! Figure-2 smoke, factor-level k-fold edition: where the pipeline time
+//! goes under the two fold strategies.
+//!
+//! The paper's Figure 2 shows the `k·q` Cholesky sweep swallowing the
+//! pipeline once `n < k·q·d`. The factor-level engine
+//! (`fold_strategy = downdate`, the default) attacks exactly that term:
+//! per grid λ it factors `chol(G + λI)` **once** and derives every fold's
+//! factor by a chained rank-`n_v` hyperbolic downdate — so the `O(d³)`
+//! column of the cost split shrinks from `k·q` factorizations to `q`.
+//!
+//! ```bash
+//! cargo run --release --example fig2
+//! ```
+//!
+//! ci.sh runs this example as the fold-downdate smoke gate: it asserts the
+//! structural phase counts (per anchor: `factor == 1`,
+//! `fold_downdate == k`, `chol == 0`) and that both strategies produce the
+//! same curve.
+
+use picholesky::cv::solvers::SolverKind;
+use picholesky::cv::{run_cv, CvConfig, CvReport, FoldStrategy};
+use picholesky::data::synthetic::{DatasetKind, SyntheticDataset};
+use picholesky::util::fmt_secs;
+
+fn main() -> picholesky::Result<()> {
+    // many small folds: the regime the downdate chain exists for
+    let (n, h, k, q) = (256usize, 64usize, 8usize, 15usize);
+    let ds = SyntheticDataset::generate(DatasetKind::MnistLike, n, h, 42);
+    println!(
+        "dataset: {} — n = {n}, h = {h}, k = {k} folds, q = {q} grid λ's",
+        ds.kind.name()
+    );
+
+    let base = CvConfig {
+        k_folds: k,
+        q_grid: q,
+        lambda_range: Some((1e-2, 1.0)),
+        ..CvConfig::default()
+    };
+    let run = |strategy: FoldStrategy| -> picholesky::Result<CvReport> {
+        run_cv(
+            &ds,
+            SolverKind::Chol,
+            &CvConfig {
+                fold_strategy: strategy,
+                ..base.clone()
+            },
+        )
+    };
+    let down = run(FoldStrategy::Downdate)?;
+    let refr = run(FoldStrategy::Refactor)?;
+
+    // the Figure-2 style split: O(d³) factorizations vs everything else
+    println!("\nphase                 downdate     refactor");
+    for phase in ["gram", "downdate", "factor", "fold_downdate", "chol", "solve", "holdout"] {
+        println!(
+            "  {phase:<16} {:>10} {:>12}",
+            fmt_secs(down.timer.get(phase)),
+            fmt_secs(refr.timer.get(phase)),
+        );
+    }
+    println!(
+        "\nλ* = {:.4e} (downdate) vs {:.4e} (refactor)   holdout {:.4} vs {:.4}",
+        down.best_lambda, refr.best_lambda, down.best_error, refr.best_error
+    );
+    println!(
+        "O(d³) factorizations: {} (downdate: one per anchor λ) vs {} (refactor: k per λ)",
+        down.timer.count("factor"),
+        refr.timer.count("chol"),
+    );
+
+    // smoke-gate asserts: the structural invariant of the factor-level path
+    assert_eq!(down.timer.count("factor"), q as u64, "factor == 1 per anchor");
+    assert_eq!(
+        down.timer.count("fold_downdate"),
+        (q * k) as u64,
+        "fold_downdate == k per anchor"
+    );
+    assert_eq!(down.timer.count("chol"), 0, "no per-cell refactorization");
+    assert!(down.fallbacks.is_empty(), "unexpected downdate breakdowns");
+    assert_eq!(refr.timer.count("chol"), (q * k) as u64);
+
+    // and the two strategies tell the same story
+    let rms = {
+        let s: f64 = down
+            .mean_errors
+            .iter()
+            .zip(&refr.mean_errors)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        (s / refr.mean_errors.len() as f64).sqrt()
+    };
+    assert!(rms <= 1e-9, "strategy curves drifted: RMS {rms:.2e}");
+    assert!(down.best_error.is_finite() && down.best_lambda > 0.0);
+    println!("\nconformance OK: curves agree to {rms:.1e} RMS");
+    Ok(())
+}

@@ -21,6 +21,12 @@
 //! - `chud_r1` / `chud_rk` — the factor-update subsystem: rank-1 / rank-16
 //!   Cholesky downdate of a held factor (packed trailing panels) vs a full
 //!   O(d³) refactorization of the perturbed matrix (reference)
+//! - `kfold_downdate` — the factor-level k-fold engine end-to-end:
+//!   `run_cv(Chol)` under `fold_strategy=downdate` (packed: one
+//!   `chol(G+λI)` per grid λ + k rank-n_v downdate chains each) vs
+//!   `fold_strategy=refactor` (reference: k·q per-cell `chol(H_f+λI)`), in
+//!   the small-fold regime (k = 16 folds, n = d/2 ⇒ n_v ≪ d) where the
+//!   chain replaces `(k−1)·O(d³)` per anchor with `O(n·d²)`
 //! - `loo_sweep` — exact leave-one-out CV at n=2d through the downdate
 //!   engine vs brute-force per-row refactorization (reference at small d
 //!   only; the point of the subsystem is that brute force stops scaling).
@@ -33,7 +39,7 @@ use std::time::Instant;
 
 use picholesky::cv::loo::{brute_force_loo_rmse, run_loo};
 use picholesky::cv::solvers::SolverKind;
-use picholesky::cv::{run_cv, CvConfig};
+use picholesky::cv::{run_cv, CvConfig, FoldStrategy};
 use picholesky::data::folds::kfold;
 use picholesky::data::gram::GramCache;
 use picholesky::data::synthetic::{DatasetKind, SyntheticDataset};
@@ -314,6 +320,49 @@ fn bench_loo(d: usize, rows: &mut Vec<Row>) -> String {
     )
 }
 
+/// The factor-level k-fold engine vs per-cell refactorization, end-to-end
+/// through `run_cv(Chol)`. Shaped for the regime the downdate chain exists
+/// for — many small folds (k = 16, n = d/2 ⇒ n_v = d/32 validation rows per
+/// fold): per anchor λ the downdate side does one `chol(G+λI)` plus
+/// `O(n·d²)` of chained downdates against the refactor side's k `O(d³)`
+/// factorizations. Both sides share the Gram pipeline, solves and scoring,
+/// so the delta is exactly the fold-factor production.
+fn bench_kfold(d: usize, reps: usize, rows: &mut Vec<Row>) {
+    let k = 16usize;
+    let n = (d / 2).max(2 * k);
+    let ds = SyntheticDataset::generate(DatasetKind::MnistLike, n, d, 7);
+    let base = CvConfig {
+        k_folds: k,
+        q_grid: 16,
+        lambda_range: Some((0.1, 1.0)),
+        sweep_threads: 1, // single-threaded: kernel speed, not parallelism
+        ..CvConfig::default()
+    };
+    let packed = time_min(reps, || {
+        let cfg = CvConfig {
+            fold_strategy: FoldStrategy::Downdate,
+            ..base.clone()
+        };
+        let rep = run_cv(&ds, SolverKind::Chol, &cfg).expect("kfold downdate");
+        assert!(rep.fallbacks.is_empty(), "bench problem must not break down");
+        std::hint::black_box(rep.best_lambda);
+    });
+    let refr = time_min(reps, || {
+        let cfg = CvConfig {
+            fold_strategy: FoldStrategy::Refactor,
+            ..base.clone()
+        };
+        let rep = run_cv(&ds, SolverKind::Chol, &cfg).expect("kfold refactor");
+        std::hint::black_box(rep.best_lambda);
+    });
+    rows.push(Row {
+        kernel: "kfold_downdate",
+        d,
+        packed_secs: packed,
+        reference_secs: refr,
+    });
+}
+
 fn bench_sweep(d: usize, rows: &mut Vec<Row>) {
     let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 2 * d, d, 7);
     let cfg = CvConfig {
@@ -381,6 +430,7 @@ fn main() {
         bench_size(d, reps, &mut rows);
         bench_gram(d, reps, &mut rows);
         bench_chud(d, reps, &mut rows);
+        bench_kfold(d, reps, &mut rows);
     }
     // end-to-end sweeps at the middle size (the trajectory headline numbers)
     bench_sweep(if smoke { 32 } else { 256 }, &mut rows);

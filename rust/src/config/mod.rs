@@ -8,7 +8,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 
-use crate::cv::{CvConfig, CvMode, Metric};
+use crate::cv::{CvConfig, CvMode, FoldStrategy, Metric};
 use crate::data::synthetic::DatasetKind;
 
 /// A parsed scalar-or-array TOML value.
@@ -193,6 +193,10 @@ impl ExperimentConfig {
             cfg.cv.mode = CvMode::parse(v)
                 .ok_or_else(|| anyhow!("unknown cv mode '{v}' (kfold | loo)"))?;
         }
+        if let Some(v) = doc.get("cv.fold_strategy").and_then(TomlValue::as_str) {
+            cfg.cv.fold_strategy = FoldStrategy::parse(v)
+                .ok_or_else(|| anyhow!("unknown fold strategy '{v}' (refactor | downdate)"))?;
+        }
         if let Some(v) = doc.get("cv.metric").and_then(TomlValue::as_str) {
             cfg.cv.metric = match v {
                 "rmse" => Metric::Rmse,
@@ -324,6 +328,20 @@ mod tests {
         let doc = parse_toml("[data]\nchunk_rows = 512\n").unwrap();
         let cfg = ExperimentConfig::from_doc(&doc).unwrap();
         assert_eq!(cfg.cv.chunk_rows, 512);
+    }
+
+    #[test]
+    fn fold_strategy_parses() {
+        let doc = parse_toml("[cv]\nfold_strategy = \"refactor\"\n").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.cv.fold_strategy, FoldStrategy::Refactor);
+        // factor-level downdate chains are the default; junk rejected
+        let cfg = ExperimentConfig::from_doc(&parse_toml("n = 64\n").unwrap()).unwrap();
+        assert_eq!(cfg.cv.fold_strategy, FoldStrategy::Downdate);
+        assert!(ExperimentConfig::from_doc(
+            &parse_toml("[cv]\nfold_strategy = \"resolve\"\n").unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -13,13 +13,17 @@
 //!              │            assembled exactly ONCE per dataset)
 //!              ├► stage 1  fold prep      k tasks: gather X_v + downdate
 //!              │           H_f = G − X_vᵀX_v, g_f = g − X_vᵀy_v
-//!              ├► stage 2  anchors        k·g tasks: exact chol(H + λ_s I)
-//!              │           (PiChol only; factors Arc-cached per fold,
-//!              │            fitted into one interpolant per fold)
-//!              ├► stage 3  grid sweep     k·⌈q/batch⌉ tasks: interpolate /
-//!              │           factorize, solve, score the hold-out split
+//!              ├► stage 2  anchors        fold_strategy = "downdate"
+//!              │           (default): one exact chol(G + λI) per *anchor*
+//!              │           λ (every grid λ for Chol, the g samples for
+//!              │           PiChol); "refactor": k·g per-fold
+//!              │           chol(H_f + λ_s I) (PiChol only)
+//!              ├► stage 3  grid sweep     k·⌈q/batch⌉ tasks: fold-downdate
+//!              │           the anchor / interpolate / factorize, solve,
+//!              │           score the hold-out split
 //!              └► SweepReport             per-fold results + merged phase
-//!                                         timer + per-task metrics
+//!                                         timer + fallback records +
+//!                                         per-task metrics
 //! ```
 //!
 //! Scheduling policy:
@@ -30,11 +34,23 @@
 //!   `O(k·n·d²)` of per-fold SYRKs (and the k near-full dataset copies) are
 //!   gone. The training split is gathered only for the SVD-family solvers,
 //!   which need `X` itself.
-//! - **Anchors run first.** Interpolated grid tasks only need the fitted
-//!   interpolant, so the `O(g·d³)` exact factorizations are scheduled as
-//!   their own wave and the `O(r·d²)` interpolation wave starts once per-fold
-//!   interpolants are [`Arc`]-cached. Per-fold state ([`FoldData`], the
-//!   interpolant) is shared across tasks by reference count, never cloned.
+//! - **Factor-level k-fold is the default task kind.** Under
+//!   [`FoldStrategy::Downdate`] the hold-out downdate commutes with the λ
+//!   shift (`H_f + λI = (G + λI) − X_vᵀX_v`), so the anchor wave factors
+//!   `chol(G + λI)` exactly once per λ ("factor" phase, `Arc`-shared), and
+//!   each grid task derives its fold factor by a chained rank-`n_v`
+//!   hyperbolic downdate ([`crate::linalg::chud::downdate_rank_k`],
+//!   "fold_downdate" phase) — per anchor, `k` refactorizations at `O(d³)`
+//!   become `k` downdates at `O(n_v·d²)`. A numerically indefinite fold
+//!   falls back to the refactorize path *for that (fold, λ) cell only*,
+//!   recorded in [`SweepReport::fallbacks`]
+//!   ([`FoldData::factor_from_anchor`]).
+//! - **Anchors run first.** Downdate/interpolated grid tasks only need the
+//!   anchor factors / fitted interpolant, so the `O(d³)` exact
+//!   factorizations are scheduled as their own wave and the cheap grid wave
+//!   starts once the per-λ factors (or per-fold interpolants) are
+//!   [`Arc`]-cached. Per-fold state ([`FoldData`], the interpolant) is
+//!   shared across tasks by reference count, never cloned.
 //! - **Few large anchors → intra-factorization parallelism.** When the
 //!   anchor wave cannot fill the pool (`k·g <` workers) and the factor is
 //!   large, anchors are factorized one at a time from the coordinating
@@ -74,7 +90,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::{default_workers, WorkerPool};
 use crate::cv::loo::{self, LooReport, LooSkip};
 use crate::cv::solvers::{self, SolverKind};
-use crate::cv::{CvConfig, FoldData, SweepResult, TrainSplit};
+use crate::cv::{CvConfig, FoldData, FoldFallback, FoldStrategy, SweepResult, TrainSplit};
 use crate::data::folds::kfold;
 use crate::data::gram::{self, GramCache};
 use crate::data::synthetic::SyntheticDataset;
@@ -218,13 +234,32 @@ pub struct SweepReport {
     /// Total tasks executed (Gram chunks + fold prep + anchors + grid/fold
     /// sweeps).
     pub tasks: usize,
+    /// Breakdown fallbacks of the factor-level path (downdate went
+    /// numerically indefinite, cell served by refactorization), merged on
+    /// the coordinating thread in ascending (fold, grid-index) order —
+    /// bitwise independent of scheduling like everything else.
+    pub fallbacks: Vec<FoldFallback>,
 }
 
 /// Output of one pool task, reassembled on the coordinating thread.
 struct TaskOut {
     errors: Vec<f64>,
+    /// Breakdown fallbacks this task recorded: (grid index, breakdown).
+    fallbacks: Vec<(usize, CholeskyError)>,
     timer: PhaseTimer,
     wall: f64,
+}
+
+/// What stage 3's grid tasks do per λ — the engine's three grid task kinds.
+enum GridKind {
+    /// `chol(H_f + λI)` at every cell ([`FoldStrategy::Refactor`]).
+    Exact,
+    /// Factor-level downdate chains ([`FoldStrategy::Downdate`]):
+    /// `anchors[i] = chol(G + grid[i]·I)`, each task derives its fold
+    /// factor by rank-`n_v` downdate (refactorize fallback on breakdown).
+    Anchored(Arc<Vec<Matrix>>),
+    /// piCholesky: evaluate the per-fold interpolant.
+    Interp(Vec<Arc<Interpolant>>),
 }
 
 /// The executor: a worker pool plus a metrics registry that per-task
@@ -310,10 +345,12 @@ impl SweepEngine {
     }
 
     /// The shared anchor-factorization wave: one exact `chol(hmat(m) + λI)`
-    /// per `(m, λ)` item, returned in item order. Both anchor consumers —
-    /// the PiChol per-fold wave (`fit_anchors`, phase `chol`) and the LOO
-    /// per-dataset wave (`run_loo`, phase `factor`) — run through this one
-    /// dispatcher, so the pool-vs-intra-factor heuristic and the
+    /// per `(m, λ)` item, returned in item order. Every anchor consumer —
+    /// the factor-level per-λ waves (`grid_anchor_factors` and
+    /// `fit_anchors`' downdate branch, phase `factor`), the legacy PiChol
+    /// per-fold wave (`fit_anchors`' refactor branch, phase `chol`) and the
+    /// LOO per-dataset wave (`run_loo`, phase `factor`) — runs through this
+    /// one dispatcher, so the pool-vs-intra-factor heuristic and the
     /// `sweep.anchor_*` metrics cannot drift apart. When the wave cannot
     /// fill the pool and the factor is large, anchors are factorized one at
     /// a time from this thread with [`cholesky_shifted_pooled`] (bitwise
@@ -434,12 +471,38 @@ impl SweepEngine {
             fold_data.push(Arc::new(data));
         }
 
-        // stages 2-3: solver-shaped scheduling
+        // stages 2-3: solver- and strategy-shaped scheduling
+        let mut fallbacks: Vec<FoldFallback> = Vec::new();
         let fold_results = match plan.kind {
-            SolverKind::Chol => self.run_grid(plan, &fold_data, None, &mut timer, &mut tasks)?,
+            SolverKind::Chol => {
+                let kind = if plan.cv.fold_strategy == FoldStrategy::Downdate {
+                    // factor-level: every grid λ is an anchor — one exact
+                    // chol(G + λI) each, fold factors by downdate chains
+                    let anchors =
+                        self.grid_anchor_factors(&gram, &plan.grid, &mut timer, &mut tasks)?;
+                    GridKind::Anchored(anchors)
+                } else {
+                    GridKind::Exact
+                };
+                self.run_grid(plan, &fold_data, kind, &mut timer, &mut tasks, &mut fallbacks)?
+            }
             SolverKind::PiChol => {
-                let interps = self.fit_anchors(plan, &fold_data, &mut timer, &mut tasks)?;
-                self.run_grid(plan, &fold_data, Some(&interps), &mut timer, &mut tasks)?
+                let interps = self.fit_anchors(
+                    plan,
+                    &gram,
+                    &fold_data,
+                    &mut timer,
+                    &mut tasks,
+                    &mut fallbacks,
+                )?;
+                self.run_grid(
+                    plan,
+                    &fold_data,
+                    GridKind::Interp(interps),
+                    &mut timer,
+                    &mut tasks,
+                    &mut fallbacks,
+                )?
             }
             _ => self.run_fold_level(plan, &fold_data, &mut timer, &mut tasks)?,
         };
@@ -461,7 +524,30 @@ impl SweepEngine {
             wall_secs,
             threads: self.pool.size(),
             tasks,
+            fallbacks,
         })
+    }
+
+    /// The factor-level anchor wave of the downdate strategy's exact sweep:
+    /// one exact `chol(G + λI)` per **grid** λ ("factor" phase) — the only
+    /// `O(d³)` work of the whole sweep — scheduled through the shared
+    /// anchor dispatcher and `Arc`-shared by every grid task.
+    fn grid_anchor_factors(
+        &self,
+        gram: &Arc<GramCache>,
+        grid: &[f64],
+        timer: &mut PhaseTimer,
+        tasks: &mut usize,
+    ) -> crate::Result<Arc<Vec<Matrix>>> {
+        let items: Vec<(Arc<GramCache>, f64)> =
+            grid.iter().map(|&lam| (Arc::clone(gram), lam)).collect();
+        Ok(Arc::new(self.anchor_wave(
+            items,
+            gram_hessian,
+            "factor",
+            timer,
+            tasks,
+        )?))
     }
 
     /// Execute a leave-one-out plan: the factor-update subsystem's workload
@@ -604,8 +690,19 @@ impl SweepEngine {
                 fit_error_curve(&usable.0, &usable.1, plan.cv.degree)
             });
             timer.time("interp", || poly.sweep(&plan.grid))
+        } else if let Some((bl, be)) = usable
+            .0
+            .iter()
+            .zip(&usable.1)
+            .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .map(|(&l, &e)| (l, e))
+        {
+            // too few surviving anchors to fit the degree-r curve, but some
+            // hold finite exact LOO-RMSE: degrade to the argmin over them
+            // (the interpolated curve stays NaN — it cannot be fitted)
+            (bl, be, vec![f64::NAN; plan.grid.len()])
         } else {
-            // every anchor lost all its rows: nothing to interpolate from
+            // every anchor lost all its rows: nothing at all to select from
             (f64::NAN, f64::NAN, vec![f64::NAN; plan.grid.len()])
         };
 
@@ -627,15 +724,26 @@ impl SweepEngine {
         })
     }
 
-    /// Stage 2 (PiChol): exact anchor factorizations for every fold, then
+    /// Stage 2 (PiChol): per-fold anchor factors `chol(H_f + λ_s I)`, then
     /// one Algorithm-1 fit per fold. Returns `Arc`-cached interpolants the
     /// grid wave shares.
+    ///
+    /// Under [`FoldStrategy::Downdate`] (default) the per-fold factors are
+    /// *derived*, not refactorized: one exact `chol(G + λ_s I)` per sample
+    /// λ ("factor" phase), then a **fold-downdate wave** — one task per
+    /// (fold, λ_s), each running [`FoldData::factor_from_anchor`]
+    /// ("fold_downdate" phase, refactorize fallback recorded into
+    /// `fallbacks`) — results merged in ascending (fold, λ_s) order.
+    /// [`FoldStrategy::Refactor`] keeps the legacy flat k·g
+    /// refactorization wave ("chol" phase).
     fn fit_anchors(
         &self,
         plan: &SweepPlan,
+        gram: &Arc<GramCache>,
         fold_data: &[Arc<FoldData>],
         timer: &mut PhaseTimer,
         tasks: &mut usize,
+        fallbacks: &mut Vec<FoldFallback>,
     ) -> crate::Result<Vec<Arc<Interpolant>>> {
         let sample_lams: Vec<f64> = subsample_indices(plan.grid.len(), plan.cv.g_samples)
             .into_iter()
@@ -644,18 +752,73 @@ impl SweepEngine {
         let g = sample_lams.len();
         let k = fold_data.len();
 
-        // anchor factors, factors[fold][s] = chol(H_fold + λ_s I): one flat
-        // (fold, λ_s) wave through the shared anchor scheduler, regrouped
-        // per fold (anchor_wave returns results in item order)
-        let items: Vec<(Arc<FoldData>, f64)> = fold_data
-            .iter()
-            .flat_map(|fd| sample_lams.iter().map(move |&lam| (Arc::clone(fd), lam)))
-            .collect();
-        let flat = self.anchor_wave(items, fold_hessian, "chol", timer, tasks)?;
-        let mut flat = flat.into_iter();
-        let factors: Vec<Vec<Matrix>> = (0..k)
-            .map(|_| flat.by_ref().take(g).collect())
-            .collect();
+        let factors: Vec<Vec<Matrix>> = if plan.cv.fold_strategy == FoldStrategy::Downdate {
+            // stage 2a: g global anchors chol(G + λ_s I), exactly one O(d³)
+            // factorization per sample λ
+            let items: Vec<(Arc<GramCache>, f64)> = sample_lams
+                .iter()
+                .map(|&lam| (Arc::clone(gram), lam))
+                .collect();
+            let global = Arc::new(self.anchor_wave(items, gram_hessian, "factor", timer, tasks)?);
+
+            // stage 2b: the fold-downdate wave — k·g tasks, merged in
+            // ascending (fold, λ_s) order so the regrouping (and the
+            // fallback record) never depends on scheduling
+            type FdRes = (
+                Result<(Matrix, Option<CholeskyError>), CholeskyError>,
+                PhaseTimer,
+                f64,
+            );
+            let mut jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> FdRes + Send>> = Vec::new();
+            let mut meta: Vec<(usize, f64)> = Vec::new(); // (fold, λ_s)
+            for (fi, fd) in fold_data.iter().enumerate() {
+                for (s, &lam) in sample_lams.iter().enumerate() {
+                    meta.push((fi, lam));
+                    let fd = Arc::clone(fd);
+                    let global = Arc::clone(&global);
+                    let job: Box<dyn FnOnce(&mut Scratch) -> FdRes + Send> =
+                        Box::new(move |scratch| {
+                            let t0 = Instant::now();
+                            let mut t = PhaseTimer::new();
+                            let res = fd
+                                .factor_from_anchor(&global[s], lam, scratch, &mut t)
+                                .map(|ff| (scratch.factor.clone(), ff.fell_back));
+                            (res, t, t0.elapsed().as_secs_f64())
+                        });
+                    jobs.push(job);
+                }
+            }
+            *tasks += jobs.len();
+            let mut flat = Vec::with_capacity(meta.len());
+            for ((fi, lam), (res, t, wall)) in meta.into_iter().zip(self.map_jobs(jobs)) {
+                timer.merge(&t);
+                self.metrics.incr("sweep.fold_downdate_tasks");
+                self.metrics.add_secs("sweep.fold_downdate_wall", wall);
+                let (l, fell_back) = res?;
+                if let Some(error) = fell_back {
+                    self.metrics.incr("sweep.fold_fallbacks");
+                    fallbacks.push(FoldFallback {
+                        fold: fi,
+                        lambda: lam,
+                        error,
+                    });
+                }
+                flat.push(l);
+            }
+            let mut flat = flat.into_iter();
+            (0..k).map(|_| flat.by_ref().take(g).collect()).collect()
+        } else {
+            // legacy: factors[fold][s] = chol(H_fold + λ_s I), one flat
+            // (fold, λ_s) refactorization wave through the shared anchor
+            // scheduler, regrouped per fold (item-order results)
+            let items: Vec<(Arc<FoldData>, f64)> = fold_data
+                .iter()
+                .flat_map(|fd| sample_lams.iter().map(move |&lam| (Arc::clone(fd), lam)))
+                .collect();
+            let flat = self.anchor_wave(items, fold_hessian, "chol", timer, tasks)?;
+            let mut flat = flat.into_iter();
+            (0..k).map(|_| flat.by_ref().take(g).collect()).collect()
+        };
 
         // Algorithm-1 fits: cheap (O(g·r·D)) relative to the anchors, done
         // here in fold order so timer merge order is deterministic
@@ -676,15 +839,21 @@ impl SweepEngine {
         Ok(interps)
     }
 
-    /// Stage 3: the λ-grid wave. With `interps` present each task
-    /// interpolates (piCholesky); otherwise it factorizes exactly (Chol).
+    /// Stage 3: the λ-grid wave. [`GridKind::Anchored`] tasks derive each
+    /// fold factor by downdating the shared per-λ anchor (the
+    /// fold-downdate task kind, with refactorize fallback);
+    /// [`GridKind::Interp`] tasks interpolate (piCholesky);
+    /// [`GridKind::Exact`] tasks factorize at every cell (refactor
+    /// strategy). Results — and fallback records — merge on this thread in
+    /// ascending (fold, grid-index) order.
     fn run_grid(
         &self,
         plan: &SweepPlan,
         fold_data: &[Arc<FoldData>],
-        interps: Option<&[Arc<Interpolant>]>,
+        kind: GridKind,
         timer: &mut PhaseTimer,
         tasks: &mut usize,
+        fallbacks: &mut Vec<FoldFallback>,
     ) -> crate::Result<Vec<SweepResult>> {
         let grid = Arc::new(plan.grid.clone());
         let metric = plan.cv.metric;
@@ -699,7 +868,12 @@ impl SweepEngine {
                 spans.push((fi, lo, hi));
                 let fd = Arc::clone(fd);
                 let grid = Arc::clone(&grid);
-                let interp = interps.map(|v| Arc::clone(&v[fi]));
+                // per-task view of the shared state for this task kind
+                let kind_view = match &kind {
+                    GridKind::Exact => GridKind::Exact,
+                    GridKind::Anchored(anchors) => GridKind::Anchored(Arc::clone(anchors)),
+                    GridKind::Interp(v) => GridKind::Interp(vec![Arc::clone(&v[fi])]),
+                };
                 // the task body borrows the executing worker's Scratch: the
                 // factor/eval/solve buffers are warm after the worker's
                 // first task, so the steady-state sweep allocates nothing
@@ -709,16 +883,39 @@ impl SweepEngine {
                         let t0 = Instant::now();
                         let mut t = PhaseTimer::new();
                         let mut errors = Vec::with_capacity(hi - lo);
-                        match &interp {
-                            Some(interp) => {
+                        let mut cell_fallbacks: Vec<(usize, CholeskyError)> = Vec::new();
+                        match &kind_view {
+                            GridKind::Interp(interp) => {
                                 let strategy = solvers::pichol_strategy();
                                 for &lam in &grid[lo..hi] {
                                     errors.push(solvers::eval_interp_point(
-                                        &fd, interp, &strategy, lam, metric, scratch, &mut t,
+                                        &fd,
+                                        &interp[0],
+                                        &strategy,
+                                        lam,
+                                        metric,
+                                        scratch,
+                                        &mut t,
                                     ));
                                 }
                             }
-                            None => {
+                            GridKind::Anchored(anchors) => {
+                                for (off, &lam) in grid[lo..hi].iter().enumerate() {
+                                    let (e, fell_back) = solvers::eval_anchored_point(
+                                        &fd,
+                                        &anchors[lo + off],
+                                        lam,
+                                        metric,
+                                        scratch,
+                                        &mut t,
+                                    )?;
+                                    errors.push(e);
+                                    if let Some(err) = fell_back {
+                                        cell_fallbacks.push((lo + off, err));
+                                    }
+                                }
+                            }
+                            GridKind::Exact => {
                                 for &lam in &grid[lo..hi] {
                                     errors.push(solvers::eval_exact_point(
                                         &fd, lam, metric, scratch, &mut t,
@@ -728,6 +925,7 @@ impl SweepEngine {
                         }
                         Ok(TaskOut {
                             errors,
+                            fallbacks: cell_fallbacks,
                             timer: t,
                             wall: t0.elapsed().as_secs_f64(),
                         })
@@ -746,6 +944,14 @@ impl SweepEngine {
         for (&(fi, lo, hi), out) in spans.iter().zip(outs) {
             let out = out?;
             per_fold[fi][lo..hi].copy_from_slice(&out.errors);
+            for (gidx, error) in out.fallbacks {
+                self.metrics.incr("sweep.fold_fallbacks");
+                fallbacks.push(FoldFallback {
+                    fold: fi,
+                    lambda: plan.grid[gidx],
+                    error,
+                });
+            }
             timer.merge(&out.timer);
             self.metrics.incr("sweep.grid_tasks");
             self.metrics.add_secs("sweep.grid_wall", out.wall);
@@ -887,10 +1093,89 @@ mod tests {
         assert_eq!(rep.fold_results.len(), 5);
         assert_eq!(rep.grid.len(), 50);
         assert!(rep.timer.get("gram") > 0.0);
-        assert!(rep.timer.get("chol") > 0.0);
+        // factor-level default: anchors under "factor", per-cell work under
+        // "fold_downdate"
+        assert!(rep.timer.get("factor") > 0.0);
+        assert!(rep.timer.get("fold_downdate") > 0.0);
         assert!(rep.wall_secs > 0.0);
-        // 1+ gram tasks + 5 prep tasks + 5 folds × ⌈50/batch⌉ grid tasks
-        assert!(rep.tasks > 6, "tasks = {}", rep.tasks);
+        // 1+ gram tasks + 5 prep tasks + 50 anchors + 5 folds × ⌈50/batch⌉
+        // grid tasks
+        assert!(rep.tasks > 56, "tasks = {}", rep.tasks);
+    }
+
+    /// The factor-level acceptance assertion (extending the
+    /// `gram_assembled_once_and_folds_downdate` pattern one level down):
+    /// per anchor λ, exactly one O(d³) `factor` and k `fold_downdate`s, and
+    /// the per-cell `chol` phase vanishes on the happy path — for both the
+    /// exact sweep (anchors = the whole grid) and PiChol (anchors = the g
+    /// samples). The refactor strategy keeps the legacy accounting.
+    #[test]
+    fn factor_level_phase_counts_per_anchor() {
+        for threads in [1usize, 3] {
+            // Chol: every grid λ is an anchor
+            let rep = run(SolverKind::Chol, threads);
+            assert_eq!(rep.timer.count("factor"), 50, "factor == 1 per anchor");
+            assert_eq!(
+                rep.timer.count("fold_downdate"),
+                50 * 5,
+                "fold_downdate == k per anchor"
+            );
+            assert_eq!(rep.timer.count("chol"), 0, "no per-cell refactorization");
+            assert!(rep.fallbacks.is_empty());
+
+            // PiChol: the g sample λ's are the anchors
+            let rep = run(SolverKind::PiChol, threads);
+            assert_eq!(rep.timer.count("factor"), 4);
+            assert_eq!(rep.timer.count("fold_downdate"), 4 * 5);
+            assert_eq!(rep.timer.count("chol"), 0);
+            assert!(rep.fallbacks.is_empty());
+        }
+
+        // refactor strategy: per-cell chol, no factor-level phases
+        let ds = ds();
+        let cfg = CvConfig {
+            fold_strategy: FoldStrategy::Refactor,
+            ..cfg_with_threads(2)
+        };
+        let plan = SweepPlan::new(&ds, SolverKind::Chol, &cfg);
+        let rep = SweepEngine::new(plan.threads).run(&ds, &plan).unwrap();
+        assert_eq!(rep.timer.count("chol"), 50 * 5);
+        assert_eq!(rep.timer.count("factor"), 0);
+        assert_eq!(rep.timer.count("fold_downdate"), 0);
+        assert!(rep.fallbacks.is_empty());
+    }
+
+    /// The two fold strategies are numerically interchangeable: same λ*
+    /// grid cell per fold and curves within rounding — the in-crate slice
+    /// of the cross-mode conformance suite (tests/conformance.rs runs the
+    /// full one).
+    #[test]
+    fn downdate_strategy_matches_refactor_strategy() {
+        let ds = ds();
+        let mut reports = Vec::new();
+        for strategy in [FoldStrategy::Refactor, FoldStrategy::Downdate] {
+            let cfg = CvConfig {
+                fold_strategy: strategy,
+                ..cfg_with_threads(2)
+            };
+            let plan = SweepPlan::new(&ds, SolverKind::Chol, &cfg);
+            reports.push(SweepEngine::new(plan.threads).run(&ds, &plan).unwrap());
+        }
+        let (refactor, downdate) = (&reports[0], &reports[1]);
+        let cell = |grid: &[f64], lam: f64| grid.iter().position(|&l| l == lam).unwrap();
+        for (fr, fd) in refactor.fold_results.iter().zip(&downdate.fold_results) {
+            // λ* may only move to an adjacent cell, and only across a tie
+            // at rounding level (best_of breaks exact ties leftward)
+            let (ci, cj) = (
+                cell(&refactor.grid, fr.best_lambda) as i64,
+                cell(&downdate.grid, fd.best_lambda) as i64,
+            );
+            assert!((ci - cj).abs() <= 1, "λ* cells {ci} vs {cj}");
+            assert!((fr.best_error - fd.best_error).abs() < 1e-9);
+            for (a, b) in fr.errors.iter().zip(&fd.errors) {
+                assert!((a - b).abs() < 1e-9, "curves drifted: {a} vs {b}");
+            }
+        }
     }
 
     /// The tentpole acceptance assertion: fold prep never SYRKs X_train —
@@ -959,7 +1244,11 @@ mod tests {
         assert_eq!(m.counter("sweep.gram_builds"), 1);
         assert!(m.counter("sweep.gram_chunks") >= 1);
         assert_eq!(m.counter("sweep.prep_tasks"), 5);
-        assert_eq!(m.counter("sweep.anchor_tasks"), 5 * 4); // k × g
+        // downdate default: the anchor wave factors only the g global
+        // anchors; per-fold factors are fold-downdate tasks
+        assert_eq!(m.counter("sweep.anchor_tasks"), 4); // g
+        assert_eq!(m.counter("sweep.fold_downdate_tasks"), 5 * 4); // k × g
+        assert_eq!(m.counter("sweep.fold_fallbacks"), 0);
         assert!(m.counter("sweep.grid_tasks") > 0);
         assert!(m.seconds("sweep.grid_wall") > 0.0);
         assert_eq!(m.counter("sweep.lambda_evals"), 5 * 50);

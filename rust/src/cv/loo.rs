@@ -87,9 +87,12 @@ pub struct LooReport {
     /// Exact LOO-RMSE at each anchor (mean over the rows that factored;
     /// NaN if every row broke down at that anchor).
     pub anchor_rmse: Vec<f64>,
-    /// Grid minimizer of the interpolated curve.
+    /// Grid minimizer of the interpolated curve. When too few anchors
+    /// survive to fit the degree-r curve, degrades to the argmin over the
+    /// surviving anchors' exact RMSEs (`curve` stays NaN); NaN only when
+    /// every anchor lost all its rows.
     pub best_lambda: f64,
-    /// Curve value at `best_lambda`.
+    /// Curve (or, degraded, exact anchor) value at `best_lambda`.
     pub best_error: f64,
     /// Skipped (row, λ) cells — breakdowns recorded, not fatal.
     pub skipped: Vec<LooSkip>,
@@ -339,24 +342,15 @@ mod tests {
     }
 
     /// A held-out row that makes `G − x_i x_iᵀ + λI` numerically indefinite
-    /// is skipped and recorded — never fatal. Coordinate 0 is zeroed for
-    /// every row, then row 0 gets a lone 1e9 spike there: the Gram's column
-    /// 0 becomes exactly `1e18·e₀` (all cross products are exact 0's, 1e18
-    /// is exact in f64, and the λ shift rounds away below its 256-wide
-    /// ulp), so holding out row 0 makes the first downdate pivot exactly
-    /// `1e18 − 1e18 = 0` — deterministic breakdown at column 0, at every
-    /// anchor, while the other 39 rows sweep fine.
+    /// is skipped and recorded — never fatal. Runs on the shared
+    /// [`crate::testutil::conformance::spiked_dataset`] fixture (see its
+    /// docs for the exactness argument): holding out the spiked row 0 makes
+    /// the first downdate pivot exactly `1e18 − 1e18 = 0` — deterministic
+    /// breakdown at column 0, at every anchor, while the other 39 rows
+    /// sweep fine.
     #[test]
     fn loo_breakdown_is_skipped_and_recorded() {
-        let mut ds = SyntheticDataset::generate(DatasetKind::MnistLike, 40, 8, 5);
-        for i in 0..ds.n() {
-            ds.x[(i, 0)] = 0.0;
-        }
-        for v in ds.x.row_mut(0) {
-            *v = 0.0;
-        }
-        ds.x[(0, 0)] = 1e9;
-        ds.y[0] = 1.0;
+        let ds = crate::testutil::conformance::spiked_dataset(40, 8, 5);
         let rep = run_loo(&ds, &cfg(2)).unwrap();
         let anchors = rep.anchor_lambdas.len();
         assert_eq!(

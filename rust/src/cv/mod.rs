@@ -14,6 +14,17 @@
 //! Figures 2, 6, 7-9 and Tables 3-4. Results are bit-identical for every
 //! thread count (see the engine's determinism contract).
 //!
+//! The **factor level** goes one step further ([`FoldStrategy::Downdate`],
+//! the default): the hold-out downdate commutes with the λ shift
+//! (`H_f + λI = (G + λI) − X_vᵀX_v`), so per λ anchor the engine factors
+//! `chol(G + λI)` exactly **once** and derives every fold's factor by a
+//! chained rank-`n_v` hyperbolic downdate
+//! ([`crate::linalg::chud::downdate_rank_k`]) — `k` downdates at
+//! `O(n_v·d²)` each instead of `k` refactorizations at `O(d³)`. A fold
+//! whose downdate goes numerically indefinite falls back to the legacy
+//! refactorize path for that (fold, λ) only, recorded in
+//! [`CvReport::fallbacks`] ([`FoldData::factor_from_anchor`]).
+//!
 //! Besides k-fold, the crate runs **exact leave-one-out CV** ([`loo`]) on
 //! the factor-update subsystem: one anchor factor per λ, every held-out
 //! factor by rank-1 downdate — select with [`CvMode::Loo`].
@@ -24,8 +35,11 @@ pub mod solvers;
 use crate::coordinator::sweep_engine::{SweepEngine, SweepPlan, SweepReport};
 use crate::data::gram::GramCache;
 use crate::data::synthetic::SyntheticDataset;
+use crate::linalg::cholesky::{cholesky_shifted_into, CholeskyError};
+use crate::linalg::chud;
 use crate::linalg::gemm::{gemv_into, gemv_t, gram_downdate, syrk_lower};
 use crate::linalg::matrix::Matrix;
+use crate::linalg::scratch::Scratch;
 use crate::pichol::mchol::Probe;
 use crate::util::PhaseTimer;
 use solvers::SolverKind;
@@ -54,6 +68,43 @@ impl CvMode {
         match self {
             CvMode::KFold => "kfold",
             CvMode::Loo => "loo",
+        }
+    }
+}
+
+/// How the k-fold sweep obtains each fold's per-λ Cholesky factor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FoldStrategy {
+    /// Factorize `chol(H_f + λI)` from the downdated fold Hessian at every
+    /// (fold, λ) grid point — the literal paper pipeline. Kept alive as the
+    /// per-fold breakdown fallback and as the conformance-suite oracle.
+    Refactor,
+    /// Factor-level downdate chains (the **default**): factor
+    /// `chol(G + λI)` once per λ anchor, then derive each fold's factor by
+    /// a chained rank-`n_v` hyperbolic downdate with the fold's validation
+    /// rows ([`crate::linalg::chud::downdate_rank_k`]) — fold prep per
+    /// anchor drops from `k` refactorizations at `O(d³)` to `k` downdates
+    /// at `O(n_v·d²)`. Wins when folds are small (`n_v ≪ d`); a
+    /// numerically indefinite fold degrades to [`FoldStrategy::Refactor`]
+    /// for that (fold, λ) only, recorded in [`CvReport::fallbacks`].
+    Downdate,
+}
+
+impl FoldStrategy {
+    /// Parse a strategy name (TOML `cv.fold_strategy`, CLI
+    /// `--fold-strategy`).
+    pub fn parse(s: &str) -> Option<FoldStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "refactor" | "refactorize" => Some(FoldStrategy::Refactor),
+            "downdate" => Some(FoldStrategy::Downdate),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FoldStrategy::Refactor => "refactor",
+            FoldStrategy::Downdate => "downdate",
         }
     }
 }
@@ -195,6 +246,78 @@ impl FoldData {
             .as_ref()
             .expect("solver needs the materialized training split, but this fold was prepared on the Gram-downdate fast path")
     }
+
+    /// The **factor-level** fold view ([`FoldStrategy::Downdate`]'s task
+    /// kernel): derive this fold's `chol(H_f + λI)` into `scratch.factor`
+    /// from the shared per-λ anchor factor `anchor = chol(G + λI)` by a
+    /// chained rank-`n_v` hyperbolic downdate with the validation rows —
+    /// the downdated `L` replaces any look at `H_f`, `O(n_v·d²)` against
+    /// the `O(d³)` refactorization (timed under `fold_downdate`).
+    ///
+    /// **Breakdown fallback:** when the downdate hits a numerically
+    /// indefinite pivot, the factor is rebuilt by the legacy path —
+    /// `chol(H_f + λI)` from the SYRK-downdated Gram pair this fold already
+    /// carries (timed under `chol`, like every refactor-strategy
+    /// evaluation) — so one bad fold degrades instead of failing the
+    /// sweep; the breakdown is carried in [`FoldFactor::fell_back`] for the
+    /// engine to record. `Err` means even the fallback refactorization
+    /// found `H_f + λI` indefinite, which propagates exactly like the
+    /// refactor strategy's [`CholeskyError`].
+    pub fn factor_from_anchor(
+        &self,
+        anchor: &Matrix,
+        lam: f64,
+        scratch: &mut Scratch,
+        timer: &mut PhaseTimer,
+    ) -> Result<FoldFactor, CholeskyError> {
+        let down = timer.time("fold_downdate", || {
+            chud::downdate_rank_k(
+                anchor,
+                &self.xv,
+                &mut scratch.factor,
+                &mut scratch.update,
+                &mut scratch.trans,
+            )
+        });
+        match down {
+            Ok(()) => Ok(FoldFactor { fell_back: None }),
+            Err(breakdown) => {
+                // the downdate poisoned only the scratch copy — rebuild it
+                // from the downdated Gram, the strategy-independent oracle
+                timer.time("chol", || {
+                    cholesky_shifted_into(&self.h_mat, lam, &mut scratch.factor)
+                })?;
+                Ok(FoldFactor {
+                    fell_back: Some(breakdown),
+                })
+            }
+        }
+    }
+}
+
+/// What [`FoldData::factor_from_anchor`] produced: the fold factor itself
+/// lands in the caller's `scratch.factor` (it lives in the worker arena so
+/// the follow-up solve can borrow the other scratch buffers); this carries
+/// the provenance.
+pub struct FoldFactor {
+    /// `Some(breakdown)` when the rank-`n_v` downdate went numerically
+    /// indefinite (failing column index in
+    /// [`CholeskyError::pivot`]) and the factor was rebuilt through the
+    /// refactorize fallback; `None` on the happy downdate path.
+    pub fell_back: Option<CholeskyError>,
+}
+
+/// One recorded breakdown fallback of the factor-level k-fold path: the
+/// (fold, λ) cell whose downdate went numerically indefinite and was served
+/// by the refactorize path instead ([`CvReport::fallbacks`]).
+#[derive(Debug, Clone)]
+pub struct FoldFallback {
+    /// The fold whose downdate broke down.
+    pub fold: usize,
+    /// The grid λ at which it broke down.
+    pub lambda: f64,
+    /// The breakdown, with the failing column index in `pivot`.
+    pub error: CholeskyError,
 }
 
 /// Per-fold sweep output.
@@ -250,6 +373,14 @@ pub struct CvConfig {
     /// `--mode loo`. In LOO mode `g_samples` picks the anchor count and
     /// `sweep_batch` the held-out rows per task (0 = auto).
     pub mode: CvMode,
+    /// How k-fold per-(fold, λ) factors are produced:
+    /// [`FoldStrategy::Downdate`] (default — factor-level downdate chains
+    /// off one `chol(G + λI)` anchor per λ) or [`FoldStrategy::Refactor`]
+    /// (the literal per-cell `chol(H_f + λI)`, kept as fallback and test
+    /// oracle). TOML: `[cv] fold_strategy = "refactor" | "downdate"`; CLI:
+    /// `--fold-strategy`. Curves agree within rounding; the strategies are
+    /// pinned against each other by the cross-mode conformance suite.
+    pub fold_strategy: FoldStrategy,
 }
 
 impl Default for CvConfig {
@@ -268,6 +399,7 @@ impl Default for CvConfig {
             sweep_batch: 0,
             chunk_rows: 0,
             mode: CvMode::KFold,
+            fold_strategy: FoldStrategy::Downdate,
         }
     }
 }
@@ -291,6 +423,10 @@ pub struct CvReport {
     pub fold_bests: Vec<(f64, f64)>,
     /// Probe trajectories per fold (Figure 9; empty for grid algorithms).
     pub probes: Vec<Vec<Probe>>,
+    /// Recorded breakdown fallbacks of the factor-level path, in ascending
+    /// (fold, grid-index) order — empty on the happy path and on
+    /// [`FoldStrategy::Refactor`] runs.
+    pub fallbacks: Vec<FoldFallback>,
 }
 
 impl CvReport {
@@ -338,6 +474,7 @@ pub fn aggregate_sweep(report: SweepReport) -> CvReport {
         fold_results,
         timer,
         wall_secs,
+        fallbacks,
         ..
     } = report;
 
@@ -378,6 +515,7 @@ pub fn aggregate_sweep(report: SweepReport) -> CvReport {
         wall_secs,
         fold_bests,
         probes,
+        fallbacks,
     }
 }
 
@@ -408,12 +546,73 @@ mod tests {
         assert_eq!(rep.mean_errors.len(), 9);
         assert!(rep.mean_errors.iter().all(|e| e.is_finite()));
         assert!(rep.best_error > 0.0 && rep.best_error < 2.0);
-        assert!(rep.timer.get("chol") > 0.0);
+        // factor-level default: the O(d³) work is the per-anchor `factor`
+        // phase; per-(fold, λ) factors come from `fold_downdate`
+        assert!(rep.timer.get("factor") > 0.0);
+        assert!(rep.timer.get("fold_downdate") > 0.0);
+        assert!(rep.fallbacks.is_empty());
         // shared-Gram pipeline: one assembly per run, one downdate per fold,
         // and no per-fold `hessian` SYRK anywhere
         assert_eq!(rep.timer.count("gram"), 1);
         assert_eq!(rep.timer.count("downdate"), 3);
         assert_eq!(rep.timer.count("hessian"), 0);
+    }
+
+    #[test]
+    fn run_cv_chol_refactor_strategy_keeps_legacy_accounting() {
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 120, 17, 3);
+        let cfg = CvConfig {
+            k_folds: 3,
+            q_grid: 9,
+            fold_strategy: FoldStrategy::Refactor,
+            ..CvConfig::default()
+        };
+        let rep = run_cv(&ds, SolverKind::Chol, &cfg).unwrap();
+        assert!(rep.timer.get("chol") > 0.0);
+        assert_eq!(rep.timer.count("chol"), 3 * 9, "one chol per (fold, λ)");
+        assert_eq!(rep.timer.count("factor"), 0);
+        assert_eq!(rep.timer.count("fold_downdate"), 0);
+        assert!(rep.fallbacks.is_empty());
+    }
+
+    #[test]
+    fn fold_strategy_parse() {
+        assert_eq!(FoldStrategy::parse("downdate"), Some(FoldStrategy::Downdate));
+        assert_eq!(FoldStrategy::parse("Refactor"), Some(FoldStrategy::Refactor));
+        assert_eq!(FoldStrategy::parse("nope"), None);
+        assert_eq!(FoldStrategy::Downdate.name(), "downdate");
+    }
+
+    /// `factor_from_anchor` is numerically the refactorize oracle: same
+    /// factor within rounding, happy path never falls back, and the factor
+    /// lands in `scratch.factor`.
+    #[test]
+    fn factor_from_anchor_matches_refactorization() {
+        use crate::data::kfold;
+        use crate::linalg::cholesky::cholesky_shifted;
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 103, 9, 4);
+        let gram = GramCache::assemble(&ds.x, &ds.y);
+        let mut t = PhaseTimer::new();
+        let mut scratch = Scratch::new();
+        for lam in [1e-2, 0.3] {
+            let anchor = cholesky_shifted(gram.hessian(), lam).unwrap();
+            for fold in kfold(ds.n(), 5, 1) {
+                let (xv, yv) = fold.materialize_val(&ds.x, &ds.y);
+                let fd = FoldData::from_gram(&gram, xv, yv, None, &mut t);
+                let ff = fd
+                    .factor_from_anchor(&anchor, lam, &mut scratch, &mut t)
+                    .unwrap();
+                assert!(ff.fell_back.is_none());
+                let oracle = cholesky_shifted(&fd.h_mat, lam).unwrap();
+                assert!(
+                    scratch.factor.max_abs_diff(&oracle) < 1e-9,
+                    "λ={lam}: {:.2e}",
+                    scratch.factor.max_abs_diff(&oracle)
+                );
+            }
+        }
+        assert_eq!(t.count("fold_downdate"), 10);
+        assert_eq!(t.count("chol"), 0, "happy path never refactorizes");
     }
 
     #[test]

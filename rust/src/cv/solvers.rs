@@ -14,6 +14,7 @@ use super::{holdout_error_with, CvConfig, FoldData, Metric, SweepResult};
 use crate::linalg::cholesky::{cholesky_shifted_into, CholeskyError};
 use crate::pichol::Interpolant;
 use crate::linalg::lanczos::lanczos_svd;
+use crate::linalg::matrix::Matrix;
 use crate::linalg::randomized::randomized_svd;
 use crate::linalg::scratch::Scratch;
 use crate::linalg::svd::{jacobi_svd, Svd};
@@ -138,6 +139,39 @@ pub(crate) fn eval_exact_point(
     Ok(timer.time("holdout", || {
         holdout_error_with(&data.xv, &data.yv, &scratch.theta, metric, &mut scratch.pred)
     }))
+}
+
+/// One **factor-level** grid-point evaluation — the task body of the
+/// [`crate::cv::FoldStrategy::Downdate`] sweep (shared by the engine's
+/// parallel grid tasks; there is no other call site, so parallel results
+/// are a pure function of the inputs). The fold factor comes from
+/// [`FoldData::factor_from_anchor`] — the shared `chol(G + λI)` anchor
+/// downdated by the fold's validation rows, with the refactorize fallback
+/// on breakdown — then the identical solve + hold-out scoring as
+/// [`eval_exact_point`]. Returns the hold-out error plus the recorded
+/// breakdown when the fallback path served this cell; `Err` only when even
+/// the fallback refactorization found `H_f + λI` indefinite.
+pub(crate) fn eval_anchored_point(
+    data: &FoldData,
+    anchor: &Matrix,
+    lam: f64,
+    metric: Metric,
+    scratch: &mut Scratch,
+    timer: &mut PhaseTimer,
+) -> Result<(f64, Option<CholeskyError>), CholeskyError> {
+    let fold_factor = data.factor_from_anchor(anchor, lam, scratch, timer)?;
+    timer.time("solve", || {
+        solve_cholesky_into(
+            &scratch.factor,
+            &data.g_vec,
+            &mut scratch.work,
+            &mut scratch.theta,
+        )
+    });
+    let err = timer.time("holdout", || {
+        holdout_error_with(&data.xv, &data.yv, &scratch.theta, metric, &mut scratch.pred)
+    });
+    Ok((err, fold_factor.fell_back))
 }
 
 /// One interpolated grid-point evaluation (piCholesky's payoff step) —

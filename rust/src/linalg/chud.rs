@@ -57,6 +57,19 @@
 //! fields at the same time); the GEMM output panel uses the kernel's
 //! thread-local arena — steady-state downdates allocate nothing.
 //!
+//! ## Chaining — rank-k as a chain of rank-[`CHUD_RANK_CHUNK`] passes
+//!
+//! The composed transform is `(jb+k)²`, so a single monolithic pass costs
+//! `O(k²·n²/b)` once `k ≫ b` — quadratic in the rank. The core therefore
+//! **chains** the update block through the factor in column chunks of at
+//! most [`CHUD_RANK_CHUNK`] vectors (`A ± U·Uᵀ = ((A ± U₁U₁ᵀ) ± U₂U₂ᵀ) ±
+//! …`), keeping every transform `(jb + CHUD_RANK_CHUNK)`-wide and the total
+//! work at `O(k·n²)`. This is what makes the **factor-level k-fold
+//! workload** ([`downdate_rank_k`]: rank-`n_v` fold downdates of
+//! `chol(G + λI)`) scale like `n_v` downdates instead of one `n_v²`-priced
+//! transform. With `k ≤ CHUD_RANK_CHUNK` there is exactly one chunk and the
+//! chained core is bitwise the original single-pass algorithm.
+//!
 //! ## Determinism
 //!
 //! Each kernel is a pure serial function of `(L, U)`: no pool, no shared
@@ -86,6 +99,16 @@ pub const CHUD_BLOCK: usize = 16;
 /// thread-local output panel, like the blocked Cholesky's `SYRK_CHUNK`).
 const CHUD_ROW_CHUNK: usize = 128;
 
+/// Column-chunk width of the chained rank-k processing: update vectors are
+/// folded through the factor in runs of at most this many columns, so the
+/// per-panel transform stays `(jb + CHUD_RANK_CHUNK)`-wide and the total
+/// work scales as `O(k·n²)` instead of the `O(k²·n²/b)` one monolithic
+/// transform would cost once `k ≫` [`CHUD_BLOCK`] (the fold-downdate
+/// workload: rank `n_v = n/k` into a `d×d` factor). Equal to [`CHUD_BLOCK`]
+/// — the `(b+c)²/(b·c)` flop overhead of the composed transform is
+/// minimized at `c = b`.
+pub const CHUD_RANK_CHUNK: usize = CHUD_BLOCK;
+
 /// Update (`A + U·Uᵀ`, Givens) or downdate (`A − U·Uᵀ`, hyperbolic)?
 #[derive(Clone, Copy, PartialEq)]
 enum Dir {
@@ -96,7 +119,10 @@ enum Dir {
 /// The shared blocked core. `u` is the row-major `n×k` update block (one
 /// vector per column), destroyed in the process; `block` is the panel
 /// width; `trans` is the reusable transform buffer (reshaped and fully
-/// overwritten per panel).
+/// overwritten per panel). Rank-k perturbations are **chained** through the
+/// factor in column chunks of [`CHUD_RANK_CHUNK`] vectors (see the module
+/// docs); with `k ≤ CHUD_RANK_CHUNK` the chain is a single pass, bitwise
+/// identical to the unchained algorithm.
 fn chud_in_place(
     l: &mut Matrix,
     u: &mut [f64],
@@ -111,6 +137,30 @@ fn chud_in_place(
     if n == 0 || k == 0 {
         return Ok(());
     }
+    let mut q0 = 0;
+    while q0 < k {
+        let q1 = (q0 + CHUD_RANK_CHUNK).min(k);
+        chud_chunk(l, u, k, q0, q1, block, dir, trans)?;
+        q0 = q1;
+    }
+    Ok(())
+}
+
+/// One chain link: fold update-block columns `[q0, q1)` into `l` (all
+/// panels). On `Err` the factor holds the partially-transformed state —
+/// same unusable-on-error contract as the public entry points.
+fn chud_chunk(
+    l: &mut Matrix,
+    u: &mut [f64],
+    k: usize,
+    q0: usize,
+    q1: usize,
+    block: usize,
+    dir: Dir,
+    trans: &mut Matrix,
+) -> Result<(), CholeskyError> {
+    let n = l.rows();
+    let kc = q1 - q0;
     let block = block.max(1);
     let stride = n;
 
@@ -118,7 +168,7 @@ fn chud_in_place(
     while j0 < n {
         let j1 = (j0 + block).min(n);
         let jb = j1 - j0;
-        let w = jb + k;
+        let w = jb + kc;
 
         // T ← I. Each rotation below is also applied to T's columns, so T
         // ends up as the composed linear map the trailing rows need.
@@ -132,7 +182,7 @@ fn chud_in_place(
         // uses — with block ≥ n this IS the unblocked algorithm.
         {
             let ld = l.as_mut_slice();
-            for q in 0..k {
+            for q in q0..q1 {
                 for j in j0..j1 {
                     let ljj = ld[j * stride + j];
                     let vqj = u[j * k + q];
@@ -162,9 +212,10 @@ fn chud_in_place(
                         u[i * k + q] = c * viq - s * lij_new;
                         ld[i * stride + j] = lij_new;
                     }
-                    // fold the rotation into T (columns j−j0 and jb+q),
-                    // with the exact same scalar ops as the row transform
-                    let (cj, cb) = (j - j0, jb + q);
+                    // fold the rotation into T (columns j−j0 and the chunk-
+                    // local jb+(q−q0)), with the exact same scalar ops as
+                    // the row transform
+                    let (cj, cb) = (j - j0, jb + (q - q0));
                     for t in 0..w {
                         let a = trans[(t, cj)];
                         let b = trans[(t, cb)];
@@ -179,15 +230,15 @@ fn chud_in_place(
             }
         }
 
-        // trailing rows: [L[i, j0..j1] | U[i, :]] · T through the packed
-        // kernel, chunked to bound the thread-local output panel
+        // trailing rows: [L[i, j0..j1] | U[i, q0..q1]] · T through the
+        // packed kernel, chunked to bound the thread-local output panel
         if j1 < n {
             let m_total = n - j1;
-            for q0 in (0..m_total).step_by(CHUD_ROW_CHUNK) {
-                let q1 = (q0 + CHUD_ROW_CHUNK).min(m_total);
-                let rows = q1 - q0;
+            for r0 in (0..m_total).step_by(CHUD_ROW_CHUNK) {
+                let r1 = (r0 + CHUD_ROW_CHUNK).min(m_total);
+                let rows = r1 - r0;
                 kernel::with_tmp(rows * w, |tmp| {
-                    // tmp = L[j1+q0.., j0..j1] · T[0..jb, :]
+                    // tmp = L[j1+r0.., j0..j1] · T[0..jb, :]
                     kernel::gemm_into(
                         rows,
                         w,
@@ -195,7 +246,7 @@ fn chud_in_place(
                         Src::N {
                             data: l.as_slice(),
                             stride,
-                            r0: j1 + q0,
+                            r0: j1 + r0,
                             c0: j0,
                         },
                         Src::N {
@@ -210,16 +261,16 @@ fn chud_in_place(
                         0,
                         Acc::Set,
                     );
-                    // tmp += U[j1+q0.., :] · T[jb.., :]
+                    // tmp += U[j1+r0.., q0..q1] · T[jb.., :]
                     kernel::gemm_into(
                         rows,
                         w,
-                        k,
+                        kc,
                         Src::N {
                             data: &*u,
                             stride: k,
-                            r0: j1 + q0,
-                            c0: 0,
+                            r0: j1 + r0,
+                            c0: q0,
                         },
                         Src::N {
                             data: trans.as_slice(),
@@ -233,13 +284,14 @@ fn chud_in_place(
                         0,
                         Acc::Add,
                     );
-                    // scatter back into the factor panel and U
+                    // scatter back into the factor panel and U's chunk cols
                     let ld = l.as_mut_slice();
                     for i in 0..rows {
-                        let gi = j1 + q0 + i;
+                        let gi = j1 + r0 + i;
                         ld[gi * stride + j0..gi * stride + j1]
                             .copy_from_slice(&tmp[i * w..i * w + jb]);
-                        u[gi * k..(gi + 1) * k].copy_from_slice(&tmp[i * w + jb..(i + 1) * w]);
+                        u[gi * k + q0..gi * k + q1]
+                            .copy_from_slice(&tmp[i * w + jb..(i + 1) * w]);
                     }
                 });
             }
@@ -290,6 +342,61 @@ pub fn chol_downdate_rank1(
     trans: &mut Matrix,
 ) -> Result<(), CholeskyError> {
     chud_in_place(l, v, 1, CHUD_BLOCK, Dir::Downdate, trans)
+}
+
+/// The **factor-level fold downdate** — the k-fold engine's task kernel.
+///
+/// Given the shared per-λ anchor factor `anchor = chol(G + λI)` and a
+/// fold's validation rows `xv` (`n_v×d`), derives the fold factor
+/// `chol(H_f + λI) = chol((G + λI) − X_vᵀX_v)` **without touching `H_f`**:
+/// copies `anchor` into `out`, gathers the validation rows into the
+/// reusable update block `ubuf` (`d×n_v`, one update vector per column) and
+/// runs the chained blocked rank-`n_v` hyperbolic downdate —
+/// `O(n_v·d²)` against the `O(d³)` refactorization it replaces. All three
+/// output/work buffers come from the caller (the per-worker
+/// [`Scratch`](super::scratch::Scratch): `factor`, `update`, `trans` on the
+/// sweep-engine path), so one worker reuses a single packed `T`-transform
+/// buffer across every fold it processes — steady-state fold downdates
+/// allocate nothing.
+///
+/// On [`CholeskyError`] (`H_f + λI` numerically indefinite at the carried
+/// column index) `out`/`ubuf` hold partially-transformed state; the anchor
+/// itself is never written, so the caller can fall back to refactorizing
+/// from the downdated Gram (what
+/// [`FoldData::factor_from_anchor`](crate::cv::FoldData::factor_from_anchor)
+/// does).
+pub fn downdate_rank_k(
+    anchor: &Matrix,
+    xv: &Matrix,
+    out: &mut Matrix,
+    ubuf: &mut Matrix,
+    trans: &mut Matrix,
+) -> Result<(), CholeskyError> {
+    assert_eq!(
+        anchor.rows(),
+        xv.cols(),
+        "validation rows must match the factor dimension"
+    );
+    out.copy_from(anchor);
+    let (nv, d) = (xv.rows(), xv.cols());
+    if nv == 0 {
+        return Ok(());
+    }
+    // gather X_vᵀ: one update vector per column, fully overwritten
+    ubuf.reset_zeroed(d, nv);
+    for i in 0..nv {
+        for (j, &v) in xv.row(i).iter().enumerate() {
+            ubuf[(j, i)] = v;
+        }
+    }
+    chud_in_place(
+        out,
+        ubuf.as_mut_slice(),
+        nv,
+        CHUD_BLOCK,
+        Dir::Downdate,
+        trans,
+    )
 }
 
 #[cfg(test)]
@@ -511,6 +618,205 @@ mod tests {
         let mut trans = Matrix::zeros(0, 0);
         let err = chol_downdate_rank1(&mut l, &mut v, &mut trans).unwrap_err();
         assert_eq!(err.pivot, 0);
+    }
+
+    /// `downdate_rank_k` (the fold-level entry point) is bitwise the
+    /// transpose-gather + [`chol_downdate`] composition, and matches a
+    /// refactorization of the downdated matrix — including n_v spanning
+    /// one chunk, the chunk boundary, and multiple chain links.
+    #[test]
+    fn downdate_rank_k_matches_chol_downdate_and_refactorization() {
+        for &(d, nv) in &[
+            (23usize, 1usize),
+            (23, CHUD_RANK_CHUNK),
+            (23, CHUD_RANK_CHUNK + 1),
+            (33, 2 * CHUD_RANK_CHUNK + 5),
+            (4, 9), // rank > dimension (the n_v > d fold shape)
+        ] {
+            let x = random_matrix(3 * d + nv, d, 700 + (d + nv) as u64);
+            let mut a = syrk_lower(&x);
+            a.add_diag_in_place(1.0);
+            let anchor = cholesky_blocked(&a).unwrap();
+            let xv = x.slice(0, nv, 0, d);
+
+            let mut out = Matrix::zeros(0, 0);
+            let mut ubuf = Matrix::zeros(0, 0);
+            let mut trans = Matrix::zeros(0, 0);
+            downdate_rank_k(&anchor, &xv, &mut out, &mut ubuf, &mut trans).unwrap();
+
+            // bitwise the generic rank-k entry point on Xᵥᵀ
+            let mut l = anchor.clone();
+            let mut u = xv.transpose();
+            chol_downdate(&mut l, &mut u, &mut trans).unwrap();
+            assert_eq!(
+                out.as_slice(),
+                l.as_slice(),
+                "d={d} nv={nv}: fold entry point must be bitwise chol_downdate"
+            );
+
+            // and within tolerance of refactorizing A − XᵥᵀXᵥ
+            let uut = Gemm::default().a_bt(&xv.transpose(), &xv.transpose());
+            let minus = Matrix::from_fn(d, d, |i, j| a[(i, j)] - uut[(i, j)]);
+            let exact = cholesky_blocked(&minus).unwrap();
+            assert!(
+                out.max_abs_diff(&exact) < 1e-8,
+                "d={d} nv={nv}: {:.2e}",
+                out.max_abs_diff(&exact)
+            );
+        }
+    }
+
+    /// The chained core agrees with an *unchained* single-transform pass
+    /// within rounding (they are algebraically the same downdate), so the
+    /// `CHUD_RANK_CHUNK` chaining is a pure cost reshaping.
+    #[test]
+    fn chained_rank_k_matches_single_pass() {
+        let d = 29;
+        let nv = 2 * CHUD_RANK_CHUNK + 3;
+        let x = random_matrix(3 * d + nv, d, 800);
+        let mut a = syrk_lower(&x);
+        a.add_diag_in_place(1.0);
+        let l0 = cholesky_blocked(&a).unwrap();
+        let u0 = x.slice(0, nv, 0, d).transpose();
+        let mut trans = Matrix::zeros(0, 0);
+
+        // chained (the production path)
+        let mut l_chain = l0.clone();
+        let mut u = u0.clone();
+        chol_downdate(&mut l_chain, &mut u, &mut trans).unwrap();
+
+        // unchained: one chud_chunk over the whole rank
+        let mut l_one = l0.clone();
+        let mut u = u0.clone();
+        chud_chunk(
+            &mut l_one,
+            u.as_mut_slice(),
+            nv,
+            0,
+            nv,
+            CHUD_BLOCK,
+            Dir::Downdate,
+            &mut trans,
+        )
+        .unwrap();
+        assert!(
+            l_chain.max_abs_diff(&l_one) < 1e-10,
+            "chained vs single-pass drift {:.2e}",
+            l_chain.max_abs_diff(&l_one)
+        );
+    }
+
+    /// Satellite property suite: randomized update-then-downdate round
+    /// trips over dims {1, 3, CHUD_BLOCK, > CHUD_BLOCK} × ranks
+    /// {1, 2, n_v}, at random conditioning, asserting agreement with
+    /// refactorization within a condition-scaled tolerance.
+    #[test]
+    fn prop_update_downdate_round_trips_match_refactorization() {
+        use crate::testutil::proptest_lite;
+        let dims = [1usize, 3, CHUD_BLOCK, CHUD_BLOCK + 21];
+        proptest_lite::check("chud round-trip × refactorization", 24, |case| {
+            let d = dims[case.index % dims.len()];
+            let ranks = [1usize, 2, (d / 2).max(3) + CHUD_RANK_CHUNK / 2];
+            let nv = ranks[(case.index / dims.len()) % ranks.len()];
+            let cond = 10f64.powf(case.float(1.0, 5.0));
+            let seed = 0x5EED_C4D + case.index as u64;
+            let a = random_spd(d, cond, seed);
+            let l0 = cholesky_blocked(&a).unwrap();
+
+            // U small enough that A − U·Uᵀ keeps the λ_min ≈ 1 margin:
+            // each column scaled to ‖u‖ = 0.5/√n_v, so ‖U·Uᵀ‖ ≤ 0.25
+            let mut u0 = random_matrix(d, nv, seed ^ 0xFACE);
+            for q in 0..nv {
+                let norm: f64 = (0..d).map(|i| u0[(i, q)] * u0[(i, q)]).sum::<f64>().sqrt();
+                let scale = 0.5 / ((nv as f64).sqrt() * norm.max(1e-12));
+                for i in 0..d {
+                    u0[(i, q)] *= scale;
+                }
+            }
+            let tol = 1e-12 * cond * (nv as f64 + 1.0).sqrt() + 1e-10;
+            let mut trans = Matrix::zeros(0, 0);
+
+            // update matches refactorization of A + U·Uᵀ …
+            let uut = Gemm::default().a_bt(&u0, &u0);
+            let mut l = l0.clone();
+            let mut u = u0.clone();
+            chol_update(&mut l, &mut u, &mut trans);
+            let plus = Matrix::from_fn(d, d, |i, j| a[(i, j)] + uut[(i, j)]);
+            let exact = cholesky_blocked(&plus).unwrap();
+            assert!(
+                l.max_abs_diff(&exact) < tol,
+                "update d={d} nv={nv} cond={cond:.1e}: {:.2e} > {tol:.1e}",
+                l.max_abs_diff(&exact)
+            );
+
+            // … the downdate returns to L₀ (round trip) …
+            let mut u = u0.clone();
+            chol_downdate(&mut l, &mut u, &mut trans).unwrap();
+            assert!(
+                l.max_abs_diff(&l0) < tol,
+                "round trip d={d} nv={nv} cond={cond:.1e}: {:.2e} > {tol:.1e}",
+                l.max_abs_diff(&l0)
+            );
+
+            // … and a straight downdate matches refactorizing A − U·Uᵀ
+            let mut l = l0.clone();
+            let mut u = u0.clone();
+            chol_downdate(&mut l, &mut u, &mut trans).unwrap();
+            let minus = Matrix::from_fn(d, d, |i, j| a[(i, j)] - uut[(i, j)]);
+            let exact = cholesky_blocked(&minus).unwrap();
+            assert!(
+                l.max_abs_diff(&exact) < tol,
+                "downdate d={d} nv={nv} cond={cond:.1e}: {:.2e} > {tol:.1e}",
+                l.max_abs_diff(&exact)
+            );
+        });
+    }
+
+    /// Satellite property: rank-k round trips through the *fold* entry
+    /// point, executed as pool tasks from worker scratch, are bitwise
+    /// identical at workers {1, 2, 4} — the same invariance the rank-1 LOO
+    /// path pins, at fold granularity.
+    #[test]
+    fn prop_rank_k_round_trip_bitwise_across_worker_counts() {
+        use crate::coordinator::pool::WorkerPool;
+        use crate::linalg::scratch::Scratch;
+        let shapes: [(usize, usize); 6] =
+            [(7, 1), (13, 2), (19, 5), (23, CHUD_RANK_CHUNK + 3), (5, 11), (31, 8)];
+        let run = |workers: usize| -> Vec<Vec<f64>> {
+            let pool = WorkerPool::new(workers);
+            let jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> Vec<f64> + Send>> = shapes
+                .iter()
+                .map(|&(d, nv)| {
+                    let f: Box<dyn FnOnce(&mut Scratch) -> Vec<f64> + Send> =
+                        Box::new(move |scratch| {
+                            let x = random_matrix(2 * d + nv, d, 90 + (d * nv) as u64);
+                            let mut a = syrk_lower(&x);
+                            a.add_diag_in_place(1.0);
+                            let anchor = cholesky_blocked(&a).unwrap();
+                            let xv = x.slice(0, nv, 0, d);
+                            // downdate through the fold entry point …
+                            downdate_rank_k(
+                                &anchor,
+                                &xv,
+                                &mut scratch.factor,
+                                &mut scratch.update,
+                                &mut scratch.trans,
+                            )
+                            .unwrap();
+                            // … then update back up from the downdated factor
+                            let mut u = xv.transpose();
+                            chol_update(&mut scratch.factor, &mut u, &mut scratch.trans);
+                            scratch.factor.as_slice().to_vec()
+                        });
+                    f
+                })
+                .collect();
+            pool.map_scratch(jobs)
+        };
+        let serial = run(1);
+        for workers in [2usize, 4] {
+            assert_eq!(run(workers), serial, "bits drifted at workers={workers}");
+        }
     }
 
     /// Round-trips executed as pool tasks are bitwise identical at workers

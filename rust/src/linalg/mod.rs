@@ -13,8 +13,10 @@
 //!   packed-kernel backed; the legacy loops live on in `gemm::reference`)
 //! - [`cholesky`] — blocked right-looking Cholesky (LAPACK `potrf` shape)
 //! - [`chud`] — blocked rank-1/rank-k Cholesky update (Givens) and downdate
-//!   (hyperbolic rotations): perturb an existing factor at `O(k·d²)` instead
-//!   of refactorizing — the leave-one-out and streaming-data kernel
+//!   (hyperbolic rotations), chained in rank chunks: perturb an existing
+//!   factor at `O(k·d²)` instead of refactorizing — the leave-one-out,
+//!   factor-level k-fold ([`chud::downdate_rank_k`]) and streaming-data
+//!   kernel
 //! - [`triangular`] — forward/backward substitution and block TRSM
 //! - [`scratch`] — the per-worker solver scratch arena (factor, eval and
 //!   solve buffers reused across sweep tasks)
@@ -42,7 +44,9 @@ pub mod svd;
 pub mod triangular;
 
 pub use cholesky::{cholesky_blocked, cholesky_in_place, CholeskyError};
-pub use chud::{chol_downdate, chol_downdate_rank1, chol_update, chol_update_rank1};
+pub use chud::{
+    chol_downdate, chol_downdate_rank1, chol_update, chol_update_rank1, downdate_rank_k,
+};
 pub use gemm::{gemm, gemv, syrk_lower, Gemm};
 pub use matrix::Matrix;
 pub use norms::{fro_norm, spectral_norm_est};

@@ -50,6 +50,11 @@ pub struct Scratch {
     /// Downdated per-row gradient `g_i = g − y_i·x_i` of the leave-one-out
     /// sweep ([`crate::cv::loo`]), fully overwritten per held-out row.
     pub gvec: Vec<f64>,
+    /// The `d×n_v` gathered update block (`X_vᵀ`, one update vector per
+    /// column) of the factor-level fold downdate
+    /// ([`crate::linalg::chud::downdate_rank_k`]), fully overwritten — and
+    /// destroyed — per (fold, λ) task.
+    pub update: Matrix,
 }
 
 impl Scratch {
@@ -63,6 +68,7 @@ impl Scratch {
             pred: Vec::new(),
             trans: Matrix::zeros(0, 0),
             gvec: Vec::new(),
+            update: Matrix::zeros(0, 0),
         }
     }
 }

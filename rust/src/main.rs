@@ -8,7 +8,7 @@ use picholesky::cli::{Args, USAGE};
 use picholesky::config::{parse_dataset, ExperimentConfig};
 use picholesky::coordinator::{Coordinator, HloFold, HloPipeline};
 use picholesky::cv::solvers::SolverKind;
-use picholesky::cv::{CvConfig, CvMode};
+use picholesky::cv::{CvConfig, CvMode, FoldStrategy};
 use picholesky::data::synthetic::{DatasetKind, SyntheticDataset};
 use picholesky::experiments;
 use picholesky::runtime::Engine;
@@ -66,6 +66,11 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
         cfg.cv.mode = CvMode::parse(mode)
             .ok_or_else(|| anyhow::anyhow!("unknown --mode '{mode}' (kfold | loo)"))?;
     }
+    if let Some(fs) = args.flag("fold-strategy") {
+        cfg.cv.fold_strategy = FoldStrategy::parse(fs).ok_or_else(|| {
+            anyhow::anyhow!("unknown --fold-strategy '{fs}' (refactor | downdate)")
+        })?;
+    }
     cfg.cv.seed = cfg.seed;
     if let Some(dir) = args.flag("artifacts") {
         cfg.artifacts_dir = dir.to_string();
@@ -112,16 +117,23 @@ fn cmd_cv(args: &Args) -> Result<()> {
         return Ok(());
     }
     println!(
-        "dataset={} n={} h={} solver={} folds={} grid={}",
+        "dataset={} n={} h={} solver={} folds={} grid={} fold_strategy={}",
         cfg.dataset.name(),
         cfg.n,
         cfg.h,
         solver.name(),
         cfg.cv.k_folds,
-        cfg.cv.q_grid
+        cfg.cv.q_grid,
+        cfg.cv.fold_strategy.name()
     );
     let ds = SyntheticDataset::generate(cfg.dataset, cfg.n, cfg.h, cfg.seed);
     let rep = coord.run_one(&ds, solver, &cfg.cv)?;
+    if !rep.fallbacks.is_empty() {
+        println!(
+            "  {} (fold, λ) cell(s) fell back to refactorization after a downdate breakdown",
+            rep.fallbacks.len()
+        );
+    }
     println!(
         "λ* = {:.4e}   holdout = {:.4}   wall = {}   cpu = {}",
         rep.best_lambda,

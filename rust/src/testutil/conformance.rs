@@ -1,0 +1,176 @@
+//! Conformance-suite problem generators and assertion helpers.
+//!
+//! The factor-level k-fold engine ([`crate::cv::FoldStrategy::Downdate`])
+//! reroutes the crate's *default* hot path, so it ships pinned against two
+//! oracles: the legacy refactorize path (same curves within rounding) and
+//! the leave-one-out engine (same λ neighborhood) — the validation shape of
+//! Stephenson & Broderick's ACV work and Wilson et al.'s model-assessment
+//! guarantees (PAPERS.md). This module owns the *problems* that suite runs
+//! on and the RMS comparison it asserts with; the suite itself lives in
+//! `tests/conformance.rs` and is wired into `ci.sh --conformance`.
+//!
+//! Three seeded generators cover the numerical regimes a fold downdate can
+//! meet:
+//!
+//! - [`well_conditioned`] — the stock synthetic dataset (the paper's §6
+//!   regime, Gram comfortably PD at every grid λ);
+//! - [`ill_conditioned`] — feature columns scaled geometrically over
+//!   `decades` orders of magnitude, driving the Gram's spread up by
+//!   `~10^(2·decades)` while the λ shift keeps every fold factorizable;
+//! - [`rank_deficient`] — features projected onto a rank-`r` subspace, so
+//!   the Gram itself is singular and *only* the λ shift makes the anchors
+//!   (and every downdated fold factor) positive-definite.
+//!
+//! All three return ordinary [`SyntheticDataset`]s, so they run through
+//! every mode unchanged (`fold_strategy = refactor | downdate`,
+//! `--mode loo`).
+
+use crate::data::synthetic::{DatasetKind, SyntheticDataset};
+
+/// The stock well-conditioned problem: the MNIST-like generator as-is.
+pub fn well_conditioned(n: usize, h: usize, seed: u64) -> SyntheticDataset {
+    SyntheticDataset::generate(DatasetKind::MnistLike, n, h, seed)
+}
+
+/// Geometrically ill-conditioned features: column `j` of the feature block
+/// is scaled by `10^(−decades·j/(h−2))`, spreading the Gram's column norms
+/// over `decades` orders of magnitude (condition number grows by roughly
+/// the square of that). The intercept column is left alone, so labels and
+/// the optimum's location stay in the paper's regime.
+pub fn ill_conditioned(n: usize, h: usize, decades: f64, seed: u64) -> SyntheticDataset {
+    let mut ds = SyntheticDataset::generate(DatasetKind::MnistLike, n, h, seed);
+    let denom = (h.saturating_sub(2)).max(1) as f64;
+    for j in 0..h - 1 {
+        let scale = 10f64.powf(-decades * j as f64 / denom);
+        for i in 0..n {
+            ds.x[(i, j)] *= scale;
+        }
+    }
+    ds
+}
+
+/// Rank-deficient features: columns `j ≥ rank` of the feature block are
+/// overwritten with scaled copies of columns `j mod rank`, so the feature
+/// Gram has rank ≤ `rank` (+1 for the intercept) and `H + λI` is PD only
+/// thanks to the shift — the regime where a sloppy downdate would break.
+pub fn rank_deficient(n: usize, h: usize, rank: usize, seed: u64) -> SyntheticDataset {
+    let mut ds = SyntheticDataset::generate(DatasetKind::MnistLike, n, h, seed);
+    let rank = rank.clamp(1, h - 1);
+    for j in rank..h - 1 {
+        let src = j % rank;
+        // a deterministic non-trivial coefficient, so the copies are not
+        // bitwise duplicates of their source column
+        let coef = 0.5 + 0.25 * ((j as f64) * 0.71).sin();
+        for i in 0..n {
+            ds.x[(i, j)] = coef * ds.x[(i, src)];
+        }
+    }
+    ds
+}
+
+/// The deterministic **breakdown-injection fixture** shared by the LOO
+/// skip test and the fold-granular fallback test: coordinate 0 is zeroed
+/// for every row, then row 0 gets a lone `1e9` spike there (and label
+/// `+1`). The Gram's column 0 becomes exactly `1e18·e₀` — all cross
+/// products are sums of exact zeros, `1e18 = 2¹⁸·5¹⁸` is exact in f64, and
+/// any λ ≤ 1 rounds away under `ulp(1e18) = 128` — so removing row 0 (the
+/// LOO hold-out, or a fold downdate whose validation block contains row 0)
+/// hits pivot `1e18 − 1e18 = 0` at column 0: a guaranteed, bitwise-stable
+/// breakdown at every anchor λ, while every other row/fold factors fine.
+pub fn spiked_dataset(n: usize, h: usize, seed: u64) -> SyntheticDataset {
+    let mut ds = SyntheticDataset::generate(DatasetKind::MnistLike, n, h, seed);
+    for i in 0..ds.n() {
+        ds.x[(i, 0)] = 0.0;
+    }
+    for v in ds.x.row_mut(0) {
+        *v = 0.0;
+    }
+    ds.x[(0, 0)] = 1e9;
+    ds.y[0] = 1.0;
+    ds
+}
+
+/// The three-problem conformance suite at one (n, h, seed) shape, in
+/// severity order.
+pub fn suite(n: usize, h: usize, seed: u64) -> Vec<(&'static str, SyntheticDataset)> {
+    vec![
+        ("well-conditioned", well_conditioned(n, h, seed)),
+        ("ill-conditioned", ill_conditioned(n, h, 2.0, seed ^ 0x111)),
+        (
+            "rank-deficient",
+            rank_deficient(n, h, (h / 3).max(1), seed ^ 0x222),
+        ),
+    ]
+}
+
+/// Root-mean-square distance between two equal-length curves.
+pub fn rms(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "curve length mismatch");
+    assert!(!a.is_empty(), "empty curves");
+    let sum: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    (sum / a.len() as f64).sqrt()
+}
+
+/// Assert two curves are finite everywhere and within `tol` in RMS — the
+/// conformance suite's acceptance comparator.
+#[track_caller]
+pub fn assert_close_rms(a: &[f64], b: &[f64], tol: f64) {
+    assert!(
+        a.iter().chain(b).all(|v| v.is_finite()),
+        "conformance curves must be finite:\nlhs = {a:?}\nrhs = {b:?}"
+    );
+    let d = rms(a, b);
+    assert!(
+        d <= tol,
+        "curves differ: RMS = {d:.3e} > tol {tol:.1e}\nlhs = {a:?}\nrhs = {b:?}"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gram::GramCache;
+    use crate::linalg::svd::jacobi_svd;
+
+    #[test]
+    fn ill_conditioned_spreads_the_gram() {
+        let base = well_conditioned(60, 9, 3);
+        let ill = ill_conditioned(60, 9, 2.0, 3);
+        let cond = |ds: &SyntheticDataset| {
+            let gram = GramCache::assemble(&ds.x, &ds.y);
+            let svd = jacobi_svd(gram.hessian());
+            svd.s[0] / svd.s.last().unwrap().max(1e-300)
+        };
+        assert!(
+            cond(&ill) > 50.0 * cond(&base),
+            "conditioning must degrade: {:.1e} vs {:.1e}",
+            cond(&ill),
+            cond(&base)
+        );
+    }
+
+    #[test]
+    fn rank_deficient_gram_is_singular() {
+        let ds = rank_deficient(60, 12, 3, 4);
+        let gram = GramCache::assemble(&ds.x, &ds.y);
+        let svd = jacobi_svd(gram.hessian());
+        // rank ≤ 3 feature columns + intercept → at most 4 significant
+        // singular values out of 12
+        let significant = svd.s.iter().filter(|&&s| s > 1e-10 * svd.s[0]).count();
+        assert!(significant <= 4, "rank {significant} > expected 4");
+    }
+
+    #[test]
+    fn rms_helper() {
+        assert!(rms(&[1.0, 2.0], &[1.0, 2.0]) == 0.0);
+        let d = rms(&[1.0, 1.0], &[1.0, 2.0]);
+        assert!((d - (0.5f64).sqrt()).abs() < 1e-12);
+        assert_close_rms(&[1.0], &[1.0 + 1e-12], 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "curves differ")]
+    fn assert_close_rms_rejects_drift() {
+        assert_close_rms(&[1.0], &[2.0], 1e-9);
+    }
+}

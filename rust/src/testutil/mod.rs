@@ -1,10 +1,14 @@
-//! Test utilities: random matrix factories and a property-testing
-//! mini-framework.
+//! Test utilities: random matrix factories, a property-testing
+//! mini-framework, and the cross-mode conformance problem generators.
 //!
 //! The offline crate set has no `proptest`, so [`proptest_lite`] provides the
 //! slice of it these tests need: run a closure over many seeded random cases,
 //! and on failure retry with "shrunk" (smaller-dimension) cases to report the
-//! smallest failing size.
+//! smallest failing size. [`conformance`] holds the seeded dataset
+//! generators (well-/ill-conditioned, rank-deficient) and RMS assertion
+//! helper behind the cross-mode conformance suite (`tests/conformance.rs`).
+
+pub mod conformance;
 
 use crate::linalg::matrix::Matrix;
 use crate::prng::Xoshiro256;

@@ -1,0 +1,220 @@
+//! The cross-mode conformance suite — the acceptance harness of the
+//! factor-level k-fold engine.
+//!
+//! Every problem from `testutil::conformance` (well-conditioned,
+//! ill-conditioned, rank-deficient) runs through the three execution modes
+//! that must agree:
+//!
+//! - `fold_strategy = refactor` — the literal per-(fold, λ)
+//!   `chol(H_f + λI)` pipeline, the oracle;
+//! - `fold_strategy = downdate` — the factor-level downdate chains (the
+//!   default hot path this suite exists to pin);
+//! - `--mode loo` — the exact leave-one-out engine, as the cross-scheme
+//!   sanity check on the selected λ.
+//!
+//! Asserted: λ* selection agrees (same grid cell between the two fold
+//! strategies, same λ neighborhood for LOO), hold-out curves match to
+//! ≤ 1e-9 RMS, the downdate path is bitwise identical at workers {1, 2, 4},
+//! and an injected fold-granular downdate breakdown degrades to the
+//! refactorize path for that fold only — recorded, never fatal.
+//!
+//! `ci.sh --conformance` runs exactly this file; the full CI gate includes
+//! it via `cargo test`.
+
+use picholesky::cv::loo::run_loo;
+use picholesky::cv::solvers::SolverKind;
+use picholesky::cv::{run_cv, CvConfig, FoldStrategy};
+use picholesky::data::folds::kfold;
+use picholesky::testutil::conformance::{
+    assert_close_rms, spiked_dataset, suite, well_conditioned,
+};
+
+fn cfg(strategy: FoldStrategy, workers: usize) -> CvConfig {
+    CvConfig {
+        k_folds: 5,
+        q_grid: 21,
+        lambda_range: Some((1e-2, 1.0)),
+        sweep_threads: workers,
+        fold_strategy: strategy,
+        ..CvConfig::default()
+    }
+}
+
+/// Snap a selected λ (possibly a geometric mean of grid values) to the
+/// nearest grid cell, log-scale.
+fn grid_cell(grid: &[f64], lam: f64) -> usize {
+    grid.iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| {
+            let da = (a.ln() - lam.ln()).abs();
+            let db = (b.ln() - lam.ln()).abs();
+            da.partial_cmp(&db).unwrap()
+        })
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// The headline conformance assertion: on every generator regime, the
+/// factor-level downdate path reproduces the refactorize oracle — same λ*
+/// cell (±1 across rounding-level ties), per-fold selections in step, mean
+/// hold-out curves within 1e-9 RMS, and zero breakdown fallbacks.
+#[test]
+fn fold_strategies_agree_on_conformance_suite() {
+    for (name, ds) in suite(150, 16, 11) {
+        let refactor = run_cv(&ds, SolverKind::Chol, &cfg(FoldStrategy::Refactor, 1)).unwrap();
+        let downdate = run_cv(&ds, SolverKind::Chol, &cfg(FoldStrategy::Downdate, 1)).unwrap();
+        assert!(refactor.fallbacks.is_empty(), "{name}: oracle never falls back");
+        assert!(
+            downdate.fallbacks.is_empty(),
+            "{name}: unexpected downdate breakdowns: {:?}",
+            downdate.fallbacks
+        );
+        assert_close_rms(&refactor.mean_errors, &downdate.mean_errors, 1e-9);
+        let (ri, di) = (
+            grid_cell(&refactor.grid, refactor.best_lambda) as i64,
+            grid_cell(&downdate.grid, downdate.best_lambda) as i64,
+        );
+        assert!(
+            (ri - di).abs() <= 1,
+            "{name}: λ* cells diverge: {ri} vs {di}"
+        );
+        for (f, ((la, ea), (lb, eb))) in refactor
+            .fold_bests
+            .iter()
+            .zip(&downdate.fold_bests)
+            .enumerate()
+        {
+            let (ca, cb) = (
+                grid_cell(&refactor.grid, *la) as i64,
+                grid_cell(&downdate.grid, *lb) as i64,
+            );
+            assert!((ca - cb).abs() <= 1, "{name}: fold {f} λ* cells {ca} vs {cb}");
+            assert!((ea - eb).abs() < 1e-9, "{name}: fold {f} best error drifted");
+        }
+    }
+}
+
+/// The three-mode check on one dataset: refactor, downdate and exact LOO
+/// all land their selected λ in the same neighborhood (LOO estimates the
+/// same generalization optimum from n single-row splits, so it is held to
+/// a one-decade agreement, not the rounding-level bar of the two k-fold
+/// strategies).
+#[test]
+fn cross_mode_lambda_selection_agrees() {
+    let ds = well_conditioned(150, 16, 11);
+    let refactor = run_cv(&ds, SolverKind::Chol, &cfg(FoldStrategy::Refactor, 2)).unwrap();
+    let downdate = run_cv(&ds, SolverKind::Chol, &cfg(FoldStrategy::Downdate, 2)).unwrap();
+    let loo_cfg = CvConfig {
+        g_samples: 6,
+        ..cfg(FoldStrategy::Downdate, 2)
+    };
+    let loo = run_loo(&ds, &loo_cfg).unwrap();
+    assert!(loo.skipped.is_empty(), "no LOO breakdowns expected");
+    assert!(loo.best_lambda > 0.0 && loo.best_error.is_finite());
+
+    let (ri, di) = (
+        grid_cell(&refactor.grid, refactor.best_lambda) as i64,
+        grid_cell(&downdate.grid, downdate.best_lambda) as i64,
+    );
+    assert!((ri - di).abs() <= 1, "k-fold strategies diverge: {ri} vs {di}");
+    let dist = (loo.best_lambda.log10() - downdate.best_lambda.log10()).abs();
+    assert!(
+        dist < 1.0,
+        "LOO λ* {:.3e} more than a decade from k-fold λ* {:.3e}",
+        loo.best_lambda,
+        downdate.best_lambda
+    );
+}
+
+/// The downdate strategy is bitwise identical at workers {1, 2, 4}, for
+/// both the exact sweep and piCholesky — the engine's determinism contract
+/// extended to the new task kinds (anchor wave, fold-downdate wave,
+/// anchored grid wave).
+#[test]
+fn downdate_strategy_bitwise_across_worker_counts() {
+    let ds = well_conditioned(150, 16, 11);
+    for solver in [SolverKind::Chol, SolverKind::PiChol] {
+        let serial = run_cv(&ds, solver, &cfg(FoldStrategy::Downdate, 1)).unwrap();
+        for workers in [2usize, 4] {
+            let par = run_cv(&ds, solver, &cfg(FoldStrategy::Downdate, workers)).unwrap();
+            assert_eq!(
+                serial.mean_errors, par.mean_errors,
+                "{solver:?}: curve bits drifted at workers={workers}"
+            );
+            assert_eq!(serial.best_lambda, par.best_lambda);
+            assert_eq!(serial.best_error, par.best_error);
+            assert_eq!(serial.fold_bests, par.fold_bests);
+            assert_eq!(serial.fallbacks.len(), par.fallbacks.len());
+        }
+    }
+}
+
+/// Fold-granular breakdown injection, on the shared [`spiked_dataset`]
+/// fixture: the fold whose validation block holds the spiked row 0 hits
+/// pivot `1e18 − 1e18 = 0` at column 0 of its downdate — a deterministic
+/// breakdown at every anchor, while every other fold downdates fine. The
+/// engine must fall back to the refactorize path for that fold only,
+/// record each cell in `CvReport::fallbacks`, and still produce the
+/// pure-refactor curve.
+#[test]
+fn fold_breakdown_falls_back_and_is_recorded() {
+    let ds = spiked_dataset(40, 8, 5);
+
+    let (k, q) = (4usize, 9usize);
+    let base = CvConfig {
+        k_folds: k,
+        q_grid: q,
+        lambda_range: Some((1e-2, 1.0)),
+        sweep_threads: 2,
+        ..CvConfig::default()
+    };
+    let down = run_cv(
+        &ds,
+        SolverKind::Chol,
+        &CvConfig {
+            fold_strategy: FoldStrategy::Downdate,
+            ..base.clone()
+        },
+    )
+    .unwrap();
+
+    // the fold holding row 0 is determined by the same seeded split the
+    // engine uses
+    let spike_fold = kfold(ds.n(), k, base.seed)
+        .iter()
+        .position(|f| f.val.contains(&0))
+        .unwrap();
+
+    // recorded for that fold only, at every grid λ, with the failing column
+    assert_eq!(down.fallbacks.len(), q, "one fallback per anchor λ");
+    for fb in &down.fallbacks {
+        assert_eq!(fb.fold, spike_fold, "only the spiked fold may fall back");
+        assert_eq!(fb.error.pivot, 0, "failing column index must be carried");
+        assert!(fb.error.value <= 0.0);
+    }
+
+    // structural accounting: every cell attempted the downdate, only the
+    // spiked fold's cells refactorized
+    assert_eq!(down.timer.count("factor"), q as u64);
+    assert_eq!(down.timer.count("fold_downdate"), (q * k) as u64);
+    assert_eq!(down.timer.count("chol"), q as u64, "fallback refactorizations");
+
+    // and the final curve still matches the pure-refactor run: the fallback
+    // fold bitwise (it ran the same code on the same H_f), the rest within
+    // rounding
+    let refr = run_cv(
+        &ds,
+        SolverKind::Chol,
+        &CvConfig {
+            fold_strategy: FoldStrategy::Refactor,
+            ..base
+        },
+    )
+    .unwrap();
+    assert!(refr.fallbacks.is_empty());
+    assert_eq!(
+        down.fold_bests[spike_fold], refr.fold_bests[spike_fold],
+        "the fallback fold must be bitwise the refactor path"
+    );
+    assert_close_rms(&down.mean_errors, &refr.mean_errors, 1e-9);
+}
