@@ -11,6 +11,9 @@
 #   ./ci.sh --conformance   only the cross-mode conformance suite
 #                           (fold_strategy refactor|downdate × --mode loo,
 #                           bitwise at workers 1/2/4)
+#   ./ci.sh --backends      only the per-backend kernel conformance suite,
+#                           once per micro-kernel backend the host supports
+#                           (scalar always; avx2/neon when detected)
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -21,6 +24,29 @@ conformance() {
   # breakdown-fallback injection — tests/conformance.rs end to end
   echo "==> cross-mode conformance suite (refactor | downdate | loo, workers 1/2/4)"
   cargo test -q --test conformance
+}
+
+backends() {
+  # the scalar-vs-vector bitwise conformance suite (tests/kernel_backends.rs),
+  # once per micro-kernel backend this host can run: the env var pins the
+  # dispatch default so even the tests that never call force_backend run
+  # their library code on the backend under test
+  local list="scalar" arch
+  arch="$(uname -m)"
+  if [[ "$arch" == "x86_64" ]] \
+     && grep -q avx2 /proc/cpuinfo 2>/dev/null \
+     && grep -q fma /proc/cpuinfo 2>/dev/null; then
+    list="$list avx2"
+  fi
+  if [[ "$arch" == "aarch64" || "$arch" == "arm64" ]]; then
+    list="$list neon"
+  fi
+  echo "==> per-backend kernel conformance (backends: $list)"
+  local b
+  for b in $list; do
+    echo "==> cargo test --test kernel_backends [PICHOL_KERNEL_BACKEND=$b]"
+    PICHOL_KERNEL_BACKEND="$b" cargo test -q --test kernel_backends
+  done
 }
 
 bench_smoke() {
@@ -34,6 +60,7 @@ bench_smoke() {
   cargo bench --bench bench_kernels -- --smoke --out "$out"
   test -s "$out"
   grep -q '"kernel"' "$out"
+  grep -q '"kernel_backend"' "$out"
   grep -q '"packed_secs"' "$out"
   # the factor-update subsystem stages and the LOO structural phase counts
   grep -q '"chud_r1"' "$out"
@@ -55,6 +82,11 @@ if [[ "${1:-}" == "--conformance" ]]; then
   exit 0
 fi
 
+if [[ "${1:-}" == "--backends" ]]; then
+  backends
+  exit 0
+fi
+
 echo "==> cargo build --release"
 cargo build --release
 
@@ -64,6 +96,9 @@ cargo test -q
 # the conformance stage re-runs the cross-mode suite as its own named gate
 # (guarded like clippy/fmt in spirit: it only needs cargo, so it always runs)
 conformance
+
+# scalar-vs-vector bitwise conformance, once per backend the host supports
+backends
 
 echo "==> cargo run --release --example quickstart (end-to-end smoke gate)"
 cargo run --release --example quickstart

@@ -387,6 +387,10 @@ fn emit_json(rows: &[Row], smoke: bool, loo_phases: &str, path: &str) {
     s.push_str("{\n");
     s.push_str("  \"bench\": \"kernels\",\n");
     s.push_str(&format!("  \"smoke\": {smoke},\n"));
+    s.push_str(&format!(
+        "  \"kernel_backend\": \"{}\",\n",
+        picholesky::linalg::active_backend().name()
+    ));
     s.push_str("  \"unit\": \"seconds (min of reps)\",\n");
     s.push_str(&format!("  \"loo_phases\": {loo_phases},\n"));
     s.push_str("  \"results\": [\n");
@@ -403,7 +407,12 @@ fn emit_json(rows: &[Row], smoke: bool, loo_phases: &str, path: &str) {
         ));
     }
     s.push_str("  ]\n}\n");
-    std::fs::write(path, s).expect("write BENCH_kernels.json");
+    // Write via temp file + atomic rename: a reader racing the bench (the
+    // auto-strategy picker, a `--bench-smoke` CI grep) must never observe a
+    // truncated JSON, and a crashed bench must not leave one behind.
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, s).expect("write BENCH_kernels.json temp file");
+    std::fs::rename(&tmp, path).expect("rename BENCH_kernels.json into place");
     println!("\nwrote {path}");
 }
 

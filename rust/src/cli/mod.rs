@@ -91,9 +91,14 @@ COMMANDS:
                --dataset mnist|coil|caltech101|caltech256  --solver chol|pichol|mchol|svd|tsvd|rsvd|pinrmse
                --mode kfold|loo   (loo = exact leave-one-out via rank-1 factor
                downdates: one exact factor per λ anchor, n downdates each)
-               --fold-strategy downdate|refactor   (downdate = default: one
-               chol(G+λI) per λ anchor, fold factors by rank-(n/k) downdate
-               chains; refactor = per-(fold,λ) chol(H_f+λI))
+               --fold-strategy downdate|refactor|auto   (downdate = default:
+               one chol(G+λI) per λ anchor, fold factors by rank-(n/k)
+               downdate chains; refactor = per-(fold,λ) chol(H_f+λI);
+               auto = pick from the measured chud_rk crossover in the last
+               BENCH_kernels.json, defaulting to downdate without one)
+               (micro-kernel backend: PICHOL_KERNEL_BACKEND=scalar|avx2|neon
+               env var; detected at startup otherwise — all backends are
+               bit-identical)
                --h <dim> --n <samples> --folds <k> --grid <q> --g <samples> --degree <r>
                --threads <n|0=auto> --batch <λ per task; LOO: rows per task|0=auto>
                --chunk-rows <Gram stream block|0=auto>

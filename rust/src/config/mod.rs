@@ -194,8 +194,9 @@ impl ExperimentConfig {
                 .ok_or_else(|| anyhow!("unknown cv mode '{v}' (kfold | loo)"))?;
         }
         if let Some(v) = doc.get("cv.fold_strategy").and_then(TomlValue::as_str) {
-            cfg.cv.fold_strategy = FoldStrategy::parse(v)
-                .ok_or_else(|| anyhow!("unknown fold strategy '{v}' (refactor | downdate)"))?;
+            cfg.cv.fold_strategy = FoldStrategy::parse(v).ok_or_else(|| {
+                anyhow!("unknown fold strategy '{v}' (refactor | downdate | auto)")
+            })?;
         }
         if let Some(v) = doc.get("cv.metric").and_then(TomlValue::as_str) {
             cfg.cv.metric = match v {
@@ -338,6 +339,12 @@ mod tests {
         // factor-level downdate chains are the default; junk rejected
         let cfg = ExperimentConfig::from_doc(&parse_toml("n = 64\n").unwrap()).unwrap();
         assert_eq!(cfg.cv.fold_strategy, FoldStrategy::Downdate);
+        // the measured-crossover auto mode is a first-class config value
+        let cfg = ExperimentConfig::from_doc(
+            &parse_toml("[cv]\nfold_strategy = \"auto\"\n").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.cv.fold_strategy, FoldStrategy::Auto);
         assert!(ExperimentConfig::from_doc(
             &parse_toml("[cv]\nfold_strategy = \"resolve\"\n").unwrap()
         )

@@ -129,12 +129,21 @@ pub struct SweepPlan {
     pub threads: usize,
     /// λ grid points per sweep task (the batch shape; ≥ 1).
     pub batch: usize,
+    /// Where `cv.fold_strategy` came from after resolution: `"config"`
+    /// (explicit), `"bench-file"` (auto, measured crossover) or `"default"`
+    /// (auto, no usable bench file) — see [`crate::cv::strategy`].
+    pub strategy_source: &'static str,
 }
 
 impl SweepPlan {
     /// Resolve a plan from a dataset + config: builds the grid, resolves
     /// `sweep_threads == 0` to [`default_workers`] and `sweep_batch == 0` to
     /// an automatic shape (~4 batches per worker per fold for load balance).
+    /// [`FoldStrategy::Auto`] is resolved here too — from the measured
+    /// `chud_rk` crossover of the last `BENCH_kernels.json` at this run's
+    /// `(n_v, d)` ([`crate::cv::strategy::resolve`]) — so the engine only
+    /// ever sees a concrete strategy; the resolution's provenance lands in
+    /// `strategy_source`.
     pub fn new(ds: &SyntheticDataset, kind: SolverKind, cfg: &CvConfig) -> Self {
         let (lo, hi) = cfg.lambda_range.unwrap_or_else(|| ds.kind.lambda_range());
         let grid = logspace(lo, hi, cfg.q_grid);
@@ -148,12 +157,17 @@ impl SweepPlan {
         } else {
             cfg.sweep_batch
         };
+        let resolved =
+            crate::cv::strategy::resolve(cfg.fold_strategy, ds.n(), ds.h(), cfg.k_folds);
+        let mut cv = cfg.clone();
+        cv.fold_strategy = resolved.strategy;
         Self {
             kind,
-            cv: cfg.clone(),
+            cv,
             grid,
             threads,
             batch,
+            strategy_source: resolved.source,
         }
     }
 
@@ -239,6 +253,16 @@ pub struct SweepReport {
     /// the coordinating thread in ascending (fold, grid-index) order —
     /// bitwise independent of scheduling like everything else.
     pub fallbacks: Vec<FoldFallback>,
+    /// The micro-kernel backend every GEMM of this run dispatched to
+    /// ([`crate::linalg::kernel::active_backend`]) — `"scalar"`, `"avx2"`
+    /// or `"neon"`. All backends are bit-identical; this records which ran.
+    pub kernel_backend: &'static str,
+    /// The concrete fold strategy the run executed (never
+    /// [`FoldStrategy::Auto`] — [`SweepPlan::new`] resolves it).
+    pub fold_strategy: FoldStrategy,
+    /// Provenance of `fold_strategy`: `"config"`, `"bench-file"` or
+    /// `"default"` (see [`SweepPlan::strategy_source`]).
+    pub strategy_source: &'static str,
 }
 
 /// Output of one pool task, reassembled on the coordinating thread.
@@ -475,7 +499,10 @@ impl SweepEngine {
         let mut fallbacks: Vec<FoldFallback> = Vec::new();
         let fold_results = match plan.kind {
             SolverKind::Chol => {
-                let kind = if plan.cv.fold_strategy == FoldStrategy::Downdate {
+                // Auto resolved to a concrete strategy in SweepPlan::new;
+                // the defensive arm maps anything non-refactor to the
+                // factor-level path (the crate default).
+                let kind = if plan.cv.fold_strategy != FoldStrategy::Refactor {
                     // factor-level: every grid λ is an anchor — one exact
                     // chol(G + λI) each, fold factors by downdate chains
                     let anchors =
@@ -525,6 +552,9 @@ impl SweepEngine {
             threads: self.pool.size(),
             tasks,
             fallbacks,
+            kernel_backend: crate::linalg::kernel::active_backend().name(),
+            fold_strategy: plan.cv.fold_strategy,
+            strategy_source: plan.strategy_source,
         })
     }
 
@@ -752,7 +782,7 @@ impl SweepEngine {
         let g = sample_lams.len();
         let k = fold_data.len();
 
-        let factors: Vec<Vec<Matrix>> = if plan.cv.fold_strategy == FoldStrategy::Downdate {
+        let factors: Vec<Vec<Matrix>> = if plan.cv.fold_strategy != FoldStrategy::Refactor {
             // stage 2a: g global anchors chol(G + λ_s I), exactly one O(d³)
             // factorization per sample λ
             let items: Vec<(Arc<GramCache>, f64)> = sample_lams
@@ -900,10 +930,29 @@ impl SweepEngine {
                                 }
                             }
                             GridKind::Anchored(anchors) => {
+                                // λ-warm-start: the update block X_vᵀ is
+                                // λ-independent, so gather it once for this
+                                // task's whole λ batch ("gather" phase) and
+                                // replay it per cell — bitwise identical to
+                                // re-gathering, one strided pass cheaper per
+                                // cell. The buffer is taken out of the arena
+                                // so the per-cell calls can borrow the rest
+                                // of the scratch mutably.
+                                let mut gathered = std::mem::replace(
+                                    &mut scratch.gather,
+                                    Matrix::zeros(0, 0),
+                                );
+                                t.time("gather", || {
+                                    crate::linalg::chud::gather_update_block(
+                                        &fd.xv,
+                                        &mut gathered,
+                                    )
+                                });
                                 for (off, &lam) in grid[lo..hi].iter().enumerate() {
-                                    let (e, fell_back) = solvers::eval_anchored_point(
+                                    let (e, fell_back) = solvers::eval_anchored_point_pregathered(
                                         &fd,
                                         &anchors[lo + off],
+                                        &gathered,
                                         lam,
                                         metric,
                                         scratch,
@@ -914,6 +963,7 @@ impl SweepEngine {
                                         cell_fallbacks.push((lo + off, err));
                                     }
                                 }
+                                scratch.gather = gathered;
                             }
                             GridKind::Exact => {
                                 for &lam in &grid[lo..hi] {
@@ -1280,6 +1330,64 @@ mod tests {
             ..cfg
         };
         assert_eq!(LooPlan::new(&ds, &explicit).batch, 9);
+    }
+
+    /// The report records the dispatch decisions of the run: which kernel
+    /// backend every GEMM went through and which fold strategy (with
+    /// provenance) the sweep executed.
+    #[test]
+    fn report_carries_kernel_backend_and_strategy() {
+        let rep = run(SolverKind::Chol, 2);
+        assert!(
+            ["scalar", "avx2", "neon"].contains(&rep.kernel_backend),
+            "unexpected backend '{}'",
+            rep.kernel_backend
+        );
+        assert_eq!(rep.fold_strategy, FoldStrategy::Downdate);
+        assert_eq!(rep.strategy_source, "config");
+    }
+
+    /// `fold_strategy = "auto"` resolves in `SweepPlan::new`: the engine
+    /// sees a concrete strategy, the report carries the resolution, and the
+    /// run completes normally with no bench file present.
+    #[test]
+    fn plan_resolves_auto_strategy_before_engine_runs() {
+        let ds = ds();
+        let cfg = CvConfig {
+            fold_strategy: FoldStrategy::Auto,
+            ..cfg_with_threads(2)
+        };
+        let plan = SweepPlan::new(&ds, SolverKind::Chol, &cfg);
+        assert_ne!(plan.cv.fold_strategy, FoldStrategy::Auto);
+        assert!(
+            plan.strategy_source == "bench-file" || plan.strategy_source == "default",
+            "auto provenance, got '{}'",
+            plan.strategy_source
+        );
+        let rep = SweepEngine::new(plan.threads).run(&ds, &plan).unwrap();
+        assert_eq!(rep.fold_strategy, plan.cv.fold_strategy);
+        assert_eq!(rep.strategy_source, plan.strategy_source);
+        assert!(rep.fold_results.iter().all(|r| r.best_error.is_finite()));
+    }
+
+    /// The λ-warm-start: each Anchored grid task gathers its fold's update
+    /// block exactly once (the `gather` phase), not once per λ cell — while
+    /// the pinned per-cell `fold_downdate` accounting is untouched (see
+    /// `factor_level_phase_counts_per_anchor`).
+    #[test]
+    fn anchored_grid_tasks_gather_once_per_task() {
+        let rep = run(SolverKind::Chol, 2);
+        let grid_tasks = 5 * 50usize.div_ceil({
+            let ds = ds();
+            let plan = SweepPlan::new(&ds, SolverKind::Chol, &cfg_with_threads(2));
+            plan.batch
+        });
+        assert_eq!(
+            rep.timer.count("gather"),
+            grid_tasks as u64,
+            "one gather per Anchored grid task"
+        );
+        assert_eq!(rep.timer.count("fold_downdate"), 5 * 50);
     }
 
     #[test]

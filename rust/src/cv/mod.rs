@@ -31,6 +31,7 @@
 
 pub mod loo;
 pub mod solvers;
+pub mod strategy;
 
 use crate::coordinator::sweep_engine::{SweepEngine, SweepPlan, SweepReport};
 use crate::data::gram::GramCache;
@@ -88,6 +89,15 @@ pub enum FoldStrategy {
     /// numerically indefinite fold degrades to [`FoldStrategy::Refactor`]
     /// for that (fold, λ) only, recorded in [`CvReport::fallbacks`].
     Downdate,
+    /// Measured-crossover auto-selection ([`strategy`]): read the last
+    /// `BENCH_kernels.json` trajectory and pick [`FoldStrategy::Downdate`]
+    /// vs [`FoldStrategy::Refactor`] from the measured `chud_rk` crossover
+    /// at this run's `(n_v, d)`; falls back to the static default
+    /// (downdate) when no usable bench file exists. Resolved to a concrete
+    /// strategy in [`SweepPlan::new`] — the engine never sees `Auto`, and
+    /// the resolved choice plus its provenance are recorded in
+    /// [`CvReport::fold_strategy`]/[`CvReport::strategy_source`].
+    Auto,
 }
 
 impl FoldStrategy {
@@ -97,6 +107,7 @@ impl FoldStrategy {
         match s.to_ascii_lowercase().as_str() {
             "refactor" | "refactorize" => Some(FoldStrategy::Refactor),
             "downdate" => Some(FoldStrategy::Downdate),
+            "auto" => Some(FoldStrategy::Auto),
             _ => None,
         }
     }
@@ -105,6 +116,7 @@ impl FoldStrategy {
         match self {
             FoldStrategy::Refactor => "refactor",
             FoldStrategy::Downdate => "downdate",
+            FoldStrategy::Auto => "auto",
         }
     }
 }
@@ -293,6 +305,46 @@ impl FoldData {
             }
         }
     }
+
+    /// [`FoldData::factor_from_anchor`] with the update block gathered once
+    /// up front — the **λ-warm-start** variant. A sweep task covering
+    /// several λ cells of one fold gathers `X_vᵀ` into `scratch.gather`
+    /// once ([`chud::gather_update_block`], timed under `gather`) and
+    /// replays the block per cell through
+    /// [`chud::downdate_rank_k_pregathered`] (a contiguous memcpy instead
+    /// of the strided per-cell row gather). Bitwise identical to the
+    /// ungathered path — same values flow into the same transform chain —
+    /// so curves, fallbacks, and the partition-independence contract are
+    /// untouched; only the `fold_downdate` phase gets cheaper per cell.
+    pub fn factor_from_anchor_pregathered(
+        &self,
+        anchor: &Matrix,
+        gathered: &Matrix,
+        lam: f64,
+        scratch: &mut Scratch,
+        timer: &mut PhaseTimer,
+    ) -> Result<FoldFactor, CholeskyError> {
+        let down = timer.time("fold_downdate", || {
+            chud::downdate_rank_k_pregathered(
+                anchor,
+                gathered,
+                &mut scratch.factor,
+                &mut scratch.update,
+                &mut scratch.trans,
+            )
+        });
+        match down {
+            Ok(()) => Ok(FoldFactor { fell_back: None }),
+            Err(breakdown) => {
+                timer.time("chol", || {
+                    cholesky_shifted_into(&self.h_mat, lam, &mut scratch.factor)
+                })?;
+                Ok(FoldFactor {
+                    fell_back: Some(breakdown),
+                })
+            }
+        }
+    }
 }
 
 /// What [`FoldData::factor_from_anchor`] produced: the fold factor itself
@@ -427,6 +479,17 @@ pub struct CvReport {
     /// (fold, grid-index) order — empty on the happy path and on
     /// [`FoldStrategy::Refactor`] runs.
     pub fallbacks: Vec<FoldFallback>,
+    /// The micro-kernel backend every GEMM of this run dispatched to
+    /// ([`crate::linalg::kernel::active_backend`]): `"scalar"`, `"avx2"`, or
+    /// `"neon"`. All backends are bit-identical; this records which one ran.
+    pub kernel_backend: &'static str,
+    /// The concrete fold strategy the sweep executed — never
+    /// [`FoldStrategy::Auto`] (resolution happens in `SweepPlan::new`).
+    pub fold_strategy: FoldStrategy,
+    /// Where [`CvReport::fold_strategy`] came from: `"config"` (explicit
+    /// setting), `"bench-file"` (auto mode, measured crossover), or
+    /// `"default"` (auto mode, no usable bench file).
+    pub strategy_source: &'static str,
 }
 
 impl CvReport {
@@ -475,6 +538,9 @@ pub fn aggregate_sweep(report: SweepReport) -> CvReport {
         timer,
         wall_secs,
         fallbacks,
+        kernel_backend,
+        fold_strategy,
+        strategy_source,
         ..
     } = report;
 
@@ -516,6 +582,9 @@ pub fn aggregate_sweep(report: SweepReport) -> CvReport {
         fold_bests,
         probes,
         fallbacks,
+        kernel_backend,
+        fold_strategy,
+        strategy_source,
     }
 }
 
@@ -579,8 +648,47 @@ mod tests {
     fn fold_strategy_parse() {
         assert_eq!(FoldStrategy::parse("downdate"), Some(FoldStrategy::Downdate));
         assert_eq!(FoldStrategy::parse("Refactor"), Some(FoldStrategy::Refactor));
+        assert_eq!(FoldStrategy::parse("auto"), Some(FoldStrategy::Auto));
         assert_eq!(FoldStrategy::parse("nope"), None);
         assert_eq!(FoldStrategy::Downdate.name(), "downdate");
+        assert_eq!(FoldStrategy::Auto.name(), "auto");
+    }
+
+    /// Auto resolves before the engine runs: the report carries a concrete
+    /// strategy, its provenance, and the dispatched kernel backend.
+    #[test]
+    fn run_cv_auto_strategy_resolves_and_reports() {
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 120, 17, 3);
+        let cfg = CvConfig {
+            k_folds: 3,
+            q_grid: 9,
+            fold_strategy: FoldStrategy::Auto,
+            ..CvConfig::default()
+        };
+        let rep = run_cv(&ds, SolverKind::Chol, &cfg).unwrap();
+        assert_ne!(rep.fold_strategy, FoldStrategy::Auto, "must resolve");
+        assert!(
+            rep.strategy_source == "bench-file" || rep.strategy_source == "default",
+            "auto provenance, got '{}'",
+            rep.strategy_source
+        );
+        assert!(!rep.kernel_backend.is_empty());
+        assert!(rep.mean_errors.iter().all(|e| e.is_finite()));
+    }
+
+    /// An explicit strategy is passed through untouched with source
+    /// `"config"`.
+    #[test]
+    fn run_cv_explicit_strategy_reports_config_source() {
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 120, 17, 3);
+        let cfg = CvConfig {
+            k_folds: 3,
+            q_grid: 9,
+            ..CvConfig::default()
+        };
+        let rep = run_cv(&ds, SolverKind::Chol, &cfg).unwrap();
+        assert_eq!(rep.fold_strategy, FoldStrategy::Downdate);
+        assert_eq!(rep.strategy_source, "config");
     }
 
     /// `factor_from_anchor` is numerically the refactorize oracle: same

@@ -174,6 +174,36 @@ pub(crate) fn eval_anchored_point(
     Ok((err, fold_factor.fell_back))
 }
 
+/// [`eval_anchored_point`] with the fold's update block gathered once by
+/// the caller — the **λ-warm-start** task body: a grid task covering a
+/// batch of λ cells of one fold gathers `X_vᵀ` once and replays it per
+/// cell ([`FoldData::factor_from_anchor_pregathered`], a contiguous memcpy
+/// instead of a strided re-gather). Bitwise identical to
+/// [`eval_anchored_point`] on the same inputs.
+pub(crate) fn eval_anchored_point_pregathered(
+    data: &FoldData,
+    anchor: &Matrix,
+    gathered: &Matrix,
+    lam: f64,
+    metric: Metric,
+    scratch: &mut Scratch,
+    timer: &mut PhaseTimer,
+) -> Result<(f64, Option<CholeskyError>), CholeskyError> {
+    let fold_factor = data.factor_from_anchor_pregathered(anchor, gathered, lam, scratch, timer)?;
+    timer.time("solve", || {
+        solve_cholesky_into(
+            &scratch.factor,
+            &data.g_vec,
+            &mut scratch.work,
+            &mut scratch.theta,
+        )
+    });
+    let err = timer.time("holdout", || {
+        holdout_error_with(&data.xv, &data.yv, &scratch.theta, metric, &mut scratch.pred)
+    });
+    Ok((err, fold_factor.fell_back))
+}
+
 /// One interpolated grid-point evaluation (piCholesky's payoff step) —
 /// shared by the serial path and the engine's grid tasks. `strategy` must be
 /// the strategy the interpolant was fitted with; all buffers (the D-length

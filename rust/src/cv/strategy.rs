@@ -1,0 +1,249 @@
+//! Measured-crossover auto-selection of the k-fold factor strategy.
+//!
+//! `fold_strategy = "auto"` turns the downdate-vs-refactor choice from a
+//! static default into a **cost-model decision driven by this machine's own
+//! measurements**: the perf harness (`benches/bench_kernels.rs`) records,
+//! per dimension `d`, the wall-clock of a rank-`CHUD_RANK_CHUNK` packed
+//! downdate (`chud_rk.packed_secs`) and of the full refactorization it
+//! replaces (`chud_rk.reference_secs`). From the row nearest this run's
+//! factor dimension the picker extrapolates both costs to the run's actual
+//! `(n_v, d)`:
+//!
+//! - downdate: `packed · (d/d_row)² · ceil(n_v / CHUD_RANK_CHUNK)` — the
+//!   chained rank-`n_v` downdate is `O(n_v·d²)`, executed in
+//!   rank-`CHUD_RANK_CHUNK` chain links;
+//! - refactor: `reference · (d/d_row)³` — one `chol(H_f + λI)` is `O(d³)`.
+//!
+//! Downdate wins when its predicted cost is ≤ the refactor prediction —
+//! the asymptotic `n_v ≪ d` regime, which the measurement grounds at real
+//! constants instead of big-O faith. The trajectory file is best-effort
+//! input: absent, unreadable, malformed, or missing the `chud_rk` rows all
+//! degrade to the **static default (downdate)** without panicking, and the
+//! provenance string records which way the decision was made (`"config"` /
+//! `"bench-file"` / `"default"`) so reports never hide the fallback.
+//!
+//! Resolution happens once per run in
+//! [`SweepPlan::new`](crate::coordinator::sweep_engine::SweepPlan::new);
+//! the sweep engine itself never sees [`FoldStrategy::Auto`].
+
+use crate::cv::FoldStrategy;
+use crate::linalg::chud::CHUD_RANK_CHUNK;
+use crate::runtime::json::{self, Json};
+
+/// A resolved strategy plus its provenance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Resolved {
+    /// The concrete strategy (never [`FoldStrategy::Auto`]).
+    pub strategy: FoldStrategy,
+    /// `"config"` when the strategy was explicit, `"bench-file"` when the
+    /// measured crossover decided, `"default"` when auto fell back.
+    pub source: &'static str,
+}
+
+/// The static default auto falls back to when no usable measurement exists.
+pub const AUTO_DEFAULT: FoldStrategy = FoldStrategy::Downdate;
+
+/// Env var naming the bench trajectory file to read (tests; deployments
+/// with a relocated trajectory). Unset → the workspace-root
+/// `BENCH_kernels.json` the perf harness writes.
+pub const BENCH_FILE_ENV: &str = "PICHOL_BENCH_FILE";
+
+/// Resolve a configured strategy for a run with `k_folds` over an `n×d`
+/// dataset. Explicit strategies pass through with source `"config"`; auto
+/// reads the bench trajectory file (see [`BENCH_FILE_ENV`]).
+pub fn resolve(cfg_strategy: FoldStrategy, n: usize, d: usize, k_folds: usize) -> Resolved {
+    let n_v = if k_folds > 0 { n.div_ceil(k_folds) } else { n };
+    let text = match cfg_strategy {
+        FoldStrategy::Auto => read_bench_file(),
+        _ => None,
+    };
+    resolve_with(cfg_strategy, n_v, d, text.as_deref())
+}
+
+/// Pure core of [`resolve`]: decide from the configured strategy, the fold
+/// validation-block size `n_v`, the factor dimension `d`, and the bench
+/// trajectory text (`None` = file absent/unreadable). Separated from the
+/// filesystem so unit tests drive both sides of the crossover directly.
+pub fn resolve_with(
+    cfg_strategy: FoldStrategy,
+    n_v: usize,
+    d: usize,
+    bench_text: Option<&str>,
+) -> Resolved {
+    if cfg_strategy != FoldStrategy::Auto {
+        return Resolved {
+            strategy: cfg_strategy,
+            source: "config",
+        };
+    }
+    match bench_text.and_then(|t| pick_from_json(t, n_v, d)) {
+        Some(strategy) => Resolved {
+            strategy,
+            source: "bench-file",
+        },
+        None => Resolved {
+            strategy: AUTO_DEFAULT,
+            source: "default",
+        },
+    }
+}
+
+/// Parse a `BENCH_kernels.json` document and pick a strategy for `(n_v, d)`
+/// from its `chud_rk` rows. `None` when the text is malformed or carries no
+/// usable row (non-positive timings, zero dimension).
+pub fn pick_from_json(text: &str, n_v: usize, d: usize) -> Option<FoldStrategy> {
+    let doc = json::parse(text).ok()?;
+    // "results" is the key the perf harness emits; "rows" tolerated for
+    // hand-written fixtures.
+    let rows = doc
+        .get("results")
+        .or_else(|| doc.get("rows"))?
+        .as_arr()?;
+    let mut nearest: Option<(usize, f64, f64)> = None;
+    for row in rows {
+        if row.get("kernel").and_then(Json::as_str) != Some("chud_rk") {
+            continue;
+        }
+        let d_row = row.get("d").and_then(Json::as_usize).unwrap_or(0);
+        let packed = row.get("packed_secs").and_then(Json::as_f64).unwrap_or(0.0);
+        let reference = row
+            .get("reference_secs")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        let usable = |t: f64| t.is_finite() && t > 0.0;
+        if d_row == 0 || !usable(packed) || !usable(reference) {
+            continue;
+        }
+        let better = match nearest {
+            None => true,
+            Some((best_d, _, _)) => d.abs_diff(d_row) < d.abs_diff(best_d),
+        };
+        if better {
+            nearest = Some((d_row, packed, reference));
+        }
+    }
+    let (d_row, packed, reference) = nearest?;
+    let scale = d as f64 / d_row as f64;
+    let chain_links = n_v.div_ceil(CHUD_RANK_CHUNK).max(1);
+    let predicted_downdate = packed * scale * scale * chain_links as f64;
+    let predicted_refactor = reference * scale * scale * scale;
+    Some(if predicted_downdate <= predicted_refactor {
+        FoldStrategy::Downdate
+    } else {
+        FoldStrategy::Refactor
+    })
+}
+
+/// Read the bench trajectory file: `PICHOL_BENCH_FILE` when set, else the
+/// workspace-root `BENCH_kernels.json` the perf harness writes. `None` on
+/// any I/O failure — auto never panics over a missing measurement.
+fn read_bench_file() -> Option<String> {
+    let path = std::env::var(BENCH_FILE_ENV)
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json").into());
+    std::fs::read_to_string(path).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal trajectory with one `chud_rk` row at dimension `d`, with
+    /// the given measured seconds.
+    fn fixture(d: usize, packed: f64, reference: f64) -> String {
+        format!(
+            r#"{{"bench": "kernels", "kernel_backend": "scalar",
+                "results": [
+                  {{"kernel": "gemm", "d": {d}, "packed_secs": 1.0, "reference_secs": 2.0}},
+                  {{"kernel": "chud_rk", "d": {d}, "packed_secs": {packed}, "reference_secs": {reference}}}
+                ]}}"#
+        )
+    }
+
+    #[test]
+    fn explicit_strategy_is_config_sourced() {
+        for s in [FoldStrategy::Refactor, FoldStrategy::Downdate] {
+            let r = resolve_with(s, 10, 50, Some(&fixture(50, 1.0, 1.0)));
+            assert_eq!(r.strategy, s);
+            assert_eq!(r.source, "config");
+        }
+    }
+
+    #[test]
+    fn auto_picks_downdate_when_chains_are_cheap() {
+        // one chain link (n_v ≤ CHUD_RANK_CHUNK), downdate measured 10×
+        // cheaper than refactorization at the same d → downdate wins
+        let text = fixture(64, 0.1, 1.0);
+        let r = resolve_with(FoldStrategy::Auto, CHUD_RANK_CHUNK, 64, Some(&text));
+        assert_eq!(r.strategy, FoldStrategy::Downdate);
+        assert_eq!(r.source, "bench-file");
+    }
+
+    #[test]
+    fn auto_picks_refactor_when_folds_are_huge() {
+        // n_v ≫ d: enough chain links that the extrapolated downdate cost
+        // crosses the one-off refactorization → refactor wins
+        let text = fixture(64, 0.5, 1.0);
+        let nv_huge = 64 * CHUD_RANK_CHUNK;
+        let r = resolve_with(FoldStrategy::Auto, nv_huge, 64, Some(&text));
+        assert_eq!(r.strategy, FoldStrategy::Refactor);
+        assert_eq!(r.source, "bench-file");
+    }
+
+    #[test]
+    fn crossover_flips_with_the_measurement_alone() {
+        // same (n_v, d), only the measured ratio changes sides
+        let nv = 4 * CHUD_RANK_CHUNK; // 4 chain links
+        let cheap = fixture(100, 0.2, 1.0); // 4·0.2 = 0.8 ≤ 1.0 → downdate
+        let dear = fixture(100, 0.3, 1.0); // 4·0.3 = 1.2 > 1.0 → refactor
+        assert_eq!(
+            resolve_with(FoldStrategy::Auto, nv, 100, Some(&cheap)).strategy,
+            FoldStrategy::Downdate
+        );
+        assert_eq!(
+            resolve_with(FoldStrategy::Auto, nv, 100, Some(&dear)).strategy,
+            FoldStrategy::Refactor
+        );
+    }
+
+    #[test]
+    fn nearest_dimension_row_wins() {
+        // two chud_rk rows; the d=32 row says refactor, the d=512 row says
+        // downdate. A d=64 run must use the d=32 row.
+        let text = r#"{"rows": [
+            {"kernel": "chud_rk", "d": 32, "packed_secs": 5.0, "reference_secs": 1.0},
+            {"kernel": "chud_rk", "d": 512, "packed_secs": 0.001, "reference_secs": 1.0}
+        ]}"#;
+        let r = resolve_with(FoldStrategy::Auto, 8, 64, Some(text));
+        assert_eq!(r.strategy, FoldStrategy::Refactor);
+        // and a d=400 run must use the d=512 row
+        let r = resolve_with(FoldStrategy::Auto, 8, 400, Some(text));
+        assert_eq!(r.strategy, FoldStrategy::Downdate);
+    }
+
+    #[test]
+    fn absent_or_malformed_file_falls_back_without_panic() {
+        for text in [
+            None,
+            Some("not json at all {{{"),
+            Some("{}"),
+            Some(r#"{"rows": "wrong type"}"#),
+            Some(r#"{"rows": []}"#),
+            // chud_rk present but unusable timings
+            Some(r#"{"rows": [{"kernel": "chud_rk", "d": 0, "packed_secs": 1.0, "reference_secs": 1.0}]}"#),
+            Some(r#"{"rows": [{"kernel": "chud_rk", "d": 64, "packed_secs": 0.0, "reference_secs": 1.0}]}"#),
+            Some(r#"{"rows": [{"kernel": "gemm", "d": 64, "packed_secs": 1.0, "reference_secs": 1.0}]}"#),
+        ] {
+            let r = resolve_with(FoldStrategy::Auto, 10, 64, text);
+            assert_eq!(r.strategy, AUTO_DEFAULT, "input: {text:?}");
+            assert_eq!(r.source, "default", "input: {text:?}");
+        }
+    }
+
+    #[test]
+    fn resolve_derives_nv_from_folds() {
+        // filesystem-free sanity: explicit strategy ignores the file system
+        let r = resolve(FoldStrategy::Refactor, 1000, 64, 5);
+        assert_eq!(r.strategy, FoldStrategy::Refactor);
+        assert_eq!(r.source, "config");
+    }
+}

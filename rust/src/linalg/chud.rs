@@ -377,17 +377,62 @@ pub fn downdate_rank_k(
         xv.cols(),
         "validation rows must match the factor dimension"
     );
-    out.copy_from(anchor);
+    gather_update_block(xv, ubuf);
+    downdate_gathered(anchor, out, ubuf, trans)
+}
+
+/// Gather a fold's validation rows `xv` (`n_v×d`) into the update block
+/// layout `gbuf = X_vᵀ` (`d×n_v`, one update vector per column).
+///
+/// This is the **λ-independent half** of [`downdate_rank_k`]: the gathered
+/// block depends only on the fold's rows, so a sweep task covering several
+/// λ cells of one fold gathers once and replays the block per cell via
+/// [`downdate_rank_k_pregathered`] — the warm-start move along the λ axis.
+pub fn gather_update_block(xv: &Matrix, gbuf: &mut Matrix) {
     let (nv, d) = (xv.rows(), xv.cols());
-    if nv == 0 {
-        return Ok(());
-    }
-    // gather X_vᵀ: one update vector per column, fully overwritten
-    ubuf.reset_zeroed(d, nv);
+    gbuf.reset_zeroed(d, nv);
     for i in 0..nv {
         for (j, &v) in xv.row(i).iter().enumerate() {
-            ubuf[(j, i)] = v;
+            gbuf[(j, i)] = v;
         }
+    }
+}
+
+/// The λ-dependent half of [`downdate_rank_k`]: run the chained blocked
+/// rank-`n_v` downdate of `anchor` against a pre-gathered update block `u0`
+/// (`d×n_v`, from [`gather_update_block`]). `u0` is copied into the
+/// destructible work buffer `ubuf` (a contiguous memcpy — cheaper than the
+/// strided row gather) so one gathered block serves any number of λ cells.
+/// Bitwise identical to `downdate_rank_k` on the same inputs: the gather
+/// produces the exact values this copy replays.
+pub fn downdate_rank_k_pregathered(
+    anchor: &Matrix,
+    u0: &Matrix,
+    out: &mut Matrix,
+    ubuf: &mut Matrix,
+    trans: &mut Matrix,
+) -> Result<(), CholeskyError> {
+    assert_eq!(
+        anchor.rows(),
+        u0.rows(),
+        "update block must match the factor dimension"
+    );
+    ubuf.copy_from(u0);
+    downdate_gathered(anchor, out, ubuf, trans)
+}
+
+/// Shared tail of the two rank-`k` entry points: `ubuf` already holds the
+/// gathered update block and is destroyed by the transform chain.
+fn downdate_gathered(
+    anchor: &Matrix,
+    out: &mut Matrix,
+    ubuf: &mut Matrix,
+    trans: &mut Matrix,
+) -> Result<(), CholeskyError> {
+    out.copy_from(anchor);
+    let nv = ubuf.cols();
+    if nv == 0 {
+        return Ok(());
     }
     chud_in_place(
         out,
@@ -652,6 +697,20 @@ mod tests {
                 out.as_slice(),
                 l.as_slice(),
                 "d={d} nv={nv}: fold entry point must be bitwise chol_downdate"
+            );
+
+            // bitwise the split gather + pregathered replay (the warm-start
+            // path): one gathered block, replayed through a fresh work buf
+            let mut gbuf = Matrix::zeros(0, 0);
+            gather_update_block(&xv, &mut gbuf);
+            let mut out2 = Matrix::zeros(0, 0);
+            let mut ubuf2 = Matrix::zeros(0, 0);
+            downdate_rank_k_pregathered(&anchor, &gbuf, &mut out2, &mut ubuf2, &mut trans)
+                .unwrap();
+            assert_eq!(
+                out.as_slice(),
+                out2.as_slice(),
+                "d={d} nv={nv}: pregathered replay must be bitwise downdate_rank_k"
             );
 
             // and within tolerance of refactorizing A − XᵥᵀXᵥ

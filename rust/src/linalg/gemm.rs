@@ -496,23 +496,10 @@ mod tests {
     fn a_bt_rows_bitwise_matches_full_product() {
         let a = randm(37, 29, 11);
         let b = randm(23, 29, 12);
-        let gem = Gemm::default();
-        let full = gem.a_bt(&a, &b);
         let mut parts: Vec<(usize, usize)> =
             vec![(0, 5), (5, 17), (17, 37), (0, 37), (36, 37), (3, 4)];
         parts.extend((0..37).map(|r| (r, r + 1))); // every single-row sliver
-        for (r0, r1) in parts {
-            let part = gem.a_bt_rows(&a, &b, r0, r1);
-            for i in r0..r1 {
-                for j in 0..23 {
-                    assert_eq!(
-                        part[(i - r0, j)],
-                        full[(i, j)],
-                        "row {i} col {j} differs for range {r0}..{r1}"
-                    );
-                }
-            }
-        }
+        crate::testutil::assert_abt_partition_bitwise(&a, &b, &parts);
     }
 
     /// Same keystone at a size that crosses the MC/NC/KC cache-block edges.
@@ -521,16 +508,43 @@ mod tests {
         use crate::linalg::kernel::{KC, MC};
         let a = randm(MC + 9, KC + 7, 21);
         let b = randm(40, KC + 7, 22);
-        let gem = Gemm::default();
-        let full = gem.a_bt(&a, &b);
-        for (r0, r1) in [(0, MC), (MC, MC + 9), (MC - 1, MC + 1), (7, MC + 3)] {
-            let part = gem.a_bt_rows(&a, &b, r0, r1);
-            for i in r0..r1 {
-                for j in 0..40 {
-                    assert_eq!(part[(i - r0, j)], full[(i, j)]);
+        crate::testutil::assert_abt_partition_bitwise(
+            &a,
+            &b,
+            &[(0, MC), (MC, MC + 9), (MC - 1, MC + 1), (7, MC + 3)],
+        );
+    }
+
+    /// Fuzzed extension of the keystone, run once per available micro-kernel
+    /// backend: random shapes and random row partitions must reproduce the
+    /// full product's bits exactly, whatever ISA computes the tiles. This is
+    /// the lane-order-fixed reduction property — vectorizing across the NR
+    /// columns leaves every output element's ascending-k, two-roundings-per-
+    /// term accumulation untouched, so partition invariance cannot depend on
+    /// the backend.
+    #[test]
+    fn partition_invariance_property_per_backend() {
+        use crate::linalg::kernel::{self, KernelBackend};
+        use crate::testutil::proptest_lite;
+        for be in kernel::available_backends() {
+            kernel::force_backend(be).unwrap();
+            proptest_lite::check(&format!("abt-partition-{}", be.name()), 12, |c| {
+                let m = c.dim(1, 40);
+                let k = c.dim(1, 33);
+                let n = c.dim(1, 24);
+                let seed = 0xA000 + (c.index as u64) * 7;
+                let a = randm(m, k, seed);
+                let b = randm(n, k, seed + 1);
+                let mut parts = vec![(0, m), (m - 1, m)];
+                for _ in 0..4 {
+                    let r0 = c.dim(0, m - 1);
+                    let r1 = c.dim(r0 + 1, m);
+                    parts.push((r0, r1));
                 }
-            }
+                crate::testutil::assert_abt_partition_bitwise(&a, &b, &parts);
+            });
         }
+        kernel::force_backend(KernelBackend::detect()).unwrap();
     }
 
     /// Packed kernels vs the naive oracle on degenerate and odd shapes:

@@ -39,6 +39,39 @@
 //! product. Pinned by `a_bt_rows_bitwise_matches_full_product` and the
 //! pooled-Cholesky bitwise tests.
 //!
+//! ## Vectorized micro-kernels and the lane-order contract
+//!
+//! The micro-kernel ships in three interchangeable backends behind the
+//! [`KernelBackend`] dispatch seam: the portable scalar loop (always
+//! available; the conformance oracle), an AVX2 path (two 256-bit f64 lanes
+//! per accumulator row), and a NEON path (four 128-bit lanes per row). All
+//! three are **bit-identical** by construction:
+//!
+//! - each output element owns exactly one lane slot of one accumulator
+//!   vector for the whole `kc` loop — vectorization is across the NR
+//!   *columns* of a tile, never across `k`, so no horizontal reduction
+//!   ever happens and the ascending-`k` schedule is untouched;
+//! - lane order is fixed: lane `l` of vector `v` of row `r` is always
+//!   output column `v·LANES + l` (documented per backend), so packing,
+//!   tiling, and stores address the same elements as the scalar loop;
+//! - the arithmetic is **multiply then add** (`_mm256_mul_pd` +
+//!   `_mm256_add_pd` / `vmulq_f64` + `vaddq_f64`), *not* FMA: the scalar
+//!   kernel performs two roundings per update (Rust never contracts
+//!   `a + b * c` into a fused multiply-add), so the vector paths repeat the
+//!   exact same two roundings. AVX2 detection still requires the FMA
+//!   feature bit (the ISA level this path targets), but the kernel body
+//!   deliberately avoids fused contraction to preserve bitwise identity;
+//! - there is no scalar tail loop to diverge from the vector body: packing
+//!   zero-pads every sliver to full `MR×NR` tiles, so the vector kernel
+//!   covers every tile wholly and the pad lanes accumulate exact zeros.
+//!
+//! The backend is resolved once (env override `PICHOL_KERNEL_BACKEND`,
+//! else runtime feature detection) and cached in an atomic; tests may
+//! repoint it via [`force_backend`]. Because every backend is bit-identical,
+//! a racy repoint mid-run is observationally harmless. The cross-backend
+//! guarantee is pinned by `tests/kernel_backends.rs` (scalar-vs-vector
+//! bitwise conformance) and the lane-order property test in `gemm.rs`.
+//!
 //! ## Scratch ownership
 //!
 //! Pack buffers live in a **thread-local arena** (`PACKS` below): each
@@ -50,6 +83,7 @@
 //! [`crate::coordinator::pool::WorkerPool`] explicitly.
 
 use std::cell::RefCell;
+use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Micro-kernel register-tile rows (per A sliver).
 pub const MR: usize = 4;
@@ -64,6 +98,169 @@ pub const NC: usize = 512;
 
 /// Cache-line alignment (bytes) for the pack buffers.
 const ALIGN: usize = 64;
+
+/// A micro-kernel implementation (see "Vectorized micro-kernels" in the
+/// module docs). All backends share the scalar kernel's signature and its
+/// exact per-element rounding sequence, so they are freely interchangeable.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum KernelBackend {
+    /// Portable scalar loop — always available; the conformance oracle.
+    Scalar,
+    /// AVX2 (x86-64): two 256-bit f64 lanes per accumulator row.
+    Avx2,
+    /// NEON (aarch64): four 128-bit f64 lanes per accumulator row.
+    Neon,
+}
+
+impl KernelBackend {
+    /// Stable lowercase name (also the `PICHOL_KERNEL_BACKEND` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Avx2 => "avx2",
+            KernelBackend::Neon => "neon",
+        }
+    }
+
+    /// Parse a backend name (case-insensitive). `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelBackend::Scalar),
+            "avx2" => Some(KernelBackend::Avx2),
+            "neon" => Some(KernelBackend::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether this backend can run on the current host (compile target
+    /// *and* runtime CPU features). Scalar is always available.
+    pub fn is_available(self) -> bool {
+        match self {
+            KernelBackend::Scalar => true,
+            KernelBackend::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                        && std::arch::is_x86_feature_detected!("fma")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            KernelBackend::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    std::arch::is_aarch64_feature_detected!("neon")
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    /// The fastest backend available on this host.
+    pub fn detect() -> Self {
+        if KernelBackend::Avx2.is_available() {
+            KernelBackend::Avx2
+        } else if KernelBackend::Neon.is_available() {
+            KernelBackend::Neon
+        } else {
+            KernelBackend::Scalar
+        }
+    }
+}
+
+/// Every backend available on this host, scalar first.
+pub fn available_backends() -> Vec<KernelBackend> {
+    [KernelBackend::Scalar, KernelBackend::Avx2, KernelBackend::Neon]
+        .into_iter()
+        .filter(|b| b.is_available())
+        .collect()
+}
+
+/// The cached active backend: 0 = unresolved, else `encode(backend)`.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+fn encode(b: KernelBackend) -> u8 {
+    match b {
+        KernelBackend::Scalar => 1,
+        KernelBackend::Avx2 => 2,
+        KernelBackend::Neon => 3,
+    }
+}
+
+fn decode(v: u8) -> Option<KernelBackend> {
+    match v {
+        1 => Some(KernelBackend::Scalar),
+        2 => Some(KernelBackend::Avx2),
+        3 => Some(KernelBackend::Neon),
+        _ => None,
+    }
+}
+
+/// First-use resolution: honor `PICHOL_KERNEL_BACKEND` when it names an
+/// available backend, else fall back to feature detection (an unknown or
+/// unavailable name never panics — the scalar path always exists).
+fn init_backend() -> KernelBackend {
+    if let Ok(v) = std::env::var("PICHOL_KERNEL_BACKEND") {
+        if let Some(b) = KernelBackend::parse(&v) {
+            if b.is_available() {
+                return b;
+            }
+        }
+    }
+    KernelBackend::detect()
+}
+
+/// The micro-kernel backend in effect, resolving it on first call.
+pub fn active_backend() -> KernelBackend {
+    match decode(ACTIVE.load(Ordering::Relaxed)) {
+        Some(b) => b,
+        None => {
+            let b = init_backend();
+            ACTIVE.store(encode(b), Ordering::Relaxed);
+            b
+        }
+    }
+}
+
+/// Repoint the active backend (tests; `--kernel-backend` override). Errors
+/// if the backend is not available on this host. Safe to call while other
+/// threads compute: all backends are bit-identical, so an in-flight GEMM
+/// finishing on the old backend produces the same bits.
+pub fn force_backend(b: KernelBackend) -> Result<(), String> {
+    if !b.is_available() {
+        return Err(format!(
+            "kernel backend '{}' is not available on this host",
+            b.name()
+        ));
+    }
+    ACTIVE.store(encode(b), Ordering::Relaxed);
+    Ok(())
+}
+
+/// The micro-kernel dispatch seam: one fn pointer, resolved per
+/// [`gemm_into`] call from the active backend and threaded through the
+/// macro kernel. `unsafe` because the SIMD variants require their CPU
+/// feature to be present — guaranteed by [`KernelBackend::is_available`]
+/// gating in [`force_backend`]/[`init_backend`].
+type MicroFn = unsafe fn(usize, &[f64], &[f64], &mut [[f64; NR]; MR]);
+
+fn micro_fn(b: KernelBackend) -> MicroFn {
+    match b {
+        KernelBackend::Scalar => micro_kernel_scalar as MicroFn,
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => avx2::micro_kernel,
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => neon::micro_kernel,
+        // Unreachable: is_available() gates selection per target arch.
+        #[allow(unreachable_patterns)]
+        _ => micro_kernel_scalar as MicroFn,
+    }
+}
 
 /// One operand of the packed driver: a row-major buffer viewed either
 /// normally or transposed, with a (row, col) offset. The *effective* matrix
@@ -281,12 +478,14 @@ fn pack_b(b: &Src<'_>, jc: usize, nc: usize, pc: usize, kc: usize, buf: &mut [f6
     }
 }
 
-/// The register-tile micro-kernel: `acc += Aᵖ·Bᵖ` over one packed sliver
-/// pair. `a` is kc×MR column-major, `b` is kc×NR row-major; each of the
-/// MR×NR accumulators is updated in strictly ascending `p` order (the
-/// determinism schedule — see module docs).
+/// The scalar register-tile micro-kernel: `acc += Aᵖ·Bᵖ` over one packed
+/// sliver pair. `a` is kc×MR column-major, `b` is kc×NR row-major; each of
+/// the MR×NR accumulators is updated in strictly ascending `p` order (the
+/// determinism schedule — see module docs). Every other backend must
+/// reproduce this kernel's per-element rounding sequence bit-for-bit:
+/// one multiply rounding + one add rounding per (element, p).
 #[inline(always)]
-fn micro_kernel(kc: usize, a: &[f64], b: &[f64], acc: &mut [[f64; NR]; MR]) {
+fn micro_kernel_scalar(kc: usize, a: &[f64], b: &[f64], acc: &mut [[f64; NR]; MR]) {
     for p in 0..kc {
         let av: &[f64; MR] = a[p * MR..p * MR + MR].try_into().unwrap();
         let bv: &[f64; NR] = b[p * NR..p * NR + NR].try_into().unwrap();
@@ -300,8 +499,115 @@ fn micro_kernel(kc: usize, a: &[f64], b: &[f64], acc: &mut [[f64; NR]; MR]) {
     }
 }
 
-/// Sweep the packed panels with the micro-kernel, folding each tile into C
-/// at (row0, col0) according to `acc`.
+/// AVX2 micro-kernel. Lane-order contract: row `r`'s accumulator is two
+/// `__m256d` vectors; vector `v`, lane `l` is always output column
+/// `4·v + l` (columns 0–3 in the low vector, 4–7 in the high one). Each
+/// element's update is `_mm256_mul_pd` then `_mm256_add_pd` — the same two
+/// roundings as the scalar kernel's `row[c] += ar * bv[c]`, never a fused
+/// multiply-add — and `p` advances in the same strictly ascending order, so
+/// the output is bit-identical to [`micro_kernel_scalar`]. No horizontal
+/// reduction occurs: lanes map 1:1 onto output elements for the whole loop.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Requires AVX2 at runtime (gated by `KernelBackend::is_available`);
+    /// `a` must hold `kc*MR` and `b` `kc*NR` elements (packed slivers).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn micro_kernel(
+        kc: usize,
+        a: &[f64],
+        b: &[f64],
+        acc: &mut [[f64; NR]; MR],
+    ) {
+        debug_assert!(a.len() >= kc * MR && b.len() >= kc * NR);
+        unsafe {
+            let mut vacc = [[_mm256_setzero_pd(); 2]; MR];
+            for (lanes, row) in vacc.iter_mut().zip(acc.iter()) {
+                lanes[0] = _mm256_loadu_pd(row.as_ptr());
+                lanes[1] = _mm256_loadu_pd(row.as_ptr().add(4));
+            }
+            for p in 0..kc {
+                let bp = b.as_ptr().add(p * NR);
+                let b_lo = _mm256_loadu_pd(bp);
+                let b_hi = _mm256_loadu_pd(bp.add(4));
+                let ap = a.as_ptr().add(p * MR);
+                for (r, lanes) in vacc.iter_mut().enumerate() {
+                    let ar = _mm256_set1_pd(*ap.add(r));
+                    // mul then add — NOT _mm256_fmadd_pd — to match the
+                    // scalar kernel's two roundings per element exactly.
+                    lanes[0] = _mm256_add_pd(lanes[0], _mm256_mul_pd(ar, b_lo));
+                    lanes[1] = _mm256_add_pd(lanes[1], _mm256_mul_pd(ar, b_hi));
+                }
+            }
+            for (lanes, row) in vacc.iter().zip(acc.iter_mut()) {
+                _mm256_storeu_pd(row.as_mut_ptr(), lanes[0]);
+                _mm256_storeu_pd(row.as_mut_ptr().add(4), lanes[1]);
+            }
+        }
+    }
+}
+
+/// NEON micro-kernel. Lane-order contract: row `r`'s accumulator is four
+/// `float64x2_t` vectors; vector `v`, lane `l` is always output column
+/// `2·v + l`. Updates are `vmulq_f64` then `vaddq_f64` (two roundings, no
+/// fused contraction) in strictly ascending `p`, bit-identical to
+/// [`micro_kernel_scalar`]; no horizontal reduction occurs.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{MR, NR};
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// Requires NEON at runtime (gated by `KernelBackend::is_available`);
+    /// `a` must hold `kc*MR` and `b` `kc*NR` elements (packed slivers).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn micro_kernel(
+        kc: usize,
+        a: &[f64],
+        b: &[f64],
+        acc: &mut [[f64; NR]; MR],
+    ) {
+        debug_assert!(a.len() >= kc * MR && b.len() >= kc * NR);
+        unsafe {
+            let mut vacc = [[vdupq_n_f64(0.0); 4]; MR];
+            for (lanes, row) in vacc.iter_mut().zip(acc.iter()) {
+                for (v, lane) in lanes.iter_mut().enumerate() {
+                    *lane = vld1q_f64(row.as_ptr().add(2 * v));
+                }
+            }
+            for p in 0..kc {
+                let bp = b.as_ptr().add(p * NR);
+                let bv = [
+                    vld1q_f64(bp),
+                    vld1q_f64(bp.add(2)),
+                    vld1q_f64(bp.add(4)),
+                    vld1q_f64(bp.add(6)),
+                ];
+                let ap = a.as_ptr().add(p * MR);
+                for (r, lanes) in vacc.iter_mut().enumerate() {
+                    let ar = vdupq_n_f64(*ap.add(r));
+                    for (lane, &bl) in lanes.iter_mut().zip(bv.iter()) {
+                        // mul then add — NOT vfmaq_f64 — to match the
+                        // scalar kernel's two roundings per element.
+                        *lane = vaddq_f64(*lane, vmulq_f64(ar, bl));
+                    }
+                }
+            }
+            for (lanes, row) in vacc.iter().zip(acc.iter_mut()) {
+                for (v, &lane) in lanes.iter().enumerate() {
+                    vst1q_f64(row.as_mut_ptr().add(2 * v), lane);
+                }
+            }
+        }
+    }
+}
+
+/// Sweep the packed panels with the micro-kernel `mk`, folding each tile
+/// into C at (row0, col0) according to `acc`.
+#[allow(clippy::too_many_arguments)]
 fn macro_kernel(
     mc: usize,
     nc: usize,
@@ -313,6 +619,7 @@ fn macro_kernel(
     row0: usize,
     col0: usize,
     acc: Acc,
+    mk: MicroFn,
 ) {
     for js in 0..nc.div_ceil(NR) {
         let bs = &pb[js * kc * NR..][..kc * NR];
@@ -321,7 +628,10 @@ fn macro_kernel(
             let asl = &pa[is * kc * MR..][..kc * MR];
             let rows = MR.min(mc - is * MR);
             let mut tile = [[0.0f64; NR]; MR];
-            micro_kernel(kc, asl, bs, &mut tile);
+            // SAFETY: `mk` was resolved from a backend that passed
+            // `is_available()`, and the packed slivers have full
+            // `kc*MR`/`kc*NR` extents (zero-padded tails).
+            unsafe { mk(kc, asl, bs, &mut tile) };
             for (r, trow) in tile.iter().enumerate().take(rows) {
                 let dst = &mut c[(row0 + is * MR + r) * c_stride + col0 + js * NR..][..cols];
                 let src = &trow[..cols];
@@ -377,6 +687,9 @@ pub(crate) fn gemm_into(
         }
         return;
     }
+    // Resolve the micro-kernel once per call: one relaxed atomic load,
+    // then a plain fn pointer all the way down.
+    let mk = micro_fn(active_backend());
     PACKS.with(|cell| {
         let mut packs = cell.borrow_mut();
         let (pa, pb) = &mut *packs;
@@ -406,6 +719,7 @@ pub(crate) fn gemm_into(
                         c_r0 + ic,
                         c_c0 + jc,
                         eff,
+                        mk,
                     );
                 }
                 first = false;
@@ -461,5 +775,94 @@ mod tests {
         assert_eq!(c, [7.0; 6]);
         gemm_into(2, 3, 0, Src::n(&a, 1), Src::n(&b, 3), &mut c, 3, 0, 0, Acc::Set);
         assert_eq!(c, [0.0; 6]);
+    }
+
+    #[test]
+    fn backend_names_parse_roundtrip() {
+        for b in [KernelBackend::Scalar, KernelBackend::Avx2, KernelBackend::Neon] {
+            assert_eq!(KernelBackend::parse(b.name()), Some(b));
+            assert_eq!(KernelBackend::parse(&b.name().to_uppercase()), Some(b));
+        }
+        assert_eq!(KernelBackend::parse("sse9000"), None);
+    }
+
+    #[test]
+    fn scalar_always_listed_and_detect_is_available() {
+        let avail = available_backends();
+        assert_eq!(avail[0], KernelBackend::Scalar);
+        assert!(KernelBackend::detect().is_available());
+        assert!(avail.contains(&active_backend()));
+    }
+
+    #[test]
+    fn force_backend_rejects_unavailable() {
+        // At most one SIMD backend exists per target arch, so the other
+        // one is always unavailable and must be rejected without panic.
+        let missing = if cfg!(target_arch = "x86_64") {
+            KernelBackend::Neon
+        } else {
+            KernelBackend::Avx2
+        };
+        assert!(force_backend(missing).is_err());
+    }
+
+    /// Every backend available on this host must reproduce the scalar
+    /// kernel bit-for-bit at the `micro_kernel` level, including nonzero
+    /// incoming accumulators and pad-lane zeros.
+    #[test]
+    fn available_micro_kernels_bitwise_match_scalar() {
+        let kc = 7;
+        let mut rng = crate::prng::Xoshiro256::seed_from(0xBEEF);
+        let a: Vec<f64> = (0..kc * MR).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..kc * NR).map(|_| rng.normal()).collect();
+        let mut seed_acc = [[0.0f64; NR]; MR];
+        for row in &mut seed_acc {
+            for v in row.iter_mut() {
+                *v = rng.normal();
+            }
+        }
+        let mut oracle = seed_acc;
+        micro_kernel_scalar(kc, &a, &b, &mut oracle);
+        for backend in available_backends() {
+            let mut acc = seed_acc;
+            // SAFETY: backend passed is_available(), slices are full-extent.
+            unsafe { micro_fn(backend)(kc, &a, &b, &mut acc) };
+            for r in 0..MR {
+                for c in 0..NR {
+                    assert_eq!(
+                        acc[r][c].to_bits(),
+                        oracle[r][c].to_bits(),
+                        "backend {} differs from scalar at ({r},{c})",
+                        backend.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// Forcing each available backend through the full packed driver gives
+    /// bitwise-identical products (restores the detected backend after).
+    #[test]
+    fn gemm_into_bitwise_identical_across_backends() {
+        let (m, n, k) = (13, 11, 9);
+        let mut rng = crate::prng::Xoshiro256::seed_from(0xF00D);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+        let run = |backend| {
+            force_backend(backend).unwrap();
+            let mut c = vec![0.0; m * n];
+            gemm_into(m, n, k, Src::n(&a, k), Src::n(&b, n), &mut c, n, 0, 0, Acc::Set);
+            c
+        };
+        let oracle = run(KernelBackend::Scalar);
+        for backend in available_backends() {
+            let c = run(backend);
+            assert!(
+                c.iter().zip(&oracle).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "backend {} diverged from scalar",
+                backend.name()
+            );
+        }
+        force_backend(KernelBackend::detect()).unwrap();
     }
 }

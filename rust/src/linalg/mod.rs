@@ -46,7 +46,9 @@ pub mod triangular;
 pub use cholesky::{cholesky_blocked, cholesky_in_place, CholeskyError};
 pub use chud::{
     chol_downdate, chol_downdate_rank1, chol_update, chol_update_rank1, downdate_rank_k,
+    downdate_rank_k_pregathered, gather_update_block,
 };
+pub use kernel::{active_backend, available_backends, force_backend, KernelBackend};
 pub use gemm::{gemm, gemv, syrk_lower, Gemm};
 pub use matrix::Matrix;
 pub use norms::{fro_norm, spectral_norm_est};

@@ -55,6 +55,13 @@ pub struct Scratch {
     /// ([`crate::linalg::chud::downdate_rank_k`]), fully overwritten — and
     /// destroyed — per (fold, λ) task.
     pub update: Matrix,
+    /// The λ-warm-start gather: a task covering several λ cells of one fold
+    /// gathers `X_vᵀ` here once ([`crate::linalg::chud::gather_update_block`])
+    /// and replays it per cell through
+    /// [`crate::linalg::chud::downdate_rank_k_pregathered`] (which copies it
+    /// into [`Scratch::update`] before destroying that copy). Fully
+    /// overwritten per task.
+    pub gather: Matrix,
 }
 
 impl Scratch {
@@ -69,6 +76,7 @@ impl Scratch {
             trans: Matrix::zeros(0, 0),
             gvec: Vec::new(),
             update: Matrix::zeros(0, 0),
+            gather: Matrix::zeros(0, 0),
         }
     }
 }

@@ -68,7 +68,7 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(fs) = args.flag("fold-strategy") {
         cfg.cv.fold_strategy = FoldStrategy::parse(fs).ok_or_else(|| {
-            anyhow::anyhow!("unknown --fold-strategy '{fs}' (refactor | downdate)")
+            anyhow::anyhow!("unknown --fold-strategy '{fs}' (refactor | downdate | auto)")
         })?;
     }
     cfg.cv.seed = cfg.seed;
@@ -128,6 +128,12 @@ fn cmd_cv(args: &Args) -> Result<()> {
     );
     let ds = SyntheticDataset::generate(cfg.dataset, cfg.n, cfg.h, cfg.seed);
     let rep = coord.run_one(&ds, solver, &cfg.cv)?;
+    println!(
+        "  kernel_backend={}   resolved_strategy={} (source: {})",
+        rep.kernel_backend,
+        rep.fold_strategy.name(),
+        rep.strategy_source
+    );
     if !rep.fallbacks.is_empty() {
         println!(
             "  {} (fold, λ) cell(s) fell back to refactorization after a downdate breakdown",

@@ -69,6 +69,34 @@ pub fn assert_matrix_close(a: &Matrix, b: &Matrix, tol: f64) {
     );
 }
 
+/// Assert that every row partition in `parts` of the packed `A·Bᵀ` product
+/// reproduces the **exact bits** of the full product — the lane-order-fixed
+/// reduction contract ([`crate::linalg::kernel`]'s determinism schedule)
+/// that lets the sweep engine fan row panels across workers, and lets SIMD
+/// micro-kernels replace the scalar one, without perturbing a single ulp.
+/// The failure message names the active micro-kernel backend, since this is
+/// the invariant every backend is pinned against.
+#[track_caller]
+pub fn assert_abt_partition_bitwise(a: &Matrix, b: &Matrix, parts: &[(usize, usize)]) {
+    let gem = crate::linalg::gemm::Gemm::default();
+    let full = gem.a_bt(a, b);
+    for &(r0, r1) in parts {
+        let part = gem.a_bt_rows(a, b, r0, r1);
+        for i in r0..r1 {
+            for j in 0..b.rows() {
+                assert!(
+                    part[(i - r0, j)].to_bits() == full[(i, j)].to_bits(),
+                    "bitwise partition violation at row {i} col {j} for range \
+                     {r0}..{r1} (backend {}): {:e} vs {:e}",
+                    crate::linalg::kernel::active_backend().name(),
+                    part[(i - r0, j)],
+                    full[(i, j)]
+                );
+            }
+        }
+    }
+}
+
 /// Assert two slices agree entrywise within `tol`.
 #[track_caller]
 pub fn assert_vec_close(a: &[f64], b: &[f64], tol: f64) {

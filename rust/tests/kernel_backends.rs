@@ -1,0 +1,341 @@
+//! Per-backend kernel conformance — the bitwise pin between the scalar
+//! micro-kernel oracle and every SIMD backend available on the host.
+//!
+//! The dispatch seam in `linalg::kernel` promises that AVX2/NEON micro-
+//! kernels are drop-in replacements for the scalar loop down to the last
+//! ulp: same ascending-k accumulation, same two roundings per term, lanes
+//! mapped one-to-one onto register-tile columns. This file enforces that
+//! promise end to end:
+//!
+//! - GEMM (plain, `AᵀB`, `ABᵀ`) and SYRK on degenerate shapes
+//!   (`1, 2, MR−1, NR−1`) and cache-block edges (`KC±1`, `MC±1`), through
+//!   the same transposed `Src` views the library uses;
+//! - TRSM and the rank-k Cholesky downdate chain (the factor-level k-fold
+//!   kernel);
+//! - whole `run_cv` hold-out curves on the conformance-suite generators at
+//!   workers {1, 2, 4};
+//! - dispatch plumbing: a forced backend is the one `SweepReport` records,
+//!   and the `PICHOL_KERNEL_BACKEND` env var steers a fresh process
+//!   (unavailable names fall back to detection, never panic);
+//! - the `fold_strategy = auto` picker: synthetic `BENCH_kernels.json`
+//!   fixtures (via `PICHOL_BENCH_FILE`) drive it to either side of the
+//!   crossover, and absent/malformed files degrade to the default.
+//!
+//! `ci.sh --backends` runs this file once per detected backend.
+
+use std::sync::Mutex;
+
+use picholesky::cv::solvers::SolverKind;
+use picholesky::cv::strategy::{AUTO_DEFAULT, BENCH_FILE_ENV};
+use picholesky::cv::{run_cv, CvConfig, FoldStrategy};
+use picholesky::linalg::kernel::{KC, MC, MR, NR};
+use picholesky::linalg::{
+    available_backends, cholesky_blocked, downdate_rank_k, force_backend, syrk_lower,
+    trsm_left_lower, Gemm, KernelBackend, Matrix,
+};
+use picholesky::testutil::{conformance::suite, random_matrix};
+
+/// Backend forcing and env-var mutation are process-global; every test that
+/// touches either serializes on this lock (poisoning is ignored — a failed
+/// test must not cascade into spurious lock panics).
+static GUARD: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn bits(m: &Matrix) -> Vec<u64> {
+    m.as_slice().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Run `op` under the scalar oracle, then under every other available
+/// backend, asserting the returned bits are identical. Restores the
+/// detected backend afterwards.
+fn assert_backends_bitwise<F: FnMut(KernelBackend) -> Vec<u64>>(what: &str, mut op: F) {
+    let _g = lock();
+    force_backend(KernelBackend::Scalar).unwrap();
+    let oracle = op(KernelBackend::Scalar);
+    for be in available_backends() {
+        if be == KernelBackend::Scalar {
+            continue;
+        }
+        force_backend(be).unwrap();
+        let got = op(be);
+        assert_eq!(oracle.len(), got.len(), "{what}: length drifted on {}", be.name());
+        for (i, (a, b)) in oracle.iter().zip(&got).enumerate() {
+            assert_eq!(
+                a,
+                b,
+                "{what}: backend {} diverges from scalar at flat index {i}: {:e} vs {:e}",
+                be.name(),
+                f64::from_bits(*a),
+                f64::from_bits(*b)
+            );
+        }
+    }
+    force_backend(KernelBackend::detect()).unwrap();
+}
+
+/// GEMM in all three transpose configurations plus SYRK, on every
+/// combination of the degenerate dimensions the register tile can mis-handle
+/// (`1`, `2`, `MR−1`, `NR−1`) — zero-padded tails, single slivers, tiles
+/// narrower than one vector lane group.
+#[test]
+fn gemm_family_bitwise_on_degenerate_shapes() {
+    let dims = [1usize, 2, MR - 1, NR - 1];
+    let gem = Gemm::default();
+    for &m in &dims {
+        for &k in &dims {
+            for &n in &dims {
+                let seed = (m * 289 + k * 17 + n) as u64;
+                let a = random_matrix(m, k, seed);
+                let b = random_matrix(k, n, seed + 1);
+                let bt = random_matrix(n, k, seed + 2);
+                let at = random_matrix(k, m, seed + 3);
+                assert_backends_bitwise(&format!("mul {m}x{k}x{n}"), |_| bits(&gem.mul(&a, &b)));
+                assert_backends_bitwise(&format!("at_b {m}x{k}x{n}"), |_| {
+                    bits(&gem.at_b(&at, &b))
+                });
+                assert_backends_bitwise(&format!("a_bt {m}x{k}x{n}"), |_| {
+                    bits(&gem.a_bt(&a, &bt))
+                });
+                assert_backends_bitwise(&format!("syrk {k}x{n}"), |_| {
+                    bits(&syrk_lower(&random_matrix(k, n, seed + 4)))
+                });
+            }
+        }
+    }
+}
+
+/// The same family across the cache-block edges: shapes straddling `KC±1`
+/// and `MC±1` exercise the absolute-index k-chunking and the packed-panel
+/// boundaries, where a backend with different chunk handling would first
+/// diverge.
+#[test]
+fn gemm_family_bitwise_on_cache_block_edges() {
+    let gem = Gemm::default();
+    for &(m, k, n) in &[
+        (MC + 1, KC + 1, NR + 1),
+        (MC - 1, KC - 1, 2 * NR + 3),
+        (5, KC + 1, 9),
+        (MC + 1, 7, 33),
+    ] {
+        let seed = (m * 1009 + k * 31 + n) as u64;
+        let a = random_matrix(m, k, seed);
+        let b = random_matrix(k, n, seed + 1);
+        let bt = random_matrix(n, k, seed + 2);
+        assert_backends_bitwise(&format!("edge mul {m}x{k}x{n}"), |_| bits(&gem.mul(&a, &b)));
+        assert_backends_bitwise(&format!("edge a_bt {m}x{k}x{n}"), |_| {
+            bits(&gem.a_bt(&a, &bt))
+        });
+    }
+    // SYRK at a k extent crossing KC (its Src::T/Src::N band views with
+    // row/col offsets are the transposed-view stress case)
+    let x = random_matrix(KC + 3, 2 * NR + 1, 99);
+    assert_backends_bitwise("edge syrk", |_| bits(&syrk_lower(&x)));
+}
+
+/// TRSM and the rank-k hyperbolic downdate chain: both consume factors the
+/// packed engine produced, so the whole pipeline — Gram, Cholesky, solve,
+/// fold downdate — must come out bit-identical per backend.
+#[test]
+fn trsm_and_downdate_chain_bitwise() {
+    let (n, d, nv) = (40usize, 17usize, 6usize);
+    let x = random_matrix(n, d, 7);
+    let rhs = random_matrix(d, 5, 8);
+    assert_backends_bitwise("chol+trsm+downdate", |_| {
+        // chol(G + I): the shared anchor of the factor-level k-fold engine
+        let mut g = syrk_lower(&x);
+        for i in 0..d {
+            g[(i, i)] += 1.0;
+        }
+        let l = cholesky_blocked(&g).expect("G + I is SPD");
+        let sol = trsm_left_lower(&l, &rhs);
+        // fold downdate: G + I − X_vᵀX_v = X_tᵀX_t + I stays SPD
+        let xv = x.slice(0, nv, 0, d);
+        let (mut out, mut ubuf, mut trans) =
+            (Matrix::zeros(0, 0), Matrix::zeros(0, 0), Matrix::zeros(0, 0));
+        downdate_rank_k(&l, &xv, &mut out, &mut ubuf, &mut trans)
+            .expect("train Gram stays SPD");
+        let mut all = bits(&l);
+        all.extend(bits(&sol));
+        all.extend(bits(&out));
+        all
+    });
+}
+
+/// Whole-pipeline conformance: `run_cv` hold-out curves on every
+/// conformance-suite generator, at workers {1, 2, 4}, are bit-identical
+/// across backends — the engine's thread-count determinism contract and the
+/// backend interchange contract composed.
+#[test]
+fn run_cv_curves_bitwise_across_backends_and_workers() {
+    for (name, ds) in suite(100, 12, 11) {
+        for workers in [1usize, 2, 4] {
+            let cfg = CvConfig {
+                k_folds: 4,
+                q_grid: 9,
+                lambda_range: Some((1e-2, 1.0)),
+                sweep_threads: workers,
+                fold_strategy: FoldStrategy::Downdate,
+                ..CvConfig::default()
+            };
+            assert_backends_bitwise(&format!("run_cv {name} workers={workers}"), |_| {
+                let rep = run_cv(&ds, SolverKind::Chol, &cfg).unwrap();
+                let mut all: Vec<u64> = rep.mean_errors.iter().map(|v| v.to_bits()).collect();
+                all.push(rep.best_lambda.to_bits());
+                all.push(rep.best_error.to_bits());
+                for (l, e) in &rep.fold_bests {
+                    all.push(l.to_bits());
+                    all.push(e.to_bits());
+                }
+                all
+            });
+        }
+    }
+}
+
+/// Dispatch plumbing: the forced backend is the one the report records.
+#[test]
+fn forced_backend_is_reported_in_sweep_report() {
+    let _g = lock();
+    let (_, ds) = suite(60, 8, 3).into_iter().next().unwrap();
+    let cfg = CvConfig {
+        k_folds: 3,
+        q_grid: 5,
+        lambda_range: Some((1e-2, 1.0)),
+        sweep_threads: 1,
+        ..CvConfig::default()
+    };
+    for be in available_backends() {
+        force_backend(be).unwrap();
+        let rep = run_cv(&ds, SolverKind::Chol, &cfg).unwrap();
+        assert_eq!(rep.kernel_backend, be.name(), "report must name the active backend");
+    }
+    force_backend(KernelBackend::detect()).unwrap();
+}
+
+/// Env-var dispatch, observed from a fresh process (the in-process cache
+/// resolves once, so only a child can see first-use behavior): forcing
+/// `scalar` is honored; an unavailable/garbage name falls back to detection
+/// without failing the run.
+#[test]
+fn env_var_steers_backend_in_fresh_process() {
+    let run = |env_val: &str| {
+        std::process::Command::new(env!("CARGO_BIN_EXE_pichol"))
+            .args([
+                "cv", "--dataset", "mnist", "--h", "8", "--n", "40", "--folds", "3", "--grid",
+                "5", "--threads", "1", "--seed", "1", "--solver", "chol",
+            ])
+            .env("PICHOL_KERNEL_BACKEND", env_val)
+            .output()
+            .expect("spawn pichol")
+    };
+
+    let out = run("scalar");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "scalar run failed: {stdout}");
+    assert!(
+        stdout.contains("kernel_backend=scalar"),
+        "PICHOL_KERNEL_BACKEND=scalar not honored:\n{stdout}"
+    );
+
+    // garbage name: detection kicks in, the run still succeeds and reports
+    // some real backend
+    let out = run("not-a-backend");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "fallback run failed: {stdout}");
+    assert!(
+        ["scalar", "avx2", "neon"]
+            .iter()
+            .any(|b| stdout.contains(&format!("kernel_backend={b}"))),
+        "no backend reported under garbage env:\n{stdout}"
+    );
+}
+
+/// Write `text` to a unique temp file and return its path.
+fn fixture(tag: &str, text: &str) -> std::path::PathBuf {
+    let p = std::env::temp_dir().join(format!(
+        "pichol_bench_fixture_{}_{tag}.json",
+        std::process::id()
+    ));
+    std::fs::write(&p, text).unwrap();
+    p
+}
+
+fn bench_json(packed: f64, reference: f64, d: usize) -> String {
+    format!(
+        r#"{{"bench": "kernels", "kernel_backend": "scalar", "results": [
+            {{"kernel": "gemm", "d": {d}, "packed_secs": 1.0, "reference_secs": 2.0}},
+            {{"kernel": "chud_rk", "d": {d}, "packed_secs": {packed}, "reference_secs": {reference}}}
+        ]}}"#
+    )
+}
+
+fn auto_cfg() -> CvConfig {
+    CvConfig {
+        k_folds: 3,
+        q_grid: 5,
+        lambda_range: Some((1e-2, 1.0)),
+        sweep_threads: 1,
+        fold_strategy: FoldStrategy::Auto,
+        ..CvConfig::default()
+    }
+}
+
+/// Synthetic bench fixtures drive the auto picker to either side of the
+/// crossover, and the report records the measured provenance.
+#[test]
+fn auto_strategy_follows_bench_fixture_to_either_side() {
+    let _g = lock();
+    let (_, ds) = suite(60, 8, 3).into_iter().next().unwrap();
+
+    // downdate chains measured far cheaper than refactorization
+    let cheap = fixture("cheap", &bench_json(1e-6, 1.0, 8));
+    std::env::set_var(BENCH_FILE_ENV, &cheap);
+    let rep = run_cv(&ds, SolverKind::Chol, &auto_cfg()).unwrap();
+    assert_eq!(rep.fold_strategy, FoldStrategy::Downdate);
+    assert_eq!(rep.strategy_source, "bench-file");
+
+    // downdate chains measured absurdly expensive
+    let dear = fixture("dear", &bench_json(1.0, 1e-6, 8));
+    std::env::set_var(BENCH_FILE_ENV, &dear);
+    let rep = run_cv(&ds, SolverKind::Chol, &auto_cfg()).unwrap();
+    assert_eq!(rep.fold_strategy, FoldStrategy::Refactor);
+    assert_eq!(rep.strategy_source, "bench-file");
+
+    std::env::remove_var(BENCH_FILE_ENV);
+    let _ = std::fs::remove_file(cheap);
+    let _ = std::fs::remove_file(dear);
+}
+
+/// Absent or malformed bench files degrade to the compiled-in default —
+/// recorded as such, never a panic.
+#[test]
+fn auto_strategy_survives_missing_and_malformed_bench_files() {
+    let _g = lock();
+    let (_, ds) = suite(60, 8, 3).into_iter().next().unwrap();
+
+    let missing = std::env::temp_dir().join(format!(
+        "pichol_bench_fixture_{}_does_not_exist.json",
+        std::process::id()
+    ));
+    let garbage = fixture("garbage", "not json at all {{{");
+    let wrong_shape = fixture("wrong_shape", r#"{"rows": "no rows here"}"#);
+
+    for p in [&missing, &garbage, &wrong_shape] {
+        std::env::set_var(BENCH_FILE_ENV, p);
+        let rep = run_cv(&ds, SolverKind::Chol, &auto_cfg()).unwrap();
+        assert_eq!(
+            rep.fold_strategy,
+            AUTO_DEFAULT,
+            "default must apply for {}",
+            p.display()
+        );
+        assert_eq!(rep.strategy_source, "default");
+    }
+
+    std::env::remove_var(BENCH_FILE_ENV);
+    let _ = std::fs::remove_file(garbage);
+    let _ = std::fs::remove_file(wrong_shape);
+}
