@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
 # CI gate: build, test, quickstart + LOO + factor-level-k-fold (fig2)
-# end-to-end smokes, the cross-mode conformance suite, doc-lint (broken
-# intra-doc links fail), format and clippy checks (both guarded: skipped
-# when the component is not installed), and the kernel-bench smoke that
-# emits the BENCH_kernels.json perf trajectory.
+# end-to-end smokes, the cross-mode conformance suite, the chaos
+# (fault-injection) suite run twice for seeded determinism, doc-lint
+# (broken intra-doc links fail), format and clippy checks (both guarded:
+# skipped when the component is not installed), and the kernel-bench smoke
+# that emits the BENCH_kernels.json perf trajectory.
 #
 # Usage:
 #   ./ci.sh                 full gate (from the repository root; fully offline)
@@ -14,6 +15,10 @@
 #   ./ci.sh --backends      only the per-backend kernel conformance suite,
 #                           once per micro-kernel backend the host supports
 #                           (scalar always; avx2/neon when detected)
+#   ./ci.sh --chaos         only the deterministic fault-injection suite
+#                           (NaN ingest, Gram spikes, drift-budget
+#                           exhaustion, worker panics, garbage bench file),
+#                           run twice to pin seeded determinism
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -47,6 +52,18 @@ backends() {
     echo "==> cargo test --test kernel_backends [PICHOL_KERNEL_BACKEND=$b]"
     PICHOL_KERNEL_BACKEND="$b" cargo test -q --test kernel_backends
   done
+}
+
+chaos() {
+  # the deterministic fault-injection suite (tests/chaos.rs): every injector
+  # is seeded/addressed, so two runs of the whole suite must both pass with
+  # identical outcomes — the second run is the seeded-determinism gate (a
+  # flaky injector, a leaked armed panic, or scheduling-dependent
+  # degradation records would break it)
+  echo "==> chaos suite (fault injection: ingest / spike / drift / panic / bench-file)"
+  cargo test -q --test chaos
+  echo "==> chaos suite, second seeded run (determinism gate)"
+  cargo test -q --test chaos
 }
 
 bench_smoke() {
@@ -87,6 +104,11 @@ if [[ "${1:-}" == "--backends" ]]; then
   exit 0
 fi
 
+if [[ "${1:-}" == "--chaos" ]]; then
+  chaos
+  exit 0
+fi
+
 echo "==> cargo build --release"
 cargo build --release
 
@@ -99,6 +121,10 @@ conformance
 
 # scalar-vs-vector bitwise conformance, once per backend the host supports
 backends
+
+# deterministic fault injection, twice — the second run pins seeded
+# determinism of every injected degradation
+chaos
 
 echo "==> cargo run --release --example quickstart (end-to-end smoke gate)"
 cargo run --release --example quickstart

@@ -77,7 +77,11 @@ fn main() -> picholesky::Result<()> {
         "fold_downdate == k per anchor"
     );
     assert_eq!(down.timer.count("chol"), 0, "no per-cell refactorization");
-    assert!(down.fallbacks.is_empty(), "unexpected downdate breakdowns");
+    assert!(
+        down.degradations.is_empty(),
+        "unexpected recovery-ladder escalations: {:?}",
+        down.degradations
+    );
     assert_eq!(refr.timer.count("chol"), (q * k) as u64);
 
     // and the two strategies tell the same story

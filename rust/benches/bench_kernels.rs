@@ -344,7 +344,7 @@ fn bench_kfold(d: usize, reps: usize, rows: &mut Vec<Row>) {
             ..base.clone()
         };
         let rep = run_cv(&ds, SolverKind::Chol, &cfg).expect("kfold downdate");
-        assert!(rep.fallbacks.is_empty(), "bench problem must not break down");
+        assert!(rep.degradations.is_empty(), "bench problem must not break down");
         std::hint::black_box(rep.best_lambda);
     });
     let refr = time_min(reps, || {

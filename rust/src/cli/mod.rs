@@ -102,6 +102,11 @@ COMMANDS:
                --h <dim> --n <samples> --folds <k> --grid <q> --g <samples> --degree <r>
                --threads <n|0=auto> --batch <λ per task; LOO: rows per task|0=auto>
                --chunk-rows <Gram stream block|0=auto>
+               --trust-budget <relative drift before forced refactorization|inf>
+               --trust-max-hops <update hops before forced refactorization|0=off>
+               --trust-shift-retries <growing-shift retries on breakdown>
+               --trust-shift-growth <per-retry shift factor, > 1>
+               --trust-task-retries <panicking-task resubmissions before quarantine>
                --seed <u64> --config <file.toml>
   compare      run all six algorithms on one dataset (Figure 6 row)
                flags as for `cv`

@@ -223,6 +223,23 @@ impl ExperimentConfig {
         if let Some(v) = doc.get("data.chunk_rows").and_then(TomlValue::as_usize) {
             cfg.cv.chunk_rows = v;
         }
+        // numerical-trust subsystem ([trust] section) — drift budget and
+        // breakdown-escalation ladder knobs (see `cv::recovery`)
+        if let Some(v) = doc.get("trust.budget").and_then(TomlValue::as_f64) {
+            cfg.cv.recovery.budget.max_relative_drift = v;
+        }
+        if let Some(v) = doc.get("trust.max_hops").and_then(TomlValue::as_usize) {
+            cfg.cv.recovery.budget.max_hops = v as u64;
+        }
+        if let Some(v) = doc.get("trust.shift_retries").and_then(TomlValue::as_usize) {
+            cfg.cv.recovery.max_shift_retries = v as u32;
+        }
+        if let Some(v) = doc.get("trust.shift_growth").and_then(TomlValue::as_f64) {
+            cfg.cv.recovery.shift_growth = v;
+        }
+        if let Some(v) = doc.get("trust.task_retries").and_then(TomlValue::as_usize) {
+            cfg.cv.recovery.task_retries = v as u32;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -243,9 +260,28 @@ impl ExperimentConfig {
             bail!("need h ≥ 2 and n ≥ k_folds");
         }
         if let Some((lo, hi)) = self.cv.lambda_range {
+            // explicit non-finite rejection: NaN fails `lo > 0.0` silently,
+            // but the error should say *why* the range is bad
+            if !(lo.is_finite() && hi.is_finite()) {
+                bail!("lambda range must be finite, got [{lo}, {hi}]");
+            }
             if !(lo > 0.0 && hi > lo) {
                 bail!("lambda range must satisfy 0 < lo < hi");
             }
+        }
+        let b = &self.cv.recovery.budget;
+        if b.max_relative_drift.is_nan() || b.max_relative_drift < 0.0 {
+            bail!(
+                "trust.budget must be a non-negative relative drift (inf = never refactor), got {}",
+                b.max_relative_drift
+            );
+        }
+        let r = &self.cv.recovery;
+        if !r.shift_growth.is_finite() || r.shift_growth <= 1.0 {
+            bail!(
+                "trust.shift_growth must be a finite factor > 1, got {}",
+                r.shift_growth
+            );
         }
         Ok(())
     }
@@ -372,6 +408,47 @@ mod tests {
     #[test]
     fn validation_rejects_bad_lambda_range() {
         let doc = parse_toml("[cv]\nlambda_min = 1.0\nlambda_max = 0.5\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn trust_knobs_parse_and_default() {
+        let doc = parse_toml(
+            "[trust]\nbudget = 1e-6\nmax_hops = 32\nshift_retries = 2\nshift_growth = 100.0\ntask_retries = 3\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.cv.recovery.budget.max_relative_drift, 1e-6);
+        assert_eq!(cfg.cv.recovery.budget.max_hops, 32);
+        assert_eq!(cfg.cv.recovery.max_shift_retries, 2);
+        assert_eq!(cfg.cv.recovery.shift_growth, 100.0);
+        assert_eq!(cfg.cv.recovery.task_retries, 3);
+        // untouched configs keep the documented defaults
+        let cfg = ExperimentConfig::from_doc(&parse_toml("n = 64\n").unwrap()).unwrap();
+        assert_eq!(
+            cfg.cv.recovery,
+            crate::cv::recovery::RecoveryPolicy::default()
+        );
+    }
+
+    #[test]
+    fn trust_validation_rejects_bad_knobs() {
+        let doc = parse_toml("[trust]\nbudget = -1.0\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err(), "negative budget");
+        let doc = parse_toml("[trust]\nshift_growth = 1.0\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err(), "growth must be > 1");
+        let doc = parse_toml("[trust]\nshift_growth = inf\n").unwrap();
+        assert!(
+            ExperimentConfig::from_doc(&doc).is_err(),
+            "growth must be finite"
+        );
+    }
+
+    #[test]
+    fn validation_rejects_non_finite_lambda_range() {
+        let doc = parse_toml("[cv]\nlambda_min = nan\nlambda_max = 1.0\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+        let doc = parse_toml("[cv]\nlambda_min = 0.1\nlambda_max = inf\n").unwrap();
         assert!(ExperimentConfig::from_doc(&doc).is_err());
     }
 

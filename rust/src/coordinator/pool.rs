@@ -34,10 +34,20 @@
 //! moves on to the next job, so the pool stays usable. [`WorkerPool::map`]
 //! additionally captures each job's panic payload and re-raises the first
 //! one (in input order) on the *calling* thread via
-//! `std::panic::resume_unwind`, preserving the original message — a panic in
-//! a sweep task therefore surfaces exactly like a panic in the serial path.
-//! (A panic may leave the worker's scratch buffers at odd sizes; that is
-//! harmless, the next job resizes them.)
+//! `std::panic::resume_unwind`, with the failing **task index prepended to
+//! the message** (`"worker task 7 panicked: …"`) — a panic in a sweep task
+//! surfaces like a panic in the serial path, but never loses *which* task
+//! blew up. (A panic may leave the worker's scratch buffers at odd sizes;
+//! that is harmless, the next job resizes them.)
+//!
+//! [`WorkerPool::map_scratch_recover`] trades re-raising for **bounded
+//! retry and quarantine**: jobs are `Fn` closures that can be resubmitted,
+//! a job that panics is retried up to a caller-chosen number of times, and
+//! one that keeps panicking comes back as an [`Err`]`(`[`TaskFailure`]`)`
+//! in its input slot — task index, attempt count and final panic message
+//! attached — while every other job's result is unaffected. This is the
+//! dispatch surface of the sweep engine's panic-quarantine rung (see
+//! [`crate::cv::recovery`]).
 //!
 //! ## Deadlock rule
 //!
@@ -54,6 +64,39 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce(&mut Scratch) + Send + 'static>;
+
+/// Render a caught panic payload as a human-readable message.
+///
+/// Rust panic payloads are `Box<dyn Any + Send>`; in practice they are a
+/// `&'static str` (from `panic!("literal")`) or a `String` (from
+/// `panic!("{…}")`). Anything else collapses to a fixed placeholder rather
+/// than losing the event entirely.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// A batch job that kept panicking after its retry budget was spent.
+///
+/// Returned (per input slot) by [`WorkerPool::map_scratch_recover`] so the
+/// caller can quarantine exactly the failing task: `task` is the job's index
+/// in the submitted batch, `attempts` counts the initial run plus every
+/// retry, and `message` carries the final attempt's panic payload rendered
+/// through [`panic_message`].
+#[derive(Debug, Clone)]
+pub struct TaskFailure {
+    /// Index of the job in the submitted batch.
+    pub task: usize,
+    /// Total executions attempted (1 initial + retries).
+    pub attempts: u32,
+    /// Panic message of the last failed attempt.
+    pub message: String,
+}
 
 /// Fixed-size worker pool. Dropping the pool joins all workers.
 pub struct WorkerPool {
@@ -161,10 +204,72 @@ impl WorkerPool {
         }
         slots
             .into_iter()
-            .map(|s| match s.expect("worker died before returning a result") {
-                Ok(v) => v,
-                Err(payload) => resume_unwind(payload),
-            })
+            .enumerate()
+            .map(
+                |(i, s)| match s.expect("worker died before returning a result") {
+                    Ok(v) => v,
+                    // re-raise with the task index attached: a panic deep in a
+                    // sweep must never lose *which* cell-range task blew up
+                    Err(payload) => resume_unwind(Box::new(format!(
+                        "worker task {i} panicked: {}",
+                        panic_message(payload.as_ref())
+                    ))),
+                },
+            )
+            .collect()
+    }
+
+    /// [`WorkerPool::map_scratch`] with **bounded retry and quarantine**
+    /// instead of panic propagation.
+    ///
+    /// Jobs are shared `Fn` closures so a panicking task can be resubmitted
+    /// verbatim. Each job runs up to `1 + retries` times; a job that panics
+    /// on every attempt settles as `Err(`[`TaskFailure`]`)` in its input
+    /// slot while all other results are returned normally. Resubmission
+    /// rounds process failed indices in ascending order, so scheduling is
+    /// deterministic given deterministic jobs.
+    pub fn map_scratch_recover<T: Send + 'static>(
+        &self,
+        jobs: Vec<Arc<dyn Fn(&mut Scratch) -> T + Send + Sync + 'static>>,
+        retries: u32,
+    ) -> Vec<Result<T, TaskFailure>> {
+        let n = jobs.len();
+        let mut results: Vec<Option<Result<T, TaskFailure>>> = (0..n).map(|_| None).collect();
+        let mut attempts = vec![0u32; n];
+        let mut pending: Vec<usize> = (0..n).collect();
+        while !pending.is_empty() {
+            let (rtx, rrx) = mpsc::channel::<(usize, thread::Result<T>)>();
+            for &i in &pending {
+                attempts[i] += 1;
+                let rtx = rtx.clone();
+                let job = Arc::clone(&jobs[i]);
+                self.submit_with(move |scratch| {
+                    let out = catch_unwind(AssertUnwindSafe(|| job(scratch)));
+                    // receiver may be gone if the caller panicked; ignore
+                    let _ = rtx.send((i, out));
+                });
+            }
+            drop(rtx);
+            let mut failed: Vec<usize> = Vec::new();
+            for (i, out) in rrx {
+                match out {
+                    Ok(v) => results[i] = Some(Ok(v)),
+                    Err(payload) if attempts[i] > retries => {
+                        results[i] = Some(Err(TaskFailure {
+                            task: i,
+                            attempts: attempts[i],
+                            message: panic_message(payload.as_ref()),
+                        }));
+                    }
+                    Err(_) => failed.push(i),
+                }
+            }
+            failed.sort_unstable();
+            pending = failed;
+        }
+        results
+            .into_iter()
+            .map(|s| s.expect("worker died before returning a result"))
             .collect()
     }
 
@@ -283,6 +388,10 @@ mod tests {
             .or_else(|| payload.downcast_ref::<String>().cloned())
             .expect("panic payload should be a string");
         assert!(msg.contains("task exploded"), "payload: {msg}");
+        assert!(
+            msg.contains("worker task 1"),
+            "re-raise must name the failing task index: {msg}"
+        );
 
         // the pool must still be fully functional afterwards
         let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
@@ -292,6 +401,76 @@ mod tests {
             })
             .collect();
         assert_eq!(pool.map(jobs), (100..108).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn recover_retries_flaky_and_quarantines_persistent() {
+        let pool = WorkerPool::new(2);
+        let flaky_calls = Arc::new(AtomicUsize::new(0));
+        let fc = flaky_calls.clone();
+        let jobs: Vec<Arc<dyn Fn(&mut Scratch) -> usize + Send + Sync>> = vec![
+            Arc::new(|_s| 10),
+            Arc::new(move |_s| {
+                // panics on its first attempt, succeeds on the retry
+                if fc.fetch_add(1, Ordering::SeqCst) == 0 {
+                    panic!("flaky once");
+                }
+                11
+            }),
+            Arc::new(|_s| panic!("always broken")),
+            Arc::new(|_s| 13),
+        ];
+        let out = pool.map_scratch_recover(jobs, 1);
+        assert_eq!(out.len(), 4, "every input slot must settle");
+        assert_eq!(*out[0].as_ref().unwrap(), 10);
+        assert_eq!(*out[1].as_ref().unwrap(), 11, "flaky task must be retried");
+        assert_eq!(flaky_calls.load(Ordering::SeqCst), 2);
+        let fail = out[2].as_ref().unwrap_err();
+        assert_eq!(fail.task, 2, "failure must carry its input index");
+        assert_eq!(fail.attempts, 2, "1 initial run + 1 retry");
+        assert!(fail.message.contains("always broken"), "{}", fail.message);
+        assert_eq!(*out[3].as_ref().unwrap(), 13);
+
+        // the pool must still be fully functional afterwards
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..8)
+            .map(|i| {
+                let f: Box<dyn FnOnce() -> usize + Send> = Box::new(move || i + 100);
+                f
+            })
+            .collect();
+        assert_eq!(pool.map(jobs), (100..108).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn recover_with_zero_retries_quarantines_on_first_panic() {
+        let pool = WorkerPool::new(1);
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = calls.clone();
+        let jobs: Vec<Arc<dyn Fn(&mut Scratch) -> u32 + Send + Sync>> = vec![Arc::new(
+            move |_s| {
+                c.fetch_add(1, Ordering::SeqCst);
+                panic!("no second chances");
+            },
+        )];
+        let out = pool.map_scratch_recover(jobs, 0);
+        let fail = out[0].as_ref().unwrap_err();
+        assert_eq!((fail.task, fail.attempts), (0, 1));
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "retries=0 means one run");
+    }
+
+    #[test]
+    fn recover_preserves_input_order() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<Arc<dyn Fn(&mut Scratch) -> usize + Send + Sync>> = (0..20)
+            .map(|i| {
+                let f: Arc<dyn Fn(&mut Scratch) -> usize + Send + Sync> =
+                    Arc::new(move |_s| i * i);
+                f
+            })
+            .collect();
+        let out = pool.map_scratch_recover(jobs, 1);
+        let vals: Vec<usize> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(vals, (0..20).map(|i| i * i).collect::<Vec<_>>());
     }
 
     #[test]

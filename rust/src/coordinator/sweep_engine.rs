@@ -22,7 +22,7 @@
 //!              │           the anchor / interpolate / factorize, solve,
 //!              │           score the hold-out split
 //!              └► SweepReport             per-fold results + merged phase
-//!                                         timer + fallback records +
+//!                                         timer + degradation records +
 //!                                         per-task metrics
 //! ```
 //!
@@ -41,10 +41,13 @@
 //!   each grid task derives its fold factor by a chained rank-`n_v`
 //!   hyperbolic downdate ([`crate::linalg::chud::downdate_rank_k`],
 //!   "fold_downdate" phase) — per anchor, `k` refactorizations at `O(d³)`
-//!   become `k` downdates at `O(n_v·d²)`. A numerically indefinite fold
-//!   falls back to the refactorize path *for that (fold, λ) cell only*,
-//!   recorded in [`SweepReport::fallbacks`]
-//!   ([`FoldData::factor_from_anchor`]).
+//!   become `k` downdates at `O(n_v·d²)`. A numerically indefinite fold —
+//!   or one whose drift budget is exhausted — climbs the unified recovery
+//!   ladder *for that (fold, λ) cell only*, recorded in
+//!   [`SweepReport::degradations`] ([`FoldData::factor_from_anchor`],
+//!   [`crate::cv::recovery`]). Tasks that *panic* are resubmitted up to
+//!   `RecoveryPolicy::task_retries` times and then quarantined: their cells
+//!   stay NaN and the report gains a `cause: "panic"` entry naming the task.
 //! - **Anchors run first.** Downdate/interpolated grid tasks only need the
 //!   anchor factors / fitted interpolant, so the `O(d³)` exact
 //!   factorizations are scheduled as their own wave and the cheap grid wave
@@ -87,16 +90,18 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::pool::{default_workers, WorkerPool};
+use crate::coordinator::pool::{default_workers, TaskFailure, WorkerPool};
 use crate::cv::loo::{self, LooReport, LooSkip};
+use crate::cv::recovery::{DegradeInfo, Degradation, Rung};
 use crate::cv::solvers::{self, SolverKind};
-use crate::cv::{CvConfig, FoldData, FoldFallback, FoldStrategy, SweepResult, TrainSplit};
+use crate::cv::{CvConfig, FoldData, FoldStrategy, SweepResult, TrainSplit};
 use crate::data::folds::kfold;
 use crate::data::gram::{self, GramCache};
 use crate::data::synthetic::SyntheticDataset;
 use crate::linalg::cholesky::{cholesky_shifted, cholesky_shifted_pooled, CholeskyError};
 use crate::linalg::matrix::Matrix;
 use crate::linalg::scratch::Scratch;
+use crate::linalg::trust::FactorTrust;
 use crate::pichol::pinrmse::fit_error_curve;
 use crate::pichol::{self, FitOptions, Interpolant};
 use crate::util::{logspace, subsample_indices, PhaseTimer};
@@ -248,11 +253,12 @@ pub struct SweepReport {
     /// Total tasks executed (Gram chunks + fold prep + anchors + grid/fold
     /// sweeps).
     pub tasks: usize,
-    /// Breakdown fallbacks of the factor-level path (downdate went
-    /// numerically indefinite, cell served by refactorization), merged on
-    /// the coordinating thread in ascending (fold, grid-index) order —
-    /// bitwise independent of scheduling like everything else.
-    pub fallbacks: Vec<FoldFallback>,
+    /// Every cell that climbed above its baseline recovery rung —
+    /// breakdowns, drift-budget refactorizations, quarantined panicking
+    /// tasks ([`crate::cv::recovery`]) — merged on the coordinating thread
+    /// in ascending (fold, grid-index) order — bitwise independent of
+    /// scheduling like everything else.
+    pub degradations: Vec<Degradation>,
     /// The micro-kernel backend every GEMM of this run dispatched to
     /// ([`crate::linalg::kernel::active_backend`]) — `"scalar"`, `"avx2"`
     /// or `"neon"`. All backends are bit-identical; this records which ran.
@@ -268,20 +274,23 @@ pub struct SweepReport {
 /// Output of one pool task, reassembled on the coordinating thread.
 struct TaskOut {
     errors: Vec<f64>,
-    /// Breakdown fallbacks this task recorded: (grid index, breakdown).
-    fallbacks: Vec<(usize, CholeskyError)>,
+    /// Ladder climbs this task recorded: (grid index, final rung, cause).
+    degradations: Vec<(usize, Rung, DegradeInfo)>,
     timer: PhaseTimer,
     wall: f64,
 }
 
 /// What stage 3's grid tasks do per λ — the engine's three grid task kinds.
 enum GridKind {
-    /// `chol(H_f + λI)` at every cell ([`FoldStrategy::Refactor`]).
+    /// `chol(H_f + λI)` at every cell ([`FoldStrategy::Refactor`]),
+    /// escalating through rungs 3–4 of the recovery ladder on breakdown.
     Exact,
     /// Factor-level downdate chains ([`FoldStrategy::Downdate`]):
-    /// `anchors[i] = chol(G + grid[i]·I)`, each task derives its fold
-    /// factor by rank-`n_v` downdate (refactorize fallback on breakdown).
-    Anchored(Arc<Vec<Matrix>>),
+    /// `anchors[i] = chol(G + grid[i]·I)` with its [`FactorTrust`] tag, each
+    /// task derives its fold factor by rank-`n_v` tracked downdate
+    /// (recovery-ladder escalation on breakdown or drift-budget
+    /// exhaustion).
+    Anchored(Arc<Vec<Matrix>>, Arc<Vec<FactorTrust>>),
     /// piCholesky: evaluate the per-fold interpolant.
     Interp(Vec<Arc<Interpolant>>),
 }
@@ -335,6 +344,48 @@ impl SweepEngine {
             jobs.into_iter().map(|job| job(&mut scratch)).collect()
         } else {
             self.pool.map_scratch(jobs)
+        }
+    }
+
+    /// [`Self::map_jobs`] with panic quarantine: a job that panics is rerun
+    /// up to `retries` more times (jobs are `Fn`, not `FnOnce`, precisely so
+    /// they can be resubmitted) and then surfaced as an
+    /// [`Err`]`(`[`TaskFailure`]`)` in its input slot instead of taking the
+    /// whole run down. Same input-order results as `map_jobs`, inline on
+    /// the calling thread when single-threaded, on the pool otherwise
+    /// ([`WorkerPool::map_scratch_recover`]).
+    fn map_jobs_recover<T: Send + 'static>(
+        &self,
+        jobs: Vec<Arc<dyn Fn(&mut Scratch) -> T + Send + Sync + 'static>>,
+        retries: u32,
+    ) -> Vec<Result<T, TaskFailure>> {
+        if self.pool.size() == 1 {
+            let mut scratch = Scratch::new();
+            jobs.into_iter()
+                .enumerate()
+                .map(|(i, job)| {
+                    let mut attempts = 0u32;
+                    loop {
+                        attempts += 1;
+                        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || job(&mut scratch),
+                        ));
+                        match caught {
+                            Ok(v) => return Ok(v),
+                            Err(payload) if attempts > retries => {
+                                return Err(TaskFailure {
+                                    task: i,
+                                    attempts,
+                                    message: crate::coordinator::pool::panic_message(&payload),
+                                })
+                            }
+                            Err(_) => {}
+                        }
+                    }
+                })
+                .collect()
+        } else {
+            self.pool.map_scratch_recover(jobs, retries)
         }
     }
 
@@ -496,7 +547,7 @@ impl SweepEngine {
         }
 
         // stages 2-3: solver- and strategy-shaped scheduling
-        let mut fallbacks: Vec<FoldFallback> = Vec::new();
+        let mut degradations: Vec<Degradation> = Vec::new();
         let fold_results = match plan.kind {
             SolverKind::Chol => {
                 // Auto resolved to a concrete strategy in SweepPlan::new;
@@ -505,13 +556,13 @@ impl SweepEngine {
                 let kind = if plan.cv.fold_strategy != FoldStrategy::Refactor {
                     // factor-level: every grid λ is an anchor — one exact
                     // chol(G + λI) each, fold factors by downdate chains
-                    let anchors =
+                    let (anchors, trusts) =
                         self.grid_anchor_factors(&gram, &plan.grid, &mut timer, &mut tasks)?;
-                    GridKind::Anchored(anchors)
+                    GridKind::Anchored(anchors, trusts)
                 } else {
                     GridKind::Exact
                 };
-                self.run_grid(plan, &fold_data, kind, &mut timer, &mut tasks, &mut fallbacks)?
+                self.run_grid(plan, &fold_data, kind, &mut timer, &mut tasks, &mut degradations)?
             }
             SolverKind::PiChol => {
                 let interps = self.fit_anchors(
@@ -520,7 +571,7 @@ impl SweepEngine {
                     &fold_data,
                     &mut timer,
                     &mut tasks,
-                    &mut fallbacks,
+                    &mut degradations,
                 )?;
                 self.run_grid(
                     plan,
@@ -528,7 +579,7 @@ impl SweepEngine {
                     GridKind::Interp(interps),
                     &mut timer,
                     &mut tasks,
-                    &mut fallbacks,
+                    &mut degradations,
                 )?
             }
             _ => self.run_fold_level(plan, &fold_data, &mut timer, &mut tasks)?,
@@ -551,7 +602,7 @@ impl SweepEngine {
             wall_secs,
             threads: self.pool.size(),
             tasks,
-            fallbacks,
+            degradations,
             kernel_backend: crate::linalg::kernel::active_backend().name(),
             fold_strategy: plan.cv.fold_strategy,
             strategy_source: plan.strategy_source,
@@ -561,23 +612,24 @@ impl SweepEngine {
     /// The factor-level anchor wave of the downdate strategy's exact sweep:
     /// one exact `chol(G + λI)` per **grid** λ ("factor" phase) — the only
     /// `O(d³)` work of the whole sweep — scheduled through the shared
-    /// anchor dispatcher and `Arc`-shared by every grid task.
+    /// anchor dispatcher and `Arc`-shared by every grid task, each factor
+    /// tagged with a fresh [`FactorTrust`] the downdate chains charge
+    /// against. The wave itself stays fatal on [`CholeskyError`]: anchors
+    /// factor `G + λI` with `λ > 0` on a real PSD Gram, which cannot go
+    /// indefinite short of corrupted input — and corrupted input is
+    /// rejected at ingest ([`gram::validate_rows`]).
     fn grid_anchor_factors(
         &self,
         gram: &Arc<GramCache>,
         grid: &[f64],
         timer: &mut PhaseTimer,
         tasks: &mut usize,
-    ) -> crate::Result<Arc<Vec<Matrix>>> {
+    ) -> crate::Result<(Arc<Vec<Matrix>>, Arc<Vec<FactorTrust>>)> {
         let items: Vec<(Arc<GramCache>, f64)> =
             grid.iter().map(|&lam| (Arc::clone(gram), lam)).collect();
-        Ok(Arc::new(self.anchor_wave(
-            items,
-            gram_hessian,
-            "factor",
-            timer,
-            tasks,
-        )?))
+        let factors = self.anchor_wave(items, gram_hessian, "factor", timer, tasks)?;
+        let trusts: Vec<FactorTrust> = factors.iter().map(FactorTrust::fresh).collect();
+        Ok((Arc::new(factors), Arc::new(trusts)))
     }
 
     /// Execute a leave-one-out plan: the factor-update subsystem's workload
@@ -601,6 +653,9 @@ impl SweepEngine {
     /// coordinating thread, and the per-(row, anchor) arithmetic is the
     /// serial `loo::eval_heldout_point` body verbatim.
     pub fn run_loo(&self, ds: &SyntheticDataset, plan: &LooPlan) -> crate::Result<LooReport> {
+        // validation gate: a single NaN row would silently poison the shared
+        // Gram and surface anchors deep as inexplicable breakdowns
+        gram::validate_rows(&ds.x, &ds.y)?;
         self.metrics.incr("sweep.loo_runs");
         let run_t0 = Instant::now();
         let mut timer = PhaseTimer::new();
@@ -627,13 +682,19 @@ impl SweepEngine {
             &mut timer,
             &mut tasks,
         )?);
+        let trusts: Arc<Vec<FactorTrust>> =
+            Arc::new(factors.iter().map(FactorTrust::fresh).collect());
 
         // stage 2: the per-i downdate wave — the new task kind. Each task
         // owns a gathered row batch and, per (row, anchor), copies the
         // anchor factor into worker scratch, downdates by x_i, solves and
-        // scores (loo::eval_heldout_point). A breakdown becomes an Err cell
-        // to record, never a failed task.
-        type CellRes = Result<f64, CholeskyError>;
+        // scores (loo::eval_heldout_point). A breakdown — or a drift budget
+        // exhausted by the rank-1 chain — climbs the recovery ladder inside
+        // the cell; only full ladder exhaustion becomes an Err cell to
+        // record, never a failed task.
+        let policy = plan.cv.recovery;
+        let anchor_lams = Arc::new(plan.anchors.clone());
+        type CellRes = Result<(f64, Option<(Rung, DegradeInfo)>), CholeskyError>;
         type LooTaskRes = (Vec<Vec<CellRes>>, PhaseTimer, f64);
         let mut jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> LooTaskRes + Send>> = Vec::new();
         let mut spans: Vec<usize> = Vec::new(); // batch start rows
@@ -645,6 +706,8 @@ impl SweepEngine {
             let yblock = ds.y[lo..hi].to_vec();
             let gram = Arc::clone(&gram);
             let factors = Arc::clone(&factors);
+            let trusts = Arc::clone(&trusts);
+            let anchor_lams = Arc::clone(&anchor_lams);
             let job: Box<dyn FnOnce(&mut Scratch) -> LooTaskRes + Send> =
                 Box::new(move |scratch| {
                     let t0 = Instant::now();
@@ -653,12 +716,15 @@ impl SweepEngine {
                     for r in 0..xblock.rows() {
                         let yi = yblock[r];
                         let mut per_anchor = Vec::with_capacity(factors.len());
-                        for anchor in factors.iter() {
+                        for (s, anchor) in factors.iter().enumerate() {
                             per_anchor.push(loo::eval_heldout_point(
                                 anchor,
-                                gram.gradient(),
+                                trusts[s],
+                                &gram,
                                 xblock.row(r),
                                 yi,
+                                anchor_lams[s],
+                                &policy,
                                 scratch,
                                 &mut t,
                             ));
@@ -673,10 +739,11 @@ impl SweepEngine {
         tasks += jobs.len();
 
         // merge in ascending row order on this thread — scheduling never
-        // touches the sums
+        // touches the sums (degradations included)
         let mut sums = vec![0.0f64; g];
         let mut counts = vec![0usize; g];
         let mut skipped: Vec<LooSkip> = Vec::new();
+        let mut degradations: Vec<Degradation> = Vec::new();
         for (&lo, (per_rows, t, wall)) in spans.iter().zip(self.map_jobs(jobs)) {
             timer.merge(&t);
             self.metrics.incr("sweep.loo_tasks");
@@ -684,15 +751,36 @@ impl SweepEngine {
             for (local, per_anchor) in per_rows.into_iter().enumerate() {
                 for (s, cell) in per_anchor.into_iter().enumerate() {
                     match cell {
-                        Ok(sqerr) => {
+                        Ok((sqerr, degrade)) => {
                             sums[s] += sqerr;
                             counts[s] += 1;
+                            if let Some((rung, info)) = degrade {
+                                self.metrics.incr("sweep.degradations");
+                                degradations.push(info.into_degradation(
+                                    "loo",
+                                    lo + local,
+                                    plan.anchors[s],
+                                    rung,
+                                ));
+                            }
                         }
-                        Err(error) => skipped.push(LooSkip {
-                            row: lo + local,
-                            lambda: plan.anchors[s],
-                            error,
-                        }),
+                        Err(error) => {
+                            self.metrics.incr("sweep.degradations");
+                            degradations.push(Degradation {
+                                surface: "loo",
+                                fold: lo + local,
+                                lambda: plan.anchors[s],
+                                cause: "breakdown",
+                                rung: Rung::Skip,
+                                trust: 0.0,
+                                detail: format!("ladder exhausted: {error}"),
+                            });
+                            skipped.push(LooSkip {
+                                row: lo + local,
+                                lambda: plan.anchors[s],
+                                error,
+                            });
+                        }
                     }
                 }
             }
@@ -746,6 +834,7 @@ impl SweepEngine {
             best_lambda,
             best_error,
             skipped,
+            degradations,
             timer,
             wall_secs,
             threads: self.pool.size(),
@@ -762,8 +851,10 @@ impl SweepEngine {
     /// *derived*, not refactorized: one exact `chol(G + λ_s I)` per sample
     /// λ ("factor" phase), then a **fold-downdate wave** — one task per
     /// (fold, λ_s), each running [`FoldData::factor_from_anchor`]
-    /// ("fold_downdate" phase, refactorize fallback recorded into
-    /// `fallbacks`) — results merged in ascending (fold, λ_s) order.
+    /// ("fold_downdate" phase, recovery-ladder escalations recorded into
+    /// `degradations`) — results merged in ascending (fold, λ_s) order.
+    /// A *fully* exhausted ladder still propagates as an error here: the
+    /// Algorithm-1 interpolant needs every one of its g sample factors.
     /// [`FoldStrategy::Refactor`] keeps the legacy flat k·g
     /// refactorization wave ("chol" phase).
     fn fit_anchors(
@@ -773,7 +864,7 @@ impl SweepEngine {
         fold_data: &[Arc<FoldData>],
         timer: &mut PhaseTimer,
         tasks: &mut usize,
-        fallbacks: &mut Vec<FoldFallback>,
+        degradations: &mut Vec<Degradation>,
     ) -> crate::Result<Vec<Arc<Interpolant>>> {
         let sample_lams: Vec<f64> = subsample_indices(plan.grid.len(), plan.cv.g_samples)
             .into_iter()
@@ -790,15 +881,17 @@ impl SweepEngine {
                 .map(|&lam| (Arc::clone(gram), lam))
                 .collect();
             let global = Arc::new(self.anchor_wave(items, gram_hessian, "factor", timer, tasks)?);
+            let trusts: Vec<FactorTrust> = global.iter().map(FactorTrust::fresh).collect();
 
             // stage 2b: the fold-downdate wave — k·g tasks, merged in
             // ascending (fold, λ_s) order so the regrouping (and the
-            // fallback record) never depends on scheduling
+            // degradation record) never depends on scheduling
             type FdRes = (
-                Result<(Matrix, Option<CholeskyError>), CholeskyError>,
+                Result<(Matrix, crate::cv::FoldFactor), CholeskyError>,
                 PhaseTimer,
                 f64,
             );
+            let policy = plan.cv.recovery;
             let mut jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> FdRes + Send>> = Vec::new();
             let mut meta: Vec<(usize, f64)> = Vec::new(); // (fold, λ_s)
             for (fi, fd) in fold_data.iter().enumerate() {
@@ -806,13 +899,14 @@ impl SweepEngine {
                     meta.push((fi, lam));
                     let fd = Arc::clone(fd);
                     let global = Arc::clone(&global);
+                    let trust = trusts[s];
                     let job: Box<dyn FnOnce(&mut Scratch) -> FdRes + Send> =
                         Box::new(move |scratch| {
                             let t0 = Instant::now();
                             let mut t = PhaseTimer::new();
                             let res = fd
-                                .factor_from_anchor(&global[s], lam, scratch, &mut t)
-                                .map(|ff| (scratch.factor.clone(), ff.fell_back));
+                                .factor_from_anchor(&global[s], trust, lam, &policy, scratch, &mut t)
+                                .map(|ff| (scratch.factor.clone(), ff));
                             (res, t, t0.elapsed().as_secs_f64())
                         });
                     jobs.push(job);
@@ -824,14 +918,10 @@ impl SweepEngine {
                 timer.merge(&t);
                 self.metrics.incr("sweep.fold_downdate_tasks");
                 self.metrics.add_secs("sweep.fold_downdate_wall", wall);
-                let (l, fell_back) = res?;
-                if let Some(error) = fell_back {
-                    self.metrics.incr("sweep.fold_fallbacks");
-                    fallbacks.push(FoldFallback {
-                        fold: fi,
-                        lambda: lam,
-                        error,
-                    });
+                let (l, ff) = res?;
+                if let Some(info) = ff.degraded {
+                    self.metrics.incr("sweep.degradations");
+                    degradations.push(info.into_degradation("kfold", fi, lam, ff.rung));
                 }
                 flat.push(l);
             }
@@ -871,10 +961,14 @@ impl SweepEngine {
 
     /// Stage 3: the λ-grid wave. [`GridKind::Anchored`] tasks derive each
     /// fold factor by downdating the shared per-λ anchor (the
-    /// fold-downdate task kind, with refactorize fallback);
-    /// [`GridKind::Interp`] tasks interpolate (piCholesky);
-    /// [`GridKind::Exact`] tasks factorize at every cell (refactor
-    /// strategy). Results — and fallback records — merge on this thread in
+    /// fold-downdate task kind, recovery-ladder escalation on breakdown or
+    /// drift-budget exhaustion); [`GridKind::Interp`] tasks interpolate
+    /// (piCholesky); [`GridKind::Exact`] tasks factorize at every cell
+    /// (refactor strategy, rungs 3–4 on breakdown). Task bodies never fail:
+    /// a hopeless cell degrades to NaN, and a *panicking* task is
+    /// resubmitted up to `RecoveryPolicy::task_retries` times before being
+    /// quarantined (its cells stay NaN, the report records the panic).
+    /// Results — and degradation records — merge on this thread in
     /// ascending (fold, grid-index) order.
     fn run_grid(
         &self,
@@ -883,13 +977,13 @@ impl SweepEngine {
         kind: GridKind,
         timer: &mut PhaseTimer,
         tasks: &mut usize,
-        fallbacks: &mut Vec<FoldFallback>,
+        degradations: &mut Vec<Degradation>,
     ) -> crate::Result<Vec<SweepResult>> {
         let grid = Arc::new(plan.grid.clone());
         let metric = plan.cv.metric;
-        type GridRes = Result<TaskOut, CholeskyError>;
+        let policy = plan.cv.recovery;
 
-        let mut jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> GridRes + Send>> = Vec::new();
+        let mut jobs: Vec<Arc<dyn Fn(&mut Scratch) -> TaskOut + Send + Sync>> = Vec::new();
         let mut spans: Vec<(usize, usize, usize)> = Vec::new(); // (fold, lo, hi)
         for (fi, fd) in fold_data.iter().enumerate() {
             let mut lo = 0;
@@ -901,19 +995,24 @@ impl SweepEngine {
                 // per-task view of the shared state for this task kind
                 let kind_view = match &kind {
                     GridKind::Exact => GridKind::Exact,
-                    GridKind::Anchored(anchors) => GridKind::Anchored(Arc::clone(anchors)),
+                    GridKind::Anchored(anchors, trusts) => {
+                        GridKind::Anchored(Arc::clone(anchors), Arc::clone(trusts))
+                    }
                     GridKind::Interp(v) => GridKind::Interp(vec![Arc::clone(&v[fi])]),
                 };
                 // the task body borrows the executing worker's Scratch: the
                 // factor/eval/solve buffers are warm after the worker's
                 // first task, so the steady-state sweep allocates nothing
-                // per λ evaluation
-                let job: Box<dyn FnOnce(&mut Scratch) -> GridRes + Send> =
-                    Box::new(move |scratch| {
+                // per λ evaluation. Jobs are `Fn` (not `FnOnce`) so a
+                // panicking task can be resubmitted by map_jobs_recover.
+                let ti = jobs.len();
+                let job: Arc<dyn Fn(&mut Scratch) -> TaskOut + Send + Sync> =
+                    Arc::new(move |scratch| {
+                        crate::testutil::faults::maybe_panic_task(ti);
                         let t0 = Instant::now();
                         let mut t = PhaseTimer::new();
                         let mut errors = Vec::with_capacity(hi - lo);
-                        let mut cell_fallbacks: Vec<(usize, CholeskyError)> = Vec::new();
+                        let mut cell_degrades: Vec<(usize, Rung, DegradeInfo)> = Vec::new();
                         match &kind_view {
                             GridKind::Interp(interp) => {
                                 let strategy = solvers::pichol_strategy();
@@ -929,7 +1028,7 @@ impl SweepEngine {
                                     ));
                                 }
                             }
-                            GridKind::Anchored(anchors) => {
+                            GridKind::Anchored(anchors, trusts) => {
                                 // λ-warm-start: the update block X_vᵀ is
                                 // λ-independent, so gather it once for this
                                 // task's whole λ batch ("gather" phase) and
@@ -949,36 +1048,42 @@ impl SweepEngine {
                                     )
                                 });
                                 for (off, &lam) in grid[lo..hi].iter().enumerate() {
-                                    let (e, fell_back) = solvers::eval_anchored_point_pregathered(
+                                    let (e, degrade) = solvers::eval_anchored_point_pregathered(
                                         &fd,
                                         &anchors[lo + off],
+                                        trusts[lo + off],
                                         &gathered,
                                         lam,
                                         metric,
+                                        &policy,
                                         scratch,
                                         &mut t,
-                                    )?;
+                                    );
                                     errors.push(e);
-                                    if let Some(err) = fell_back {
-                                        cell_fallbacks.push((lo + off, err));
+                                    if let Some((rung, info)) = degrade {
+                                        cell_degrades.push((lo + off, rung, info));
                                     }
                                 }
                                 scratch.gather = gathered;
                             }
                             GridKind::Exact => {
-                                for &lam in &grid[lo..hi] {
-                                    errors.push(solvers::eval_exact_point(
-                                        &fd, lam, metric, scratch, &mut t,
-                                    )?);
+                                for (off, &lam) in grid[lo..hi].iter().enumerate() {
+                                    let (e, degrade) = solvers::eval_exact_point_recovering(
+                                        &fd, lam, metric, &policy, scratch, &mut t,
+                                    );
+                                    errors.push(e);
+                                    if let Some((rung, info)) = degrade {
+                                        cell_degrades.push((lo + off, rung, info));
+                                    }
                                 }
                             }
                         }
-                        Ok(TaskOut {
+                        TaskOut {
                             errors,
-                            fallbacks: cell_fallbacks,
+                            degradations: cell_degrades,
                             timer: t,
                             wall: t0.elapsed().as_secs_f64(),
-                        })
+                        }
                     });
                 jobs.push(job);
                 lo = hi;
@@ -986,25 +1091,46 @@ impl SweepEngine {
         }
         *tasks += jobs.len();
 
-        let outs = self.map_jobs(jobs);
+        let outs = self.map_jobs_recover(jobs, policy.task_retries);
         let mut per_fold: Vec<Vec<f64>> = fold_data
             .iter()
             .map(|_| vec![f64::NAN; grid.len()])
             .collect();
         for (&(fi, lo, hi), out) in spans.iter().zip(outs) {
-            let out = out?;
-            per_fold[fi][lo..hi].copy_from_slice(&out.errors);
-            for (gidx, error) in out.fallbacks {
-                self.metrics.incr("sweep.fold_fallbacks");
-                fallbacks.push(FoldFallback {
-                    fold: fi,
-                    lambda: plan.grid[gidx],
-                    error,
-                });
+            match out {
+                Ok(out) => {
+                    per_fold[fi][lo..hi].copy_from_slice(&out.errors);
+                    for (gidx, rung, info) in out.degradations {
+                        self.metrics.incr("sweep.degradations");
+                        degradations.push(info.into_degradation(
+                            "kfold",
+                            fi,
+                            plan.grid[gidx],
+                            rung,
+                        ));
+                    }
+                    timer.merge(&out.timer);
+                    self.metrics.incr("sweep.grid_tasks");
+                    self.metrics.add_secs("sweep.grid_wall", out.wall);
+                }
+                Err(fail) => {
+                    // quarantined: this task's cells stay NaN and the sweep
+                    // carries on — one berserk task degrades one span
+                    self.metrics.incr("sweep.task_quarantines");
+                    degradations.push(Degradation {
+                        surface: "task",
+                        fold: fi,
+                        lambda: f64::NAN,
+                        cause: "panic",
+                        rung: Rung::Skip,
+                        trust: 0.0,
+                        detail: format!(
+                            "grid task {} (cells {}..{}) quarantined after {} attempts: {}",
+                            fail.task, lo, hi, fail.attempts, fail.message
+                        ),
+                    });
+                }
             }
-            timer.merge(&out.timer);
-            self.metrics.incr("sweep.grid_tasks");
-            self.metrics.add_secs("sweep.grid_wall", out.wall);
         }
 
         Ok(per_fold
@@ -1171,14 +1297,14 @@ mod tests {
                 "fold_downdate == k per anchor"
             );
             assert_eq!(rep.timer.count("chol"), 0, "no per-cell refactorization");
-            assert!(rep.fallbacks.is_empty());
+            assert!(rep.degradations.is_empty());
 
             // PiChol: the g sample λ's are the anchors
             let rep = run(SolverKind::PiChol, threads);
             assert_eq!(rep.timer.count("factor"), 4);
             assert_eq!(rep.timer.count("fold_downdate"), 4 * 5);
             assert_eq!(rep.timer.count("chol"), 0);
-            assert!(rep.fallbacks.is_empty());
+            assert!(rep.degradations.is_empty());
         }
 
         // refactor strategy: per-cell chol, no factor-level phases
@@ -1192,7 +1318,7 @@ mod tests {
         assert_eq!(rep.timer.count("chol"), 50 * 5);
         assert_eq!(rep.timer.count("factor"), 0);
         assert_eq!(rep.timer.count("fold_downdate"), 0);
-        assert!(rep.fallbacks.is_empty());
+        assert!(rep.degradations.is_empty());
     }
 
     /// The two fold strategies are numerically interchangeable: same λ*
@@ -1225,6 +1351,55 @@ mod tests {
             for (a, b) in fr.errors.iter().zip(&fd.errors) {
                 assert!((a - b).abs() < 1e-9, "curves drifted: {a} vs {b}");
             }
+        }
+    }
+
+    /// The drift budget demonstrably bites: a budget tighter than one
+    /// downdate's charge forces **every** cell of the downdate strategy
+    /// through a full refactorization — visible in the phase counts (a
+    /// per-cell `chol` appears next to the still-running `fold_downdate`s)
+    /// and in the report (one `drift-budget` degradation per cell at rung
+    /// 2) — and the resulting curve is **bitwise** the refactor strategy's,
+    /// because rung 2 runs the identical `chol(H_f + λI)`.
+    #[test]
+    fn tight_drift_budget_bites_engine_wide() {
+        use crate::cv::recovery::{RecoveryPolicy, Rung};
+        use crate::linalg::trust::TrustBudget;
+        let ds = ds();
+        let ref_cfg = CvConfig {
+            fold_strategy: FoldStrategy::Refactor,
+            ..cfg_with_threads(2)
+        };
+        let ref_plan = SweepPlan::new(&ds, SolverKind::Chol, &ref_cfg);
+        let oracle = SweepEngine::new(ref_plan.threads).run(&ds, &ref_plan).unwrap();
+
+        let cfg = CvConfig {
+            recovery: RecoveryPolicy {
+                budget: TrustBudget {
+                    max_relative_drift: 1e-300,
+                    max_hops: 0,
+                },
+                ..RecoveryPolicy::default()
+            },
+            ..cfg_with_threads(2)
+        };
+        let plan = SweepPlan::new(&ds, SolverKind::Chol, &cfg);
+        let rep = SweepEngine::new(plan.threads).run(&ds, &plan).unwrap();
+
+        assert_eq!(rep.degradations.len(), 5 * 50, "every cell must escalate");
+        assert!(rep.degradations.iter().all(|d| {
+            d.surface == "kfold"
+                && d.cause == "drift-budget"
+                && d.rung == Rung::Refactor
+                && d.trust > 0.0
+        }));
+        assert_eq!(rep.timer.count("chol"), 5 * 50, "one forced refactor per cell");
+        assert_eq!(rep.timer.count("fold_downdate"), 5 * 50);
+        assert_eq!(rep.timer.count("factor"), 50);
+        for (fo, fd) in oracle.fold_results.iter().zip(&rep.fold_results) {
+            assert_eq!(fo.errors, fd.errors, "forced-refactor curve must be bitwise");
+            assert_eq!(fo.best_lambda, fd.best_lambda);
+            assert_eq!(fo.best_error, fd.best_error);
         }
     }
 
@@ -1298,7 +1473,8 @@ mod tests {
         // anchors; per-fold factors are fold-downdate tasks
         assert_eq!(m.counter("sweep.anchor_tasks"), 4); // g
         assert_eq!(m.counter("sweep.fold_downdate_tasks"), 5 * 4); // k × g
-        assert_eq!(m.counter("sweep.fold_fallbacks"), 0);
+        assert_eq!(m.counter("sweep.degradations"), 0);
+        assert_eq!(m.counter("sweep.task_quarantines"), 0);
         assert!(m.counter("sweep.grid_tasks") > 0);
         assert!(m.seconds("sweep.grid_wall") > 0.0);
         assert_eq!(m.counter("sweep.lambda_evals"), 5 * 50);

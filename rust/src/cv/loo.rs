@@ -36,11 +36,19 @@
 //! A held-out row whose removal makes `G − x_i x_iᵀ + λI` numerically
 //! indefinite (λ at or below the Gram's rounding noise) surfaces as a
 //! [`CholeskyError`] from the downdate, carrying the failing column index.
-//! The sweep **skips that (row, λ) cell and records it** in
-//! [`LooReport::skipped`] — one bad row never poisons the other `n−1`
-//! contributions, and the anchor's RMSE is the mean over the rows that
-//! factored. The engine copies the anchor factor into worker scratch
-//! before each downdate, so a breakdown poisons only the scratch copy.
+//! The cell then climbs the unified recovery ladder
+//! ([`crate::cv::recovery`]): rung 2 rebuilds `H_i = G − x_i x_iᵀ` from the
+//! cached Gram and refactors it directly — which routinely *rescues* rows
+//! the rank-1 downdate cannot serve (the downdate fails on an exactly-zero
+//! pivot; the direct `chol(H_i + λI)` sails through it at `√λ`) — rung 3
+//! adds bounded growing shifts, and only full exhaustion **skips the
+//! (row, λ) cell and records it** in [`LooReport::skipped`]. Every climb
+//! above the downdate rung lands in [`LooReport::degradations`]. A drift
+//! budget exhausted by the tracked rank-1 chain escalates through the same
+//! ladder with `cause: "drift-budget"`. One bad row never poisons the
+//! other `n−1` contributions; the engine copies the anchor factor into
+//! worker scratch before each downdate, so a breakdown poisons only the
+//! scratch copy.
 //!
 //! Scheduling (per-i batches over the worker pool, bitwise independent of
 //! the worker count) lives in
@@ -54,12 +62,14 @@ use crate::coordinator::sweep_engine::{LooPlan, SweepEngine};
 use crate::data::gram::GramCache;
 use crate::data::synthetic::SyntheticDataset;
 use crate::linalg::cholesky::{cholesky_shifted, CholeskyError};
-use crate::linalg::chud::{chol_downdate, chol_downdate_rank1, chol_update};
+use crate::linalg::chud::{chol_downdate_rank1_tracked, chol_downdate_tracked, chol_update_tracked};
 use crate::linalg::matrix::Matrix;
 use crate::linalg::scratch::Scratch;
 use crate::linalg::triangular::solve_cholesky_into;
+use crate::linalg::trust::{FactorTrust, TrustBudget};
 use crate::util::PhaseTimer;
 
+use super::recovery::{self, DegradeInfo, Degradation, RecoveryPolicy, Rung};
 use super::CvConfig;
 
 /// One skipped (held-out row, anchor λ) cell: the downdate hit a
@@ -94,8 +104,12 @@ pub struct LooReport {
     pub best_lambda: f64,
     /// Curve (or, degraded, exact anchor) value at `best_lambda`.
     pub best_error: f64,
-    /// Skipped (row, λ) cells — breakdowns recorded, not fatal.
+    /// Skipped (row, λ) cells — full-ladder exhaustion recorded, not fatal.
     pub skipped: Vec<LooSkip>,
+    /// Every cell that climbed above the downdate rung — rescued
+    /// breakdowns, drift-budget refactorizations, skips — in ascending
+    /// (row, anchor) order ([`crate::cv::recovery`]).
+    pub degradations: Vec<Degradation>,
     /// Phase timings summed over all tasks (`gram` / `factor` / `downdate`
     /// / `solve` / `holdout` / `fit` / `interp`). The structural
     /// invariants — `factor` counted once per anchor, `downdate` once per
@@ -126,27 +140,81 @@ pub fn run_loo(ds: &SyntheticDataset, cfg: &CvConfig) -> crate::Result<LooReport
 /// One held-out evaluation at one anchor — the body of the sweep engine's
 /// per-i tasks (and of the serial path: both run *this* code, which is why
 /// parallel results are bit-identical to serial). Copies the anchor factor
-/// into `scratch.factor`, downdates by `x_i`, solves, and returns the
-/// squared prediction error; a downdate breakdown comes back as
-/// `Err(CholeskyError)` for the caller to record. Every buffer is worker
-/// scratch — zero heap allocation once warm.
+/// into `scratch.factor`, downdates by `x_i` (tracked against the anchor's
+/// [`FactorTrust`] tag), solves, and returns the squared prediction error.
+/// On a downdate breakdown — or a drift budget exhausted by the chain —
+/// the cell climbs the recovery ladder: `H_i = G − x_i x_iᵀ` is rebuilt
+/// from the cached Gram and refactored directly
+/// ([`recovery::refactor_ladder`], "chol" phase), with the climb returned
+/// as a `Some((rung, info))` record; only full ladder exhaustion comes
+/// back as `Err(CholeskyError)` for the caller to skip-and-record. Every
+/// buffer is worker scratch — zero heap allocation once warm.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn eval_heldout_point(
     anchor: &Matrix,
-    gram_g: &[f64],
+    anchor_trust: FactorTrust,
+    gram: &GramCache,
     xi: &[f64],
     yi: f64,
+    lam: f64,
+    policy: &RecoveryPolicy,
     scratch: &mut Scratch,
     timer: &mut PhaseTimer,
-) -> Result<f64, CholeskyError> {
-    timer.time("downdate", || {
+) -> Result<(f64, Option<(Rung, DegradeInfo)>), CholeskyError> {
+    let mut trust = anchor_trust;
+    let down = timer.time("downdate", || {
         scratch.factor.copy_from(anchor);
         scratch.vbuf.clear();
         scratch.vbuf.extend_from_slice(xi);
-        chol_downdate_rank1(&mut scratch.factor, &mut scratch.vbuf, &mut scratch.trans)
-    })?;
+        chol_downdate_rank1_tracked(
+            &mut scratch.factor,
+            &mut scratch.vbuf,
+            &mut scratch.trans,
+            &mut trust,
+        )
+    });
+    let degrade = if down.is_ok() && !trust.exceeds(&policy.budget) {
+        None
+    } else {
+        let (cause, detail) = match &down {
+            Err(e) => ("breakdown", e.to_string()),
+            Ok(()) => (
+                "drift-budget",
+                format!(
+                    "relative drift {:.3e} over budget after {} hops",
+                    trust.relative_drift(),
+                    trust.hops()
+                ),
+            ),
+        };
+        let trust_at_failure = trust.relative_drift();
+        // rung ≥ 2: rebuild H_i = G − x_i x_iᵀ from the cached Gram
+        // (lower triangle only — that is all the factorization reads) and
+        // send it up the ladder
+        let (rung, extra) = timer.time("chol", || {
+            let h_i = &mut scratch.update;
+            h_i.copy_from(gram.hessian());
+            for r in 0..h_i.rows() {
+                for c in 0..=r {
+                    h_i[(r, c)] -= xi[r] * xi[c];
+                }
+            }
+            recovery::refactor_ladder(&scratch.update, lam, &mut scratch.factor, policy)
+        })?;
+        let mut info = DegradeInfo {
+            cause,
+            trust_at_failure,
+            detail,
+        };
+        if extra > 0.0 {
+            info.detail
+                .push_str(&format!("; served with extra shift {extra:.3e}"));
+        }
+        Some((rung, info))
+    };
     timer.time("solve", || {
         scratch.gvec.clear();
-        scratch.gvec.extend_from_slice(gram_g);
+        scratch.gvec.extend_from_slice(gram.gradient());
         for (gj, &xj) in scratch.gvec.iter_mut().zip(xi) {
             *gj -= yi * xj;
         }
@@ -157,11 +225,12 @@ pub(crate) fn eval_heldout_point(
             &mut scratch.theta,
         );
     });
-    Ok(timer.time("holdout", || {
+    let sqerr = timer.time("holdout", || {
         let pred: f64 = xi.iter().zip(&scratch.theta).map(|(x, t)| x * t).sum();
         let r = pred - yi;
         r * r
-    }))
+    });
+    Ok((sqerr, degrade))
 }
 
 /// The brute-force oracle: LOO-RMSE at each λ by per-row refactorization
@@ -219,49 +288,85 @@ pub struct AnchorFactors {
     pub lambdas: Vec<f64>,
     /// `factors[s] = chol(G + lambdas[s]·I)`.
     pub factors: Vec<Matrix>,
+    /// One [`FactorTrust`] drift tag per factor, charged by every
+    /// append/retire rotation pass; [`Self::refresh_stale`] refactors the
+    /// ones whose budget is exhausted.
+    pub trusts: Vec<FactorTrust>,
 }
 
 impl AnchorFactors {
-    /// Factor every anchor from scratch (the cold start).
+    /// Factor every anchor from scratch (the cold start). Each factor
+    /// starts with a fresh zero-drift trust tag.
     pub fn factor(gram: &GramCache, lambdas: &[f64]) -> Result<Self, CholeskyError> {
         let factors = lambdas
             .iter()
             .map(|&lam| cholesky_shifted(gram.hessian(), lam))
             .collect::<Result<Vec<_>, _>>()?;
+        let trusts = factors.iter().map(FactorTrust::fresh).collect();
         Ok(Self {
             lambdas: lambdas.to_vec(),
             factors,
+            trusts,
         })
     }
 
     /// Fold `m` appended rows into every anchor factor by rank-m update
-    /// (`O(g·m·d²)`). Call alongside [`GramCache::append_rows`] with the
-    /// same block. `trans` is the rotation-transform buffer
-    /// (`Scratch::trans` on worker paths).
+    /// (`O(g·m·d²)`), charging each factor's drift tag. Call alongside
+    /// [`GramCache::append_rows`] with the same block. `trans` is the
+    /// rotation-transform buffer (`Scratch::trans` on worker paths).
     pub fn append_rows(&mut self, x_new: &Matrix, trans: &mut Matrix) {
-        for f in &mut self.factors {
+        for (f, trust) in self.factors.iter_mut().zip(&mut self.trusts) {
             let mut u = x_new.transpose(); // d×m: one update vector per column
-            chol_update(f, &mut u, trans);
+            chol_update_tracked(f, &mut u, trans, trust);
         }
     }
 
     /// Remove `m` retired rows from every anchor factor by rank-m
-    /// downdate. **Transactional**: downdates land on copies and are
-    /// committed only when every anchor succeeds, so on
-    /// [`CholeskyError`] (some factor numerically indefinite — retire
-    /// fewer rows at a time, or refactor from the downdated Gram) the
-    /// cache is left exactly as it was; a half-downdated cache would
-    /// silently corrupt every later solve.
+    /// downdate, charging each factor's drift tag. **Transactional**:
+    /// downdates (and trust charges) land on copies and are committed only
+    /// when every anchor succeeds, so on [`CholeskyError`] (some factor
+    /// numerically indefinite — retire fewer rows at a time, or refactor
+    /// from the downdated Gram) the cache is left exactly as it was; a
+    /// half-downdated cache would silently corrupt every later solve.
     pub fn retire_rows(&mut self, x_old: &Matrix, trans: &mut Matrix) -> Result<(), CholeskyError> {
         let mut fresh = Vec::with_capacity(self.factors.len());
-        for f in &self.factors {
+        let mut fresh_trusts = self.trusts.clone();
+        for (f, trust) in self.factors.iter().zip(&mut fresh_trusts) {
             let mut l = f.clone();
             let mut u = x_old.transpose();
-            chol_downdate(&mut l, &mut u, trans)?;
+            chol_downdate_tracked(&mut l, &mut u, trans, trust)?;
             fresh.push(l);
         }
         self.factors = fresh;
+        self.trusts = fresh_trusts;
         Ok(())
+    }
+
+    /// Refactor every anchor whose drift tag exceeds `budget` from the
+    /// current Gram (resetting its tag to fresh); factors within budget
+    /// are untouched. Returns how many were refreshed. This is the
+    /// streaming-cache face of the drift-budget policy: call it after a
+    /// burst of appends/retires to bound the accumulated rotation error
+    /// without refactoring the anchors that do not need it.
+    pub fn refresh_stale(
+        &mut self,
+        gram: &GramCache,
+        budget: &TrustBudget,
+    ) -> Result<usize, CholeskyError> {
+        let mut refreshed = 0usize;
+        for ((f, trust), &lam) in self
+            .factors
+            .iter_mut()
+            .zip(self.trusts.iter_mut())
+            .zip(self.lambdas.iter())
+        {
+            if trust.exceeds(budget) {
+                *f = cholesky_shifted(gram.hessian(), lam)?;
+                *trust = FactorTrust::fresh(f);
+                refreshed += 1;
+            }
+        }
+        Ok(refreshed)
     }
 }
 
@@ -287,6 +392,7 @@ mod tests {
         let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 60, 9, 11);
         let rep = run_loo(&ds, &cfg(1)).unwrap();
         assert!(rep.skipped.is_empty(), "no breakdowns expected: {:?}", rep.skipped);
+        assert!(rep.degradations.is_empty(), "no escalations expected");
         let brute = brute_force_loo_rmse(&ds, &rep.anchor_lambdas);
         let rms = (rep
             .anchor_rmse
@@ -317,6 +423,7 @@ mod tests {
             assert_eq!(serial.best_lambda, par.best_lambda);
             assert_eq!(serial.best_error, par.best_error);
             assert_eq!(serial.skipped.len(), par.skipped.len());
+            assert_eq!(serial.degradations.len(), par.degradations.len());
         }
     }
 
@@ -341,29 +448,41 @@ mod tests {
         }
     }
 
-    /// A held-out row that makes `G − x_i x_iᵀ + λI` numerically indefinite
-    /// is skipped and recorded — never fatal. Runs on the shared
+    /// A held-out row that makes the rank-1 downdate numerically indefinite
+    /// is **rescued by the recovery ladder**, not skipped: on the shared
     /// [`crate::testutil::conformance::spiked_dataset`] fixture (see its
-    /// docs for the exactness argument): holding out the spiked row 0 makes
-    /// the first downdate pivot exactly `1e18 − 1e18 = 0` — deterministic
-    /// breakdown at column 0, at every anchor, while the other 39 rows
-    /// sweep fine.
+    /// docs for the exactness argument), holding out the spiked row 0 makes
+    /// the downdate pivot exactly `1e18 − 1e18 = 0` — deterministic
+    /// breakdown at column 0, at every anchor — but rung 2's direct
+    /// `chol(H_0 + λI)` sails through the exactly-zero column at pivot
+    /// `√λ`, so the cell is served (prediction 0, squared error exactly 1)
+    /// and recorded as a rung-2 degradation. Nothing is skipped and every
+    /// row contributes.
     #[test]
-    fn loo_breakdown_is_skipped_and_recorded() {
+    fn loo_breakdown_is_rescued_by_refactor_rung() {
         let ds = crate::testutil::conformance::spiked_dataset(40, 8, 5);
         let rep = run_loo(&ds, &cfg(2)).unwrap();
         let anchors = rep.anchor_lambdas.len();
-        assert_eq!(
-            rep.skipped.len(),
-            anchors,
-            "row 0 must break down at every anchor"
+        assert!(
+            rep.skipped.is_empty(),
+            "rung 2 must rescue the spiked row: {:?}",
+            rep.skipped
         );
-        for skip in &rep.skipped {
-            assert_eq!(skip.row, 0);
-            assert_eq!(skip.error.pivot, 0, "failing column index must be carried");
-            assert!(skip.error.value <= 0.0);
+        assert_eq!(
+            rep.degradations.len(),
+            anchors,
+            "row 0 must escalate at every anchor"
+        );
+        for (d, &lam) in rep.degradations.iter().zip(&rep.anchor_lambdas) {
+            assert_eq!(d.surface, "loo");
+            assert_eq!(d.fold, 0, "only the spiked row escalates");
+            assert_eq!(d.lambda, lam);
+            assert_eq!(d.cause, "breakdown");
+            assert_eq!(d.rung, Rung::Refactor, "no extra shift needed");
         }
-        // the other 39 rows still produce a usable report
+        // one ladder refactorization per escalated cell — and only those
+        assert_eq!(rep.timer.count("chol"), anchors as u64);
+        // all 40 rows contribute now, and the report is fully usable
         assert!(rep.anchor_rmse.iter().all(|e| e.is_finite()));
         assert!(rep.curve.iter().all(|e| e.is_finite()));
     }
@@ -387,7 +506,7 @@ mod tests {
         let mut trans = Matrix::zeros(0, 0);
 
         // grow: incremental must track the fresh build of the full dataset
-        gram.append_rows(&x_new, &y_new);
+        gram.append_rows(&x_new, &y_new).unwrap();
         anchors.append_rows(&x_new, &mut trans);
         let full = GramCache::assemble(&ds.x, &ds.y);
         assert_eq!(gram.n_rows(), ds.n());
@@ -427,5 +546,49 @@ mod tests {
                 "failed retire must leave every anchor factor untouched"
             );
         }
+    }
+
+    /// The streaming face of the drift budget: every append/retire charges
+    /// each anchor's trust tag, and `refresh_stale` refactors exactly the
+    /// anchors whose budget is exhausted — bitwise the cold factorization —
+    /// resetting their tags, while fresh factors are never touched.
+    #[test]
+    fn anchor_factors_refresh_stale_under_tight_budget() {
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 70, 9, 13);
+        let (split, h) = (60usize, ds.h());
+        let x0 = ds.x.slice(0, split, 0, h);
+        let y0 = ds.y[..split].to_vec();
+        let x_new = ds.x.slice(split, ds.n(), 0, h);
+        let y_new = ds.y[split..].to_vec();
+        let lambdas = [0.3, 0.9];
+        let tight = TrustBudget {
+            max_relative_drift: 1e-300,
+            max_hops: 0,
+        };
+
+        let mut gram = GramCache::assemble(&x0, &y0);
+        let mut anchors = AnchorFactors::factor(&gram, &lambdas).unwrap();
+        assert!(anchors.trusts.iter().all(|t| t.hops() == 0 && t.drift() == 0.0));
+        // fresh factors carry zero drift — nothing is stale even under a
+        // budget this tight
+        assert_eq!(anchors.refresh_stale(&gram, &tight).unwrap(), 0);
+
+        gram.append_rows(&x_new, &y_new).unwrap();
+        let mut trans = Matrix::zeros(0, 0);
+        anchors.append_rows(&x_new, &mut trans);
+        assert!(anchors.trusts.iter().all(|t| t.hops() == 1 && t.drift() > 0.0));
+        // the default budget tolerates a single hop by ~6 orders of
+        // magnitude…
+        assert_eq!(
+            anchors.refresh_stale(&gram, &TrustBudget::default()).unwrap(),
+            0
+        );
+        // …the tight one refreshes every factor, bitwise the cold build
+        assert_eq!(anchors.refresh_stale(&gram, &tight).unwrap(), 2);
+        let cold = AnchorFactors::factor(&gram, &lambdas).unwrap();
+        for (a, b) in anchors.factors.iter().zip(&cold.factors) {
+            assert_eq!(a.as_slice(), b.as_slice());
+        }
+        assert!(anchors.trusts.iter().all(|t| t.hops() == 0 && t.drift() == 0.0));
     }
 }

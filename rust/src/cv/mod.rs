@@ -21,28 +21,32 @@
 //! chained rank-`n_v` hyperbolic downdate
 //! ([`crate::linalg::chud::downdate_rank_k`]) — `k` downdates at
 //! `O(n_v·d²)` each instead of `k` refactorizations at `O(d³)`. A fold
-//! whose downdate goes numerically indefinite falls back to the legacy
-//! refactorize path for that (fold, λ) only, recorded in
-//! [`CvReport::fallbacks`] ([`FoldData::factor_from_anchor`]).
+//! whose downdate goes numerically indefinite — or whose factor's drift
+//! budget is exhausted — climbs the unified escalation ladder ([`recovery`])
+//! for that (fold, λ) only, recorded in [`CvReport::degradations`]
+//! ([`FoldData::factor_from_anchor`]).
 //!
 //! Besides k-fold, the crate runs **exact leave-one-out CV** ([`loo`]) on
 //! the factor-update subsystem: one anchor factor per λ, every held-out
 //! factor by rank-1 downdate — select with [`CvMode::Loo`].
 
 pub mod loo;
+pub mod recovery;
 pub mod solvers;
 pub mod strategy;
 
 use crate::coordinator::sweep_engine::{SweepEngine, SweepPlan, SweepReport};
-use crate::data::gram::GramCache;
+use crate::data::gram::{self, GramCache};
 use crate::data::synthetic::SyntheticDataset;
-use crate::linalg::cholesky::{cholesky_shifted_into, CholeskyError};
+use crate::linalg::cholesky::CholeskyError;
 use crate::linalg::chud;
 use crate::linalg::gemm::{gemv_into, gemv_t, gram_downdate, syrk_lower};
 use crate::linalg::matrix::Matrix;
 use crate::linalg::scratch::Scratch;
+use crate::linalg::trust::FactorTrust;
 use crate::pichol::mchol::Probe;
 use crate::util::PhaseTimer;
+use recovery::{DegradeInfo, Degradation, RecoveryPolicy, Rung};
 use solvers::SolverKind;
 
 /// Which cross-validation scheme a run executes.
@@ -86,8 +90,9 @@ pub enum FoldStrategy {
     /// rows ([`crate::linalg::chud::downdate_rank_k`]) — fold prep per
     /// anchor drops from `k` refactorizations at `O(d³)` to `k` downdates
     /// at `O(n_v·d²)`. Wins when folds are small (`n_v ≪ d`); a
-    /// numerically indefinite fold degrades to [`FoldStrategy::Refactor`]
-    /// for that (fold, λ) only, recorded in [`CvReport::fallbacks`].
+    /// numerically indefinite fold climbs the escalation ladder
+    /// ([`recovery`]) for that (fold, λ) only, recorded in
+    /// [`CvReport::degradations`].
     Downdate,
     /// Measured-crossover auto-selection ([`strategy`]): read the last
     /// `BENCH_kernels.json` trajectory and pick [`FoldStrategy::Downdate`]
@@ -262,48 +267,42 @@ impl FoldData {
     /// The **factor-level** fold view ([`FoldStrategy::Downdate`]'s task
     /// kernel): derive this fold's `chol(H_f + λI)` into `scratch.factor`
     /// from the shared per-λ anchor factor `anchor = chol(G + λI)` by a
-    /// chained rank-`n_v` hyperbolic downdate with the validation rows —
-    /// the downdated `L` replaces any look at `H_f`, `O(n_v·d²)` against
-    /// the `O(d³)` refactorization (timed under `fold_downdate`).
+    /// chained rank-`n_v` **tracked** hyperbolic downdate with the
+    /// validation rows — the downdated `L` replaces any look at `H_f`,
+    /// `O(n_v·d²)` against the `O(d³)` refactorization (timed under
+    /// `fold_downdate`). The rotation work is charged to `anchor_trust`'s
+    /// drift bound ([`crate::linalg::trust`]).
     ///
-    /// **Breakdown fallback:** when the downdate hits a numerically
-    /// indefinite pivot, the factor is rebuilt by the legacy path —
-    /// `chol(H_f + λI)` from the SYRK-downdated Gram pair this fold already
-    /// carries (timed under `chol`, like every refactor-strategy
-    /// evaluation) — so one bad fold degrades instead of failing the
-    /// sweep; the breakdown is carried in [`FoldFactor::fell_back`] for the
-    /// engine to record. `Err` means even the fallback refactorization
-    /// found `H_f + λI` indefinite, which propagates exactly like the
-    /// refactor strategy's [`CholeskyError`].
+    /// **Escalation:** a numerically indefinite pivot, or a downdated
+    /// factor whose drift bound exceeds `policy.budget`, climbs the
+    /// unified ladder ([`recovery`]): full refactorization from the
+    /// SYRK-downdated Gram pair this fold already carries, then bounded
+    /// growing-shift retries (both timed under `chol`, like every
+    /// refactor-strategy evaluation) — so one bad cell degrades instead of
+    /// failing the sweep, with the climb carried in
+    /// [`FoldFactor::degraded`] for the engine to record. `Err` means the
+    /// whole ladder is exhausted; the caller's rung 4 is skip-and-record.
     pub fn factor_from_anchor(
         &self,
         anchor: &Matrix,
+        anchor_trust: FactorTrust,
         lam: f64,
+        policy: &RecoveryPolicy,
         scratch: &mut Scratch,
         timer: &mut PhaseTimer,
     ) -> Result<FoldFactor, CholeskyError> {
+        let mut trust = anchor_trust;
         let down = timer.time("fold_downdate", || {
-            chud::downdate_rank_k(
+            chud::downdate_rank_k_tracked(
                 anchor,
                 &self.xv,
                 &mut scratch.factor,
                 &mut scratch.update,
                 &mut scratch.trans,
+                &mut trust,
             )
         });
-        match down {
-            Ok(()) => Ok(FoldFactor { fell_back: None }),
-            Err(breakdown) => {
-                // the downdate poisoned only the scratch copy — rebuild it
-                // from the downdated Gram, the strategy-independent oracle
-                timer.time("chol", || {
-                    cholesky_shifted_into(&self.h_mat, lam, &mut scratch.factor)
-                })?;
-                Ok(FoldFactor {
-                    fell_back: Some(breakdown),
-                })
-            }
-        }
+        self.escalate(down, trust, lam, policy, scratch, timer)
     }
 
     /// [`FoldData::factor_from_anchor`] with the update block gathered once
@@ -311,39 +310,87 @@ impl FoldData {
     /// several λ cells of one fold gathers `X_vᵀ` into `scratch.gather`
     /// once ([`chud::gather_update_block`], timed under `gather`) and
     /// replays the block per cell through
-    /// [`chud::downdate_rank_k_pregathered`] (a contiguous memcpy instead
-    /// of the strided per-cell row gather). Bitwise identical to the
-    /// ungathered path — same values flow into the same transform chain —
-    /// so curves, fallbacks, and the partition-independence contract are
-    /// untouched; only the `fold_downdate` phase gets cheaper per cell.
+    /// [`chud::downdate_rank_k_pregathered_tracked`] (a contiguous memcpy
+    /// instead of the strided per-cell row gather). Bitwise identical to
+    /// the ungathered path — same values flow into the same transform
+    /// chain — so curves, degradations, and the partition-independence
+    /// contract are untouched; only the `fold_downdate` phase gets cheaper
+    /// per cell.
     pub fn factor_from_anchor_pregathered(
         &self,
         anchor: &Matrix,
+        anchor_trust: FactorTrust,
         gathered: &Matrix,
         lam: f64,
+        policy: &RecoveryPolicy,
         scratch: &mut Scratch,
         timer: &mut PhaseTimer,
     ) -> Result<FoldFactor, CholeskyError> {
+        let mut trust = anchor_trust;
         let down = timer.time("fold_downdate", || {
-            chud::downdate_rank_k_pregathered(
+            chud::downdate_rank_k_pregathered_tracked(
                 anchor,
                 gathered,
                 &mut scratch.factor,
                 &mut scratch.update,
                 &mut scratch.trans,
+                &mut trust,
             )
         });
-        match down {
-            Ok(()) => Ok(FoldFactor { fell_back: None }),
-            Err(breakdown) => {
-                timer.time("chol", || {
-                    cholesky_shifted_into(&self.h_mat, lam, &mut scratch.factor)
-                })?;
-                Ok(FoldFactor {
-                    fell_back: Some(breakdown),
-                })
+        self.escalate(down, trust, lam, policy, scratch, timer)
+    }
+
+    /// Shared rungs 2–3 of both anchor-derived paths: decide whether the
+    /// tracked downdate's outcome can be served as-is (success within
+    /// budget → rung 1), and otherwise rebuild through the refactor ladder
+    /// from this fold's own Gram pair, capturing the cause for the report.
+    fn escalate(
+        &self,
+        down: Result<(), CholeskyError>,
+        trust: FactorTrust,
+        lam: f64,
+        policy: &RecoveryPolicy,
+        scratch: &mut Scratch,
+        timer: &mut PhaseTimer,
+    ) -> Result<FoldFactor, CholeskyError> {
+        let (cause, detail) = match &down {
+            Ok(()) => {
+                if !trust.exceeds(&policy.budget) {
+                    return Ok(FoldFactor {
+                        rung: Rung::Downdate,
+                        extra_shift: 0.0,
+                        trust,
+                        degraded: None,
+                    });
+                }
+                (
+                    "drift-budget",
+                    format!(
+                        "relative drift {:.3e} over budget after {} hops",
+                        trust.relative_drift(),
+                        trust.hops()
+                    ),
+                )
             }
-        }
+            Err(e) => ("breakdown", e.to_string()),
+        };
+        let info = DegradeInfo {
+            cause,
+            trust_at_failure: trust.relative_drift(),
+            detail,
+        };
+        // the downdate poisoned (or out-drifted) only the scratch copy —
+        // rebuild it from the downdated Gram, the strategy-independent
+        // oracle, escalating through bounded growing-shift retries
+        let (rung, extra_shift) = timer.time("chol", || {
+            recovery::refactor_ladder(&self.h_mat, lam, &mut scratch.factor, policy)
+        })?;
+        Ok(FoldFactor {
+            rung,
+            extra_shift,
+            trust: FactorTrust::fresh(&scratch.factor),
+            degraded: Some(info),
+        })
     }
 }
 
@@ -352,24 +399,19 @@ impl FoldData {
 /// the follow-up solve can borrow the other scratch buffers); this carries
 /// the provenance.
 pub struct FoldFactor {
-    /// `Some(breakdown)` when the rank-`n_v` downdate went numerically
-    /// indefinite (failing column index in
-    /// [`CholeskyError::pivot`]) and the factor was rebuilt through the
-    /// refactorize fallback; `None` on the happy downdate path.
-    pub fell_back: Option<CholeskyError>,
-}
-
-/// One recorded breakdown fallback of the factor-level k-fold path: the
-/// (fold, λ) cell whose downdate went numerically indefinite and was served
-/// by the refactorize path instead ([`CvReport::fallbacks`]).
-#[derive(Debug, Clone)]
-pub struct FoldFallback {
-    /// The fold whose downdate broke down.
-    pub fold: usize,
-    /// The grid λ at which it broke down.
-    pub lambda: f64,
-    /// The breakdown, with the failing column index in `pivot`.
-    pub error: CholeskyError,
+    /// The ladder rung that served the factor ([`Rung::Downdate`] on the
+    /// happy path).
+    pub rung: Rung,
+    /// Extra diagonal shift of a [`Rung::ShiftedRefactor`] factor (0.0
+    /// below that rung).
+    pub extra_shift: f64,
+    /// The served factor's trust tag: the charged downdate trust on rung
+    /// 1, a fresh tag after any refactorization.
+    pub trust: FactorTrust,
+    /// `Some` when the ladder climbed above [`Rung::Downdate`] — why, and
+    /// the drift bound at the moment of failure — for the engine to turn
+    /// into a [`Degradation`] record.
+    pub degraded: Option<DegradeInfo>,
 }
 
 /// Per-fold sweep output.
@@ -433,6 +475,11 @@ pub struct CvConfig {
     /// `--fold-strategy`. Curves agree within rounding; the strategies are
     /// pinned against each other by the cross-mode conformance suite.
     pub fold_strategy: FoldStrategy,
+    /// The numerical-trust knobs: factor drift/hop budget, bounded
+    /// growing-shift retries, per-task panic retries — one
+    /// [`RecoveryPolicy`] drives every escalation decision of the run.
+    /// TOML: `[trust]`; CLI: `--trust-budget` and friends.
+    pub recovery: RecoveryPolicy,
 }
 
 impl Default for CvConfig {
@@ -452,6 +499,7 @@ impl Default for CvConfig {
             chunk_rows: 0,
             mode: CvMode::KFold,
             fold_strategy: FoldStrategy::Downdate,
+            recovery: RecoveryPolicy::default(),
         }
     }
 }
@@ -475,10 +523,11 @@ pub struct CvReport {
     pub fold_bests: Vec<(f64, f64)>,
     /// Probe trajectories per fold (Figure 9; empty for grid algorithms).
     pub probes: Vec<Vec<Probe>>,
-    /// Recorded breakdown fallbacks of the factor-level path, in ascending
-    /// (fold, grid-index) order — empty on the happy path and on
-    /// [`FoldStrategy::Refactor`] runs.
-    pub fallbacks: Vec<FoldFallback>,
+    /// Recorded escalations of the unified recovery ladder — breakdowns,
+    /// drift-budget refactorizations, shifted retries, skips, and panic
+    /// quarantines — in ascending (fold, grid-index) order; empty on the
+    /// happy path.
+    pub degradations: Vec<Degradation>,
     /// The micro-kernel backend every GEMM of this run dispatched to
     /// ([`crate::linalg::kernel::active_backend`]): `"scalar"`, `"avx2"`, or
     /// `"neon"`. All backends are bit-identical; this records which one ran.
@@ -521,6 +570,9 @@ pub fn run_cv(
              call cv::loo::run_loo (or Coordinator::run_loo) instead"
         );
     }
+    // ingest validation: non-finite rows/labels or shape mismatches are
+    // structured errors here, never NaNs inside a factor
+    gram::validate_rows(&ds.x, &ds.y)?;
     let plan = SweepPlan::new(ds, kind, cfg);
     let engine = SweepEngine::new(plan.threads);
     Ok(aggregate_sweep(engine.run(ds, &plan)?))
@@ -537,7 +589,7 @@ pub fn aggregate_sweep(report: SweepReport) -> CvReport {
         fold_results,
         timer,
         wall_secs,
-        fallbacks,
+        degradations,
         kernel_backend,
         fold_strategy,
         strategy_source,
@@ -551,7 +603,11 @@ pub fn aggregate_sweep(report: SweepReport) -> CvReport {
     let mut log_lambda_sum = 0.0;
     let mut best_err_sum = 0.0;
 
-    let k = fold_results.len() as f64;
+    // folds whose every cell was skipped (quarantined task, ladder
+    // exhausted everywhere) carry a non-finite best — leave them out of the
+    // means instead of poisoning the aggregate; on the happy path this is
+    // bit-for-bit the old k-fold mean
+    let mut finite_folds = 0usize;
     for result in fold_results {
         for (i, &e) in result.errors.iter().enumerate() {
             if e.is_finite() {
@@ -559,8 +615,11 @@ pub fn aggregate_sweep(report: SweepReport) -> CvReport {
                 cnt_errors[i] += 1;
             }
         }
-        log_lambda_sum += result.best_lambda.ln();
-        best_err_sum += result.best_error;
+        if result.best_error.is_finite() {
+            log_lambda_sum += result.best_lambda.ln();
+            best_err_sum += result.best_error;
+            finite_folds += 1;
+        }
         fold_bests.push((result.best_lambda, result.best_error));
         probes.push(result.probes);
     }
@@ -571,17 +630,26 @@ pub fn aggregate_sweep(report: SweepReport) -> CvReport {
         .map(|(&s, &c)| if c > 0 { s / c as f64 } else { f64::NAN })
         .collect();
 
+    let k = finite_folds as f64;
     CvReport {
         kind,
         grid,
         mean_errors,
-        best_lambda: (log_lambda_sum / k).exp(),
-        best_error: best_err_sum / k,
+        best_lambda: if finite_folds > 0 {
+            (log_lambda_sum / k).exp()
+        } else {
+            f64::NAN
+        },
+        best_error: if finite_folds > 0 {
+            best_err_sum / k
+        } else {
+            f64::NAN
+        },
         timer,
         wall_secs,
         fold_bests,
         probes,
-        fallbacks,
+        degradations,
         kernel_backend,
         fold_strategy,
         strategy_source,
@@ -619,7 +687,7 @@ mod tests {
         // phase; per-(fold, λ) factors come from `fold_downdate`
         assert!(rep.timer.get("factor") > 0.0);
         assert!(rep.timer.get("fold_downdate") > 0.0);
-        assert!(rep.fallbacks.is_empty());
+        assert!(rep.degradations.is_empty());
         // shared-Gram pipeline: one assembly per run, one downdate per fold,
         // and no per-fold `hessian` SYRK anywhere
         assert_eq!(rep.timer.count("gram"), 1);
@@ -641,7 +709,7 @@ mod tests {
         assert_eq!(rep.timer.count("chol"), 3 * 9, "one chol per (fold, λ)");
         assert_eq!(rep.timer.count("factor"), 0);
         assert_eq!(rep.timer.count("fold_downdate"), 0);
-        assert!(rep.fallbacks.is_empty());
+        assert!(rep.degradations.is_empty());
     }
 
     #[test]
@@ -702,15 +770,19 @@ mod tests {
         let gram = GramCache::assemble(&ds.x, &ds.y);
         let mut t = PhaseTimer::new();
         let mut scratch = Scratch::new();
+        let policy = RecoveryPolicy::default();
         for lam in [1e-2, 0.3] {
             let anchor = cholesky_shifted(gram.hessian(), lam).unwrap();
+            let trust = FactorTrust::fresh(&anchor);
             for fold in kfold(ds.n(), 5, 1) {
                 let (xv, yv) = fold.materialize_val(&ds.x, &ds.y);
                 let fd = FoldData::from_gram(&gram, xv, yv, None, &mut t);
                 let ff = fd
-                    .factor_from_anchor(&anchor, lam, &mut scratch, &mut t)
+                    .factor_from_anchor(&anchor, trust, lam, &policy, &mut scratch, &mut t)
                     .unwrap();
-                assert!(ff.fell_back.is_none());
+                assert!(ff.degraded.is_none());
+                assert_eq!(ff.rung, Rung::Downdate);
+                assert!(ff.trust.hops() == trust.hops() + 1, "one charged hop");
                 let oracle = cholesky_shifted(&fd.h_mat, lam).unwrap();
                 assert!(
                     scratch.factor.max_abs_diff(&oracle) < 1e-9,
@@ -721,6 +793,53 @@ mod tests {
         }
         assert_eq!(t.count("fold_downdate"), 10);
         assert_eq!(t.count("chol"), 0, "happy path never refactorizes");
+    }
+
+    /// The drift budget bites: an impossibly tight budget forces every
+    /// fold factor through the refactor rung, bitwise equal to the direct
+    /// `chol(H_f + λI)` oracle, with the climb recorded as a
+    /// `"drift-budget"` degradation.
+    #[test]
+    fn tight_drift_budget_forces_refactorization() {
+        use crate::data::kfold;
+        use crate::linalg::cholesky::{cholesky_shifted, cholesky_shifted_into};
+        use crate::linalg::trust::TrustBudget;
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 103, 9, 4);
+        let gram = GramCache::assemble(&ds.x, &ds.y);
+        let mut t = PhaseTimer::new();
+        let mut scratch = Scratch::new();
+        let policy = RecoveryPolicy {
+            budget: TrustBudget {
+                max_relative_drift: 1e-300,
+                max_hops: 0,
+            },
+            ..RecoveryPolicy::default()
+        };
+        let lam = 0.3;
+        let anchor = cholesky_shifted(gram.hessian(), lam).unwrap();
+        let trust = FactorTrust::fresh(&anchor);
+        for fold in kfold(ds.n(), 5, 1) {
+            let (xv, yv) = fold.materialize_val(&ds.x, &ds.y);
+            let fd = FoldData::from_gram(&gram, xv, yv, None, &mut t);
+            let ff = fd
+                .factor_from_anchor(&anchor, trust, lam, &policy, &mut scratch, &mut t)
+                .unwrap();
+            assert_eq!(ff.rung, Rung::Refactor);
+            assert_eq!(ff.extra_shift, 0.0);
+            let info = ff.degraded.expect("budget climb must be recorded");
+            assert_eq!(info.cause, "drift-budget");
+            assert!(info.trust_at_failure > 0.0);
+            let mut oracle = Matrix::zeros(0, 0);
+            cholesky_shifted_into(&fd.h_mat, lam, &mut oracle).unwrap();
+            assert_eq!(
+                scratch.factor.as_slice(),
+                oracle.as_slice(),
+                "forced refactorization must be bitwise the refactor oracle"
+            );
+        }
+        // every cell attempted the downdate AND paid the refactorization
+        assert_eq!(t.count("fold_downdate"), 5);
+        assert_eq!(t.count("chol"), 5);
     }
 
     #[test]

@@ -1,0 +1,288 @@
+//! The unified breakdown-escalation ladder and degradation reporting.
+//!
+//! Every factor-producing path in the engine — k-fold downdate chains, LOO
+//! rank-1 chains, anchored-grid tasks — used to carry its own ad-hoc
+//! breakdown policy (skip-and-record in LOO, per-cell refactor fallback in
+//! k-fold, shift-and-retry in `cholesky`). This module replaces them with
+//! **one ladder**, applied uniformly and driven by one [`RecoveryPolicy`]:
+//!
+//! ```text
+//!   rung 1  Downdate         the fast path: reuse the anchor factor via a
+//!                            (tracked) hyperbolic downdate
+//!      │ breakdown, or drift budget exceeded
+//!      ▼
+//!   rung 2  Refactor         full chol(H_f + λI) from the fold's own
+//!                            downdated Gram pair — the strategy-independent
+//!                            oracle, bitwise the refactor strategy's cell
+//!      │ indefinite at λ
+//!      ▼
+//!   rung 3  ShiftedRefactor  chol(H_f + (λ+extra)·I), extra growing by
+//!                            `shift_growth` for at most `max_shift_retries`
+//!                            attempts ([`cholesky_shifted_retry_into`])
+//!      │ still indefinite
+//!      ▼
+//!   rung 4  Skip             the cell's error becomes NaN; aggregation is
+//!                            NaN-aware, the sweep completes
+//! ```
+//!
+//! Climbing above a path's **baseline rung** (rung 1 for the downdate
+//! strategy, rung 2 for the refactor strategy) is recorded as a
+//! [`Degradation`] — which cell, why ([`Degradation::cause`]), how far the
+//! ladder climbed, and the factor's relative drift at the moment of failure
+//! — surfaced in `SweepReport::degradations` / `CvReport::degradations` in
+//! deterministic ascending (fold, grid-index) order. Worker panics ride the
+//! same reporting: a task that keeps panicking after `task_retries`
+//! resubmissions is quarantined, its cells skip to NaN, and the report gains
+//! a `cause: "panic"` entry naming the task.
+
+use crate::linalg::cholesky::{cholesky_shifted_retry_into, CholeskyError, ShiftOutcome};
+use crate::linalg::matrix::Matrix;
+use crate::linalg::trust::TrustBudget;
+use std::fmt;
+
+/// How far up the escalation ladder a cell's factor had to climb.
+///
+/// Ordered: `Downdate < Refactor < ShiftedRefactor < Skip`, so "did this
+/// cell degrade" is `rung > baseline`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rung {
+    /// Rung 1 — the anchor-reuse fast path (tracked hyperbolic downdate).
+    Downdate,
+    /// Rung 2 — full refactorization `chol(H + λI)` from the cell's own
+    /// Gram pair.
+    Refactor,
+    /// Rung 3 — refactorization with a recorded extra diagonal shift
+    /// (the factor solves the *shifted* problem).
+    ShiftedRefactor,
+    /// Rung 4 — the cell was skipped; its error is NaN and aggregation
+    /// ignores it.
+    Skip,
+}
+
+impl Rung {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rung::Downdate => "downdate",
+            Rung::Refactor => "refactor",
+            Rung::ShiftedRefactor => "shifted-refactor",
+            Rung::Skip => "skip",
+        }
+    }
+}
+
+impl fmt::Display for Rung {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One recorded escalation: a cell that had to climb above its path's
+/// baseline rung, carried in `SweepReport::degradations` /
+/// `CvReport::degradations` (ascending (fold, grid-index) order — the
+/// deterministic-merge contract covers degradations too).
+#[derive(Debug, Clone)]
+pub struct Degradation {
+    /// Which engine surface degraded: `"kfold"`, `"loo"`, `"grid"`, or
+    /// `"task"` (worker-panic quarantine).
+    pub surface: &'static str,
+    /// Fold index (k-fold), held-out row (LOO), or task index (`"task"`).
+    pub fold: usize,
+    /// The grid λ of the affected cell (NaN for whole-task entries).
+    pub lambda: f64,
+    /// Why the ladder was climbed: `"breakdown"` (indefinite pivot),
+    /// `"drift-budget"` (trust budget exceeded), or `"panic"` (worker
+    /// panic quarantine).
+    pub cause: &'static str,
+    /// The rung that finally served (or skipped) the cell.
+    pub rung: Rung,
+    /// The factor's relative drift bound at the moment of failure
+    /// ([`crate::linalg::trust::FactorTrust::relative_drift`]); 0.0 when no
+    /// tracked factor was involved (e.g. panics).
+    pub trust: f64,
+    /// Human-readable specifics (failing pivot, extra shift, panic payload).
+    pub detail: String,
+}
+
+impl fmt::Display for Degradation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "[{}] fold {} λ={:.3e}: {} → {} (trust {:.2e}) {}",
+            self.surface, self.fold, self.lambda, self.cause, self.rung, self.trust, self.detail
+        )
+    }
+}
+
+/// The cause and context captured at the moment a ladder climb started —
+/// everything a [`Degradation`] needs except the cell coordinates (and the
+/// final rung), which only the caller knows.
+#[derive(Debug, Clone)]
+pub struct DegradeInfo {
+    /// `"breakdown"` or `"drift-budget"` (see [`Degradation::cause`]).
+    pub cause: &'static str,
+    /// The factor's relative drift bound when the climb started.
+    pub trust_at_failure: f64,
+    /// Human-readable specifics (failing pivot, drift vs budget, …).
+    pub detail: String,
+}
+
+impl DegradeInfo {
+    /// Attach the cell coordinates and final rung to produce the report
+    /// entry.
+    pub fn into_degradation(
+        self,
+        surface: &'static str,
+        fold: usize,
+        lambda: f64,
+        rung: Rung,
+    ) -> Degradation {
+        Degradation {
+            surface,
+            fold,
+            lambda,
+            cause: self.cause,
+            rung,
+            trust: self.trust_at_failure,
+            detail: self.detail,
+        }
+    }
+}
+
+/// The one knob set that drives every recovery decision in the engine —
+/// TOML `[trust]`, CLI `--trust-*` flags.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RecoveryPolicy {
+    /// Drift/hop budget on reused factors; exceeding it forces a full
+    /// refactorization (cause `"drift-budget"`).
+    pub budget: TrustBudget,
+    /// Bounded growing-shift retries of ladder rung 3 (0 disables the
+    /// rung — breakdown at rung 2 skips straight to rung 4).
+    pub max_shift_retries: u32,
+    /// Per-attempt growth factor of the rung-3 extra shift (values ≤ 1
+    /// are coerced to 10).
+    pub shift_growth: f64,
+    /// Resubmissions of a panicking sweep task before it is quarantined
+    /// and its cells skip to NaN.
+    pub task_retries: u32,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        Self {
+            budget: TrustBudget::default(),
+            max_shift_retries: 4,
+            shift_growth: 10.0,
+            task_retries: 1,
+        }
+    }
+}
+
+impl RecoveryPolicy {
+    /// A policy whose drift budget never bites — rungs 2–4 still apply on
+    /// genuine breakdowns (the pre-trust engine behavior).
+    pub fn unlimited() -> Self {
+        Self {
+            budget: TrustBudget::unlimited(),
+            ..Self::default()
+        }
+    }
+}
+
+/// Rungs 2–3 in one call: full refactorization `chol(h + λI)` into `out`,
+/// escalating to bounded growing-shift retries on breakdown. Returns the
+/// rung that served the factor and the extra shift it needed (0.0 at rung
+/// 2). `Err` means rung 3 is exhausted too — the caller's only move left is
+/// rung 4 (skip-and-record).
+pub fn refactor_ladder(
+    h: &Matrix,
+    lam: f64,
+    out: &mut Matrix,
+    policy: &RecoveryPolicy,
+) -> Result<(Rung, f64), CholeskyError> {
+    let ShiftOutcome {
+        extra_shift,
+        attempts,
+    } = cholesky_shifted_retry_into(h, lam, out, policy.max_shift_retries, policy.shift_growth)?;
+    if attempts == 0 {
+        Ok((Rung::Refactor, 0.0))
+    } else {
+        Ok((Rung::ShiftedRefactor, extra_shift))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::Gemm;
+    use crate::testutil::random_matrix;
+
+    #[test]
+    fn rungs_are_ordered_and_named() {
+        assert!(Rung::Downdate < Rung::Refactor);
+        assert!(Rung::Refactor < Rung::ShiftedRefactor);
+        assert!(Rung::ShiftedRefactor < Rung::Skip);
+        assert_eq!(Rung::ShiftedRefactor.name(), "shifted-refactor");
+        assert_eq!(Rung::Skip.to_string(), "skip");
+    }
+
+    #[test]
+    fn default_policy_matches_documented_knobs() {
+        let p = RecoveryPolicy::default();
+        assert_eq!(p.max_shift_retries, 4);
+        assert_eq!(p.shift_growth, 10.0);
+        assert_eq!(p.task_retries, 1);
+        assert_eq!(p.budget, crate::linalg::trust::TrustBudget::default());
+        assert!(!RecoveryPolicy::unlimited()
+            .budget
+            .max_relative_drift
+            .is_finite());
+    }
+
+    #[test]
+    fn ladder_serves_spd_at_rung_two_with_no_extra() {
+        let x = random_matrix(50, 20, 11);
+        let h = crate::linalg::gemm::syrk_lower(&x);
+        let mut out = Matrix::zeros(0, 0);
+        let (rung, extra) = refactor_ladder(&h, 0.2, &mut out, &RecoveryPolicy::default()).unwrap();
+        assert_eq!(rung, Rung::Refactor);
+        assert_eq!(extra, 0.0);
+    }
+
+    #[test]
+    fn ladder_escalates_to_shifted_refactor_on_rank_deficiency() {
+        let xt = random_matrix(12, 5, 7);
+        let g = Gemm::default().a_bt(&xt, &xt); // 12×12, rank ≤ 5
+        let mut out = Matrix::zeros(0, 0);
+        let policy = RecoveryPolicy {
+            max_shift_retries: 8,
+            ..RecoveryPolicy::default()
+        };
+        let (rung, extra) = refactor_ladder(&g, 0.0, &mut out, &policy).unwrap();
+        assert_eq!(rung, Rung::ShiftedRefactor);
+        assert!(extra > 0.0);
+    }
+
+    #[test]
+    fn exhausted_ladder_reports_the_breakdown() {
+        let mut bad = Matrix::eye(5);
+        bad[(2, 2)] = -1e12;
+        let mut out = Matrix::zeros(0, 0);
+        let err = refactor_ladder(&bad, 1e-3, &mut out, &RecoveryPolicy::default()).unwrap_err();
+        assert_eq!(err.pivot, 2);
+    }
+
+    #[test]
+    fn degradation_display_names_the_cell() {
+        let d = Degradation {
+            surface: "kfold",
+            fold: 3,
+            lambda: 1e-2,
+            cause: "breakdown",
+            rung: Rung::Refactor,
+            trust: 2.5e-13,
+            detail: "pivot 0".into(),
+        };
+        let s = d.to_string();
+        assert!(s.contains("kfold") && s.contains("fold 3") && s.contains("refactor"), "{s}");
+    }
+}

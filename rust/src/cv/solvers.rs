@@ -10,8 +10,10 @@
 //! | `RSvd`    | Randomized SVD | Halko sketch, then eq. 11 |
 //! | `Pinrmse` | PINRMSE | interpolate the error curve itself (Figure 10) |
 
+use super::recovery::{self, DegradeInfo, RecoveryPolicy, Rung};
 use super::{holdout_error_with, CvConfig, FoldData, Metric, SweepResult};
 use crate::linalg::cholesky::{cholesky_shifted_into, CholeskyError};
+use crate::linalg::trust::FactorTrust;
 use crate::pichol::Interpolant;
 use crate::linalg::lanczos::lanczos_svd;
 use crate::linalg::matrix::Matrix;
@@ -141,37 +143,38 @@ pub(crate) fn eval_exact_point(
     }))
 }
 
+/// The per-cell escalation outcome of a recovering grid evaluation: `None`
+/// on a baseline-rung cell, `Some((rung, info))` when the ladder climbed —
+/// including [`Rung::Skip`], where the cell's error is NaN.
+pub(crate) type CellDegrade = Option<(Rung, DegradeInfo)>;
+
 /// One **factor-level** grid-point evaluation — the task body of the
 /// [`crate::cv::FoldStrategy::Downdate`] sweep (shared by the engine's
 /// parallel grid tasks; there is no other call site, so parallel results
 /// are a pure function of the inputs). The fold factor comes from
 /// [`FoldData::factor_from_anchor`] — the shared `chol(G + λI)` anchor
-/// downdated by the fold's validation rows, with the refactorize fallback
-/// on breakdown — then the identical solve + hold-out scoring as
-/// [`eval_exact_point`]. Returns the hold-out error plus the recorded
-/// breakdown when the fallback path served this cell; `Err` only when even
-/// the fallback refactorization found `H_f + λI` indefinite.
+/// downdated by the fold's validation rows, escalating through the unified
+/// recovery ladder on breakdown or drift-budget exhaustion — then the
+/// identical solve + hold-out scoring as [`eval_exact_point`]. Never
+/// fails: an exhausted ladder returns a NaN cell with a [`Rung::Skip`]
+/// record, so one hopeless cell degrades one report entry.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn eval_anchored_point(
     data: &FoldData,
     anchor: &Matrix,
+    anchor_trust: FactorTrust,
     lam: f64,
     metric: Metric,
+    policy: &RecoveryPolicy,
     scratch: &mut Scratch,
     timer: &mut PhaseTimer,
-) -> Result<(f64, Option<CholeskyError>), CholeskyError> {
-    let fold_factor = data.factor_from_anchor(anchor, lam, scratch, timer)?;
-    timer.time("solve", || {
-        solve_cholesky_into(
-            &scratch.factor,
-            &data.g_vec,
-            &mut scratch.work,
-            &mut scratch.theta,
-        )
-    });
-    let err = timer.time("holdout", || {
-        holdout_error_with(&data.xv, &data.yv, &scratch.theta, metric, &mut scratch.pred)
-    });
-    Ok((err, fold_factor.fell_back))
+) -> (f64, CellDegrade) {
+    let fold_factor =
+        match data.factor_from_anchor(anchor, anchor_trust, lam, policy, scratch, timer) {
+            Ok(ff) => ff,
+            Err(err) => return (f64::NAN, skip_cell(anchor_trust, err)),
+        };
+    finish_anchored_cell(data, fold_factor, metric, scratch, timer)
 }
 
 /// [`eval_anchored_point`] with the fold's update block gathered once by
@@ -180,16 +183,47 @@ pub(crate) fn eval_anchored_point(
 /// cell ([`FoldData::factor_from_anchor_pregathered`], a contiguous memcpy
 /// instead of a strided re-gather). Bitwise identical to
 /// [`eval_anchored_point`] on the same inputs.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn eval_anchored_point_pregathered(
     data: &FoldData,
     anchor: &Matrix,
+    anchor_trust: FactorTrust,
     gathered: &Matrix,
     lam: f64,
     metric: Metric,
+    policy: &RecoveryPolicy,
     scratch: &mut Scratch,
     timer: &mut PhaseTimer,
-) -> Result<(f64, Option<CholeskyError>), CholeskyError> {
-    let fold_factor = data.factor_from_anchor_pregathered(anchor, gathered, lam, scratch, timer)?;
+) -> (f64, CellDegrade) {
+    let fold_factor = match data
+        .factor_from_anchor_pregathered(anchor, anchor_trust, gathered, lam, policy, scratch, timer)
+    {
+        Ok(ff) => ff,
+        Err(err) => return (f64::NAN, skip_cell(anchor_trust, err)),
+    };
+    finish_anchored_cell(data, fold_factor, metric, scratch, timer)
+}
+
+/// Rung 4 in cell form: a NaN error plus the skip record.
+fn skip_cell(anchor_trust: FactorTrust, err: CholeskyError) -> CellDegrade {
+    Some((
+        Rung::Skip,
+        DegradeInfo {
+            cause: "breakdown",
+            trust_at_failure: anchor_trust.relative_drift(),
+            detail: format!("ladder exhausted: {err}"),
+        },
+    ))
+}
+
+/// The shared solve + hold-out tail of both anchored task bodies.
+fn finish_anchored_cell(
+    data: &FoldData,
+    fold_factor: crate::cv::FoldFactor,
+    metric: Metric,
+    scratch: &mut Scratch,
+    timer: &mut PhaseTimer,
+) -> (f64, CellDegrade) {
     timer.time("solve", || {
         solve_cholesky_into(
             &scratch.factor,
@@ -201,7 +235,65 @@ pub(crate) fn eval_anchored_point_pregathered(
     let err = timer.time("holdout", || {
         holdout_error_with(&data.xv, &data.yv, &scratch.theta, metric, &mut scratch.pred)
     });
-    Ok((err, fold_factor.fell_back))
+    let rung = fold_factor.rung;
+    (err, fold_factor.degraded.map(|info| (rung, info)))
+}
+
+/// [`eval_exact_point`] under the unified recovery ladder — the
+/// [`crate::cv::FoldStrategy::Refactor`] grid-task body. The baseline rung
+/// here is [`Rung::Refactor`] (the first attempt is bitwise
+/// [`cholesky_shifted_into`], so happy-path cells are untouched); on
+/// breakdown the cell escalates to bounded growing-shift retries and
+/// finally to a NaN skip — it never fails the task.
+pub(crate) fn eval_exact_point_recovering(
+    data: &FoldData,
+    lam: f64,
+    metric: Metric,
+    policy: &RecoveryPolicy,
+    scratch: &mut Scratch,
+    timer: &mut PhaseTimer,
+) -> (f64, CellDegrade) {
+    let ladder = timer.time("chol", || {
+        recovery::refactor_ladder(&data.h_mat, lam, &mut scratch.factor, policy)
+    });
+    let (rung, extra_shift) = match ladder {
+        Ok(v) => v,
+        Err(err) => {
+            return (
+                f64::NAN,
+                Some((
+                    Rung::Skip,
+                    DegradeInfo {
+                        cause: "breakdown",
+                        trust_at_failure: 0.0,
+                        detail: format!("ladder exhausted: {err}"),
+                    },
+                )),
+            )
+        }
+    };
+    timer.time("solve", || {
+        solve_cholesky_into(
+            &scratch.factor,
+            &data.g_vec,
+            &mut scratch.work,
+            &mut scratch.theta,
+        )
+    });
+    let err = timer.time("holdout", || {
+        holdout_error_with(&data.xv, &data.yv, &scratch.theta, metric, &mut scratch.pred)
+    });
+    let degrade = (rung > Rung::Refactor).then(|| {
+        (
+            rung,
+            DegradeInfo {
+                cause: "breakdown",
+                trust_at_failure: 0.0,
+                detail: format!("served with extra shift {extra_shift:.3e}"),
+            },
+        )
+    });
+    (err, degrade)
 }
 
 /// One interpolated grid-point evaluation (piCholesky's payoff step) —

@@ -57,6 +57,75 @@ use crate::linalg::gemm::{gemv_t, syrk_lower, syrk_lower_bands_into};
 use crate::linalg::kernel::{self, Acc};
 use crate::linalg::matrix::Matrix;
 use crate::linalg::scratch::Scratch;
+use std::fmt;
+
+/// Structured rejection of a bad ingest block — the validation gate of the
+/// numerical-trust subsystem (see [`crate::cv::recovery`]).
+///
+/// A single NaN row silently poisons the *entire* Gram (every `G[i][j]`
+/// touching that row goes NaN, then every fold Hessian, then every factor),
+/// so non-finite data must be stopped at the door rather than diagnosed
+/// three layers deep as a mysterious [`crate::linalg::cholesky::CholeskyError`].
+/// Both the dataset entry points ([`validate_rows`], called by
+/// `cv::run_cv` / the sweep engine's LOO path) and the streaming mutator
+/// [`GramCache::append_rows`] reject with this error instead of asserting.
+#[derive(Debug, Clone, PartialEq)]
+pub enum IngestError {
+    /// A feature value is NaN or ±Inf.
+    NonFinite { row: usize, col: usize, value: f64 },
+    /// A label is NaN or ±Inf.
+    NonFiniteLabel { row: usize, value: f64 },
+    /// An appended block's feature dimension disagrees with the cache.
+    DimMismatch { expected: usize, got: usize },
+    /// Feature rows and labels disagree in count.
+    LabelMismatch { rows: usize, labels: usize },
+}
+
+impl fmt::Display for IngestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IngestError::NonFinite { row, col, value } => {
+                write!(f, "non-finite feature value {value} at row {row}, col {col}")
+            }
+            IngestError::NonFiniteLabel { row, value } => {
+                write!(f, "non-finite label {value} at row {row}")
+            }
+            IngestError::DimMismatch { expected, got } => {
+                write!(f, "feature dimension mismatch: cache holds {expected}, block has {got}")
+            }
+            IngestError::LabelMismatch { rows, labels } => {
+                write!(f, "row/label count mismatch: {rows} rows vs {labels} labels")
+            }
+        }
+    }
+}
+
+impl std::error::Error for IngestError {}
+
+/// Validate one (features, labels) block for ingest: matching row/label
+/// counts and every value finite. Returns the **first** offender (row-major
+/// over features, then labels) so the error names a reproducible location.
+pub fn validate_rows(x: &Matrix, y: &[f64]) -> Result<(), IngestError> {
+    if x.rows() != y.len() {
+        return Err(IngestError::LabelMismatch {
+            rows: x.rows(),
+            labels: y.len(),
+        });
+    }
+    for r in 0..x.rows() {
+        for (c, &v) in x.row(r).iter().enumerate() {
+            if !v.is_finite() {
+                return Err(IngestError::NonFinite { row: r, col: c, value: v });
+            }
+        }
+    }
+    for (r, &v) in y.iter().enumerate() {
+        if !v.is_finite() {
+            return Err(IngestError::NonFiniteLabel { row: r, value: v });
+        }
+    }
+    Ok(())
+}
 
 /// Row-segment length of the streaming accumulator — equal to the packed
 /// kernel's `KC` so every segment is exactly one internal k-chunk of a
@@ -245,9 +314,18 @@ impl GramCache {
     /// fold sequence, so the result is rounding-level (not bitwise) equal to
     /// a fresh assembly of the grown dataset — same contract as the
     /// per-fold downdates.
-    pub fn append_rows(&mut self, x_new: &Matrix, y_new: &[f64]) {
-        assert_eq!(x_new.rows(), y_new.len(), "appended block shape mismatch");
-        assert_eq!(x_new.cols(), self.h.rows(), "appended block dim mismatch");
+    ///
+    /// The block is validated before any mutation ([`validate_rows`] plus a
+    /// feature-dimension check): on [`Err`]`(`[`IngestError`]`)` the cache
+    /// is untouched — a half-folded poisoned block would be unrecoverable.
+    pub fn append_rows(&mut self, x_new: &Matrix, y_new: &[f64]) -> Result<(), IngestError> {
+        if x_new.cols() != self.h.rows() {
+            return Err(IngestError::DimMismatch {
+                expected: self.h.rows(),
+                got: x_new.cols(),
+            });
+        }
+        validate_rows(x_new, y_new)?;
         syrk_lower_bands_into(x_new, 0, x_new.rows(), &mut self.h, Acc::Add);
         self.h.mirror_lower();
         for (i, &yi) in y_new.iter().enumerate() {
@@ -256,6 +334,7 @@ impl GramCache {
             }
         }
         self.n += x_new.rows();
+        Ok(())
     }
 
     /// Remove `m` retired rows incrementally: `G −= X_oldᵀX_old`,
@@ -389,7 +468,7 @@ mod tests {
         let y_new = y[n..].to_vec();
 
         let mut cache = GramCache::assemble(&x0, &y0);
-        cache.append_rows(&x_new, &y_new);
+        cache.append_rows(&x_new, &y_new).unwrap();
         assert_eq!(cache.n_rows(), n + m);
         let full = GramCache::assemble(&x, &y);
         assert!(
@@ -415,6 +494,73 @@ mod tests {
         for (a, b) in cache.gradient().iter().zip(base.gradient()) {
             assert!((a - b).abs() < 1e-10);
         }
+    }
+
+    /// Ingest validation pins the exact offender: NaN/Inf features, NaN
+    /// labels, and row/label miscounts each map to their structured variant,
+    /// and a clean block passes.
+    #[test]
+    fn validate_rows_rejects_non_finite_and_mismatched_blocks() {
+        let (x, y) = dataset(30, 7, 0xBAD);
+        assert_eq!(validate_rows(&x, &y), Ok(()));
+
+        let mut xb = x.clone();
+        xb[(12, 3)] = f64::NAN;
+        match validate_rows(&xb, &y) {
+            Err(IngestError::NonFinite { row: 12, col: 3, value }) => assert!(value.is_nan()),
+            other => panic!("expected NonFinite at (12, 3), got {other:?}"),
+        }
+
+        let mut xb = x.clone();
+        xb[(0, 0)] = f64::INFINITY;
+        assert!(matches!(
+            validate_rows(&xb, &y),
+            Err(IngestError::NonFinite { row: 0, col: 0, .. })
+        ));
+
+        let mut yb = y.clone();
+        yb[5] = f64::NEG_INFINITY;
+        assert!(matches!(
+            validate_rows(&x, &yb),
+            Err(IngestError::NonFiniteLabel { row: 5, .. })
+        ));
+
+        assert_eq!(
+            validate_rows(&x, &y[..29]),
+            Err(IngestError::LabelMismatch { rows: 30, labels: 29 })
+        );
+    }
+
+    /// A rejected append must leave the cache bitwise untouched — validation
+    /// happens before any accumulation.
+    #[test]
+    fn append_rows_rejects_bad_blocks_without_mutating() {
+        let (x, y) = dataset(60, 7, 0xFACE);
+        let mut cache = GramCache::assemble(&x, &y);
+        let before_h = cache.hessian().as_slice().to_vec();
+        let before_g = cache.gradient().to_vec();
+
+        let mut x_bad = random_matrix(4, 7, 9);
+        x_bad[(2, 5)] = f64::NAN;
+        let y_bad = vec![1.0; 4];
+        assert!(matches!(
+            cache.append_rows(&x_bad, &y_bad),
+            Err(IngestError::NonFinite { row: 2, col: 5, .. })
+        ));
+
+        let x_narrow = random_matrix(4, 5, 9);
+        assert_eq!(
+            cache.append_rows(&x_narrow, &y_bad),
+            Err(IngestError::DimMismatch { expected: 7, got: 5 })
+        );
+
+        assert_eq!(cache.hessian().as_slice(), &before_h[..]);
+        assert_eq!(cache.gradient(), &before_g[..]);
+        assert_eq!(cache.n_rows(), 60);
+
+        // error text names the location (what a log line will show)
+        let err = IngestError::NonFinite { row: 2, col: 5, value: f64::NAN };
+        assert!(err.to_string().contains("row 2, col 5"), "{err}");
     }
 
     #[test]

@@ -20,24 +20,19 @@ use std::sync::Arc;
 
 /// Factorization failure: the matrix is not (numerically) positive-definite.
 ///
-/// # Recovery semantics (shift-and-retry)
+/// # Recovery semantics (the escalation ladder)
 ///
 /// In the cross-validation setting `A = H + λI` with `H = XᵀX ⪰ 0`, so a
 /// failure means λ is too small relative to the rank deficiency / rounding
-/// noise of `H`. The standard recovery is to **increase the shift and
-/// retry**: call [`cholesky_shifted`] again with a larger λ (e.g. the next
-/// grid point, or `λ + ε·trace(H)/d`). Every caller in this crate follows
-/// one of two policies:
-///
-/// - *grid sweeps* ([`crate::cv`], the sweep engine) propagate the error
-///   and the whole sweep aborts with it (in-flight parallel tasks drain
-///   first) — a λ grid whose low end leaves `H + λI` indefinite is a
-///   misconfigured search range, and the fix is to rerun with a larger
-///   `lambda_range` lower bound (the retry happens at the configuration
-///   level, not per grid point);
-/// - *fixed-λ call sites* (MChol probes, tests) treat the error as a
-///   precondition violation, because their λ ranges are bounded away from
-///   zero by construction.
+/// noise of `H`. Every engine path in this crate now recovers through **one
+/// unified ladder** ([`crate::cv::recovery::RecoveryPolicy`]): downdate →
+/// refactor → shifted refactor with bounded growing-shift retries
+/// ([`cholesky_shifted_retry_into`]) → skip-and-record. A breakdown degrades
+/// the one affected cell/row into the report's `degradations` section; it
+/// never aborts a sweep and never panics. Fixed-λ call sites outside the
+/// engine (MChol probes, tests) still treat the error as a precondition
+/// violation, because their λ ranges are bounded away from zero by
+/// construction.
 ///
 /// The struct carries the failing pivot index and value so callers can size
 /// a retry shift if they choose to.
@@ -195,6 +190,67 @@ pub fn cholesky_shifted_into(h: &Matrix, lam: f64, out: &mut Matrix) -> Result<(
     out.copy_from(h);
     out.add_diag_in_place(lam);
     cholesky_in_place(out, 64)
+}
+
+/// Outcome of a successful [`cholesky_shifted_retry_into`]: how much extra
+/// diagonal shift (beyond the requested λ) the factorization needed, and how
+/// many retry attempts it took (`0` = the plain shift succeeded).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShiftOutcome {
+    /// Extra shift added on top of λ (0.0 when none was needed).
+    pub extra_shift: f64,
+    /// Retry attempts consumed (0 = first try).
+    pub attempts: u32,
+}
+
+/// `chol(H + (λ + extra)·I)` with **bounded growing-shift retries** — rung 3
+/// of the breakdown-escalation ladder.
+///
+/// Tries the plain shift first ([`cholesky_shifted_into`], bitwise the hot
+/// path when it succeeds); on breakdown retries with an extra diagonal shift
+/// that starts at `ε·max(trace(H)/d, λ)` (the smallest perturbation that can
+/// register against the matrix's own scale) and grows by `growth` each
+/// attempt, at most `max_retries` times. Returns the extra shift actually
+/// used so the caller can record the approximation in its degradation
+/// report; the factor in `out` then solves the *shifted* problem, which is
+/// the documented accuracy trade of this rung. The final error is returned
+/// when every attempt fails (`out` holds an unusable partial factor).
+pub fn cholesky_shifted_retry_into(
+    h: &Matrix,
+    lam: f64,
+    out: &mut Matrix,
+    max_retries: u32,
+    growth: f64,
+) -> Result<ShiftOutcome, CholeskyError> {
+    match cholesky_shifted_into(h, lam, out) {
+        Ok(()) => Ok(ShiftOutcome {
+            extra_shift: 0.0,
+            attempts: 0,
+        }),
+        Err(first) => {
+            let d = h.rows().max(1);
+            let trace: f64 = (0..h.rows()).map(|i| h[(i, i)].abs()).sum();
+            let mut extra = (f64::EPSILON * (trace / d as f64).max(lam.abs()))
+                .max(f64::MIN_POSITIVE);
+            let growth = if growth > 1.0 { growth } else { 10.0 };
+            let mut last = first;
+            for attempt in 1..=max_retries {
+                match cholesky_shifted_into(h, lam + extra, out) {
+                    Ok(()) => {
+                        return Ok(ShiftOutcome {
+                            extra_shift: extra,
+                            attempts: attempt,
+                        })
+                    }
+                    Err(e) => {
+                        last = e;
+                        extra *= growth;
+                    }
+                }
+            }
+            Err(last)
+        }
+    }
 }
 
 /// Evenly split `lo..hi` into at most `parts` non-empty contiguous ranges.
@@ -468,6 +524,48 @@ mod tests {
         let mut p = a.clone();
         let err = cholesky_in_place_pooled(&mut p, 32, &pool).unwrap_err();
         assert_eq!(err.pivot, 150);
+    }
+
+    /// Rung-3 helper: plain shift success is bitwise the hot path with zero
+    /// extra; an indefinite-at-λ problem recovers with a recorded extra
+    /// shift; a hopeless problem (negative diagonal far beyond any bounded
+    /// shift) returns the last error instead of looping forever.
+    #[test]
+    fn shifted_retry_ladder_semantics() {
+        // success on first try: bitwise cholesky_shifted_into, no extra
+        let x = crate::testutil::random_matrix(60, 24, 5);
+        let h = crate::linalg::gemm::syrk_lower(&x);
+        let mut out = Matrix::zeros(0, 0);
+        let outcome = cholesky_shifted_retry_into(&h, 0.3, &mut out, 4, 10.0).unwrap();
+        assert_eq!(
+            outcome,
+            ShiftOutcome {
+                extra_shift: 0.0,
+                attempts: 0
+            }
+        );
+        let mut direct = Matrix::zeros(0, 0);
+        cholesky_shifted_into(&h, 0.3, &mut direct).unwrap();
+        assert_eq!(out.as_slice(), direct.as_slice());
+
+        // rank-deficient at λ=0: the growing shift must rescue it and
+        // report a positive extra
+        let xt = crate::testutil::random_matrix(10, 4, 3);
+        let g = crate::linalg::gemm::Gemm::default().a_bt(&xt, &xt); // 10×10 rank ≤ 4
+        let outcome = cholesky_shifted_retry_into(&g, 0.0, &mut out, 8, 10.0).unwrap();
+        assert!(outcome.extra_shift > 0.0);
+        assert!(outcome.attempts >= 1);
+        // the factor really factors G + extra·I
+        let rec = gemm(&out, &out.transpose());
+        let target = g.add_diag(outcome.extra_shift);
+        assert_matrix_close(&rec, &target, 1e-6);
+
+        // hopeless: a large negative diagonal entry survives every bounded
+        // retry → the last error comes back
+        let mut bad = Matrix::eye(6);
+        bad[(3, 3)] = -1e9;
+        let err = cholesky_shifted_retry_into(&bad, 1e-3, &mut out, 3, 10.0).unwrap_err();
+        assert_eq!(err.pivot, 3);
     }
 
     #[test]

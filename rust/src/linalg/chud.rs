@@ -88,6 +88,7 @@
 use super::cholesky::CholeskyError;
 use super::kernel::{self, Acc, Src};
 use super::matrix::Matrix;
+use super::trust::{FactorTrust, RotationStats};
 
 /// Panel width of the blocked kernels. Small enough that the `(jb+k)²`
 /// transform stays register/L1-friendly and the extra flops of the composed
@@ -130,6 +131,7 @@ fn chud_in_place(
     block: usize,
     dir: Dir,
     trans: &mut Matrix,
+    stats: &mut RotationStats,
 ) -> Result<(), CholeskyError> {
     assert!(l.is_square(), "chud needs a square factor");
     let n = l.rows();
@@ -140,7 +142,7 @@ fn chud_in_place(
     let mut q0 = 0;
     while q0 < k {
         let q1 = (q0 + CHUD_RANK_CHUNK).min(k);
-        chud_chunk(l, u, k, q0, q1, block, dir, trans)?;
+        chud_chunk(l, u, k, q0, q1, block, dir, trans, stats)?;
         q0 = q1;
     }
     Ok(())
@@ -158,6 +160,7 @@ fn chud_chunk(
     block: usize,
     dir: Dir,
     trans: &mut Matrix,
+    stats: &mut RotationStats,
 ) -> Result<(), CholeskyError> {
     let n = l.rows();
     let kc = q1 - q0;
@@ -198,6 +201,17 @@ fn chud_chunk(
                             r2.sqrt()
                         }
                     };
+                    // drift-budget bookkeeping (rotation identities, see
+                    // super::trust) — pure observation, never touches the
+                    // factor arithmetic
+                    stats.rotations += 1;
+                    stats.pivot_sq_sum += ljj * ljj + vqj * vqj;
+                    if let Dir::Downdate = dir {
+                        let amp = ljj / r;
+                        if amp > stats.amp_max {
+                            stats.amp_max = amp;
+                        }
+                    }
                     let c = r / ljj;
                     let s = vqj / ljj;
                     ld[j * stride + j] = r;
@@ -306,10 +320,45 @@ fn chud_chunk(
 /// the per-worker transform buffer (`Scratch::trans` on the pool paths).
 /// Givens rotations are orthogonal, so the update cannot break down.
 pub fn chol_update(l: &mut Matrix, u: &mut Matrix, trans: &mut Matrix) {
+    let mut stats = RotationStats::new();
     assert_eq!(u.rows(), l.rows(), "update block must have n rows");
     let k = u.cols();
-    chud_in_place(l, u.as_mut_slice(), k, CHUD_BLOCK, Dir::Update, trans)
-        .expect("rank-k Cholesky update cannot break down");
+    chud_in_place(
+        l,
+        u.as_mut_slice(),
+        k,
+        CHUD_BLOCK,
+        Dir::Update,
+        trans,
+        &mut stats,
+    )
+    .expect("rank-k Cholesky update cannot break down");
+}
+
+/// [`chol_update`] with drift accounting: the pass's rotation statistics are
+/// charged to `trust` (see [`super::trust`]). Bitwise identical factor to
+/// the untracked variant.
+pub fn chol_update_tracked(
+    l: &mut Matrix,
+    u: &mut Matrix,
+    trans: &mut Matrix,
+    trust: &mut FactorTrust,
+) {
+    let mut stats = RotationStats::new();
+    assert_eq!(u.rows(), l.rows(), "update block must have n rows");
+    let k = u.cols();
+    let dim = l.rows();
+    chud_in_place(
+        l,
+        u.as_mut_slice(),
+        k,
+        CHUD_BLOCK,
+        Dir::Update,
+        trans,
+        &mut stats,
+    )
+    .expect("rank-k Cholesky update cannot break down");
+    trust.charge(dim, &stats);
 }
 
 /// Rank-k Cholesky **downdate**: rewrite `L` in place so `L·Lᵀ = A − U·Uᵀ`
@@ -321,16 +370,68 @@ pub fn chol_downdate(
     u: &mut Matrix,
     trans: &mut Matrix,
 ) -> Result<(), CholeskyError> {
+    let mut stats = RotationStats::new();
     assert_eq!(u.rows(), l.rows(), "update block must have n rows");
     let k = u.cols();
-    chud_in_place(l, u.as_mut_slice(), k, CHUD_BLOCK, Dir::Downdate, trans)
+    chud_in_place(
+        l,
+        u.as_mut_slice(),
+        k,
+        CHUD_BLOCK,
+        Dir::Downdate,
+        trans,
+        &mut stats,
+    )
+}
+
+/// [`chol_downdate`] with drift accounting: the pass's rotation statistics
+/// are charged to `trust` whether it succeeds or breaks down (on `Err` the
+/// factor is unusable regardless, and the caller escalates). Bitwise
+/// identical factor to the untracked variant.
+pub fn chol_downdate_tracked(
+    l: &mut Matrix,
+    u: &mut Matrix,
+    trans: &mut Matrix,
+    trust: &mut FactorTrust,
+) -> Result<(), CholeskyError> {
+    let mut stats = RotationStats::new();
+    assert_eq!(u.rows(), l.rows(), "update block must have n rows");
+    let k = u.cols();
+    let dim = l.rows();
+    let out = chud_in_place(
+        l,
+        u.as_mut_slice(),
+        k,
+        CHUD_BLOCK,
+        Dir::Downdate,
+        trans,
+        &mut stats,
+    );
+    trust.charge(dim, &stats);
+    out
 }
 
 /// Rank-1 update: `L·Lᵀ ← A + v·vᵀ` (`v` destroyed). The streaming-row
 /// fast path of [`chol_update`].
 pub fn chol_update_rank1(l: &mut Matrix, v: &mut [f64], trans: &mut Matrix) {
-    chud_in_place(l, v, 1, CHUD_BLOCK, Dir::Update, trans)
+    let mut stats = RotationStats::new();
+    chud_in_place(l, v, 1, CHUD_BLOCK, Dir::Update, trans, &mut stats)
         .expect("rank-1 Cholesky update cannot break down");
+}
+
+/// [`chol_update_rank1`] with drift accounting (see
+/// [`chol_update_tracked`]).
+pub fn chol_update_rank1_tracked(
+    l: &mut Matrix,
+    v: &mut [f64],
+    trans: &mut Matrix,
+    trust: &mut FactorTrust,
+) {
+    let mut stats = RotationStats::new();
+    let dim = l.rows();
+    chud_in_place(l, v, 1, CHUD_BLOCK, Dir::Update, trans, &mut stats)
+        .expect("rank-1 Cholesky update cannot break down");
+    trust.charge(dim, &stats);
 }
 
 /// Rank-1 downdate: `L·Lᵀ ← A − v·vᵀ` (`v` destroyed) — the leave-one-out
@@ -341,7 +442,23 @@ pub fn chol_downdate_rank1(
     v: &mut [f64],
     trans: &mut Matrix,
 ) -> Result<(), CholeskyError> {
-    chud_in_place(l, v, 1, CHUD_BLOCK, Dir::Downdate, trans)
+    let mut stats = RotationStats::new();
+    chud_in_place(l, v, 1, CHUD_BLOCK, Dir::Downdate, trans, &mut stats)
+}
+
+/// [`chol_downdate_rank1`] with drift accounting (see
+/// [`chol_downdate_tracked`]) — the trust-aware leave-one-out kernel.
+pub fn chol_downdate_rank1_tracked(
+    l: &mut Matrix,
+    v: &mut [f64],
+    trans: &mut Matrix,
+    trust: &mut FactorTrust,
+) -> Result<(), CholeskyError> {
+    let mut stats = RotationStats::new();
+    let dim = l.rows();
+    let out = chud_in_place(l, v, 1, CHUD_BLOCK, Dir::Downdate, trans, &mut stats);
+    trust.charge(dim, &stats);
+    out
 }
 
 /// The **factor-level fold downdate** — the k-fold engine's task kernel.
@@ -372,13 +489,38 @@ pub fn downdate_rank_k(
     ubuf: &mut Matrix,
     trans: &mut Matrix,
 ) -> Result<(), CholeskyError> {
+    let mut stats = RotationStats::new();
     assert_eq!(
         anchor.rows(),
         xv.cols(),
         "validation rows must match the factor dimension"
     );
     gather_update_block(xv, ubuf);
-    downdate_gathered(anchor, out, ubuf, trans)
+    downdate_gathered(anchor, out, ubuf, trans, &mut stats)
+}
+
+/// [`downdate_rank_k`] with drift accounting: `trust` (normally a clone of
+/// the anchor's fresh tag) is charged with the pass's rotation statistics
+/// whether it succeeds or breaks down. Bitwise identical factor to the
+/// untracked variant.
+pub fn downdate_rank_k_tracked(
+    anchor: &Matrix,
+    xv: &Matrix,
+    out: &mut Matrix,
+    ubuf: &mut Matrix,
+    trans: &mut Matrix,
+    trust: &mut FactorTrust,
+) -> Result<(), CholeskyError> {
+    let mut stats = RotationStats::new();
+    assert_eq!(
+        anchor.rows(),
+        xv.cols(),
+        "validation rows must match the factor dimension"
+    );
+    gather_update_block(xv, ubuf);
+    let out_res = downdate_gathered(anchor, out, ubuf, trans, &mut stats);
+    trust.charge(anchor.rows(), &stats);
+    out_res
 }
 
 /// Gather a fold's validation rows `xv` (`n_v×d`) into the update block
@@ -412,13 +554,37 @@ pub fn downdate_rank_k_pregathered(
     ubuf: &mut Matrix,
     trans: &mut Matrix,
 ) -> Result<(), CholeskyError> {
+    let mut stats = RotationStats::new();
     assert_eq!(
         anchor.rows(),
         u0.rows(),
         "update block must match the factor dimension"
     );
     ubuf.copy_from(u0);
-    downdate_gathered(anchor, out, ubuf, trans)
+    downdate_gathered(anchor, out, ubuf, trans, &mut stats)
+}
+
+/// [`downdate_rank_k_pregathered`] with drift accounting (see
+/// [`downdate_rank_k_tracked`]) — the trust-aware λ-warm-start kernel of the
+/// anchored grid wave.
+pub fn downdate_rank_k_pregathered_tracked(
+    anchor: &Matrix,
+    u0: &Matrix,
+    out: &mut Matrix,
+    ubuf: &mut Matrix,
+    trans: &mut Matrix,
+    trust: &mut FactorTrust,
+) -> Result<(), CholeskyError> {
+    let mut stats = RotationStats::new();
+    assert_eq!(
+        anchor.rows(),
+        u0.rows(),
+        "update block must match the factor dimension"
+    );
+    ubuf.copy_from(u0);
+    let out_res = downdate_gathered(anchor, out, ubuf, trans, &mut stats);
+    trust.charge(anchor.rows(), &stats);
+    out_res
 }
 
 /// Shared tail of the two rank-`k` entry points: `ubuf` already holds the
@@ -428,6 +594,7 @@ fn downdate_gathered(
     out: &mut Matrix,
     ubuf: &mut Matrix,
     trans: &mut Matrix,
+    stats: &mut RotationStats,
 ) -> Result<(), CholeskyError> {
     out.copy_from(anchor);
     let nv = ubuf.cols();
@@ -441,6 +608,7 @@ fn downdate_gathered(
         CHUD_BLOCK,
         Dir::Downdate,
         trans,
+        stats,
     )
 }
 
@@ -622,7 +790,8 @@ mod tests {
             let mut l_one = l0.clone();
             let mut v_one = v.clone();
             let dir = if down { Dir::Downdate } else { Dir::Update };
-            chud_in_place(&mut l_one, &mut v_one, 1, n, dir, &mut trans).unwrap();
+            let mut stats = RotationStats::new();
+            chud_in_place(&mut l_one, &mut v_one, 1, n, dir, &mut trans, &mut stats).unwrap();
             assert_eq!(
                 l_one.as_slice(),
                 l_ref.as_slice(),
@@ -633,7 +802,8 @@ mod tests {
             for block in [1usize, 5, CHUD_BLOCK] {
                 let mut l_b = l0.clone();
                 let mut v_b = v.clone();
-                chud_in_place(&mut l_b, &mut v_b, 1, block, dir, &mut trans).unwrap();
+                let mut stats = RotationStats::new();
+                chud_in_place(&mut l_b, &mut v_b, 1, block, dir, &mut trans, &mut stats).unwrap();
                 assert!(
                     l_b.max_abs_diff(&l_ref) < 1e-10,
                     "block={block} down={down}: {:.2e}",
@@ -747,6 +917,7 @@ mod tests {
         // unchained: one chud_chunk over the whole rank
         let mut l_one = l0.clone();
         let mut u = u0.clone();
+        let mut stats = RotationStats::new();
         chud_chunk(
             &mut l_one,
             u.as_mut_slice(),
@@ -756,6 +927,7 @@ mod tests {
             CHUD_BLOCK,
             Dir::Downdate,
             &mut trans,
+            &mut stats,
         )
         .unwrap();
         assert!(
@@ -876,6 +1048,100 @@ mod tests {
         for workers in [2usize, 4] {
             assert_eq!(run(workers), serial, "bits drifted at workers={workers}");
         }
+    }
+
+    /// The tracked variants produce bitwise the same factor as the untracked
+    /// ones (observation never perturbs arithmetic), charge exactly one hop,
+    /// and hyperbolic passes report amplification ≥ 1.
+    #[test]
+    fn tracked_variants_are_bitwise_untracked_and_charge_trust() {
+        use crate::linalg::trust::FactorTrust;
+        let (d, nv) = (23usize, CHUD_RANK_CHUNK + 1);
+        let x = random_matrix(3 * d + nv, d, 900);
+        let mut a = syrk_lower(&x);
+        a.add_diag_in_place(1.0);
+        let anchor = cholesky_blocked(&a).unwrap();
+        let xv = x.slice(0, nv, 0, d);
+        let mut trans = Matrix::zeros(0, 0);
+
+        // rank-k fold downdate
+        let mut out_plain = Matrix::zeros(0, 0);
+        let mut ubuf = Matrix::zeros(0, 0);
+        downdate_rank_k(&anchor, &xv, &mut out_plain, &mut ubuf, &mut trans).unwrap();
+        let mut out_tracked = Matrix::zeros(0, 0);
+        let mut trust = FactorTrust::fresh(&anchor);
+        downdate_rank_k_tracked(
+            &anchor,
+            &xv,
+            &mut out_tracked,
+            &mut ubuf,
+            &mut trans,
+            &mut trust,
+        )
+        .unwrap();
+        assert_eq!(out_plain.as_slice(), out_tracked.as_slice());
+        assert_eq!(trust.hops(), 1);
+        assert!(trust.drift() > 0.0);
+
+        // pregathered replay charges the same way
+        let mut gbuf = Matrix::zeros(0, 0);
+        gather_update_block(&xv, &mut gbuf);
+        let mut out2 = Matrix::zeros(0, 0);
+        let mut trust2 = FactorTrust::fresh(&anchor);
+        downdate_rank_k_pregathered_tracked(
+            &anchor,
+            &gbuf,
+            &mut out2,
+            &mut ubuf,
+            &mut trans,
+            &mut trust2,
+        )
+        .unwrap();
+        assert_eq!(out_plain.as_slice(), out2.as_slice());
+        assert_eq!(trust2.drift(), trust.drift(), "same pass, same charge");
+
+        // rank-1 pair
+        let v: Vec<f64> = x.row(1).to_vec();
+        let mut l_plain = anchor.clone();
+        let mut vv = v.clone();
+        chol_downdate_rank1(&mut l_plain, &mut vv, &mut trans).unwrap();
+        let mut l_tracked = anchor.clone();
+        let mut vv = v.clone();
+        let mut trust1 = FactorTrust::fresh(&anchor);
+        chol_downdate_rank1_tracked(&mut l_tracked, &mut vv, &mut trans, &mut trust1).unwrap();
+        assert_eq!(l_plain.as_slice(), l_tracked.as_slice());
+        assert_eq!(trust1.hops(), 1);
+
+        // updates charge too, and an update-then-downdate chain is 2 hops
+        let mut l = anchor.clone();
+        let mut u = xv.transpose();
+        let mut trust3 = FactorTrust::fresh(&anchor);
+        chol_update_tracked(&mut l, &mut u, &mut trans, &mut trust3);
+        let mut u = xv.transpose();
+        chol_downdate_tracked(&mut l, &mut u, &mut trans, &mut trust3).unwrap();
+        assert_eq!(trust3.hops(), 2);
+        assert!(trust3.drift() > trust.drift(), "two passes charge more than one");
+        let mut vv = v.clone();
+        let mut trust4 = FactorTrust::fresh(&anchor);
+        let mut l4 = anchor.clone();
+        chol_update_rank1_tracked(&mut l4, &mut vv, &mut trans, &mut trust4);
+        assert_eq!(trust4.hops(), 1);
+    }
+
+    /// A breakdown still charges the trust tag (the factor is poisoned
+    /// either way, and the ladder reads the tag at failure).
+    #[test]
+    fn tracked_breakdown_still_charges() {
+        use crate::linalg::trust::FactorTrust;
+        let n = 9;
+        let mut l = Matrix::eye(n);
+        let mut v = vec![0.0; n];
+        v[4] = 2.0;
+        let mut trans = Matrix::zeros(0, 0);
+        let mut trust = FactorTrust::fresh(&l);
+        let err = chol_downdate_rank1_tracked(&mut l, &mut v, &mut trans, &mut trust).unwrap_err();
+        assert_eq!(err.pivot, 4);
+        assert_eq!(trust.hops(), 1);
     }
 
     /// Round-trips executed as pool tasks are bitwise identical at workers

@@ -17,6 +17,9 @@
 //!   factor at `O(k·d²)` instead of refactorizing — the leave-one-out,
 //!   factor-level k-fold ([`chud::downdate_rank_k`]) and streaming-data
 //!   kernel
+//! - [`trust`] — factor drift budgets: every reused factor carries a cheap
+//!   running upper bound on `‖L·Lᵀ − (G + λI)‖_F` accumulated from the
+//!   rotation identities; a configurable budget forces refactorization
 //! - [`triangular`] — forward/backward substitution and block TRSM
 //! - [`scratch`] — the per-worker solver scratch arena (factor, eval and
 //!   solve buffers reused across sweep tasks)
@@ -42,11 +45,14 @@ pub mod randomized;
 pub mod scratch;
 pub mod svd;
 pub mod triangular;
+pub mod trust;
 
 pub use cholesky::{cholesky_blocked, cholesky_in_place, CholeskyError};
 pub use chud::{
-    chol_downdate, chol_downdate_rank1, chol_update, chol_update_rank1, downdate_rank_k,
-    downdate_rank_k_pregathered, gather_update_block,
+    chol_downdate, chol_downdate_rank1, chol_downdate_rank1_tracked, chol_downdate_tracked,
+    chol_update, chol_update_rank1, chol_update_rank1_tracked, chol_update_tracked,
+    downdate_rank_k, downdate_rank_k_pregathered, downdate_rank_k_pregathered_tracked,
+    downdate_rank_k_tracked, gather_update_block,
 };
 pub use kernel::{active_backend, available_backends, force_backend, KernelBackend};
 pub use gemm::{gemm, gemv, syrk_lower, Gemm};
@@ -57,3 +63,4 @@ pub use randomized::randomized_svd;
 pub use scratch::Scratch;
 pub use svd::jacobi_svd;
 pub use triangular::{solve_cholesky, trsm_left_lower, trsv_lower, trsv_upper};
+pub use trust::{FactorTrust, RotationStats, TrustBudget};

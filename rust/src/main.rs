@@ -62,6 +62,19 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.cv.sweep_threads = args.usize_flag("threads", cfg.cv.sweep_threads)?;
     cfg.cv.sweep_batch = args.usize_flag("batch", cfg.cv.sweep_batch)?;
     cfg.cv.chunk_rows = args.usize_flag("chunk-rows", cfg.cv.chunk_rows)?;
+    // numerical-trust knobs (drift budget + escalation ladder, see
+    // cv::recovery); validated with everything else below
+    cfg.cv.recovery.budget.max_relative_drift =
+        args.f64_flag("trust-budget", cfg.cv.recovery.budget.max_relative_drift)?;
+    cfg.cv.recovery.budget.max_hops =
+        args.usize_flag("trust-max-hops", cfg.cv.recovery.budget.max_hops as usize)? as u64;
+    cfg.cv.recovery.max_shift_retries = args
+        .usize_flag("trust-shift-retries", cfg.cv.recovery.max_shift_retries as usize)?
+        as u32;
+    cfg.cv.recovery.shift_growth =
+        args.f64_flag("trust-shift-growth", cfg.cv.recovery.shift_growth)?;
+    cfg.cv.recovery.task_retries =
+        args.usize_flag("trust-task-retries", cfg.cv.recovery.task_retries as usize)? as u32;
     if let Some(mode) = args.flag("mode") {
         cfg.cv.mode = CvMode::parse(mode)
             .ok_or_else(|| anyhow::anyhow!("unknown --mode '{mode}' (kfold | loo)"))?;
@@ -105,6 +118,15 @@ fn cmd_cv(args: &Args) -> Result<()> {
             rep.skipped.len(),
             rep.n * rep.anchor_lambdas.len()
         );
+        if !rep.degradations.is_empty() {
+            println!(
+                "  {} cell(s) served past the downdate rung:",
+                rep.degradations.len()
+            );
+            for d in &rep.degradations {
+                println!("    {d}");
+            }
+        }
         for (lam, rmse) in rep.anchor_lambdas.iter().zip(&rep.anchor_rmse) {
             println!("  anchor λ = {lam:.4e}   exact LOO-RMSE = {rmse:.4}");
         }
@@ -134,11 +156,14 @@ fn cmd_cv(args: &Args) -> Result<()> {
         rep.fold_strategy.name(),
         rep.strategy_source
     );
-    if !rep.fallbacks.is_empty() {
+    if !rep.degradations.is_empty() {
         println!(
-            "  {} (fold, λ) cell(s) fell back to refactorization after a downdate breakdown",
-            rep.fallbacks.len()
+            "  {} (fold, λ) cell(s) served past the downdate rung of the recovery ladder:",
+            rep.degradations.len()
         );
+        for d in &rep.degradations {
+            println!("    {d}");
+        }
     }
     println!(
         "λ* = {:.4e}   holdout = {:.4}   wall = {}   cpu = {}",

@@ -1,0 +1,167 @@
+//! Deterministic fault injection — the chaos half of the numerical-trust
+//! subsystem (`tests/chaos.rs`, `ci.sh --chaos`).
+//!
+//! Every injector here is seeded/addressed, never random at call time: a
+//! chaos test names the exact row, task, or file it poisons, so the
+//! assertion "the degradation landed exactly where injected and nowhere
+//! else" is meaningful, and a failing run reproduces bit-for-bit.
+//!
+//! Two kinds of injector live here:
+//!
+//! - **data poison** ([`poison_row_nan`], [`poison_label_inf`],
+//!   [`spike_row`]) — mutate a [`SyntheticDataset`] in place before it is
+//!   handed to the engine, targeting the ingest-validation gate
+//!   ([`crate::data::gram::validate_rows`]) or the breakdown-escalation
+//!   ladder ([`crate::cv::recovery`]);
+//! - **task poison** ([`PanicInjection`]) — a process-global armed panic
+//!   that fires inside a chosen sweep-engine grid task, exercising the
+//!   bounded-retry/quarantine path
+//!   ([`crate::coordinator::pool::WorkerPool::map_scratch_recover`]).
+//!
+//! The task hook [`maybe_panic_task`] is compiled into the engine
+//! unconditionally but is a single relaxed-ish atomic load when disarmed —
+//! zero-cost in every non-chaos run. The armed state is **process-global**:
+//! tests that arm it must serialize on a shared lock (chaos tests do) and
+//! disarm via the RAII guard so a failing assertion cannot leak the armed
+//! state into the next test.
+
+use crate::data::synthetic::SyntheticDataset;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+/// Which grid-task index is armed to panic (−1 = disarmed).
+static PANIC_TASK: AtomicI64 = AtomicI64::new(-1);
+/// How many executions of the armed task still panic (`u64::MAX` ≈ every
+/// attempt — the quarantine case).
+static PANIC_REMAINING: AtomicU64 = AtomicU64::new(0);
+
+/// Arm the task-panic injector: the next `times` executions of grid task
+/// `task` panic. Prefer the RAII [`PanicInjection::arm`] in tests.
+pub fn arm_panic_at_task(task: usize, times: u64) {
+    PANIC_REMAINING.store(times, Ordering::SeqCst);
+    PANIC_TASK.store(task as i64, Ordering::SeqCst);
+}
+
+/// Disarm the task-panic injector.
+pub fn disarm_panic() {
+    PANIC_TASK.store(-1, Ordering::SeqCst);
+    PANIC_REMAINING.store(0, Ordering::SeqCst);
+}
+
+/// The engine-side hook: called by every sweep grid task with its task
+/// index; panics iff that index is armed with shots remaining. No-op (one
+/// atomic load) when disarmed.
+pub fn maybe_panic_task(task: usize) {
+    if PANIC_TASK.load(Ordering::SeqCst) != task as i64 {
+        return;
+    }
+    if PANIC_REMAINING
+        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |r| r.checked_sub(1))
+        .is_ok()
+    {
+        panic!("injected fault: grid task {task} poisoned by chaos harness");
+    }
+}
+
+/// RAII armed panic: arms on construction, disarms on drop — armed state
+/// cannot outlive the test even when an assertion fails mid-flight.
+pub struct PanicInjection(());
+
+impl PanicInjection {
+    /// Arm grid task `task` to panic on its next `times` executions.
+    pub fn arm(task: usize, times: u64) -> Self {
+        arm_panic_at_task(task, times);
+        PanicInjection(())
+    }
+}
+
+impl Drop for PanicInjection {
+    fn drop(&mut self) {
+        disarm_panic();
+    }
+}
+
+/// Overwrite every feature of row `row` with NaN — the ingest-gate fault
+/// ([`crate::data::gram::validate_rows`] must reject it by name).
+pub fn poison_row_nan(ds: &mut SyntheticDataset, row: usize) {
+    for v in ds.x.row_mut(row) {
+        *v = f64::NAN;
+    }
+}
+
+/// Set label `row` to +∞ — the label half of the ingest gate.
+pub fn poison_label_inf(ds: &mut SyntheticDataset, row: usize) {
+    ds.y[row] = f64::INFINITY;
+}
+
+/// Plant the conformance suite's deterministic breakdown spike on a chosen
+/// row: zero feature 0 everywhere, zero the row, then a lone `1e9` at
+/// `(row, 0)` with label `+1`. Any fold/hold-out whose validation block
+/// contains `row` hits an exact zero pivot in its downdate (see
+/// [`crate::testutil::conformance::spiked_dataset`] for the arithmetic) and
+/// must be rescued by the refactor rung.
+pub fn spike_row(ds: &mut SyntheticDataset, row: usize) {
+    for i in 0..ds.n() {
+        ds.x[(i, 0)] = 0.0;
+    }
+    for v in ds.x.row_mut(row) {
+        *v = 0.0;
+    }
+    ds.x[(row, 0)] = 1e9;
+    ds.y[row] = 1.0;
+}
+
+/// Write a truncated/garbage `BENCH_kernels.json` at `path` — the
+/// bench-calibration fault (`fold_strategy = auto` must degrade to the
+/// default strategy, never panic or parse nonsense).
+pub fn write_garbage_bench_file(path: &std::path::Path) -> std::io::Result<()> {
+    std::fs::write(path, "{\"schema\": 2, \"results\": [ {\"name\": \"chud_rk\", \"med")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn disarmed_hook_is_a_no_op_and_armed_shots_deplete() {
+        maybe_panic_task(0);
+        maybe_panic_task(7);
+
+        // arm an index far beyond any real sweep's task count, so engine
+        // tests running concurrently in this binary can never trip it
+        const T: usize = 999_999;
+        {
+            let _guard = PanicInjection::arm(T, 2);
+            maybe_panic_task(T - 1); // wrong task: untouched
+            for _ in 0..2 {
+                let hit = catch_unwind(AssertUnwindSafe(|| maybe_panic_task(T)));
+                assert!(hit.is_err(), "armed task must panic while shots remain");
+            }
+            maybe_panic_task(T); // shots spent: no-op again
+        }
+        // guard dropped → disarmed
+        maybe_panic_task(T);
+    }
+
+    #[test]
+    fn spiked_row_matches_the_conformance_fixture() {
+        let mut ds = crate::testutil::conformance::well_conditioned(40, 8, 5);
+        spike_row(&mut ds, 0);
+        let oracle = crate::testutil::conformance::spiked_dataset(40, 8, 5);
+        assert_eq!(ds.x.as_slice(), oracle.x.as_slice());
+        assert_eq!(ds.y, oracle.y);
+    }
+
+    #[test]
+    fn poisons_target_only_their_row() {
+        let mut ds = crate::testutil::conformance::well_conditioned(10, 5, 1);
+        let clean = ds.x.clone();
+        poison_row_nan(&mut ds, 4);
+        assert!(ds.x.row(4).iter().all(|v| v.is_nan()));
+        for r in (0..10).filter(|&r| r != 4) {
+            assert_eq!(ds.x.row(r), clean.row(r), "row {r} must be untouched");
+        }
+        poison_label_inf(&mut ds, 2);
+        assert!(ds.y[2].is_infinite());
+    }
+}

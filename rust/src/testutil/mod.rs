@@ -7,8 +7,11 @@
 //! smallest failing size. [`conformance`] holds the seeded dataset
 //! generators (well-/ill-conditioned, rank-deficient) and RMS assertion
 //! helper behind the cross-mode conformance suite (`tests/conformance.rs`).
+//! [`faults`] is the deterministic fault-injection harness behind the chaos
+//! suite (`tests/chaos.rs`, `ci.sh --chaos`).
 
 pub mod conformance;
+pub mod faults;
 
 use crate::linalg::matrix::Matrix;
 use crate::prng::Xoshiro256;

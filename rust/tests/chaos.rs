@@ -1,0 +1,269 @@
+//! The chaos suite — deterministic fault injection against the engine's
+//! numerical-trust subsystem (`ci.sh --chaos`).
+//!
+//! Five fault classes, each seeded/addressed via `testutil::faults` so a
+//! failure reproduces bit-for-bit:
+//!
+//! 1. non-finite rows/labels at ingest → rejected with a structured error
+//!    naming the offender, before any Gram work;
+//! 2. a Gram spike forcing a hyperbolic-downdate breakdown in a chosen
+//!    fold → rescued at the refactor rung, localized, worker-invariant;
+//! 3. drift-budget exhaustion mid-chain → forced refactorizations,
+//!    recorded, bitwise the pure-refactor oracle;
+//! 4. a worker panic at a chosen task index → bounded retry then
+//!    quarantine, no panic escapes, untouched cells bitwise intact;
+//! 5. a truncated/garbage `BENCH_kernels.json` → auto strategy degrades to
+//!    the default, bitwise identical to running with no bench file.
+//!
+//! Throughout: every run completes (`run_cv`/`run_loo` return, zero panics
+//! escape the engine), each degradation is recorded exactly where injected,
+//! and non-injected results are bitwise identical at workers {1, 2, 4}.
+//!
+//! The task-panic hook and the `PICHOL_BENCH_FILE` env var are
+//! process-global, so EVERY test here serializes on [`global_lock`] — an
+//! armed panic leaking into a concurrently-running engine sweep would
+//! fabricate degradations the victim test never injected.
+
+use picholesky::cv::loo::run_loo;
+use picholesky::cv::recovery::{RecoveryPolicy, Rung};
+use picholesky::cv::solvers::SolverKind;
+use picholesky::cv::{run_cv, CvConfig, FoldStrategy};
+use picholesky::data::folds::kfold;
+use picholesky::linalg::trust::TrustBudget;
+use picholesky::testutil::conformance::well_conditioned;
+use picholesky::testutil::faults;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Serializes tests that touch process-global fault state. Poisoning is
+/// ignored — a failed chaos test must not cascade into the others.
+fn global_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn cfg(workers: usize) -> CvConfig {
+    CvConfig {
+        k_folds: 3,
+        q_grid: 8,
+        lambda_range: Some((1e-2, 1.0)),
+        sweep_threads: workers,
+        sweep_batch: 4,
+        fold_strategy: FoldStrategy::Downdate,
+        ..CvConfig::default()
+    }
+}
+
+/// Fault class 1: non-finite data is stopped at the door with a structured
+/// error naming the exact offender — k-fold and LOO entry points both.
+#[test]
+fn ingest_faults_are_rejected_with_structured_errors() {
+    let _guard = global_lock();
+    let mut ds = well_conditioned(60, 9, 3);
+    faults::poison_row_nan(&mut ds, 17);
+    let err = run_cv(&ds, SolverKind::Chol, &cfg(2))
+        .expect_err("NaN row must be rejected at ingest");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("row 17") && msg.contains("non-finite"),
+        "error must name the poisoned row: {msg}"
+    );
+
+    let mut ds = well_conditioned(60, 9, 3);
+    faults::poison_label_inf(&mut ds, 5);
+    let err = run_loo(&ds, &cfg(2)).expect_err("Inf label must be rejected at ingest");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("label") && msg.contains("row 5"),
+        "error must name the poisoned label: {msg}"
+    );
+}
+
+/// Fault class 2: a spiked Gram breaks the downdate of exactly one fold at
+/// every grid λ; the ladder rescues each cell at the refactor rung. The
+/// degradation record is localized to that fold, and the whole report —
+/// curve bits and degradation records alike — is invariant across workers
+/// {1, 2, 4} and across a seeded re-run.
+#[test]
+fn spiked_breakdown_is_localized_worker_invariant_and_reproducible() {
+    let _guard = global_lock();
+    let mut ds = well_conditioned(40, 8, 5);
+    faults::spike_row(&mut ds, 0);
+    let q = cfg(1).q_grid;
+    let spike_fold = kfold(ds.n(), cfg(1).k_folds, cfg(1).seed)
+        .iter()
+        .position(|f| f.val.contains(&0))
+        .unwrap();
+
+    let serial = run_cv(&ds, SolverKind::Chol, &cfg(1)).unwrap();
+    assert_eq!(serial.degradations.len(), q, "one rescue per grid λ");
+    for d in &serial.degradations {
+        assert_eq!((d.surface, d.fold), ("kfold", spike_fold));
+        assert_eq!((d.cause, d.rung), ("breakdown", Rung::Refactor));
+    }
+
+    for workers in [2usize, 4] {
+        let par = run_cv(&ds, SolverKind::Chol, &cfg(workers)).unwrap();
+        assert_eq!(serial.mean_errors, par.mean_errors, "workers={workers}");
+        assert_eq!(serial.fold_bests, par.fold_bests, "workers={workers}");
+        let fmt = |r: &picholesky::cv::CvReport| {
+            r.degradations.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+        };
+        assert_eq!(fmt(&serial), fmt(&par), "degradation records must not depend on scheduling");
+    }
+
+    // seeded determinism: the same injected run, bit for bit
+    let rerun = run_cv(&ds, SolverKind::Chol, &cfg(2)).unwrap();
+    assert_eq!(serial.mean_errors, rerun.mean_errors);
+    assert_eq!(serial.best_lambda, rerun.best_lambda);
+}
+
+/// Fault class 3: a budget no finite drift satisfies trips every downdate
+/// cell mid-chain. Forced refactorizations are recorded per cell and the
+/// result is bitwise the pure-refactor oracle at every worker count.
+#[test]
+fn drift_budget_exhaustion_forces_recorded_refactorizations() {
+    let _guard = global_lock();
+    let ds = well_conditioned(90, 10, 7);
+    let oracle = run_cv(
+        &ds,
+        SolverKind::Chol,
+        &CvConfig {
+            fold_strategy: FoldStrategy::Refactor,
+            ..cfg(1)
+        },
+    )
+    .unwrap();
+    let tight = |workers: usize| {
+        run_cv(
+            &ds,
+            SolverKind::Chol,
+            &CvConfig {
+                recovery: RecoveryPolicy {
+                    budget: TrustBudget {
+                        max_relative_drift: 1e-300,
+                        max_hops: 0,
+                    },
+                    ..RecoveryPolicy::default()
+                },
+                ..cfg(workers)
+            },
+        )
+        .unwrap()
+    };
+    let base = tight(1);
+    let cells = cfg(1).k_folds * cfg(1).q_grid;
+    assert_eq!(base.degradations.len(), cells, "every cell hits the budget");
+    for d in &base.degradations {
+        assert_eq!((d.cause, d.rung), ("drift-budget", Rung::Refactor));
+        assert!(d.trust > 0.0);
+    }
+    assert_eq!(base.mean_errors, oracle.mean_errors, "bitwise the oracle");
+    assert_eq!(base.fold_bests, oracle.fold_bests);
+    for workers in [2usize, 4] {
+        let par = tight(workers);
+        assert_eq!(base.mean_errors, par.mean_errors, "workers={workers}");
+        assert_eq!(base.degradations.len(), par.degradations.len());
+    }
+}
+
+/// Fault class 4: an armed panic in one grid task. With shots left after
+/// the retry budget the task is quarantined — its span alone goes NaN, a
+/// `"panic"` degradation names the task and span, no panic escapes, and
+/// every untouched cell is bitwise the fault-free run. With a single shot,
+/// the bounded retry re-runs the task and the report is bitwise fault-free
+/// end to end.
+#[test]
+fn injected_task_panic_is_quarantined_exactly_where_armed() {
+    let _guard = global_lock();
+    let ds = well_conditioned(80, 9, 2);
+    // spans: 2 tasks per fold (q=8, batch=4) × 3 folds; task 3 = fold 1,
+    // cells 4..8
+    let (armed_task, armed_fold, span) = (3usize, 1usize, 4usize..8);
+    let baseline = run_cv(&ds, SolverKind::Chol, &cfg(2)).unwrap();
+    assert!(baseline.degradations.is_empty());
+
+    for workers in [1usize, 2] {
+        let _armed = faults::PanicInjection::arm(armed_task, u64::MAX);
+        let rep = run_cv(&ds, SolverKind::Chol, &cfg(workers))
+            .expect("a quarantined task must not fail the run");
+        assert_eq!(rep.degradations.len(), 1, "workers={workers}");
+        let d = &rep.degradations[0];
+        assert_eq!((d.surface, d.cause), ("task", "panic"));
+        assert_eq!((d.fold, d.rung), (armed_fold, Rung::Skip));
+        assert!(d.lambda.is_nan(), "a whole-task record carries no single λ");
+        assert!(
+            d.detail.contains("grid task 3 (cells 4..8)")
+                && d.detail.contains("after 2 attempts")
+                && d.detail.contains("injected fault"),
+            "detail must name task, span, attempts and payload: {}",
+            d.detail
+        );
+        // untouched cells bitwise; the lost span still aggregates finite
+        // (NaN-aware mean over the two surviving folds)
+        for g in 0..8 {
+            if span.contains(&g) {
+                assert!(
+                    rep.mean_errors[g].is_finite(),
+                    "lost cells still aggregate over the surviving folds"
+                );
+            } else {
+                assert_eq!(
+                    rep.mean_errors[g], baseline.mean_errors[g],
+                    "cell {g} is outside the armed span and must be untouched"
+                );
+            }
+        }
+        for (fi, (fb, bb)) in rep.fold_bests.iter().zip(&baseline.fold_bests).enumerate() {
+            if fi != armed_fold {
+                assert_eq!(fb, bb, "fold {fi} must be bitwise fault-free");
+            }
+        }
+    }
+
+    // one shot only: the bounded retry absorbs the panic entirely
+    let _armed = faults::PanicInjection::arm(armed_task, 1);
+    let rep = run_cv(&ds, SolverKind::Chol, &cfg(2)).unwrap();
+    assert!(
+        rep.degradations.is_empty(),
+        "a retried task serves its cells: {:?}",
+        rep.degradations
+    );
+    assert_eq!(rep.mean_errors, baseline.mean_errors, "retry must be bitwise");
+    assert_eq!(rep.fold_bests, baseline.fold_bests);
+}
+
+/// Fault class 5: a truncated/garbage bench-calibration file. The auto
+/// strategy must degrade to the static default — recorded in
+/// `strategy_source` — and produce bitwise the same report as running with
+/// no bench file at all. Never a panic, never a half-parsed measurement.
+#[test]
+fn garbage_bench_file_degrades_auto_to_default() {
+    let _guard = global_lock();
+    let ds = well_conditioned(60, 9, 4);
+    let auto_cfg = CvConfig {
+        fold_strategy: FoldStrategy::Auto,
+        ..cfg(2)
+    };
+
+    let path = std::env::temp_dir().join("pichol_chaos_garbage_bench.json");
+    faults::write_garbage_bench_file(&path).unwrap();
+    std::env::set_var(picholesky::cv::strategy::BENCH_FILE_ENV, &path);
+    let garbage = run_cv(&ds, SolverKind::Chol, &auto_cfg).unwrap();
+
+    std::env::set_var(
+        picholesky::cv::strategy::BENCH_FILE_ENV,
+        std::env::temp_dir().join("pichol_chaos_no_such_file.json"),
+    );
+    let absent = run_cv(&ds, SolverKind::Chol, &auto_cfg).unwrap();
+    std::env::remove_var(picholesky::cv::strategy::BENCH_FILE_ENV);
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(garbage.strategy_source, "default");
+    assert_eq!(absent.strategy_source, "default");
+    assert_eq!(garbage.fold_strategy, picholesky::cv::strategy::AUTO_DEFAULT);
+    assert_eq!(garbage.mean_errors, absent.mean_errors, "bitwise the no-file run");
+    assert_eq!(garbage.best_lambda, absent.best_lambda);
+    assert!(garbage.degradations.is_empty());
+}

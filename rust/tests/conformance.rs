@@ -15,16 +15,20 @@
 //! Asserted: λ* selection agrees (same grid cell between the two fold
 //! strategies, same λ neighborhood for LOO), hold-out curves match to
 //! ≤ 1e-9 RMS, the downdate path is bitwise identical at workers {1, 2, 4},
-//! and an injected fold-granular downdate breakdown degrades to the
-//! refactorize path for that fold only — recorded, never fatal.
+//! an injected fold-granular downdate breakdown escalates to the refactor
+//! rung of the recovery ladder for that fold only — recorded as a
+//! degradation, never fatal — and an exhausted drift budget forces
+//! refactorizations that reproduce the pure-refactor oracle bitwise.
 //!
 //! `ci.sh --conformance` runs exactly this file; the full CI gate includes
 //! it via `cargo test`.
 
 use picholesky::cv::loo::run_loo;
+use picholesky::cv::recovery::{RecoveryPolicy, Rung};
 use picholesky::cv::solvers::SolverKind;
 use picholesky::cv::{run_cv, CvConfig, FoldStrategy};
 use picholesky::data::folds::kfold;
+use picholesky::linalg::trust::TrustBudget;
 use picholesky::testutil::conformance::{
     assert_close_rms, spiked_dataset, suite, well_conditioned,
 };
@@ -57,17 +61,20 @@ fn grid_cell(grid: &[f64], lam: f64) -> usize {
 /// The headline conformance assertion: on every generator regime, the
 /// factor-level downdate path reproduces the refactorize oracle — same λ*
 /// cell (±1 across rounding-level ties), per-fold selections in step, mean
-/// hold-out curves within 1e-9 RMS, and zero breakdown fallbacks.
+/// hold-out curves within 1e-9 RMS, and zero recovery-ladder escalations.
 #[test]
 fn fold_strategies_agree_on_conformance_suite() {
     for (name, ds) in suite(150, 16, 11) {
         let refactor = run_cv(&ds, SolverKind::Chol, &cfg(FoldStrategy::Refactor, 1)).unwrap();
         let downdate = run_cv(&ds, SolverKind::Chol, &cfg(FoldStrategy::Downdate, 1)).unwrap();
-        assert!(refactor.fallbacks.is_empty(), "{name}: oracle never falls back");
         assert!(
-            downdate.fallbacks.is_empty(),
-            "{name}: unexpected downdate breakdowns: {:?}",
-            downdate.fallbacks
+            refactor.degradations.is_empty(),
+            "{name}: oracle never degrades"
+        );
+        assert!(
+            downdate.degradations.is_empty(),
+            "{name}: unexpected downdate escalations: {:?}",
+            downdate.degradations
         );
         assert_close_rms(&refactor.mean_errors, &downdate.mean_errors, 1e-9);
         let (ri, di) = (
@@ -144,7 +151,7 @@ fn downdate_strategy_bitwise_across_worker_counts() {
             assert_eq!(serial.best_lambda, par.best_lambda);
             assert_eq!(serial.best_error, par.best_error);
             assert_eq!(serial.fold_bests, par.fold_bests);
-            assert_eq!(serial.fallbacks.len(), par.fallbacks.len());
+            assert_eq!(serial.degradations.len(), par.degradations.len());
         }
     }
 }
@@ -153,11 +160,11 @@ fn downdate_strategy_bitwise_across_worker_counts() {
 /// fixture: the fold whose validation block holds the spiked row 0 hits
 /// pivot `1e18 − 1e18 = 0` at column 0 of its downdate — a deterministic
 /// breakdown at every anchor, while every other fold downdates fine. The
-/// engine must fall back to the refactorize path for that fold only,
-/// record each cell in `CvReport::fallbacks`, and still produce the
-/// pure-refactor curve.
+/// recovery ladder must escalate that fold's cells to the refactor rung
+/// only, record each as a `cause = "breakdown"` degradation, and still
+/// produce the pure-refactor curve.
 #[test]
-fn fold_breakdown_falls_back_and_is_recorded() {
+fn fold_breakdown_escalates_to_refactor_rung_and_is_recorded() {
     let ds = spiked_dataset(40, 8, 5);
 
     let (k, q) = (4usize, 9usize);
@@ -185,23 +192,30 @@ fn fold_breakdown_falls_back_and_is_recorded() {
         .position(|f| f.val.contains(&0))
         .unwrap();
 
-    // recorded for that fold only, at every grid λ, with the failing column
-    assert_eq!(down.fallbacks.len(), q, "one fallback per anchor λ");
-    for fb in &down.fallbacks {
-        assert_eq!(fb.fold, spike_fold, "only the spiked fold may fall back");
-        assert_eq!(fb.error.pivot, 0, "failing column index must be carried");
-        assert!(fb.error.value <= 0.0);
+    // recorded for that fold only, at every grid λ, stopped at rung 2 (the
+    // plain refactorization rescues H_f + λI — no shift, no skip)
+    assert_eq!(down.degradations.len(), q, "one degradation per grid λ");
+    for d in &down.degradations {
+        assert_eq!(d.surface, "kfold");
+        assert_eq!(d.fold, spike_fold, "only the spiked fold may escalate");
+        assert_eq!(d.cause, "breakdown");
+        assert_eq!(d.rung, Rung::Refactor, "rung 2 must rescue the cell");
+        assert!(
+            d.detail.contains("pivot 0"),
+            "failing column must be carried: {}",
+            d.detail
+        );
     }
 
     // structural accounting: every cell attempted the downdate, only the
     // spiked fold's cells refactorized
     assert_eq!(down.timer.count("factor"), q as u64);
     assert_eq!(down.timer.count("fold_downdate"), (q * k) as u64);
-    assert_eq!(down.timer.count("chol"), q as u64, "fallback refactorizations");
+    assert_eq!(down.timer.count("chol"), q as u64, "ladder refactorizations");
 
-    // and the final curve still matches the pure-refactor run: the fallback
-    // fold bitwise (it ran the same code on the same H_f), the rest within
-    // rounding
+    // and the final curve still matches the pure-refactor run: the rescued
+    // fold bitwise (rung 2 ran the same code on the same H_f), the rest
+    // within rounding
     let refr = run_cv(
         &ds,
         SolverKind::Chol,
@@ -211,10 +225,73 @@ fn fold_breakdown_falls_back_and_is_recorded() {
         },
     )
     .unwrap();
-    assert!(refr.fallbacks.is_empty());
+    assert!(refr.degradations.is_empty());
     assert_eq!(
         down.fold_bests[spike_fold], refr.fold_bests[spike_fold],
-        "the fallback fold must be bitwise the refactor path"
+        "the rescued fold must be bitwise the refactor path"
     );
     assert_close_rms(&down.mean_errors, &refr.mean_errors, 1e-9);
+}
+
+/// The drift budget demonstrably bites, end to end through the public API:
+/// under a budget no finite drift can satisfy, every downdate-strategy cell
+/// is forced through the refactor rung — recorded as `"drift-budget"`
+/// degradations with positive trust — and the resulting curve is **bitwise**
+/// the pure-refactor oracle (the forced rung runs the oracle's exact code
+/// on the exact same `H_f + λI`), well inside the ≤ 1e-9 RMS acceptance
+/// bound.
+#[test]
+fn exhausted_drift_budget_forces_refactorization_matching_oracle() {
+    let ds = well_conditioned(120, 12, 17);
+    let (k, q) = (4usize, 11usize);
+    let base = CvConfig {
+        k_folds: k,
+        q_grid: q,
+        lambda_range: Some((1e-2, 1.0)),
+        sweep_threads: 2,
+        ..CvConfig::default()
+    };
+    let oracle = run_cv(
+        &ds,
+        SolverKind::Chol,
+        &CvConfig {
+            fold_strategy: FoldStrategy::Refactor,
+            ..base.clone()
+        },
+    )
+    .unwrap();
+    let tight = run_cv(
+        &ds,
+        SolverKind::Chol,
+        &CvConfig {
+            fold_strategy: FoldStrategy::Downdate,
+            recovery: RecoveryPolicy {
+                budget: TrustBudget {
+                    max_relative_drift: 1e-300,
+                    max_hops: 0,
+                },
+                ..RecoveryPolicy::default()
+            },
+            ..base
+        },
+    )
+    .unwrap();
+
+    assert_eq!(
+        tight.degradations.len(),
+        k * q,
+        "every (fold, λ) cell must hit the budget"
+    );
+    for d in &tight.degradations {
+        assert_eq!(d.cause, "drift-budget");
+        assert_eq!(d.rung, Rung::Refactor);
+        assert!(d.trust > 0.0, "trust at failure must carry the drift bound");
+    }
+    // forced refactorizations are visible in the phase counts…
+    assert_eq!(tight.timer.count("chol"), (k * q) as u64);
+    // …and the curve is bitwise the oracle's
+    assert_eq!(tight.mean_errors, oracle.mean_errors);
+    assert_eq!(tight.fold_bests, oracle.fold_bests);
+    assert_eq!(tight.best_lambda, oracle.best_lambda);
+    assert_eq!(tight.best_error, oracle.best_error);
 }
