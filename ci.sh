@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # CI gate: build, test, quickstart + LOO + factor-level-k-fold (fig2)
 # end-to-end smokes, the cross-mode conformance suite, the chaos
-# (fault-injection) suite run twice for seeded determinism, doc-lint
+# (fault-injection) suite run twice for seeded determinism, the
+# accuracy/cost-ladder certification suite (aloocv vs exact loo), doc-lint
 # (broken intra-doc links fail), format and clippy checks (both guarded:
 # skipped when the component is not installed), and the kernel-bench smoke
 # that emits the BENCH_kernels.json perf trajectory.
@@ -19,6 +20,10 @@
 #                           (NaN ingest, Gram spikes, drift-budget
 #                           exhaustion, worker panics, garbage bench file),
 #                           run twice to pin seeded determinism
+#   ./ci.sh --tiers         only the accuracy/cost-ladder certification
+#                           suite (aloocv vs exact loo: λ* within a decade,
+#                           bitwise worker invariance at 1/2/4, leverage
+#                           escalation through the recovery ladder)
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -66,6 +71,16 @@ chaos() {
   cargo test -q --test chaos
 }
 
+tiers() {
+  # the accuracy/cost-ladder certification suite (tests/tiers.rs): the
+  # hat-diagonal ALOOCV tier must land λ* within one decade of exact LOO on
+  # every seeded generator, stay bitwise identical at workers {1,2,4}, and
+  # route high-leverage rows (h_i ≥ 1−ε) through the recovery ladder as
+  # recorded degradations instead of Inf/NaN scores
+  echo "==> accuracy/cost-ladder certification suite (aloocv vs loo, workers 1/2/4)"
+  cargo test -q --test tiers
+}
+
 bench_smoke() {
   # smoke runs validate the harness + JSON shape into an UNTRACKED scratch
   # file: tiny-size reps=1 numbers must never land in the tracked
@@ -86,6 +101,11 @@ bench_smoke() {
   grep -q '"loo_sweep"' "$out"
   grep -q '"loo_phases"' "$out"
   grep -q '"per_row_chol": 0' "$out"
+  # the ALOOCV tier rides the same harness: its sweep row and the
+  # structural proof that the fast path did zero per-row factor work
+  grep -q '"aloocv_sweep"' "$out"
+  grep -q '"aloocv_phases"' "$out"
+  grep -q '"per_row_downdate": 0' "$out"
   echo "bench smoke passed: $out present and well-formed."
 }
 
@@ -109,6 +129,11 @@ if [[ "${1:-}" == "--chaos" ]]; then
   exit 0
 fi
 
+if [[ "${1:-}" == "--tiers" ]]; then
+  tiers
+  exit 0
+fi
+
 echo "==> cargo build --release"
 cargo build --release
 
@@ -125,6 +150,9 @@ backends
 # deterministic fault injection, twice — the second run pins seeded
 # determinism of every injected degradation
 chaos
+
+# the accuracy/cost ladder: aloocv certification against exact loo
+tiers
 
 echo "==> cargo run --release --example quickstart (end-to-end smoke gate)"
 cargo run --release --example quickstart

@@ -33,10 +33,18 @@
 //!   Also emits and asserts the structural phase counts (`factor ==
 //!   anchors`, `downdate == n` per anchor, zero per-row factorizations) as
 //!   a `loo_phases` object in the JSON.
+//! - `aloocv_sweep` — the O(n·d) approximate-LOO tier at the same shapes
+//!   and grid as `loo_sweep`: per anchor one batched multi-RHS TRSM for
+//!   the hat diagonals instead of n rank-1 downdate chains. Its
+//!   `reference_secs` is the measured `loo_sweep` wall, so `speedup` is
+//!   the ladder's headline tier-vs-tier number. Emits and asserts the
+//!   structural counts (`factor == anchors`, zero per-row factorizations
+//!   AND zero per-row downdates) as an `aloocv_phases` object.
 //! - `sweep` — end-to-end `run_cv` (PiChol, k=3) at n=2d (packed-only)
 
 use std::time::Instant;
 
+use picholesky::cv::aloocv::run_aloocv;
 use picholesky::cv::loo::{brute_force_loo_rmse, run_loo};
 use picholesky::cv::solvers::SolverKind;
 use picholesky::cv::{run_cv, CvConfig, FoldStrategy};
@@ -273,8 +281,9 @@ fn bench_chud(d: usize, reps: usize, rows: &mut Vec<Row>) {
 /// End-to-end LOO sweep at n = 2d through the downdate engine. Brute-force
 /// per-row refactorization baseline only at small d (it is the O(n·d³)
 /// path the engine exists to avoid). Returns the `loo_phases` JSON object
-/// proving the downdate path did zero per-row O(d³) factorizations.
-fn bench_loo(d: usize, rows: &mut Vec<Row>) -> String {
+/// proving the downdate path did zero per-row O(d³) factorizations, plus
+/// the measured wall (the reference side of `aloocv_sweep`).
+fn bench_loo(d: usize, rows: &mut Vec<Row>) -> (String, f64) {
     let n = 2 * d;
     let ds = SyntheticDataset::generate(DatasetKind::MnistLike, n, d, 7);
     let cfg = CvConfig {
@@ -314,9 +323,57 @@ fn bench_loo(d: usize, rows: &mut Vec<Row>) -> String {
         "downdate phase must run once per (row, anchor)"
     );
     assert_eq!(rep.timer.count("chol"), 0, "no per-row O(d³) factorization");
-    format!(
+    let phases = format!(
         "{{\"d\": {d}, \"n\": {n}, \"anchors\": {anchors}, \"factor\": {factor}, \
          \"downdate\": {downdate}, \"per_row_chol\": 0}}"
+    );
+    (phases, packed)
+}
+
+/// The O(n·d) ALOOCV tier at the exact shapes and grid of `bench_loo`, so
+/// the two walls are directly comparable: per anchor, one batched
+/// multi-RHS TRSM through the packed kernel (hat diagonals as column
+/// norms of `L⁻¹Xᵀ`) replaces exact LOO's n rank-1 downdate chains.
+/// `reference_secs` is the measured `loo_sweep` wall — `speedup` is the
+/// ladder's tier-vs-tier headline. Returns the `aloocv_phases` JSON
+/// object proving the fast path did zero per-row factor work.
+fn bench_aloocv(d: usize, loo_secs: f64, rows: &mut Vec<Row>) -> String {
+    let n = 2 * d;
+    let ds = SyntheticDataset::generate(DatasetKind::MnistLike, n, d, 7);
+    let cfg = CvConfig {
+        q_grid: 20,
+        g_samples: 4,
+        lambda_range: Some((0.1, 1.0)),
+        sweep_threads: 1, // single-threaded: kernel speed, not parallelism
+        ..CvConfig::default()
+    };
+    let t0 = Instant::now();
+    let rep = run_aloocv(&ds, &cfg).expect("aloocv sweep");
+    let packed = t0.elapsed().as_secs_f64();
+    std::hint::black_box(rep.best_lambda);
+    rows.push(Row {
+        kernel: "aloocv_sweep",
+        d,
+        packed_secs: packed,
+        reference_secs: loo_secs,
+    });
+
+    // the acceptance invariant, asserted AND recorded in the trajectory
+    let anchors = rep.anchor_lambdas.len() as u64;
+    let factor = rep.timer.count("factor");
+    let hat = rep.timer.count("hat_solve");
+    assert_eq!(factor, anchors, "factor phase must run once per anchor");
+    assert!(hat >= anchors, "at least one batched hat solve per anchor");
+    assert_eq!(hat % anchors, 0, "hat solves come in per-anchor batches");
+    assert_eq!(rep.timer.count("chol"), 0, "no per-row O(d³) factorization");
+    assert_eq!(
+        rep.timer.count("downdate"),
+        0,
+        "no per-row downdates on the hat-diagonal fast path"
+    );
+    format!(
+        "{{\"d\": {d}, \"n\": {n}, \"anchors\": {anchors}, \"factor\": {factor}, \
+         \"hat_solve\": {hat}, \"per_row_chol\": 0, \"per_row_downdate\": 0}}"
     )
 }
 
@@ -382,7 +439,7 @@ fn bench_sweep(d: usize, rows: &mut Vec<Row>) {
     });
 }
 
-fn emit_json(rows: &[Row], smoke: bool, loo_phases: &str, path: &str) {
+fn emit_json(rows: &[Row], smoke: bool, loo_phases: &str, aloocv_phases: &str, path: &str) {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"kernels\",\n");
@@ -393,6 +450,7 @@ fn emit_json(rows: &[Row], smoke: bool, loo_phases: &str, path: &str) {
     ));
     s.push_str("  \"unit\": \"seconds (min of reps)\",\n");
     s.push_str(&format!("  \"loo_phases\": {loo_phases},\n"));
+    s.push_str(&format!("  \"aloocv_phases\": {aloocv_phases},\n"));
     s.push_str("  \"results\": [\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
@@ -443,7 +501,8 @@ fn main() {
     }
     // end-to-end sweeps at the middle size (the trajectory headline numbers)
     bench_sweep(if smoke { 32 } else { 256 }, &mut rows);
-    let loo_phases = bench_loo(if smoke { 32 } else { 256 }, &mut rows);
+    let (loo_phases, loo_secs) = bench_loo(if smoke { 32 } else { 256 }, &mut rows);
+    let aloocv_phases = bench_aloocv(if smoke { 32 } else { 256 }, loo_secs, &mut rows);
 
     println!("\n| kernel | d | packed | reference | speedup |");
     println!("|---|---|---|---|---|");
@@ -467,7 +526,8 @@ fn main() {
     }
 
     println!("\nloo phase counts: {loo_phases}");
+    println!("aloocv phase counts: {aloocv_phases}");
     let default_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
     let path = out_override.as_deref().unwrap_or(default_path);
-    emit_json(&rows, smoke, &loo_phases, path);
+    emit_json(&rows, smoke, &loo_phases, &aloocv_phases, path);
 }

@@ -89,8 +89,12 @@ USAGE:
 COMMANDS:
   cv           run one algorithm's k-fold CV through the parallel sweep engine
                --dataset mnist|coil|caltech101|caltech256  --solver chol|pichol|mchol|svd|tsvd|rsvd|pinrmse
-               --mode kfold|loo   (loo = exact leave-one-out via rank-1 factor
-               downdates: one exact factor per λ anchor, n downdates each)
+               --mode kfold|loo|aloocv   (loo = exact leave-one-out via rank-1
+               factor downdates: one exact factor per λ anchor, n downdates
+               each; aloocv = approximate LOO from hat diagonals — one exact
+               factor per λ anchor, then batched multi-RHS triangular solves
+               through the packed kernel, O(n·d²) per anchor; add --certify
+               to re-run exact LOO and stamp the λ* agreement verdict)
                --fold-strategy downdate|refactor|auto   (downdate = default:
                one chol(G+λI) per λ anchor, fold factors by rank-(n/k)
                downdate chains; refactor = per-(fold,λ) chol(H_f+λI);

@@ -191,7 +191,7 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get("cv.mode").and_then(TomlValue::as_str) {
             cfg.cv.mode = CvMode::parse(v)
-                .ok_or_else(|| anyhow!("unknown cv mode '{v}' (kfold | loo)"))?;
+                .ok_or_else(|| anyhow!("unknown cv mode '{v}' (kfold | loo | aloocv)"))?;
         }
         if let Some(v) = doc.get("cv.fold_strategy").and_then(TomlValue::as_str) {
             cfg.cv.fold_strategy = FoldStrategy::parse(v).ok_or_else(|| {
@@ -392,6 +392,10 @@ mod tests {
         let doc = parse_toml("[cv]\nmode = \"loo\"\n").unwrap();
         let cfg = ExperimentConfig::from_doc(&doc).unwrap();
         assert_eq!(cfg.cv.mode, CvMode::Loo);
+        // the cheap hat-diagonal tier is a first-class config value
+        let doc = parse_toml("[cv]\nmode = \"aloocv\"\n").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.cv.mode, CvMode::Aloocv);
         // default stays k-fold; junk rejected
         let cfg = ExperimentConfig::from_doc(&parse_toml("n = 64\n").unwrap()).unwrap();
         assert_eq!(cfg.cv.mode, CvMode::KFold);

@@ -69,11 +69,16 @@ impl Coordinator {
         kind: SolverKind,
         cfg: &CvConfig,
     ) -> crate::Result<CvReport> {
-        if cfg.mode == crate::cv::CvMode::Loo {
-            anyhow::bail!(
+        match cfg.mode {
+            crate::cv::CvMode::Loo => anyhow::bail!(
                 "cfg.mode is 'loo' but run_one executes k-fold sweeps; \
                  call Coordinator::run_loo instead"
-            );
+            ),
+            crate::cv::CvMode::Aloocv => anyhow::bail!(
+                "cfg.mode is 'aloocv' but run_one executes k-fold sweeps; \
+                 call Coordinator::run_aloocv instead"
+            ),
+            crate::cv::CvMode::KFold => {}
         }
         self.metrics.incr("cv.runs");
         let mut cfg = cfg.clone();
@@ -104,6 +109,25 @@ impl Coordinator {
         let plan = LooPlan::new(ds, &cfg);
         let engine = SweepEngine::with_metrics(plan.threads, self.metrics.clone());
         engine.run_loo(ds, &plan)
+    }
+
+    /// Run approximate leave-one-out CV — the cheap tier of the
+    /// accuracy/cost ladder (see [`crate::cv::aloocv`]) — wired to this
+    /// coordinator's metrics. Thread-count precedence as in
+    /// [`Coordinator::run_one`].
+    pub fn run_aloocv(
+        &self,
+        ds: &SyntheticDataset,
+        cfg: &CvConfig,
+    ) -> crate::Result<crate::cv::aloocv::AloocvReport> {
+        self.metrics.incr("cv.aloocv_runs");
+        let mut cfg = cfg.clone();
+        if cfg.sweep_threads == 0 {
+            cfg.sweep_threads = self.workers();
+        }
+        let plan = LooPlan::new(ds, &cfg);
+        let engine = SweepEngine::with_metrics(plan.threads, self.metrics.clone());
+        engine.run_aloocv(ds, &plan)
     }
 
     /// Execute an explicit [`SweepPlan`] on a fresh [`SweepEngine`] wired to

@@ -91,6 +91,7 @@ use std::time::Instant;
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::{default_workers, TaskFailure, WorkerPool};
+use crate::cv::aloocv::{self, AloocvReport};
 use crate::cv::loo::{self, LooReport, LooSkip};
 use crate::cv::recovery::{DegradeInfo, Degradation, Rung};
 use crate::cv::solvers::{self, SolverKind};
@@ -135,8 +136,11 @@ pub struct SweepPlan {
     /// λ grid points per sweep task (the batch shape; ≥ 1).
     pub batch: usize,
     /// Where `cv.fold_strategy` came from after resolution: `"config"`
-    /// (explicit), `"bench-file"` (auto, measured crossover) or `"default"`
-    /// (auto, no usable bench file) — see [`crate::cv::strategy`].
+    /// (explicit), `"bench-file"` / `"bench-file-mismatch"` (auto, measured
+    /// crossover — the latter from rows recorded on a different kernel
+    /// backend), `"probe"` (auto, no trajectory file — in-process
+    /// micro-calibration) or `"default"` (auto, nothing usable) — see
+    /// [`crate::cv::strategy`].
     pub strategy_source: &'static str,
 }
 
@@ -266,8 +270,9 @@ pub struct SweepReport {
     /// The concrete fold strategy the run executed (never
     /// [`FoldStrategy::Auto`] — [`SweepPlan::new`] resolves it).
     pub fold_strategy: FoldStrategy,
-    /// Provenance of `fold_strategy`: `"config"`, `"bench-file"` or
-    /// `"default"` (see [`SweepPlan::strategy_source`]).
+    /// Provenance of `fold_strategy`: `"config"`, `"bench-file"`,
+    /// `"bench-file-mismatch"`, `"probe"` or `"default"` (see
+    /// [`SweepPlan::strategy_source`]).
     pub strategy_source: &'static str,
 }
 
@@ -840,6 +845,240 @@ impl SweepEngine {
             threads: self.pool.size(),
             tasks,
             n,
+        })
+    }
+
+    /// Execute an ALOOCV plan: the cheap tier of the accuracy/cost ladder
+    /// (see [`crate::cv::aloocv`] for the math and escalation semantics).
+    ///
+    /// ```text
+    ///   LooPlan ──► stage 0  shared Gram     ⌈n/chunk⌉ tasks: G = XᵀX, g = Xᵀy
+    ///            ├► stage 1  anchor factors  g tasks: exact chol(G + λ_s I),
+    ///            │           then θ_s = (G + λ_s I)⁻¹g on the coordinating
+    ///            │           thread ("solve" phase, exactly one per anchor)
+    ///            ├► stage 2  batched hat     ⌈n/batch⌉ tasks: per anchor,
+    ///            │           solves          gather Xᵀ, blocked multi-RHS
+    ///            │                           TRSM, h_i per column, score
+    ///            │                           e_i/(1−h_i); leverage rows
+    ///            │                           escalate to exact LOO
+    ///            └► stage 3  curve fit       anchor ALOO-RMSE → PINRMSE
+    ///                                        polynomial over the full grid
+    /// ```
+    ///
+    /// Bitwise independent of the worker count like every other path: the
+    /// blocked TRSM is bitwise column-partition independent (so batch
+    /// boundaries can never change a hat diagonal), θ_s is computed once on
+    /// the coordinating thread, and per-batch results merge in ascending
+    /// (row, anchor) order.
+    pub fn run_aloocv(
+        &self,
+        ds: &SyntheticDataset,
+        plan: &LooPlan,
+    ) -> crate::Result<AloocvReport> {
+        gram::validate_rows(&ds.x, &ds.y)?;
+        self.metrics.incr("sweep.aloocv_runs");
+        let run_t0 = Instant::now();
+        let mut timer = PhaseTimer::new();
+        let mut tasks = 0usize;
+        let n = ds.n();
+
+        // stage 0: the shared Gram (assembled exactly once, like LOO)
+        let (gram, gram_chunks) = self.assemble_gram(ds, plan.cv.chunk_rows, &mut timer);
+        tasks += gram_chunks;
+
+        // stage 1: anchor factors L_s = chol(G + λ_s I) — the only O(d³)
+        // work — then the full-data solve θ_s, once per anchor on the
+        // coordinating thread (the per-row solves of the exact tier are
+        // exactly what this tier amortizes away)
+        let g = plan.anchors.len();
+        let items: Vec<(Arc<GramCache>, f64)> = plan
+            .anchors
+            .iter()
+            .map(|&lam| (Arc::clone(&gram), lam))
+            .collect();
+        let factors = Arc::new(self.anchor_wave(
+            items,
+            gram_hessian,
+            "factor",
+            &mut timer,
+            &mut tasks,
+        )?);
+        let trusts: Arc<Vec<FactorTrust>> =
+            Arc::new(factors.iter().map(FactorTrust::fresh).collect());
+        let thetas: Arc<Vec<Vec<f64>>> = {
+            let mut work = Vec::new();
+            let mut ths = Vec::with_capacity(g);
+            for l in factors.iter() {
+                let mut theta = Vec::new();
+                timer.time("solve", || {
+                    crate::linalg::triangular::solve_cholesky_into(
+                        l,
+                        gram.gradient(),
+                        &mut work,
+                        &mut theta,
+                    )
+                });
+                ths.push(theta);
+            }
+            Arc::new(ths)
+        };
+
+        // stage 2: the batched hat-diagonal wave. Each task owns a gathered
+        // row batch and, per anchor, runs one blocked multi-RHS TRSM and
+        // scores every row (aloocv::eval_hat_block). A leverage blow-up
+        // escalates the row to the exact-LOO body inside the cell; only
+        // full ladder exhaustion becomes an Err cell to record.
+        let policy = plan.cv.recovery;
+        let anchor_lams = Arc::new(plan.anchors.clone());
+        type CellRes = Result<(f64, Option<(Rung, DegradeInfo)>), CholeskyError>;
+        type AlooTaskRes = (Vec<Vec<CellRes>>, PhaseTimer, f64);
+        let mut jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> AlooTaskRes + Send>> = Vec::new();
+        let mut spans: Vec<usize> = Vec::new(); // batch start rows
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + plan.batch).min(n);
+            spans.push(lo);
+            let xblock = ds.x.slice(lo, hi, 0, ds.h());
+            let yblock = ds.y[lo..hi].to_vec();
+            let gram = Arc::clone(&gram);
+            let factors = Arc::clone(&factors);
+            let trusts = Arc::clone(&trusts);
+            let thetas = Arc::clone(&thetas);
+            let anchor_lams = Arc::clone(&anchor_lams);
+            let job: Box<dyn FnOnce(&mut Scratch) -> AlooTaskRes + Send> =
+                Box::new(move |scratch| {
+                    let t0 = Instant::now();
+                    let mut t = PhaseTimer::new();
+                    let rows = xblock.rows();
+                    let mut per_rows: Vec<Vec<CellRes>> = (0..rows)
+                        .map(|_| Vec::with_capacity(factors.len()))
+                        .collect();
+                    for (s, anchor) in factors.iter().enumerate() {
+                        let cells = aloocv::eval_hat_block(
+                            anchor,
+                            trusts[s],
+                            &gram,
+                            &thetas[s],
+                            &xblock,
+                            &yblock,
+                            anchor_lams[s],
+                            &policy,
+                            scratch,
+                            &mut t,
+                        );
+                        for (local, cell) in cells.into_iter().enumerate() {
+                            per_rows[local].push(cell);
+                        }
+                    }
+                    (per_rows, t, t0.elapsed().as_secs_f64())
+                });
+            jobs.push(job);
+            lo = hi;
+        }
+        tasks += jobs.len();
+
+        // merge in ascending (row, anchor) order on this thread —
+        // scheduling never touches the sums (degradations included)
+        let mut sums = vec![0.0f64; g];
+        let mut counts = vec![0usize; g];
+        let mut skipped: Vec<LooSkip> = Vec::new();
+        let mut degradations: Vec<Degradation> = Vec::new();
+        for (&lo, (per_rows, t, wall)) in spans.iter().zip(self.map_jobs(jobs)) {
+            timer.merge(&t);
+            self.metrics.incr("sweep.aloocv_tasks");
+            self.metrics.add_secs("sweep.aloocv_wall", wall);
+            for (local, per_anchor) in per_rows.into_iter().enumerate() {
+                for (s, cell) in per_anchor.into_iter().enumerate() {
+                    match cell {
+                        Ok((sqerr, degrade)) => {
+                            sums[s] += sqerr;
+                            counts[s] += 1;
+                            if let Some((rung, info)) = degrade {
+                                self.metrics.incr("sweep.degradations");
+                                degradations.push(info.into_degradation(
+                                    "aloocv",
+                                    lo + local,
+                                    plan.anchors[s],
+                                    rung,
+                                ));
+                            }
+                        }
+                        Err(error) => {
+                            self.metrics.incr("sweep.degradations");
+                            degradations.push(Degradation {
+                                surface: "aloocv",
+                                fold: lo + local,
+                                lambda: plan.anchors[s],
+                                cause: "leverage",
+                                rung: Rung::Skip,
+                                trust: 0.0,
+                                detail: format!("ladder exhausted: {error}"),
+                            });
+                            skipped.push(LooSkip {
+                                row: lo + local,
+                                lambda: plan.anchors[s],
+                                error,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        self.metrics
+            .add("sweep.aloocv_evals", counts.iter().sum::<usize>() as u64);
+        self.metrics.add("sweep.aloocv_skips", skipped.len() as u64);
+
+        // stage 3: anchor ALOO-RMSE, then the PINRMSE polynomial over the
+        // full grid (fitted on the anchors that survived)
+        let anchor_rmse: Vec<f64> = sums
+            .iter()
+            .zip(&counts)
+            .map(|(&s, &c)| if c > 0 { (s / c as f64).sqrt() } else { f64::NAN })
+            .collect();
+        let usable: (Vec<f64>, Vec<f64>) = plan
+            .anchors
+            .iter()
+            .zip(&anchor_rmse)
+            .filter(|(_, e)| e.is_finite())
+            .map(|(&l, &e)| (l, e))
+            .unzip();
+        let (best_lambda, best_error, curve) = if usable.0.len() > plan.cv.degree {
+            let poly = timer.time("fit", || {
+                fit_error_curve(&usable.0, &usable.1, plan.cv.degree)
+            });
+            timer.time("interp", || poly.sweep(&plan.grid))
+        } else if let Some((bl, be)) = usable
+            .0
+            .iter()
+            .zip(&usable.1)
+            .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .map(|(&l, &e)| (l, e))
+        {
+            // too few surviving anchors to fit the degree-r curve, but some
+            // hold finite ALOO-RMSE: degrade to the argmin over them
+            (bl, be, vec![f64::NAN; plan.grid.len()])
+        } else {
+            // every anchor lost all its rows: nothing at all to select from
+            (f64::NAN, f64::NAN, vec![f64::NAN; plan.grid.len()])
+        };
+
+        let wall_secs = run_t0.elapsed().as_secs_f64();
+        self.metrics.add_secs("sweep.run_wall", wall_secs);
+        Ok(AloocvReport {
+            grid: plan.grid.clone(),
+            curve,
+            anchor_lambdas: plan.anchors.clone(),
+            anchor_rmse,
+            best_lambda,
+            best_error,
+            skipped,
+            degradations,
+            timer,
+            wall_secs,
+            threads: self.pool.size(),
+            tasks,
+            n,
+            certification: None,
         })
     }
 

@@ -1,0 +1,275 @@
+//! Approximate leave-one-out CV (ALOOCV): the cheapest rung of the
+//! accuracy/cost ladder.
+//!
+//! ## The identity
+//!
+//! For ridge regression the leave-one-out residual has a closed form in the
+//! **hat-matrix diagonals** `h_i = xᵢᵀ (G + λI)⁻¹ xᵢ`:
+//!
+//! ```text
+//!   y_i − x_iᵀθ_{−i}  =  (y_i − x_iᵀθ) / (1 − h_i)
+//! ```
+//!
+//! so one full-data solve θ plus all n hat diagonals reproduce every
+//! held-out residual without ever removing a row. This is the workhorse of
+//! the approximate-CV family (Stephenson–Udell–Broderick, arXiv 2008.10547)
+//! and of the model-assessment/selection guarantees of Wilson–Kasy–Mackey
+//! (arXiv 2003.00617); for ridge the identity is exact, so the "approximate"
+//! in the name buys a pure cost win over the downdate engine ([`super::loo`])
+//! at equal answers — the approximation enters only through the
+//! interpolated λ axis, same as everywhere else in the crate.
+//!
+//! ## The cost structure — why this is the O(n·d) tier
+//!
+//! With the anchor factor `L = chol(G + λI)` already cached, the diagonals
+//! of the whole dataset are one **multi-RHS triangular solve**: gather a row
+//! batch as `B = Xᵀ` (d×b), solve `L W = B` with the blocked
+//! [`crate::linalg::triangular::trsm_left_lower_into`] (row-panelled through
+//! the packed micro-kernel), and read `h_i = ‖W·,ᵢ‖²` off the columns.
+//! That is `O(n·d²)` per anchor for the *entire* dataset — the same order
+//! one single exact-LOO row costs — and `O(n·d)` marginal per additional
+//! grid λ, because non-anchor λ's are served by the PINRMSE interpolation
+//! of the anchor curve (the paper's move, applied to the error curve). The
+//! exact-LOO tier pays `O(n·d²)` per anchor *per row* batch of downdates;
+//! the brute tier `O(n·d³)`. Hence the ladder:
+//!
+//! | tier | per-anchor cost | mechanism |
+//! |---|---|---|
+//! | `aloocv` | `O(n·d²)` total, `O(n·d)`/extra λ | batched hat solves |
+//! | `loo` | `O(n·d²)` **per row** | rank-1 downdate chains |
+//! | brute | `O(n·d³)` | per-row refactorization |
+//!
+//! ## Leverage guard — the ladder inside the tier
+//!
+//! A diagonal `h_i ≥ 1 − ε` ([`LEVERAGE_EPS`]) makes `1/(1 − h_i)` blow up:
+//! the row essentially determines its own prediction and the closed form is
+//! numerically void. Instead of emitting Inf/NaN, the cell **escalates to
+//! the exact-LOO tier** — `loo::eval_heldout_point`, the rank-1
+//! downdate body, which itself may climb the shared recovery ladder
+//! ([`super::recovery`]) — and the climb is recorded as a [`Degradation`]
+//! with `cause: "leverage"` on surface `"aloocv"`. Only full ladder
+//! exhaustion skips the (row, anchor) cell, recorded in
+//! [`AloocvReport::skipped`]; the report never carries a non-finite cell.
+//!
+//! ## Certification
+//!
+//! [`run_certified`] reproduces the Wilson et al. selection experiment
+//! in-crate: run the cheap tier and the exact tier on the same plan and
+//! certify whether the selected λ* agree within a decade
+//! ([`Certification`]). The conformance suite (`tests/tiers.rs`,
+//! `./ci.sh --tiers`) pins this on the shared problem generators at
+//! workers {1, 2, 4}, bitwise.
+//!
+//! Scheduling (per-batch tasks over the worker pool, bitwise independent of
+//! the worker count) lives in
+//! [`crate::coordinator::sweep_engine::SweepEngine::run_aloocv`]; this
+//! module owns the task body (`eval_hat_block`), the report shape and the
+//! certification record.
+
+use crate::coordinator::sweep_engine::{LooPlan, SweepEngine};
+use crate::data::gram::GramCache;
+use crate::data::synthetic::SyntheticDataset;
+use crate::linalg::cholesky::CholeskyError;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::scratch::Scratch;
+use crate::linalg::triangular::trsm_left_lower_into;
+use crate::linalg::trust::FactorTrust;
+use crate::util::PhaseTimer;
+
+use super::loo::{eval_heldout_point, run_loo, LooSkip};
+use super::recovery::{DegradeInfo, Degradation, RecoveryPolicy, Rung};
+use super::CvConfig;
+
+/// Leverage guard threshold: a hat diagonal `h_i ≥ 1 − LEVERAGE_EPS` routes
+/// the row through the recovery ladder (escalation to exact LOO) instead of
+/// evaluating the `1/(1 − h_i)` closed form.
+pub const LEVERAGE_EPS: f64 = 1e-8;
+
+/// The cheap-vs-exact selection verdict of [`run_certified`] — the Wilson
+/// et al. model-selection experiment reproduced in-crate.
+#[derive(Debug, Clone)]
+pub struct Certification {
+    /// λ* selected by the ALOOCV tier.
+    pub aloo_lambda: f64,
+    /// λ* selected by the exact-LOO tier on the same plan.
+    pub loo_lambda: f64,
+    /// `|log10(aloo_lambda) − log10(loo_lambda)|`.
+    pub decades: f64,
+    /// Whether the tiers agree within one decade (both finite).
+    pub certified: bool,
+}
+
+/// What an ALOOCV run produced. Identical in shape to
+/// [`super::loo::LooReport`] — the tiers are interchangeable consumers of
+/// the same plan — plus the optional certification verdict.
+pub struct AloocvReport {
+    /// The candidate λ grid (`q` points).
+    pub grid: Vec<f64>,
+    /// Interpolated ALOO-RMSE over the grid (NaN when too few anchors
+    /// survived to fit the curve).
+    pub curve: Vec<f64>,
+    /// The anchor λ's that were factored exactly (`g` of them).
+    pub anchor_lambdas: Vec<f64>,
+    /// ALOO-RMSE at each anchor (mean over served rows; NaN if every row
+    /// was skipped at that anchor).
+    pub anchor_rmse: Vec<f64>,
+    /// Grid minimizer of the interpolated curve (degrades like
+    /// [`super::loo::LooReport::best_lambda`]).
+    pub best_lambda: f64,
+    /// Curve (or, degraded, exact anchor) value at `best_lambda`.
+    pub best_error: f64,
+    /// Skipped (row, λ) cells — full-ladder exhaustion on an escalated
+    /// leverage row; recorded, not fatal.
+    pub skipped: Vec<LooSkip>,
+    /// Every leverage escalation and ladder climb, in ascending
+    /// (row, anchor) order, on surface `"aloocv"` with `cause: "leverage"`.
+    pub degradations: Vec<Degradation>,
+    /// Phase timings summed over all tasks. The structural invariants —
+    /// `factor` and `solve` counted once per anchor, `hat_solve` once per
+    /// (batch, anchor), zero `chol`/`downdate` on a clean run — are what
+    /// the tier tests and `bench_kernels` assert.
+    pub timer: PhaseTimer,
+    /// Elapsed wall-clock seconds of the run.
+    pub wall_secs: f64,
+    /// Worker threads the run used.
+    pub threads: usize,
+    /// Total tasks executed (Gram chunks + anchor factors + batch solves).
+    pub tasks: usize,
+    /// Rows of the dataset.
+    pub n: usize,
+    /// Tier-agreement verdict — `Some` only from [`run_certified`].
+    pub certification: Option<Certification>,
+}
+
+/// Run ALOOCV over a dataset: plans anchors/grid from `cfg` exactly like
+/// the exact-LOO tier ([`LooPlan`]), executes on a [`SweepEngine`] — Gram
+/// assembly, anchor factorizations, batched hat-diagonal solves — and fits
+/// the ALOO error curve. Results are bit-identical for every thread count.
+pub fn run_aloocv(ds: &SyntheticDataset, cfg: &CvConfig) -> crate::Result<AloocvReport> {
+    let plan = LooPlan::new(ds, cfg);
+    let engine = SweepEngine::new(plan.threads);
+    engine.run_aloocv(ds, &plan)
+}
+
+/// Run the cheap tier and the exact tier on the same plan and stamp the
+/// selection-agreement verdict into the report ([`Certification`]): the
+/// Wilson et al. experiment as a library call.
+pub fn run_certified(ds: &SyntheticDataset, cfg: &CvConfig) -> crate::Result<AloocvReport> {
+    let mut rep = run_aloocv(ds, cfg)?;
+    let exact = run_loo(ds, cfg)?;
+    let decades = (rep.best_lambda.log10() - exact.best_lambda.log10()).abs();
+    rep.certification = Some(Certification {
+        aloo_lambda: rep.best_lambda,
+        loo_lambda: exact.best_lambda,
+        decades,
+        certified: decades.is_finite() && decades <= 1.0,
+    });
+    Ok(rep)
+}
+
+/// One (batch, anchor) hat-diagonal evaluation — the body of the sweep
+/// engine's batch tasks (and of the serial path; parallel results are
+/// bit-identical to serial because both run *this* code). Gathers the row
+/// batch as `Xᵀ` into `scratch.rhs` ("gather"), runs the blocked multi-RHS
+/// TRSM into `scratch.wsol` and accumulates each column's squared norm
+/// ("hat_solve"), then scores every row's ALOO residual against the
+/// anchor's full-data θ ("aloo_score"). Rows whose diagonal trips the
+/// leverage guard escalate to [`eval_heldout_point`]; the per-row cells come
+/// back in batch-row order, `Err` only on full ladder exhaustion. Every
+/// buffer is worker scratch — zero heap allocation once warm.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn eval_hat_block(
+    anchor: &Matrix,
+    anchor_trust: FactorTrust,
+    gram: &GramCache,
+    theta: &[f64],
+    xblock: &Matrix,
+    yblock: &[f64],
+    lam: f64,
+    policy: &RecoveryPolicy,
+    scratch: &mut Scratch,
+    timer: &mut PhaseTimer,
+) -> Vec<Result<(f64, Option<(Rung, DegradeInfo)>), CholeskyError>> {
+    let (b, d) = (xblock.rows(), xblock.cols());
+    timer.time("gather", || {
+        scratch.rhs.reset_zeroed(d, b);
+        let rhs = scratch.rhs.as_mut_slice();
+        for c in 0..b {
+            for (j, &x) in xblock.row(c).iter().enumerate() {
+                rhs[j * b + c] = x;
+            }
+        }
+    });
+    timer.time("hat_solve", || {
+        trsm_left_lower_into(anchor, &scratch.rhs, &mut scratch.wsol);
+        // h_i = ‖W·,ᵢ‖², accumulated row-wise in ascending order — the
+        // per-column bits depend only on that column (see the TRSM's
+        // bitwise contract), so batch boundaries and worker count can
+        // never change a diagonal. Stashed in scratch.pred (unused by
+        // this path otherwise).
+        scratch.pred.clear();
+        scratch.pred.resize(b, 0.0);
+        let w = scratch.wsol.as_slice();
+        for r in 0..d {
+            let row = &w[r * b..(r + 1) * b];
+            for (h, &v) in scratch.pred.iter_mut().zip(row) {
+                *h += v * v;
+            }
+        }
+    });
+    let mut cells = Vec::with_capacity(b);
+    for i in 0..b {
+        let h = scratch.pred[i];
+        let xi = xblock.row(i);
+        let yi = yblock[i];
+        if h < 1.0 - LEVERAGE_EPS {
+            let sqerr = timer.time("aloo_score", || {
+                let e: f64 = xi.iter().zip(theta).map(|(x, t)| x * t).sum::<f64>() - yi;
+                let r = e / (1.0 - h);
+                r * r
+            });
+            cells.push(Ok((sqerr, None)));
+            continue;
+        }
+        // leverage blow-up: escalate this row to the exact-LOO tier (which
+        // may itself climb the recovery ladder), recorded as a degradation
+        let cell = match eval_heldout_point(
+            anchor,
+            anchor_trust,
+            gram,
+            xi,
+            yi,
+            lam,
+            policy,
+            scratch,
+            timer,
+        ) {
+            Ok((sqerr, inner)) => {
+                let (rung, info) = match inner {
+                    None => (
+                        Rung::Downdate,
+                        DegradeInfo {
+                            cause: "leverage",
+                            trust_at_failure: 0.0,
+                            detail: format!(
+                                "hat diagonal {h:.17} ≥ 1 − {LEVERAGE_EPS:.0e}; served by exact-LOO downdate"
+                            ),
+                        },
+                    ),
+                    Some((rung, mut info)) => {
+                        info.detail = format!(
+                            "hat diagonal {h:.17} ≥ 1 − {LEVERAGE_EPS:.0e}; exact-LOO escalated further: {}",
+                            info.detail
+                        );
+                        info.cause = "leverage";
+                        (rung, info)
+                    }
+                };
+                Ok((sqerr, Some((rung, info))))
+            }
+            Err(e) => Err(e),
+        };
+        cells.push(cell);
+    }
+    cells
+}

@@ -26,10 +26,18 @@
 //! for that (fold, λ) only, recorded in [`CvReport::degradations`]
 //! ([`FoldData::factor_from_anchor`]).
 //!
-//! Besides k-fold, the crate runs **exact leave-one-out CV** ([`loo`]) on
-//! the factor-update subsystem: one anchor factor per λ, every held-out
-//! factor by rank-1 downdate — select with [`CvMode::Loo`].
+//! Besides k-fold, the crate runs leave-one-out CV on a three-tier
+//! **accuracy/cost ladder**: approximate LOO via batched hat-diagonal
+//! solves ([`aloocv`], `O(n·d)` per grid λ — select with
+//! [`CvMode::Aloocv`]), **exact leave-one-out CV** ([`loo`]) on the
+//! factor-update subsystem (one anchor factor per λ, every held-out factor
+//! by rank-1 downdate — [`CvMode::Loo`]), and the brute-force per-row
+//! refactorization oracle ([`loo::brute_force_loo_rmse`]). The cheap tier
+//! escalates individual high-leverage rows to the exact tier through the
+//! shared recovery ladder, and [`aloocv::run_certified`] checks the two
+//! tiers select the same λ* to within a decade.
 
+pub mod aloocv;
 pub mod loo;
 pub mod recovery;
 pub mod solvers;
@@ -49,7 +57,11 @@ use crate::util::PhaseTimer;
 use recovery::{DegradeInfo, Degradation, RecoveryPolicy, Rung};
 use solvers::SolverKind;
 
-/// Which cross-validation scheme a run executes.
+/// Which cross-validation scheme a run executes. The LOO family is an
+/// accuracy/cost ladder: [`CvMode::Aloocv`] is the cheap tier,
+/// [`CvMode::Loo`] the exact tier it escalates onto per high-leverage row,
+/// and the brute-force per-row refactorization
+/// ([`loo::brute_force_loo_rmse`]) the oracle above both.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CvMode {
     /// k-fold CV — the paper's §6 scheme (folds, solvers, the fold×λ grid).
@@ -57,6 +69,10 @@ pub enum CvMode {
     /// Exact leave-one-out CV on the factor-update subsystem ([`loo`]):
     /// anchor factors once per λ, every held-out factor by rank-1 downdate.
     Loo,
+    /// Approximate LOO via batched hat-diagonal solves ([`aloocv`]):
+    /// `h_i = xᵢᵀ(G+λI)⁻¹xᵢ` for all n rows as one blocked multi-RHS TRSM
+    /// per anchor — `O(n·d)` per additional grid λ.
+    Aloocv,
 }
 
 impl CvMode {
@@ -65,6 +81,7 @@ impl CvMode {
         match s.to_ascii_lowercase().as_str() {
             "kfold" | "k-fold" => Some(CvMode::KFold),
             "loo" | "leave-one-out" => Some(CvMode::Loo),
+            "aloocv" | "aloo" | "approximate-loo" => Some(CvMode::Aloocv),
             _ => None,
         }
     }
@@ -73,6 +90,7 @@ impl CvMode {
         match self {
             CvMode::KFold => "kfold",
             CvMode::Loo => "loo",
+            CvMode::Aloocv => "aloocv",
         }
     }
 }
@@ -97,8 +115,10 @@ pub enum FoldStrategy {
     /// Measured-crossover auto-selection ([`strategy`]): read the last
     /// `BENCH_kernels.json` trajectory and pick [`FoldStrategy::Downdate`]
     /// vs [`FoldStrategy::Refactor`] from the measured `chud_rk` crossover
-    /// at this run's `(n_v, d)`; falls back to the static default
-    /// (downdate) when no usable bench file exists. Resolved to a concrete
+    /// at this run's `(n_v, d)`; with no trajectory file at all, a ~10 ms
+    /// in-process probe measures the crossover instead, and only an
+    /// unusable (present-but-malformed) file or a failed probe lands on
+    /// the static default (downdate). Resolved to a concrete
     /// strategy in [`SweepPlan::new`] — the engine never sees `Auto`, and
     /// the resolved choice plus its provenance are recorded in
     /// [`CvReport::fold_strategy`]/[`CvReport::strategy_source`].
@@ -536,8 +556,12 @@ pub struct CvReport {
     /// [`FoldStrategy::Auto`] (resolution happens in `SweepPlan::new`).
     pub fold_strategy: FoldStrategy,
     /// Where [`CvReport::fold_strategy`] came from: `"config"` (explicit
-    /// setting), `"bench-file"` (auto mode, measured crossover), or
-    /// `"default"` (auto mode, no usable bench file).
+    /// setting), `"bench-file"` / `"bench-file-mismatch"` (auto mode,
+    /// measured crossover — the latter when every usable row was recorded
+    /// on a different kernel backend), `"probe"` (auto mode, no trajectory
+    /// file — in-process micro-calibration), or `"default"` (auto mode,
+    /// file present but unusable, or the probe failed) — see
+    /// [`strategy`].
     pub strategy_source: &'static str,
 }
 
@@ -563,12 +587,18 @@ pub fn run_cv(
     kind: SolverKind,
     cfg: &CvConfig,
 ) -> crate::Result<CvReport> {
-    if cfg.mode == CvMode::Loo {
-        // a k-fold report cannot masquerade as a LOO run — route explicitly
-        anyhow::bail!(
+    match cfg.mode {
+        // a k-fold report cannot masquerade as a LOO-family run — route
+        // explicitly to the tier's own entry point
+        CvMode::Loo => anyhow::bail!(
             "cfg.mode is 'loo' but run_cv executes k-fold sweeps; \
              call cv::loo::run_loo (or Coordinator::run_loo) instead"
-        );
+        ),
+        CvMode::Aloocv => anyhow::bail!(
+            "cfg.mode is 'aloocv' but run_cv executes k-fold sweeps; \
+             call cv::aloocv::run_aloocv (or Coordinator::run_aloocv) instead"
+        ),
+        CvMode::KFold => {}
     }
     // ingest validation: non-finite rows/labels or shape mismatches are
     // structured errors here, never NaNs inside a factor
@@ -736,7 +766,10 @@ mod tests {
         let rep = run_cv(&ds, SolverKind::Chol, &cfg).unwrap();
         assert_ne!(rep.fold_strategy, FoldStrategy::Auto, "must resolve");
         assert!(
-            rep.strategy_source == "bench-file" || rep.strategy_source == "default",
+            matches!(
+                rep.strategy_source,
+                "bench-file" | "bench-file-mismatch" | "probe" | "default"
+            ),
             "auto provenance, got '{}'",
             rep.strategy_source
         );

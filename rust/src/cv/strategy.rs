@@ -5,9 +5,10 @@
 //! measurements**: the perf harness (`benches/bench_kernels.rs`) records,
 //! per dimension `d`, the wall-clock of a rank-`CHUD_RANK_CHUNK` packed
 //! downdate (`chud_rk.packed_secs`) and of the full refactorization it
-//! replaces (`chud_rk.reference_secs`). From the row nearest this run's
-//! factor dimension the picker extrapolates both costs to the run's actual
-//! `(n_v, d)`:
+//! replaces (`chud_rk.reference_secs`). From the best `chud_rk` row — rows
+//! whose recorded `kernel_backend` matches the backend *this* run dispatches
+//! to are preferred as a class, then nearest dimension within the class —
+//! the picker extrapolates both costs to the run's actual `(n_v, d)`:
 //!
 //! - downdate: `packed · (d/d_row)² · ceil(n_v / CHUD_RANK_CHUNK)` — the
 //!   chained rank-`n_v` downdate is `O(n_v·d²)`, executed in
@@ -16,18 +17,36 @@
 //!
 //! Downdate wins when its predicted cost is ≤ the refactor prediction —
 //! the asymptotic `n_v ≪ d` regime, which the measurement grounds at real
-//! constants instead of big-O faith. The trajectory file is best-effort
-//! input: absent, unreadable, malformed, or missing the `chud_rk` rows all
-//! degrade to the **static default (downdate)** without panicking, and the
-//! provenance string records which way the decision was made (`"config"` /
-//! `"bench-file"` / `"default"`) so reports never hide the fallback.
+//! constants instead of big-O faith.
+//!
+//! The trajectory file is best-effort input, and the provenance string
+//! records exactly which way every decision was made so reports never hide
+//! a fallback:
+//!
+//! - `"config"` — the strategy was explicit, no measurement consulted;
+//! - `"bench-file"` — the measured crossover decided, from a row recorded
+//!   on the same micro-kernel backend this run uses;
+//! - `"bench-file-mismatch"` — the crossover decided, but every usable row
+//!   was recorded on a *different* backend (timings are transferable only
+//!   to first order — the note flags the weaker evidence);
+//! - `"probe"` — no trajectory file existed, so a ~10 ms in-process
+//!   micro-calibration measured the `chud_rk`-vs-refactor crossover right
+//!   here (once per process, cached) instead of silently using the static
+//!   default;
+//! - `"default"` — the file was present but malformed/unusable (kept
+//!   distinct from *absent* so a corrupt file degrades loudly rather than
+//!   triggering hidden re-measurement), or the probe itself failed.
 //!
 //! Resolution happens once per run in
 //! [`SweepPlan::new`](crate::coordinator::sweep_engine::SweepPlan::new);
 //! the sweep engine itself never sees [`FoldStrategy::Auto`].
 
+use std::sync::OnceLock;
+use std::time::Instant;
+
 use crate::cv::FoldStrategy;
-use crate::linalg::chud::CHUD_RANK_CHUNK;
+use crate::linalg::chud::{chol_downdate_tracked, CHUD_RANK_CHUNK};
+use crate::linalg::trust::FactorTrust;
 use crate::runtime::json::{self, Json};
 
 /// A resolved strategy plus its provenance.
@@ -35,8 +54,8 @@ use crate::runtime::json::{self, Json};
 pub struct Resolved {
     /// The concrete strategy (never [`FoldStrategy::Auto`]).
     pub strategy: FoldStrategy,
-    /// `"config"` when the strategy was explicit, `"bench-file"` when the
-    /// measured crossover decided, `"default"` when auto fell back.
+    /// `"config"`, `"bench-file"`, `"bench-file-mismatch"`, `"probe"` or
+    /// `"default"` — see the module docs for the exact semantics.
     pub source: &'static str,
 }
 
@@ -50,25 +69,43 @@ pub const BENCH_FILE_ENV: &str = "PICHOL_BENCH_FILE";
 
 /// Resolve a configured strategy for a run with `k_folds` over an `n×d`
 /// dataset. Explicit strategies pass through with source `"config"`; auto
-/// reads the bench trajectory file (see [`BENCH_FILE_ENV`]).
+/// reads the bench trajectory file (see [`BENCH_FILE_ENV`]) and, when no
+/// file exists at all, falls back to the in-process micro-calibration
+/// probe before surrendering to the static default.
 pub fn resolve(cfg_strategy: FoldStrategy, n: usize, d: usize, k_folds: usize) -> Resolved {
     let n_v = if k_folds > 0 { n.div_ceil(k_folds) } else { n };
-    let text = match cfg_strategy {
-        FoldStrategy::Auto => read_bench_file(),
-        _ => None,
-    };
-    resolve_with(cfg_strategy, n_v, d, text.as_deref())
+    if cfg_strategy != FoldStrategy::Auto {
+        return resolve_with(cfg_strategy, n_v, d, None, "scalar");
+    }
+    let active = crate::linalg::kernel::active_backend().name();
+    match read_bench_file() {
+        Some(text) => resolve_with(FoldStrategy::Auto, n_v, d, Some(&text), active),
+        None => match probe_measurement() {
+            // a probe measures on the active backend by construction
+            Some((d_row, packed, reference)) => Resolved {
+                strategy: decide(n_v, d, d_row, packed, reference),
+                source: "probe",
+            },
+            None => Resolved {
+                strategy: AUTO_DEFAULT,
+                source: "default",
+            },
+        },
+    }
 }
 
 /// Pure core of [`resolve`]: decide from the configured strategy, the fold
-/// validation-block size `n_v`, the factor dimension `d`, and the bench
-/// trajectory text (`None` = file absent/unreadable). Separated from the
-/// filesystem so unit tests drive both sides of the crossover directly.
+/// validation-block size `n_v`, the factor dimension `d`, the bench
+/// trajectory text (`None` = file absent/unreadable) and the active
+/// micro-kernel backend name. Separated from the filesystem (and from the
+/// probe — `None` text falls straight to the default here) so unit tests
+/// drive both sides of the crossover directly.
 pub fn resolve_with(
     cfg_strategy: FoldStrategy,
     n_v: usize,
     d: usize,
     bench_text: Option<&str>,
+    active_backend: &str,
 ) -> Resolved {
     if cfg_strategy != FoldStrategy::Auto {
         return Resolved {
@@ -76,10 +113,14 @@ pub fn resolve_with(
             source: "config",
         };
     }
-    match bench_text.and_then(|t| pick_from_json(t, n_v, d)) {
-        Some(strategy) => Resolved {
+    match bench_text.and_then(|t| pick_from_json(t, n_v, d, active_backend)) {
+        Some((strategy, mismatch)) => Resolved {
             strategy,
-            source: "bench-file",
+            source: if mismatch {
+                "bench-file-mismatch"
+            } else {
+                "bench-file"
+            },
         },
         None => Resolved {
             strategy: AUTO_DEFAULT,
@@ -89,9 +130,19 @@ pub fn resolve_with(
 }
 
 /// Parse a `BENCH_kernels.json` document and pick a strategy for `(n_v, d)`
-/// from its `chud_rk` rows. `None` when the text is malformed or carries no
-/// usable row (non-positive timings, zero dimension).
-pub fn pick_from_json(text: &str, n_v: usize, d: usize) -> Option<FoldStrategy> {
+/// from its `chud_rk` rows. Rows recorded on `active_backend` (per-row
+/// `kernel_backend`, falling back to the document-level field) are
+/// preferred as a class over rows from other backends; within a class the
+/// nearest-dimension row wins. Returns the decision plus a mismatch flag
+/// (`true` when the winning row's backend differs from the active one).
+/// `None` when the text is malformed or carries no usable row
+/// (non-positive timings, zero dimension).
+pub fn pick_from_json(
+    text: &str,
+    n_v: usize,
+    d: usize,
+    active_backend: &str,
+) -> Option<(FoldStrategy, bool)> {
     let doc = json::parse(text).ok()?;
     // "results" is the key the perf harness emits; "rows" tolerated for
     // hand-written fixtures.
@@ -99,7 +150,9 @@ pub fn pick_from_json(text: &str, n_v: usize, d: usize) -> Option<FoldStrategy> 
         .get("results")
         .or_else(|| doc.get("rows"))?
         .as_arr()?;
-    let mut nearest: Option<(usize, f64, f64)> = None;
+    let doc_backend = doc.get("kernel_backend").and_then(Json::as_str);
+    // (backend matches, d_row, packed, reference)
+    let mut nearest: Option<(bool, usize, f64, f64)> = None;
     for row in rows {
         if row.get("kernel").and_then(Json::as_str) != Some("chud_rk") {
             continue;
@@ -114,29 +167,102 @@ pub fn pick_from_json(text: &str, n_v: usize, d: usize) -> Option<FoldStrategy> 
         if d_row == 0 || !usable(packed) || !usable(reference) {
             continue;
         }
+        let row_backend = row
+            .get("kernel_backend")
+            .and_then(Json::as_str)
+            .or(doc_backend);
+        let matches = row_backend == Some(active_backend);
         let better = match nearest {
             None => true,
-            Some((best_d, _, _)) => d.abs_diff(d_row) < d.abs_diff(best_d),
+            Some((best_matches, best_d, _, _)) => {
+                (matches && !best_matches)
+                    || (matches == best_matches && d.abs_diff(d_row) < d.abs_diff(best_d))
+            }
         };
         if better {
-            nearest = Some((d_row, packed, reference));
+            nearest = Some((matches, d_row, packed, reference));
         }
     }
-    let (d_row, packed, reference) = nearest?;
+    let (matches, d_row, packed, reference) = nearest?;
+    Some((decide(n_v, d, d_row, packed, reference), !matches))
+}
+
+/// The shared cost model: extrapolate a `chud_rk` measurement at `d_row`
+/// to this run's `(n_v, d)` and pick the cheaper side (ties → downdate).
+/// Used identically by the bench-file path and the probe path, so the two
+/// provenances can never disagree on the same numbers.
+fn decide(n_v: usize, d: usize, d_row: usize, packed: f64, reference: f64) -> FoldStrategy {
     let scale = d as f64 / d_row as f64;
     let chain_links = n_v.div_ceil(CHUD_RANK_CHUNK).max(1);
     let predicted_downdate = packed * scale * scale * chain_links as f64;
     let predicted_refactor = reference * scale * scale * scale;
-    Some(if predicted_downdate <= predicted_refactor {
+    if predicted_downdate <= predicted_refactor {
         FoldStrategy::Downdate
     } else {
         FoldStrategy::Refactor
-    })
+    }
+}
+
+/// Probe dimension: small enough that three downdate + three refactor reps
+/// stay well under ~10 ms even on the scalar backend, large enough that the
+/// packed kernel's blocking is actually exercised.
+const PROBE_DIM: usize = 64;
+
+/// The startup micro-calibration: when no trajectory file exists, measure
+/// the `chud_rk`-vs-refactor crossover in-process — one seeded `2d×d`
+/// dataset, one anchor factor, then min-of-3 reps of (a) the tracked
+/// rank-`CHUD_RANK_CHUNK` packed downdate of a factor copy (exactly what
+/// the downdate strategy runs per fold cell) and (b) the `chol(H + λI)`
+/// refactorization it replaces (Hessian downdated once, outside the timed
+/// region). Returns `(d_row, packed_secs, reference_secs)` shaped like a
+/// `chud_rk` bench row, or `None` if the probe breaks down or the clock
+/// resolution swallows a timing. Cached per process — every later `resolve`
+/// reuses the first measurement.
+fn probe_measurement() -> Option<(usize, f64, f64)> {
+    static PROBE: OnceLock<Option<(usize, f64, f64)>> = OnceLock::new();
+    *PROBE.get_or_init(run_probe)
+}
+
+fn run_probe() -> Option<(usize, f64, f64)> {
+    const LAM: f64 = 0.5;
+    let d = PROBE_DIM;
+    let x = crate::testutil::random_matrix(2 * d, d, 0x9e3779b9);
+    let g = crate::linalg::gemm::syrk_lower(&x);
+    let l = crate::linalg::cholesky::cholesky_shifted(&g, LAM).ok()?;
+    // the held-out block: the first CHUD_RANK_CHUNK data rows, so the
+    // downdated matrix is the Gram of the remaining rows — genuinely PSD,
+    // like every real fold downdate
+    let xv = x.slice(0, CHUD_RANK_CHUNK, 0, d);
+    let mut trans = crate::linalg::matrix::Matrix::zeros(0, 0);
+    let mut packed = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let mut lc = l.clone();
+        let mut u = xv.transpose();
+        let mut trust = FactorTrust::fresh(&lc);
+        chol_downdate_tracked(&mut lc, &mut u, &mut trans, &mut trust).ok()?;
+        packed = packed.min(t0.elapsed().as_secs_f64());
+    }
+    let mut h = crate::linalg::matrix::Matrix::zeros(0, 0);
+    crate::linalg::gemm::syrk_lower_downdate_into(&g, &xv, &mut h);
+    let mut reference = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        crate::linalg::cholesky::cholesky_shifted(&h, LAM).ok()?;
+        reference = reference.min(t0.elapsed().as_secs_f64());
+    }
+    let usable = |t: f64| t.is_finite() && t > 0.0;
+    if usable(packed) && usable(reference) {
+        Some((d, packed, reference))
+    } else {
+        None
+    }
 }
 
 /// Read the bench trajectory file: `PICHOL_BENCH_FILE` when set, else the
 /// workspace-root `BENCH_kernels.json` the perf harness writes. `None` on
-/// any I/O failure — auto never panics over a missing measurement.
+/// any I/O failure — auto never panics over a missing measurement (it
+/// probes instead; see [`resolve`]).
 fn read_bench_file() -> Option<String> {
     let path = std::env::var(BENCH_FILE_ENV)
         .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json").into());
@@ -162,7 +288,7 @@ mod tests {
     #[test]
     fn explicit_strategy_is_config_sourced() {
         for s in [FoldStrategy::Refactor, FoldStrategy::Downdate] {
-            let r = resolve_with(s, 10, 50, Some(&fixture(50, 1.0, 1.0)));
+            let r = resolve_with(s, 10, 50, Some(&fixture(50, 1.0, 1.0)), "scalar");
             assert_eq!(r.strategy, s);
             assert_eq!(r.source, "config");
         }
@@ -173,7 +299,7 @@ mod tests {
         // one chain link (n_v ≤ CHUD_RANK_CHUNK), downdate measured 10×
         // cheaper than refactorization at the same d → downdate wins
         let text = fixture(64, 0.1, 1.0);
-        let r = resolve_with(FoldStrategy::Auto, CHUD_RANK_CHUNK, 64, Some(&text));
+        let r = resolve_with(FoldStrategy::Auto, CHUD_RANK_CHUNK, 64, Some(&text), "scalar");
         assert_eq!(r.strategy, FoldStrategy::Downdate);
         assert_eq!(r.source, "bench-file");
     }
@@ -184,7 +310,7 @@ mod tests {
         // crosses the one-off refactorization → refactor wins
         let text = fixture(64, 0.5, 1.0);
         let nv_huge = 64 * CHUD_RANK_CHUNK;
-        let r = resolve_with(FoldStrategy::Auto, nv_huge, 64, Some(&text));
+        let r = resolve_with(FoldStrategy::Auto, nv_huge, 64, Some(&text), "scalar");
         assert_eq!(r.strategy, FoldStrategy::Refactor);
         assert_eq!(r.source, "bench-file");
     }
@@ -196,11 +322,11 @@ mod tests {
         let cheap = fixture(100, 0.2, 1.0); // 4·0.2 = 0.8 ≤ 1.0 → downdate
         let dear = fixture(100, 0.3, 1.0); // 4·0.3 = 1.2 > 1.0 → refactor
         assert_eq!(
-            resolve_with(FoldStrategy::Auto, nv, 100, Some(&cheap)).strategy,
+            resolve_with(FoldStrategy::Auto, nv, 100, Some(&cheap), "scalar").strategy,
             FoldStrategy::Downdate
         );
         assert_eq!(
-            resolve_with(FoldStrategy::Auto, nv, 100, Some(&dear)).strategy,
+            resolve_with(FoldStrategy::Auto, nv, 100, Some(&dear), "scalar").strategy,
             FoldStrategy::Refactor
         );
     }
@@ -213,15 +339,47 @@ mod tests {
             {"kernel": "chud_rk", "d": 32, "packed_secs": 5.0, "reference_secs": 1.0},
             {"kernel": "chud_rk", "d": 512, "packed_secs": 0.001, "reference_secs": 1.0}
         ]}"#;
-        let r = resolve_with(FoldStrategy::Auto, 8, 64, Some(text));
+        let r = resolve_with(FoldStrategy::Auto, 8, 64, Some(text), "scalar");
         assert_eq!(r.strategy, FoldStrategy::Refactor);
         // and a d=400 run must use the d=512 row
-        let r = resolve_with(FoldStrategy::Auto, 8, 400, Some(text));
+        let r = resolve_with(FoldStrategy::Auto, 8, 400, Some(text), "scalar");
         assert_eq!(r.strategy, FoldStrategy::Downdate);
     }
 
     #[test]
+    fn backend_mismatch_is_flagged_in_the_provenance() {
+        // every usable row was recorded on a different backend: the
+        // crossover still decides, but the provenance carries the note
+        let text = fixture(64, 0.1, 1.0); // doc-level backend "scalar"
+        let r = resolve_with(FoldStrategy::Auto, CHUD_RANK_CHUNK, 64, Some(&text), "avx2");
+        assert_eq!(r.strategy, FoldStrategy::Downdate);
+        assert_eq!(r.source, "bench-file-mismatch");
+    }
+
+    #[test]
+    fn matching_backend_row_beats_nearer_mismatched_row() {
+        // the d=64 row (exactly this run's d) was recorded on avx2 and says
+        // refactor; the d=512 scalar row says downdate. On a scalar run the
+        // scalar row must win despite the worse dimension match — and the
+        // provenance stays clean. On an avx2 run the avx2 row wins.
+        let text = r#"{"kernel_backend": "scalar", "rows": [
+            {"kernel": "chud_rk", "d": 64, "packed_secs": 5.0, "reference_secs": 1.0,
+             "kernel_backend": "avx2"},
+            {"kernel": "chud_rk", "d": 512, "packed_secs": 0.001, "reference_secs": 1.0}
+        ]}"#;
+        let r = resolve_with(FoldStrategy::Auto, 8, 64, Some(text), "scalar");
+        assert_eq!(r.strategy, FoldStrategy::Downdate);
+        assert_eq!(r.source, "bench-file");
+        let r = resolve_with(FoldStrategy::Auto, 8, 64, Some(text), "avx2");
+        assert_eq!(r.strategy, FoldStrategy::Refactor);
+        assert_eq!(r.source, "bench-file");
+    }
+
+    #[test]
     fn absent_or_malformed_file_falls_back_without_panic() {
+        // `resolve_with` is the probe-free core: None text (absent file)
+        // and malformed text both land on the static default here — the
+        // probe path is `resolve`'s, exercised by the chaos suite
         for text in [
             None,
             Some("not json at all {{{"),
@@ -233,10 +391,22 @@ mod tests {
             Some(r#"{"rows": [{"kernel": "chud_rk", "d": 64, "packed_secs": 0.0, "reference_secs": 1.0}]}"#),
             Some(r#"{"rows": [{"kernel": "gemm", "d": 64, "packed_secs": 1.0, "reference_secs": 1.0}]}"#),
         ] {
-            let r = resolve_with(FoldStrategy::Auto, 10, 64, text);
+            let r = resolve_with(FoldStrategy::Auto, 10, 64, text, "scalar");
             assert_eq!(r.strategy, AUTO_DEFAULT, "input: {text:?}");
             assert_eq!(r.source, "default", "input: {text:?}");
         }
+    }
+
+    #[test]
+    fn probe_measurement_is_usable_and_cached() {
+        // the probe itself: a real in-process measurement on this machine
+        // must produce positive timings at the probe dimension, and the
+        // OnceLock must hand back the identical numbers on every later call
+        let first = probe_measurement().expect("probe must measure on a healthy host");
+        assert_eq!(first.0, PROBE_DIM);
+        assert!(first.1 > 0.0 && first.2 > 0.0);
+        let second = probe_measurement().unwrap();
+        assert_eq!(first, second, "probe must be cached per process");
     }
 
     #[test]

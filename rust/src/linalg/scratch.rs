@@ -62,6 +62,14 @@ pub struct Scratch {
     /// into [`Scratch::update`] before destroying that copy). Fully
     /// overwritten per task.
     pub gather: Matrix,
+    /// The `d×b` gathered right-hand-side block (`Xᵀ` of one row batch) of
+    /// the batched hat-diagonal solve ([`crate::cv::aloocv`]), fully
+    /// overwritten per (batch, anchor).
+    pub rhs: Matrix,
+    /// The multi-RHS TRSM output `W = L⁻¹Xᵀ` whose squared column norms are
+    /// the hat diagonals ([`crate::linalg::triangular::trsm_left_lower_into`]),
+    /// fully overwritten per (batch, anchor).
+    pub wsol: Matrix,
 }
 
 impl Scratch {
@@ -77,6 +85,8 @@ impl Scratch {
             gvec: Vec::new(),
             update: Matrix::zeros(0, 0),
             gather: Matrix::zeros(0, 0),
+            rhs: Matrix::zeros(0, 0),
+            wsol: Matrix::zeros(0, 0),
         }
     }
 }

@@ -84,31 +84,109 @@ pub fn solve_cholesky_into(l: &Matrix, g: &[f64], work: &mut Vec<f64>, theta: &m
     trsv_upper_into(l, work, theta);
 }
 
-/// Block TRSM: solve `L X = B` for a multi-column right-hand side
-/// (lower-triangular L, B overwritten column-block-wise).
+/// Block TRSM: solve `L X = B` for a multi-column right-hand side.
+/// Allocating convenience wrapper over [`trsm_left_lower_into`].
 pub fn trsm_left_lower(l: &Matrix, b: &Matrix) -> Matrix {
+    let mut x = Matrix::zeros(0, 0);
+    trsm_left_lower_into(l, b, &mut x);
+    x
+}
+
+/// Blocked left-side TRSM: solve `L X = B` for a multi-column RHS into a
+/// caller-provided buffer (resized/overwritten; no allocation once warm).
+/// This is the ALOOCV hot path: with `B = Xᵀ` a `d×b` gather of data rows,
+/// `X = L⁻¹Xᵀ` yields every hat diagonal of the block as a squared column
+/// norm — one call replaces `b` separate forward substitutions.
+///
+/// Row-panelled at `TRSM_TB` (32): for each row panel `rb..re`, the
+/// contribution of the already-solved rows is one GEMM-shaped update
+/// (`L[rb..re, 0..rb] · W[0..rb, :]`) routed through the packed micro-kernel
+/// into the per-thread output panel and subtracted row-wise; only the small
+/// diagonal triangle is solved by scalar forward substitution in the exact
+/// [`trsv_lower`] recurrence order.
+///
+/// **Bitwise contract** (mirrors [`trsm_right_lower_t_inplace`]):
+///
+/// - *Column-partition independent, bitwise*: each output column's
+///   arithmetic touches only that column of B (the packed updates accumulate
+///   per element in fixed ascending-k order — see [`super::kernel`] — and the
+///   substitution triangle is columnwise-independent). Solving any disjoint
+///   column blocks of B in separate calls, on any worker, reproduces the
+///   whole-call bits exactly; the sweep engine's per-batch hat solves rely on
+///   this for worker-count invariance.
+/// - *trsv-exact for single-panel problems (`n ≤ 32`)*: there is no GEMM
+///   stage and each column is the [`trsv_lower_into`] recurrence verbatim.
+///   Beyond one panel the trailing update subtracts a pre-rounded sum where
+///   trsv subtracts term-by-term, so cross-panel agreement with the oracle is
+///   to rounding (≈1e-13 relative), not bitwise — the property tests pin both
+///   halves of this contract.
+pub fn trsm_left_lower_into(l: &Matrix, b: &Matrix, out: &mut Matrix) {
     let n = l.rows();
     assert!(l.is_square() && b.rows() == n);
     let ncols = b.cols();
-    let mut x = b.clone();
-    for i in 0..n {
-        let lii = l[(i, i)];
-        // x[i,:] = (b[i,:] - Σ_{k<i} L[i,k]·x[k,:]) / L[i,i]
-        for k in 0..i {
-            let lik = l[(i, k)];
-            if lik == 0.0 {
-                continue;
-            }
-            let (xk, xi) = x.two_rows_mut(k, i);
-            for c in 0..ncols {
-                xi[c] -= lik * xk[c];
-            }
+    out.copy_from(b);
+    if n == 0 || ncols == 0 {
+        return;
+    }
+    let ld = l.as_slice();
+    for rb in (0..n).step_by(TRSM_TB) {
+        let re = (rb + TRSM_TB).min(n);
+        let m = re - rb;
+        if rb > 0 {
+            // W[rb..re, :] -= L[rb..re, 0..rb] · W[0..rb, :]
+            kernel::with_tmp(m * ncols, |tmp| {
+                kernel::gemm_into(
+                    m,
+                    ncols,
+                    rb,
+                    Src::N {
+                        data: ld,
+                        stride: n,
+                        r0: rb,
+                        c0: 0,
+                    },
+                    Src::N {
+                        data: out.as_slice(),
+                        stride: ncols,
+                        r0: 0,
+                        c0: 0,
+                    },
+                    tmp,
+                    ncols,
+                    0,
+                    0,
+                    Acc::Set,
+                );
+                let data = out.as_mut_slice();
+                for i in 0..m {
+                    let dst = &mut data[(rb + i) * ncols..][..ncols];
+                    for (d, &u) in dst.iter_mut().zip(&tmp[i * ncols..(i + 1) * ncols]) {
+                        *d -= u;
+                    }
+                }
+            });
         }
-        for v in x.row_mut(i) {
-            *v /= lii;
+        // scalar forward substitution on the diagonal triangle: per column,
+        // terms are subtracted one by one in ascending k — the trsv_lower
+        // association exactly.
+        let data = out.as_mut_slice();
+        for i in rb..re {
+            let lrow = &ld[i * n..i * n + i];
+            let (solved, rest) = data.split_at_mut(i * ncols);
+            let wi = &mut rest[..ncols];
+            for k in rb..i {
+                let lik = lrow[k];
+                let wk = &solved[k * ncols..(k + 1) * ncols];
+                for (d, &u) in wi.iter_mut().zip(wk) {
+                    *d -= lik * u;
+                }
+            }
+            let lii = ld[i * n + i];
+            for v in wi.iter_mut() {
+                *v /= lii;
+            }
         }
     }
-    x
 }
 
 /// Solve `Lᵀ X = B` for a multi-column RHS.
@@ -137,8 +215,9 @@ pub fn trsm_left_lower_t(l: &Matrix, b: &Matrix) -> Matrix {
     x
 }
 
-/// Column block width of the blocked right-TRSM: the substitution triangle
-/// stays this small while everything left of it is GEMM-shaped.
+/// Panel width of the blocked TRSMs (column blocks of the right-TRSM, row
+/// panels of the left-TRSM): the substitution triangle stays this small
+/// while everything outside it is GEMM-shaped.
 const TRSM_TB: usize = 32;
 
 /// Blocked right-side TRSM: solve `X · Lᵀ = B` **in place** over the row
@@ -310,6 +389,92 @@ mod tests {
         let x = trsm_left_lower(&l, &b);
         let lb = gemm(&l, &x);
         assert!(lb.max_abs_diff(&b) < 1e-10);
+    }
+
+    /// Single-panel shapes (n ≤ TRSM_TB, plus the MR-degenerate sizes 1 and
+    /// MR−1 = 3): the blocked left-TRSM never engages the GEMM stage, so
+    /// every column must reproduce the `trsv_lower` oracle **bitwise**.
+    #[test]
+    fn left_trsm_bitwise_matches_trsv_on_single_panel_shapes() {
+        for n in [1, 3, 17, 32] {
+            let spd = random_spd(n, 1e3, 90 + n as u64);
+            let l = cholesky_blocked(&spd).unwrap();
+            for ncols in [1, 3, 9] {
+                let b = random_matrix(n, ncols, 91 + (n * ncols) as u64);
+                let x = trsm_left_lower(&l, &b);
+                for j in 0..ncols {
+                    let xj = trsv_lower(&l, &b.col(j));
+                    for i in 0..n {
+                        assert_eq!(x[(i, j)], xj[i], "n={n} ncols={ncols} ({i},{j})");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Multi-panel shapes bracketing the kernel's k-chunk (KC ± 1 = 255,
+    /// 257): the GEMM trailing update subtracts a pre-rounded sum where trsv
+    /// subtracts term-by-term, so the oracle is matched to rounding — but any
+    /// **column partition** of B must reproduce the whole-call bits exactly
+    /// (the worker-invariance contract of the batched hat solves).
+    #[test]
+    fn left_trsm_is_column_partition_independent_bitwise() {
+        for n in [255usize, 257] {
+            let spd = random_spd(n, 1e3, 100 + n as u64);
+            let l = cholesky_blocked(&spd).unwrap();
+            let ncols = 10;
+            let b = random_matrix(n, ncols, 101 + n as u64);
+            let whole = trsm_left_lower(&l, &b);
+
+            // L · X must reconstruct B
+            let rec = gemm(&l, &whole);
+            assert!(rec.max_abs_diff(&b) < 1e-8, "n={n}");
+
+            // oracle agreement to rounding, columnwise
+            for j in 0..ncols {
+                let xj = trsv_lower(&l, &b.col(j));
+                for i in 0..n {
+                    assert!((whole[(i, j)] - xj[i]).abs() < 1e-8, "n={n} ({i},{j})");
+                }
+            }
+
+            // any column partition reproduces the exact bits
+            for splits in [vec![0, ncols], vec![0, 1, ncols], vec![0, 3, 7, ncols]] {
+                for win in splits.windows(2) {
+                    let part = trsm_left_lower(&l, &b.slice(0, n, win[0], win[1]));
+                    for i in 0..n {
+                        for j in win[0]..win[1] {
+                            assert_eq!(
+                                part[(i, j - win[0])],
+                                whole[(i, j)],
+                                "n={n} splits={splits:?} ({i},{j})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The `_into` form must converge to the same bits from a pre-dirtied,
+    /// wrong-sized output buffer, and tolerate degenerate shapes.
+    #[test]
+    fn left_trsm_into_reuses_dirty_buffer_bitwise() {
+        let spd = random_spd(40, 1e3, 110);
+        let l = cholesky_blocked(&spd).unwrap();
+        let b = random_matrix(40, 6, 111);
+        let fresh = trsm_left_lower(&l, &b);
+        let mut dirty = Matrix::zeros(3, 17);
+        for v in dirty.as_mut_slice() {
+            *v = f64::NAN;
+        }
+        trsm_left_lower_into(&l, &b, &mut dirty);
+        assert_eq!(dirty.as_slice(), fresh.as_slice());
+
+        // zero-column RHS: legal, produces a 40×0 result
+        let empty = trsm_left_lower(&l, &Matrix::zeros(40, 0));
+        assert_eq!(empty.rows(), 40);
+        assert_eq!(empty.cols(), 0);
     }
 
     /// The factorization-side TRSM solves X·L11ᵀ = B: verify against L

@@ -77,7 +77,7 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
         args.usize_flag("trust-task-retries", cfg.cv.recovery.task_retries as usize)? as u32;
     if let Some(mode) = args.flag("mode") {
         cfg.cv.mode = CvMode::parse(mode)
-            .ok_or_else(|| anyhow::anyhow!("unknown --mode '{mode}' (kfold | loo)"))?;
+            .ok_or_else(|| anyhow::anyhow!("unknown --mode '{mode}' (kfold | loo | aloocv)"))?;
     }
     if let Some(fs) = args.flag("fold-strategy") {
         cfg.cv.fold_strategy = FoldStrategy::parse(fs).ok_or_else(|| {
@@ -97,6 +97,61 @@ fn cmd_cv(args: &Args) -> Result<()> {
     let solver = SolverKind::parse(args.flag("solver").unwrap_or("pichol"))
         .ok_or_else(|| anyhow::anyhow!("unknown --solver"))?;
     let coord = Coordinator::new(cfg.workers.max(1));
+    if cfg.cv.mode == CvMode::Aloocv {
+        // approximate LOO: hat diagonals through the packed multi-RHS TRSM;
+        // the solver flag does not apply — every solve is Hessian-exact
+        println!(
+            "dataset={} n={} h={} mode=aloocv anchors={} grid={}",
+            cfg.dataset.name(),
+            cfg.n,
+            cfg.h,
+            cfg.cv.g_samples,
+            cfg.cv.q_grid
+        );
+        let ds = SyntheticDataset::generate(cfg.dataset, cfg.n, cfg.h, cfg.seed);
+        let rep = if args.switch("certify") {
+            // re-run the exact-LOO tier and stamp the agreement verdict
+            picholesky::cv::aloocv::run_certified(&ds, &cfg.cv)?
+        } else {
+            coord.run_aloocv(&ds, &cfg.cv)?
+        };
+        println!(
+            "λ* = {:.4e}   ALOO-RMSE = {:.4}   wall = {}   skipped = {}/{}",
+            rep.best_lambda,
+            rep.best_error,
+            fmt_secs(rep.wall_secs),
+            rep.skipped.len(),
+            rep.n * rep.anchor_lambdas.len()
+        );
+        if let Some(cert) = &rep.certification {
+            println!(
+                "  certification: ALOO λ* = {:.4e} vs exact-LOO λ* = {:.4e} ({:.3} decades apart) → {}",
+                cert.aloo_lambda,
+                cert.loo_lambda,
+                cert.decades,
+                if cert.certified { "certified" } else { "NOT CERTIFIED" }
+            );
+        }
+        if !rep.degradations.is_empty() {
+            println!(
+                "  {} cell(s) served past the hat-diagonal fast path:",
+                rep.degradations.len()
+            );
+            for d in &rep.degradations {
+                println!("    {d}");
+            }
+        }
+        for (lam, rmse) in rep.anchor_lambdas.iter().zip(&rep.anchor_rmse) {
+            println!("  anchor λ = {lam:.4e}   ALOO-RMSE = {rmse:.4}");
+        }
+        for (phase, secs) in rep.timer.entries() {
+            println!("  {phase:<10} {}", fmt_secs(*secs));
+        }
+        if args.switch("metrics") {
+            print!("{}", coord.metrics.snapshot());
+        }
+        return Ok(());
+    }
     if cfg.cv.mode == CvMode::Loo {
         // leave-one-out: the factor-update subsystem (anchors + downdates);
         // the solver flag does not apply — every solve is Hessian-exact

@@ -1,0 +1,181 @@
+//! The accuracy/cost-ladder certification suite — the acceptance harness
+//! of the ALOOCV tier (`ci.sh --tiers`).
+//!
+//! The ladder orders three ways to price a held-out row, cheapest first:
+//!
+//! - `aloocv` — hat-diagonal closed form, one batched multi-RHS TRSM per
+//!   (batch, anchor): `O(n·d²)` per anchor for the whole dataset;
+//! - `loo` — exact leave-one-out through rank-1 factor downdates:
+//!   `O(n·d²)` **per row**;
+//! - brute — per-row refactorization, `O(n·d³)` (bench baseline only).
+//!
+//! For ridge the hat-diagonal identity is exact, so the cheap tier is held
+//! to *agreement*, not resemblance: anchor-by-anchor RMSE equality with the
+//! exact tier within rounding, λ* selection certified within a decade
+//! ([`run_certified`] stamps the verdict), bitwise invariance across worker
+//! counts and batch sizes, and high-leverage rows (`h_i ≥ 1 − ε`) escalated
+//! through the shared recovery ladder as recorded degradations — never
+//! Inf/NaN cells.
+//!
+//! `ci.sh --tiers` runs exactly this file; the full CI gate includes it.
+
+use picholesky::cv::aloocv::{run_aloocv, run_certified};
+use picholesky::cv::loo::run_loo;
+use picholesky::cv::recovery::Rung;
+use picholesky::cv::CvConfig;
+use picholesky::testutil::conformance::{
+    assert_close_rms, spiked_dataset, suite, well_conditioned,
+};
+
+fn cfg(workers: usize) -> CvConfig {
+    CvConfig {
+        q_grid: 21,
+        g_samples: 6,
+        lambda_range: Some((1e-2, 1.0)),
+        sweep_threads: workers,
+        ..CvConfig::default()
+    }
+}
+
+/// The identity check: on a well-conditioned problem the cheap tier must
+/// reproduce the exact tier's per-anchor RMSE to rounding (the closed form
+/// is exact for ridge — only the arithmetic route differs), with the
+/// structural phase counts proving it never touched per-row factor work.
+#[test]
+fn aloocv_matches_exact_loo_at_every_anchor() {
+    let ds = well_conditioned(150, 16, 11);
+    let aloo = run_aloocv(&ds, &cfg(2)).unwrap();
+    let loo = run_loo(&ds, &cfg(2)).unwrap();
+
+    assert_eq!(aloo.anchor_lambdas, loo.anchor_lambdas, "same plan, same anchors");
+    assert!(aloo.skipped.is_empty() && loo.skipped.is_empty());
+    assert!(
+        aloo.degradations.is_empty(),
+        "clean problem must stay on the fast path: {:?}",
+        aloo.degradations
+    );
+    assert_close_rms(&aloo.anchor_rmse, &loo.anchor_rmse, 1e-8);
+    // the interpolated curve passes the anchor values through the PINRMSE
+    // polynomial fit, which can amplify anchor-level rounding by the fit's
+    // conditioning — held to a correspondingly looser bound
+    assert_close_rms(&aloo.curve, &loo.curve, 1e-6);
+
+    // the cost structure, as phase counts: O(d³) only once per anchor, one
+    // full-data solve per anchor, hat solves in whole per-anchor batch
+    // waves, and zero per-row factorizations or downdates
+    let g = aloo.anchor_lambdas.len() as u64;
+    assert_eq!(aloo.timer.count("factor"), g);
+    assert_eq!(aloo.timer.count("solve"), g);
+    let hat = aloo.timer.count("hat_solve");
+    assert!(hat >= g, "at least one batched hat solve per anchor");
+    assert_eq!(hat % g, 0, "hat solves come in per-anchor batches");
+    assert_eq!(aloo.timer.count("chol"), 0, "no per-row O(d³) factorization");
+    assert_eq!(aloo.timer.count("downdate"), 0, "no per-row downdates");
+}
+
+/// The certification contract on every conformance generator: the tier
+/// pair runs the same plan and the selected λ* must agree within one
+/// decade — the verdict is stamped into the report, and a plain
+/// (uncertified) run carries none.
+#[test]
+fn certification_passes_on_every_generator() {
+    for (name, ds) in suite(150, 16, 11) {
+        let rep = run_certified(&ds, &cfg(2)).unwrap();
+        let cert = rep
+            .certification
+            .as_ref()
+            .unwrap_or_else(|| panic!("{name}: certified run must stamp a verdict"));
+        assert!(
+            cert.certified,
+            "{name}: tiers diverge: aloocv λ* = {:.3e} vs exact-LOO λ* = {:.3e} ({:.3} decades)",
+            cert.aloo_lambda, cert.loo_lambda, cert.decades
+        );
+        assert!(cert.decades.is_finite() && cert.decades <= 1.0);
+        assert_eq!(cert.aloo_lambda, rep.best_lambda);
+        assert!(rep.best_error.is_finite());
+        assert!(rep.skipped.is_empty(), "{name}: no cells may be lost");
+
+        let plain = run_aloocv(&ds, &cfg(2)).unwrap();
+        assert!(plain.certification.is_none(), "{name}: plain runs carry no verdict");
+    }
+}
+
+/// The determinism contract, extended to the new tier: the whole report —
+/// curve bits, selection, per-anchor RMSE — is identical at workers
+/// {1, 2, 4} and for any row-batch size (per-column TRSM arithmetic is
+/// independent of batch boundaries, and the merge is ascending).
+#[test]
+fn aloocv_is_bitwise_across_workers_and_batches() {
+    let ds = well_conditioned(150, 16, 11);
+    let serial = run_aloocv(&ds, &cfg(1)).unwrap();
+    for workers in [2usize, 4] {
+        let par = run_aloocv(&ds, &cfg(workers)).unwrap();
+        assert_eq!(
+            serial.curve, par.curve,
+            "curve bits drifted at workers={workers}"
+        );
+        assert_eq!(serial.anchor_rmse, par.anchor_rmse);
+        assert_eq!(serial.best_lambda, par.best_lambda);
+        assert_eq!(serial.best_error, par.best_error);
+        assert_eq!(serial.degradations.len(), par.degradations.len());
+    }
+    for batch in [1usize, 3, 64] {
+        let batched = run_aloocv(
+            &ds,
+            &CvConfig {
+                sweep_batch: batch,
+                ..cfg(2)
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            serial.curve, batched.curve,
+            "curve bits drifted at batch={batch}"
+        );
+        assert_eq!(serial.anchor_rmse, batched.anchor_rmse);
+        assert_eq!(serial.best_lambda, batched.best_lambda);
+    }
+}
+
+/// The leverage guard, on the shared breakdown fixture: row 0's lone `1e9`
+/// spike makes its hat diagonal land exactly at 1.0 (`1e18/(1e18+λ)`
+/// rounds to 1 for every λ ≤ 1), so the `1/(1−h)` closed form is void at
+/// every anchor. The tier must escalate exactly that row to the exact-LOO
+/// body — whose rank-1 downdate then hits the same pivot-0 breakdown and
+/// climbs to the refactor rung — recorded as `cause = "leverage"`
+/// degradations on surface `"aloocv"`, with every cell still served and
+/// the whole report finite.
+#[test]
+fn leverage_rows_escalate_through_the_recovery_ladder() {
+    let ds = spiked_dataset(40, 8, 5);
+    let rep = run_aloocv(&ds, &cfg(2)).unwrap();
+    let g = rep.anchor_lambdas.len();
+
+    assert!(rep.skipped.is_empty(), "the ladder must rescue, not skip");
+    assert_eq!(
+        rep.degradations.len(),
+        g,
+        "exactly the spiked row escalates, once per anchor: {:?}",
+        rep.degradations
+    );
+    for d in &rep.degradations {
+        assert_eq!(d.surface, "aloocv");
+        assert_eq!(d.fold, 0, "only row 0 may trip the leverage guard");
+        assert_eq!(d.cause, "leverage");
+        assert_eq!(d.rung, Rung::Refactor, "the refactor rung must rescue it");
+        assert!(
+            d.detail.contains("hat diagonal"),
+            "the diagonal must be carried in the record: {}",
+            d.detail
+        );
+    }
+
+    // one ladder refactorization per anchor (row 0), nothing else O(d³)
+    assert_eq!(rep.timer.count("factor"), g as u64);
+    assert_eq!(rep.timer.count("chol"), g as u64, "ladder refactorizations");
+
+    // every cell served: finite anchors, finite selection, no NaN anywhere
+    assert!(rep.anchor_rmse.iter().all(|v| v.is_finite()));
+    assert!(rep.curve.iter().all(|v| v.is_finite()));
+    assert!(rep.best_lambda.is_finite() && rep.best_error.is_finite());
+}
