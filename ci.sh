@@ -2,10 +2,11 @@
 # CI gate: build, test, quickstart + LOO + factor-level-k-fold (fig2)
 # end-to-end smokes, the cross-mode conformance suite, the chaos
 # (fault-injection) suite run twice for seeded determinism, the
-# accuracy/cost-ladder certification suite (aloocv vs exact loo), doc-lint
-# (broken intra-doc links fail), format and clippy checks (both guarded:
-# skipped when the component is not installed), and the kernel-bench smoke
-# that emits the BENCH_kernels.json perf trajectory.
+# accuracy/cost-ladder certification suite (aloocv vs exact loo), the
+# observability gate (obs no-perturbation + ledger/trace artifact
+# validation), doc-lint (broken intra-doc links fail), format and clippy
+# checks (both guarded: skipped when the component is not installed), and
+# the kernel-bench smoke that emits the BENCH_kernels.json perf trajectory.
 #
 # Usage:
 #   ./ci.sh                 full gate (from the repository root; fully offline)
@@ -24,6 +25,11 @@
 #                           suite (aloocv vs exact loo: λ* within a decade,
 #                           bitwise worker invariance at 1/2/4, leverage
 #                           escalation through the recovery ladder)
+#   ./ci.sh --obs           only the observability gate: tests/obs.rs
+#                           (no-perturbation + worker-invariant event
+#                           content) plus an end-to-end sweep that writes
+#                           --ledger-out / --trace-out artifacts and
+#                           validates both with python3
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -64,7 +70,10 @@ chaos() {
   # is seeded/addressed, so two runs of the whole suite must both pass with
   # identical outcomes — the second run is the seeded-determinism gate (a
   # flaky injector, a leaked armed panic, or scheduling-dependent
-  # degradation records would break it)
+  # degradation records would break it). The suite also pins the obs
+  # no-perturbation contract under faults: arming the observability layer
+  # on a run with injected spikes + worker panics must leave every numeric
+  # output bitwise identical to the obs-off run.
   echo "==> chaos suite (fault injection: ingest / spike / drift / panic / bench-file)"
   cargo test -q --test chaos
   echo "==> chaos suite, second seeded run (determinism gate)"
@@ -79,6 +88,51 @@ tiers() {
   # recorded degradations instead of Inf/NaN scores
   echo "==> accuracy/cost-ladder certification suite (aloocv vs loo, workers 1/2/4)"
   cargo test -q --test tiers
+}
+
+obs() {
+  # the observability gate. tests/obs.rs pins the three contracts (off by
+  # default / bitwise non-perturbing when armed / event *content* invariant
+  # across worker counts); the end-to-end run below exercises the artifact
+  # writers: a small k-fold sweep with both --ledger-out and --trace-out,
+  # --batch pinned so task granularity (and thus the event log) does not
+  # depend on the worker count, and a sub-epsilon trust budget so the
+  # recovery ladder climbs deterministically and the ledger carries
+  # degradation records, not just the clean-path ones.
+  echo "==> observability suite (no-perturbation, worker invariance, ledger/trace)"
+  cargo test -q --test obs
+  local led="target/obs_run.jsonl" trc="target/obs_trace.json"
+  mkdir -p target
+  echo "==> end-to-end obs artifacts (k-fold sweep) -> $led + $trc"
+  cargo run --release --bin pichol -- cv \
+    --dataset mnist --solver chol --n 48 --h 12 --folds 3 --grid 8 --g 4 \
+    --threads 2 --batch 4 --trust-budget 1e-300 \
+    --ledger-out "$led" --trace-out "$trc"
+  test -s "$led"
+  test -s "$trc"
+  # every ledger line must parse as one self-contained JSON object, open
+  # with provenance, close with the summary, and carry span quantiles
+  python3 - "$led" <<'EOF'
+import json, sys
+recs = [json.loads(line) for line in open(sys.argv[1]) if line.strip()]
+kinds = [r["record"] for r in recs]
+assert kinds[0] == "provenance", kinds[:1]
+assert kinds[-1] == "summary", kinds[-1:]
+assert "degradation" in kinds, "sub-epsilon trust budget must degrade"
+assert "phase" in kinds and "task_kind" in kinds, sorted(set(kinds))
+for r in recs:
+    if r["record"] in ("phase", "task_kind"):
+        assert "p50_us" in r and "p90_us" in r and "p99_us" in r, r
+print("ledger OK: %d records, kinds=%s" % (len(recs), sorted(set(kinds))))
+EOF
+  # the Chrome trace must be one valid JSON document of complete spans
+  python3 -m json.tool "$trc" >/dev/null
+  grep -q '"record":"provenance"' "$led"
+  grep -q '"record":"degradation"' "$led"
+  grep -q '"p50_us"' "$led"
+  grep -q '"p99_us"' "$led"
+  grep -q '"ph":"X"' "$trc"
+  echo "obs gate passed: $led + $trc present and well-formed."
 }
 
 bench_smoke() {
@@ -106,6 +160,9 @@ bench_smoke() {
   grep -q '"aloocv_sweep"' "$out"
   grep -q '"aloocv_phases"' "$out"
   grep -q '"per_row_downdate": 0' "$out"
+  # per-stage latency quantiles ride next to the wall-clock means
+  grep -q '"p50_us"' "$out"
+  grep -q '"p99_us"' "$out"
   echo "bench smoke passed: $out present and well-formed."
 }
 
@@ -134,6 +191,11 @@ if [[ "${1:-}" == "--tiers" ]]; then
   exit 0
 fi
 
+if [[ "${1:-}" == "--obs" ]]; then
+  obs
+  exit 0
+fi
+
 echo "==> cargo build --release"
 cargo build --release
 
@@ -153,6 +215,9 @@ chaos
 
 # the accuracy/cost ladder: aloocv certification against exact loo
 tiers
+
+# the observability gate: tests/obs.rs + end-to-end ledger/trace artifacts
+obs
 
 echo "==> cargo run --release --example quickstart (end-to-end smoke gate)"
 cargo run --release --example quickstart

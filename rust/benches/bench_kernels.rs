@@ -56,14 +56,19 @@ use picholesky::linalg::chud::{chol_downdate, chol_downdate_rank1};
 use picholesky::linalg::gemm::{gemv_t, gram_downdate, reference, syrk_lower, Gemm};
 use picholesky::linalg::matrix::Matrix;
 use picholesky::linalg::triangular::trsm_right_lower_t_inplace;
+use picholesky::obs::hist::Hist;
 use picholesky::testutil::{random_matrix, random_spd};
 
-/// One measured comparison (reference_secs = 0 ⇒ packed-only).
+/// One measured comparison (reference_secs = 0 ⇒ packed-only). Alongside
+/// the min-of-reps wall, every packed rep lands in a log-bucketed latency
+/// histogram so the JSON carries p50/p99 per stage — the same bucket math
+/// as the engine's observability layer ([`picholesky::obs::hist`]).
 struct Row {
     kernel: &'static str,
     d: usize,
     packed_secs: f64,
     reference_secs: f64,
+    packed_hist: Hist,
 }
 
 impl Row {
@@ -76,15 +81,31 @@ impl Row {
     }
 }
 
-/// Min-of-reps wall time of `f`.
-fn time_min(reps: usize, mut f: impl FnMut()) -> f64 {
+/// Min-of-reps wall time of `f`, plus the per-rep latency histogram.
+fn time_reps(reps: usize, mut f: impl FnMut()) -> (f64, Hist) {
     let mut best = f64::INFINITY;
+    let mut hist = Hist::new();
     for _ in 0..reps {
         let t0 = Instant::now();
         f();
-        best = best.min(t0.elapsed().as_secs_f64());
+        let secs = t0.elapsed().as_secs_f64();
+        best = best.min(secs);
+        hist.record_secs(secs);
     }
-    best
+    (best, hist)
+}
+
+/// Reference-side timing: min only (quantiles are reported for the packed
+/// path, the side the trajectory tracks).
+fn time_min(reps: usize, f: impl FnMut()) -> f64 {
+    time_reps(reps, f).0
+}
+
+/// A one-shot measurement as (secs, single-sample histogram).
+fn one_shot(secs: f64) -> (f64, Hist) {
+    let mut hist = Hist::new();
+    hist.record_secs(secs);
+    (secs, hist)
 }
 
 /// The legacy all-scalar panel TRSM (what `cholesky_in_place` shipped
@@ -108,7 +129,7 @@ fn bench_size(d: usize, reps: usize, rows: &mut Vec<Row>) {
     // GEMM: d×d×d
     let a = random_matrix(d, d, 0xA0 + d as u64);
     let b = random_matrix(d, d, 0xB0 + d as u64);
-    let packed = time_min(reps, || {
+    let (packed, packed_hist) = time_reps(reps, || {
         std::hint::black_box(gem.mul(&a, &b));
     });
     let refr = time_min(reps, || {
@@ -119,11 +140,12 @@ fn bench_size(d: usize, reps: usize, rows: &mut Vec<Row>) {
         d,
         packed_secs: packed,
         reference_secs: refr,
+        packed_hist,
     });
 
     // SYRK: X is 2d×d (the Hessian-build shape)
     let x = random_matrix(2 * d, d, 0xC0 + d as u64);
-    let packed = time_min(reps, || {
+    let (packed, packed_hist) = time_reps(reps, || {
         std::hint::black_box(syrk_lower(&x));
     });
     let refr = time_min(reps, || {
@@ -134,6 +156,7 @@ fn bench_size(d: usize, reps: usize, rows: &mut Vec<Row>) {
         d,
         packed_secs: packed,
         reference_secs: refr,
+        packed_hist,
     });
 
     // TRSM: d rows against a 64-wide (or d-wide, if smaller) panel
@@ -141,7 +164,7 @@ fn bench_size(d: usize, reps: usize, rows: &mut Vec<Row>) {
     let spd = random_spd(nb, 1e3, 0xD0 + d as u64);
     let l11 = cholesky_blocked(&spd).expect("panel chol");
     let rhs = random_matrix(d, nb, 0xE0 + d as u64);
-    let packed = time_min(reps, || {
+    let (packed, packed_hist) = time_reps(reps, || {
         let mut t = rhs.clone();
         trsm_right_lower_t_inplace(&mut t, 0, d, 0, &l11);
         std::hint::black_box(t[(d - 1, nb - 1)]);
@@ -156,11 +179,12 @@ fn bench_size(d: usize, reps: usize, rows: &mut Vec<Row>) {
         d,
         packed_secs: packed,
         reference_secs: refr,
+        packed_hist,
     });
 
     // full factorization, packed path only (trajectory seed)
     let h = random_spd(d, 1e4, 0xF0 + d as u64);
-    let packed = time_min(reps, || {
+    let (packed, packed_hist) = time_reps(reps, || {
         let mut c = h.clone();
         cholesky_in_place(&mut c, 64).expect("chol");
         std::hint::black_box(c[(d - 1, d - 1)]);
@@ -170,6 +194,7 @@ fn bench_size(d: usize, reps: usize, rows: &mut Vec<Row>) {
         d,
         packed_secs: packed,
         reference_secs: 0.0,
+        packed_hist,
     });
 }
 
@@ -181,7 +206,7 @@ fn bench_gram(d: usize, reps: usize, rows: &mut Vec<Row>) {
     let y: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
     for &(k, label) in &[(5usize, "gram_k5"), (10usize, "gram_k10")] {
         let folds = kfold(n, k, 7);
-        let packed = time_min(reps, || {
+        let (packed, packed_hist) = time_reps(reps, || {
             let gram = GramCache::assemble(&x, &y);
             let mut h_out = Matrix::zeros(0, 0);
             let mut g_out = Vec::new();
@@ -204,6 +229,7 @@ fn bench_gram(d: usize, reps: usize, rows: &mut Vec<Row>) {
             d,
             packed_secs: packed,
             reference_secs: refr,
+            packed_hist,
         });
     }
 }
@@ -224,7 +250,7 @@ fn bench_chud(d: usize, reps: usize, rows: &mut Vec<Row>) {
     let v: Vec<f64> = x.row(0).to_vec();
     let mut lbuf = l0.clone();
     let mut vbuf = v.clone();
-    let packed = time_min(reps, || {
+    let (packed, packed_hist) = time_reps(reps, || {
         lbuf.copy_from(&l0);
         vbuf.clear();
         vbuf.extend_from_slice(&v);
@@ -247,13 +273,14 @@ fn bench_chud(d: usize, reps: usize, rows: &mut Vec<Row>) {
         d,
         packed_secs: packed,
         reference_secs: refr,
+        packed_hist,
     });
 
     // rank-k (k = 16): a retired row block, one blocked downdate
     let k = d.min(16);
     let u0 = x.slice(0, k, 0, d).transpose(); // d×k
     let mut ubuf = u0.clone();
-    let packed = time_min(reps, || {
+    let (packed, packed_hist) = time_reps(reps, || {
         lbuf.copy_from(&l0);
         ubuf.copy_from(&u0);
         chol_downdate(&mut lbuf, &mut ubuf, &mut trans).expect("rk downdate");
@@ -275,6 +302,7 @@ fn bench_chud(d: usize, reps: usize, rows: &mut Vec<Row>) {
         d,
         packed_secs: packed,
         reference_secs: refr,
+        packed_hist,
     });
 }
 
@@ -295,7 +323,7 @@ fn bench_loo(d: usize, rows: &mut Vec<Row>) -> (String, f64) {
     };
     let t0 = Instant::now();
     let rep = run_loo(&ds, &cfg).expect("loo sweep");
-    let packed = t0.elapsed().as_secs_f64();
+    let (packed, packed_hist) = one_shot(t0.elapsed().as_secs_f64());
     std::hint::black_box(rep.best_lambda);
 
     let refr = if d <= 64 {
@@ -310,6 +338,7 @@ fn bench_loo(d: usize, rows: &mut Vec<Row>) -> (String, f64) {
         d,
         packed_secs: packed,
         reference_secs: refr,
+        packed_hist,
     });
 
     // the acceptance invariant, asserted AND recorded in the trajectory
@@ -349,13 +378,14 @@ fn bench_aloocv(d: usize, loo_secs: f64, rows: &mut Vec<Row>) -> String {
     };
     let t0 = Instant::now();
     let rep = run_aloocv(&ds, &cfg).expect("aloocv sweep");
-    let packed = t0.elapsed().as_secs_f64();
+    let (packed, packed_hist) = one_shot(t0.elapsed().as_secs_f64());
     std::hint::black_box(rep.best_lambda);
     rows.push(Row {
         kernel: "aloocv_sweep",
         d,
         packed_secs: packed,
         reference_secs: loo_secs,
+        packed_hist,
     });
 
     // the acceptance invariant, asserted AND recorded in the trajectory
@@ -395,7 +425,7 @@ fn bench_kfold(d: usize, reps: usize, rows: &mut Vec<Row>) {
         sweep_threads: 1, // single-threaded: kernel speed, not parallelism
         ..CvConfig::default()
     };
-    let packed = time_min(reps, || {
+    let (packed, packed_hist) = time_reps(reps, || {
         let cfg = CvConfig {
             fold_strategy: FoldStrategy::Downdate,
             ..base.clone()
@@ -417,6 +447,7 @@ fn bench_kfold(d: usize, reps: usize, rows: &mut Vec<Row>) {
         d,
         packed_secs: packed,
         reference_secs: refr,
+        packed_hist,
     });
 }
 
@@ -431,11 +462,13 @@ fn bench_sweep(d: usize, rows: &mut Vec<Row>) {
     let t0 = Instant::now();
     let rep = run_cv(&ds, SolverKind::PiChol, &cfg).expect("sweep");
     std::hint::black_box(rep.best_lambda);
+    let (packed, packed_hist) = one_shot(t0.elapsed().as_secs_f64());
     rows.push(Row {
         kernel: "sweep",
         d,
-        packed_secs: t0.elapsed().as_secs_f64(),
+        packed_secs: packed,
         reference_secs: 0.0,
+        packed_hist,
     });
 }
 
@@ -452,15 +485,24 @@ fn emit_json(rows: &[Row], smoke: bool, loo_phases: &str, aloocv_phases: &str, p
     s.push_str(&format!("  \"loo_phases\": {loo_phases},\n"));
     s.push_str(&format!("  \"aloocv_phases\": {aloocv_phases},\n"));
     s.push_str("  \"results\": [\n");
+    // p50/p99 next to the wall means: per-rep packed latencies through the
+    // observability layer's log-bucketed histogram (bucket upper bounds, µs)
+    let q = |h: &Hist, p: f64| match h.quantile_us(p) {
+        Some(us) => format!("{us:.3}"),
+        None => "null".to_string(),
+    };
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"kernel\": \"{}\", \"d\": {}, \"packed_secs\": {:.6e}, \
-             \"reference_secs\": {:.6e}, \"speedup\": {:.3}}}{}\n",
+             \"reference_secs\": {:.6e}, \"speedup\": {:.3}, \
+             \"p50_us\": {}, \"p99_us\": {}}}{}\n",
             r.kernel,
             r.d,
             r.packed_secs,
             r.reference_secs,
             r.speedup(),
+            q(&r.packed_hist, 0.50),
+            q(&r.packed_hist, 0.99),
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }

@@ -111,6 +111,17 @@ COMMANDS:
                --trust-shift-retries <growing-shift retries on breakdown>
                --trust-shift-growth <per-retry shift factor, > 1>
                --trust-task-retries <panicking-task resubmissions before quarantine>
+               --obs        (arm the observability layer: per-task span events,
+               per-phase latency histograms, p50/p90/p99 in the report; off by
+               default — zero-allocation hot path and bitwise-identical numeric
+               output either way)
+               --trace-out <file.json>   (write a Chrome trace-event file of
+               the merged span log — open in chrome://tracing or Perfetto;
+               implies --obs)
+               --ledger-out <file.jsonl> (append-style run ledger: one JSONL
+               record each for config provenance, every degradation, the
+               certification verdict, and per-phase/per-kind latency
+               quantiles; implies --obs)
                --seed <u64> --config <file.toml>
   compare      run all six algorithms on one dataset (Figure 6 row)
                flags as for `cv`

@@ -43,6 +43,13 @@ impl TomlValue {
             _ => None,
         }
     }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
 }
 
 /// `section.key → value` map.
@@ -131,6 +138,12 @@ pub struct ExperimentConfig {
     pub workers: usize,
     /// Artifacts directory for the HLO path.
     pub artifacts_dir: String,
+    /// Chrome trace-event output path (`--trace-out` / `obs.trace_out`);
+    /// setting it implies `cv.obs`.
+    pub trace_out: Option<String>,
+    /// Run-ledger JSONL output path (`--ledger-out` / `obs.ledger_out`);
+    /// setting it implies `cv.obs`.
+    pub ledger_out: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -143,6 +156,8 @@ impl Default for ExperimentConfig {
             cv: CvConfig::default(),
             workers: 0,
             artifacts_dir: "artifacts".to_string(),
+            trace_out: None,
+            ledger_out: None,
         }
     }
 }
@@ -239,6 +254,20 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get("trust.task_retries").and_then(TomlValue::as_usize) {
             cfg.cv.recovery.task_retries = v as u32;
+        }
+        // observability ([obs] section) — off by default; either output
+        // path implies the event/histogram layer is armed
+        if let Some(v) = doc.get("obs.enabled").and_then(TomlValue::as_bool) {
+            cfg.cv.obs = v;
+        }
+        if let Some(v) = doc.get("obs.trace_out").and_then(TomlValue::as_str) {
+            cfg.trace_out = Some(v.to_string());
+        }
+        if let Some(v) = doc.get("obs.ledger_out").and_then(TomlValue::as_str) {
+            cfg.ledger_out = Some(v.to_string());
+        }
+        if cfg.trace_out.is_some() || cfg.ledger_out.is_some() {
+            cfg.cv.obs = true;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -446,6 +475,39 @@ mod tests {
             ExperimentConfig::from_doc(&doc).is_err(),
             "growth must be finite"
         );
+    }
+
+    #[test]
+    fn obs_knobs_parse_and_imply_enabled() {
+        // off by default, no output paths
+        let cfg = ExperimentConfig::from_doc(&parse_toml("n = 64\n").unwrap()).unwrap();
+        assert!(!cfg.cv.obs);
+        assert_eq!(cfg.trace_out, None);
+        assert_eq!(cfg.ledger_out, None);
+        // explicit enable without outputs
+        let cfg =
+            ExperimentConfig::from_doc(&parse_toml("[obs]\nenabled = true\n").unwrap()).unwrap();
+        assert!(cfg.cv.obs);
+        // either output path arms obs even with enabled unset
+        let cfg = ExperimentConfig::from_doc(
+            &parse_toml("[obs]\ntrace_out = \"trace.json\"\n").unwrap(),
+        )
+        .unwrap();
+        assert!(cfg.cv.obs);
+        assert_eq!(cfg.trace_out.as_deref(), Some("trace.json"));
+        let cfg = ExperimentConfig::from_doc(
+            &parse_toml("[obs]\nledger_out = \"run.jsonl\"\n").unwrap(),
+        )
+        .unwrap();
+        assert!(cfg.cv.obs);
+        assert_eq!(cfg.ledger_out.as_deref(), Some("run.jsonl"));
+        // an output path overrides an explicit `enabled = false` — writing
+        // the artifact the user asked for wins
+        let cfg = ExperimentConfig::from_doc(
+            &parse_toml("[obs]\nenabled = false\nledger_out = \"run.jsonl\"\n").unwrap(),
+        )
+        .unwrap();
+        assert!(cfg.cv.obs);
     }
 
     #[test]

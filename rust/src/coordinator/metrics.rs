@@ -1,17 +1,41 @@
 //! Lightweight metrics registry: counters and duration gauges shared across
 //! the coordinator's worker threads, snapshotted into experiment reports.
+//!
+//! Cells are `Arc<AtomicU64>`: the registry lock is held only long enough
+//! to look up (or insert) a cell, and every add happens on the atomic
+//! *outside* the lock. Hot loops can hoist the lookup entirely with
+//! [`Metrics::counter_handle`] / [`Metrics::duration_handle`] and pay one
+//! lock-free atomic per update. All accumulation saturates: nanosecond
+//! conversion maps NaN/negative to 0 and huge/`inf` to `u64::MAX`
+//! ([`secs_to_nanos`]), and adds clamp at `u64::MAX` instead of wrapping.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+pub use crate::obs::hist::secs_to_nanos;
+
+type Registry = Mutex<BTreeMap<String, Arc<AtomicU64>>>;
+
+/// `cell += v`, clamping at `u64::MAX` instead of wrapping.
+fn saturating_fetch_add(cell: &AtomicU64, v: u64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = cur.saturating_add(v);
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
 
 /// Process-wide metrics: monotonically increasing counters plus cumulative
 /// phase durations (nanosecond-resolution, stored as u64 nanos).
 #[derive(Default)]
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, AtomicU64>>,
-    durations: Mutex<BTreeMap<String, AtomicU64>>,
+    counters: Registry,
+    durations: Registry,
 }
 
 impl Metrics {
@@ -19,39 +43,55 @@ impl Metrics {
         Self::default()
     }
 
+    /// Look up or insert a cell; the lock is released before the caller
+    /// touches the atomic.
+    fn cell(reg: &Registry, name: &str) -> Arc<AtomicU64> {
+        let mut map = reg.lock().unwrap();
+        if let Some(c) = map.get(name) {
+            return Arc::clone(c);
+        }
+        let c = Arc::new(AtomicU64::new(0));
+        map.insert(name.to_string(), Arc::clone(&c));
+        c
+    }
+
+    /// A hoistable handle to a counter cell: hot loops fetch it once and
+    /// update lock-free per iteration.
+    pub fn counter_handle(&self, name: &str) -> Arc<AtomicU64> {
+        Self::cell(&self.counters, name)
+    }
+
+    /// A hoistable handle to a duration cell (u64 nanoseconds).
+    pub fn duration_handle(&self, name: &str) -> Arc<AtomicU64> {
+        Self::cell(&self.durations, name)
+    }
+
     /// Increment a counter.
     pub fn incr(&self, name: &str) {
         self.add(name, 1);
     }
 
-    /// Add `n` to a counter.
+    /// Add `n` to a counter (saturating).
     pub fn add(&self, name: &str, n: u64) {
-        let mut map = self.counters.lock().unwrap();
-        map.entry(name.to_string())
-            .or_insert_with(|| AtomicU64::new(0))
-            .fetch_add(n, Ordering::Relaxed);
+        let cell = Self::cell(&self.counters, name);
+        saturating_fetch_add(&cell, n);
     }
 
     /// Time a closure, accumulating under `name`.
     pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
         let t0 = Instant::now();
         let out = f();
-        let nanos = t0.elapsed().as_nanos() as u64;
-        let mut map = self.durations.lock().unwrap();
-        map.entry(name.to_string())
-            .or_insert_with(|| AtomicU64::new(0))
-            .fetch_add(nanos, Ordering::Relaxed);
+        let cell = Self::cell(&self.durations, name);
+        saturating_fetch_add(&cell, t0.elapsed().as_nanos().min(u64::MAX as u128) as u64);
         out
     }
 
     /// Accumulate an already-measured duration under `name` (how the sweep
     /// engine streams per-task wall times measured on worker threads).
+    /// Saturating: NaN/negative inputs count as 0, `inf`/overflow clamp.
     pub fn add_secs(&self, name: &str, secs: f64) {
-        let nanos = (secs.max(0.0) * 1e9) as u64;
-        let mut map = self.durations.lock().unwrap();
-        map.entry(name.to_string())
-            .or_insert_with(|| AtomicU64::new(0))
-            .fetch_add(nanos, Ordering::Relaxed);
+        let cell = Self::cell(&self.durations, name);
+        saturating_fetch_add(&cell, secs_to_nanos(secs));
     }
 
     /// Counter value.
@@ -74,17 +114,39 @@ impl Metrics {
             .unwrap_or(0.0)
     }
 
-    /// Render a sorted snapshot (CLI `--metrics` output).
+    /// Render a sorted, fixed-format snapshot (CLI `--metrics` output).
+    ///
+    /// Names come out in BTreeMap (lexicographic) order; every name is
+    /// padded to the longest name across both sections and values land in
+    /// a fixed 14-character right-aligned column, so two snapshots diff
+    /// line-by-line regardless of which names each run touched.
     pub fn snapshot(&self) -> String {
+        let counters: Vec<(String, u64)> = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let durations: Vec<(String, f64)> = self
+            .durations
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed) as f64 * 1e-9))
+            .collect();
+        let width = counters
+            .iter()
+            .map(|(k, _)| k.len())
+            .chain(durations.iter().map(|(k, _)| k.len()))
+            .max()
+            .unwrap_or(0);
         let mut s = String::new();
-        for (k, v) in self.counters.lock().unwrap().iter() {
-            s.push_str(&format!("counter {k} = {}\n", v.load(Ordering::Relaxed)));
+        for (k, v) in &counters {
+            s.push_str(&format!("counter {k:<width$} = {v:>14}\n"));
         }
-        for (k, v) in self.durations.lock().unwrap().iter() {
-            s.push_str(&format!(
-                "time    {k} = {:.4}s\n",
-                v.load(Ordering::Relaxed) as f64 * 1e-9
-            ));
+        for (k, v) in &durations {
+            s.push_str(&format!("time    {k:<width$} = {v:>13.4}s\n"));
         }
         s
     }
@@ -120,13 +182,67 @@ mod tests {
     }
 
     #[test]
+    fn add_secs_saturates_on_pathological_inputs() {
+        let m = Metrics::new();
+        m.add_secs("t", f64::NAN);
+        assert_eq!(m.seconds("t"), 0.0, "NaN must count as zero");
+        m.add_secs("t", -5.0);
+        assert_eq!(m.seconds("t"), 0.0, "negative must count as zero");
+        m.add_secs("t", f64::INFINITY);
+        assert_eq!(
+            m.seconds("t"),
+            u64::MAX as f64 * 1e-9,
+            "inf must clamp at the representable maximum"
+        );
+        // further adds must clamp instead of wrapping back toward zero
+        m.add_secs("t", 1.0);
+        assert_eq!(m.seconds("t"), u64::MAX as f64 * 1e-9);
+    }
+
+    #[test]
+    fn counter_add_saturates_instead_of_wrapping() {
+        let m = Metrics::new();
+        m.add("c", u64::MAX - 1);
+        m.add("c", 10);
+        assert_eq!(m.counter("c"), u64::MAX);
+    }
+
+    #[test]
+    fn handles_are_live_cells() {
+        let m = Metrics::new();
+        let h = m.counter_handle("hot");
+        h.fetch_add(3, Ordering::Relaxed);
+        m.incr("hot");
+        assert_eq!(m.counter("hot"), 4);
+        let d = m.duration_handle("wall");
+        d.fetch_add(1_500_000_000, Ordering::Relaxed);
+        assert!((m.seconds("wall") - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
     fn snapshot_lists_everything() {
         let m = Metrics::new();
         m.incr("a");
         m.time("b", || {});
         let s = m.snapshot();
-        assert!(s.contains("counter a = 1"));
-        assert!(s.contains("time    b"));
+        assert!(s.contains("counter a"), "snapshot: {s}");
+        assert!(s.contains("time    b"), "snapshot: {s}");
+    }
+
+    #[test]
+    fn snapshot_golden_format() {
+        let m = Metrics::new();
+        m.add("sweep.runs", 2);
+        m.add("sweep.grid_tasks", 120);
+        m.add_secs("sweep.run_wall", 1.25);
+        m.add_secs("gram", 0.0625);
+        let expected = "\
+counter sweep.grid_tasks =            120
+counter sweep.runs       =              2
+time    gram             =        0.0625s
+time    sweep.run_wall   =        1.2500s
+";
+        assert_eq!(m.snapshot(), expected);
     }
 
     #[test]

@@ -58,12 +58,27 @@
 //! coordinating thread, never from within a pool task.
 
 use crate::linalg::scratch::Scratch;
+use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce(&mut Scratch) + Send + 'static>;
+
+thread_local! {
+    /// Stable pool index of the current worker thread, set once at spawn.
+    /// The observability layer keys its per-worker event rings off this
+    /// (`usize::MAX` = not a pool worker, i.e. the coordinating thread).
+    static WORKER_INDEX: Cell<usize> = Cell::new(usize::MAX);
+}
+
+/// The calling thread's pool worker index, or `None` when called from a
+/// thread that is not a pool worker (e.g. the coordinating thread).
+pub fn worker_index() -> Option<usize> {
+    let i = WORKER_INDEX.with(Cell::get);
+    (i != usize::MAX).then_some(i)
+}
 
 /// Render a caught panic payload as a human-readable message.
 ///
@@ -116,6 +131,7 @@ impl WorkerPool {
                 thread::Builder::new()
                     .name(format!("pichol-worker-{i}"))
                     .spawn(move || {
+                        WORKER_INDEX.with(|w| w.set(i));
                         let mut scratch = Scratch::new();
                         loop {
                             let job = { rx.lock().unwrap().recv() };
@@ -471,6 +487,21 @@ mod tests {
         let out = pool.map_scratch_recover(jobs, 1);
         let vals: Vec<usize> = out.into_iter().map(|r| r.unwrap()).collect();
         assert_eq!(vals, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn worker_index_set_on_workers_and_none_on_caller() {
+        assert_eq!(worker_index(), None, "coordinating thread has no index");
+        let pool = WorkerPool::new(3);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..12)
+            .map(|_| {
+                let f: Box<dyn FnOnce() -> usize + Send> =
+                    Box::new(|| worker_index().expect("pool thread must have an index"));
+                f
+            })
+            .collect();
+        let out = pool.map(jobs);
+        assert!(out.iter().all(|&i| i < 3), "indices within pool size: {out:?}");
     }
 
     #[test]

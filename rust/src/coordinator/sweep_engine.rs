@@ -86,10 +86,12 @@
 //! / `CvConfig::sweep_batch`, settable from experiment TOML as
 //! `[sweep] threads = …` / `batch = …` (see [`crate::config`]).
 
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{secs_to_nanos, Metrics};
 use crate::coordinator::pool::{default_workers, TaskFailure, WorkerPool};
 use crate::cv::aloocv::{self, AloocvReport};
 use crate::cv::loo::{self, LooReport, LooSkip};
@@ -103,6 +105,8 @@ use crate::linalg::cholesky::{cholesky_shifted, cholesky_shifted_pooled, Cholesk
 use crate::linalg::matrix::Matrix;
 use crate::linalg::scratch::Scratch;
 use crate::linalg::trust::FactorTrust;
+use crate::obs::trace::{Event, Outcome};
+use crate::obs::{ObsReport, RunObs};
 use crate::pichol::pinrmse::fit_error_curve;
 use crate::pichol::{self, FitOptions, Interpolant};
 use crate::util::{logspace, subsample_indices, PhaseTimer};
@@ -274,6 +278,12 @@ pub struct SweepReport {
     /// `"bench-file-mismatch"`, `"probe"` or `"default"` (see
     /// [`SweepPlan::strategy_source`]).
     pub strategy_source: &'static str,
+    /// Observability payload — the merged per-task event log plus latency
+    /// histograms — present only when the run was armed (`CvConfig::obs`).
+    /// Event *content* (the `(task_id, attempt, kind, outcome)` sequence)
+    /// is bitwise worker-count-invariant; wall times and worker ids are
+    /// payload, not contract ([`crate::obs`]).
+    pub obs: Option<ObsReport>,
 }
 
 /// Output of one pool task, reassembled on the coordinating thread.
@@ -300,11 +310,91 @@ enum GridKind {
     Interp(Vec<Arc<Interpolant>>),
 }
 
+/// Build the run/task timer: histogram-armed only when observability is —
+/// the disarmed timer is byte-for-byte the pre-observability one.
+fn new_timer(hists_on: bool) -> PhaseTimer {
+    if hists_on {
+        PhaseTimer::with_hists()
+    } else {
+        PhaseTimer::new()
+    }
+}
+
+/// Record one completed span on the calling thread's ring. No-op (and no
+/// allocation, no atomics) when the run is not armed.
+fn record_span(
+    obs: &Option<Arc<RunObs>>,
+    task_id: u32,
+    attempt: u32,
+    kind: &'static str,
+    surface: &'static str,
+    fold: i64,
+    lambda_index: i64,
+    start_us: u64,
+    outcome: Outcome,
+    rung: Option<Rung>,
+    degradations: u32,
+) {
+    if let Some(o) = obs {
+        o.record(Event {
+            task_id,
+            attempt,
+            kind,
+            surface,
+            fold,
+            lambda_index,
+            worker: 0, // stamped by record()
+            start_us,
+            stop_us: o.now_us(),
+            outcome,
+            rung,
+            degradations,
+        });
+    }
+}
+
+/// Fold a LOO/ALOOCV batch's per-(row, anchor) cells into one span
+/// outcome: degraded-cell count and the highest rung climbed (`Err` cells
+/// count as `Skip`). Content-deterministic: the cells themselves are
+/// bitwise worker-count-invariant, so this summary is too.
+fn batch_outcome(
+    per_rows: &[Vec<Result<(f64, Option<(Rung, DegradeInfo)>), CholeskyError>>],
+) -> (Outcome, Option<Rung>, u32) {
+    let mut degraded = 0u32;
+    let mut max_rung: Option<Rung> = None;
+    for per_anchor in per_rows {
+        for cell in per_anchor {
+            let rung = match cell {
+                Ok((_, Some((rung, _)))) => Some(*rung),
+                Ok((_, None)) => None,
+                Err(_) => Some(Rung::Skip),
+            };
+            if let Some(r) = rung {
+                degraded = degraded.saturating_add(1);
+                max_rung = Some(max_rung.map_or(r, |m| m.max(r)));
+            }
+        }
+    }
+    let outcome = if degraded > 0 {
+        Outcome::Degraded
+    } else {
+        Outcome::Ok
+    };
+    (outcome, max_rung, degraded)
+}
+
 /// The executor: a worker pool plus a metrics registry that per-task
 /// timings stream into.
 pub struct SweepEngine {
     pool: WorkerPool,
     metrics: Arc<Metrics>,
+    /// Per-run observability state: armed at the top of `run`/`run_loo`/
+    /// `run_aloocv` when the plan asks for it, disarmed (and drained into
+    /// the report) at the end. `RefCell` because the engine is `!Sync`
+    /// (runs are driven from one coordinating thread) and arming must not
+    /// change every helper signature; workers only ever see cheap
+    /// `Option<Arc<RunObs>>` clones captured at job-construction time.
+    obs: RefCell<Option<Arc<RunObs>>>,
 }
 
 impl SweepEngine {
@@ -319,7 +409,35 @@ impl SweepEngine {
         Self {
             pool: WorkerPool::new(threads.max(1)),
             metrics,
+            obs: RefCell::new(None),
         }
+    }
+
+    /// This run's armed observability state, if any (an `Arc` clone).
+    fn obs(&self) -> Option<Arc<RunObs>> {
+        self.obs.borrow().clone()
+    }
+
+    /// Arm per-run event rings (one per worker plus the coordinator), each
+    /// pre-sized to `capacity` events so the hot path never allocates. The
+    /// capacity is a plan-derived overestimate of the whole run's event
+    /// count — a single worker could legally receive every task.
+    fn arm_obs(&self, enabled: bool, capacity: usize) {
+        *self.obs.borrow_mut() = if enabled {
+            Some(RunObs::new(self.pool.size(), capacity))
+        } else {
+            None
+        };
+    }
+
+    /// Disarm and drain: merge every ring in `(task_id, attempt)` order and
+    /// pair the event log with the run timer's per-phase histograms.
+    /// Returns `None` when the run was never armed.
+    fn finish_obs(&self, timer: &mut PhaseTimer) -> Option<ObsReport> {
+        self.obs
+            .borrow_mut()
+            .take()
+            .map(|o| ObsReport::from_run(&o, timer.take_hists()))
     }
 
     /// Worker count.
@@ -412,6 +530,9 @@ impl SweepEngine {
             // chunk knob — count what actually runs
             gram::chunk_ranges(ds.n(), gram::SEGMENT_ROWS).len()
         };
+        let obs = self.obs();
+        let tid = obs.as_ref().map_or(0, |o| o.alloc_id());
+        let start = obs.as_ref().map_or(0, |o| o.now_us());
         let gram = timer.time("gram", || {
             if pooled_gram {
                 GramCache::assemble_pooled(&ds.x, &ds.y, chunk_rows, &self.pool)
@@ -419,6 +540,7 @@ impl SweepEngine {
                 GramCache::assemble(&ds.x, &ds.y)
             }
         });
+        record_span(&obs, tid, 0, "gram", "gram", -1, -1, start, Outcome::Ok, None, 0);
         self.metrics.incr("sweep.gram_builds");
         self.metrics.add("sweep.gram_chunks", gram_chunks as u64);
         (Arc::new(gram), gram_chunks)
@@ -448,15 +570,37 @@ impl SweepEngine {
             && items
                 .first()
                 .is_some_and(|(m, _)| hmat(m).rows() >= INTRA_FACTOR_MIN_DIM);
+        // task ids allocated here, in item order, on the coordinating
+        // thread — both branches emit the same (task_id, attempt, kind)
+        // content, so the few-large heuristic never shows in the event log
+        let obs = self.obs();
+        let ids: Vec<u32> = items
+            .iter()
+            .map(|_| obs.as_ref().map_or(0, |o| o.alloc_id()))
+            .collect();
         let mut out = Vec::with_capacity(items.len());
         if few_large {
             // too few anchors to fill the pool and each one is big: tile
             // *inside* each factorization instead (driven from this thread —
             // never from a pool task, per the pool's deadlock rule)
-            for (m, lam) in &items {
+            for (idx, (m, lam)) in items.iter().enumerate() {
+                let start = obs.as_ref().map_or(0, |o| o.now_us());
                 let t0 = Instant::now();
                 let l = cholesky_shifted_pooled(hmat(m), *lam, &self.pool)?;
                 let wall = t0.elapsed().as_secs_f64();
+                record_span(
+                    &obs,
+                    ids[idx],
+                    0,
+                    phase,
+                    "anchor",
+                    -1,
+                    idx as i64,
+                    start,
+                    Outcome::Ok,
+                    None,
+                    0,
+                );
                 timer.add(phase, wall);
                 self.metrics.incr("sweep.anchor_tasks");
                 self.metrics.add_secs("sweep.anchor_wall", wall);
@@ -468,13 +612,30 @@ impl SweepEngine {
             type AnchorRes = Result<(Matrix, f64), CholeskyError>;
             let jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> AnchorRes + Send>> = items
                 .iter()
-                .map(|(m, lam)| {
+                .enumerate()
+                .map(|(idx, (m, lam))| {
                     let m = Arc::clone(m);
                     let lam = *lam;
+                    let obs = obs.clone();
+                    let tid = ids[idx];
                     let f: Box<dyn FnOnce(&mut Scratch) -> AnchorRes + Send> =
                         Box::new(move |_scratch| {
+                            let start = obs.as_ref().map_or(0, |o| o.now_us());
                             let t0 = Instant::now();
                             let l = cholesky_shifted(hmat(&m), lam)?;
+                            record_span(
+                                &obs,
+                                tid,
+                                0,
+                                phase,
+                                "anchor",
+                                -1,
+                                idx as i64,
+                                start,
+                                Outcome::Ok,
+                                None,
+                                0,
+                            );
                             Ok((l, t0.elapsed().as_secs_f64()))
                         });
                     f
@@ -496,7 +657,17 @@ impl SweepEngine {
     pub fn run(&self, ds: &SyntheticDataset, plan: &SweepPlan) -> crate::Result<SweepReport> {
         self.metrics.incr("sweep.runs");
         let run_t0 = Instant::now();
-        let mut timer = PhaseTimer::new();
+        // arm per-run observability (off by default: the disarmed path
+        // takes one RefCell borrow per wave and no per-event work). Ring
+        // capacity bounds the whole run's event count: gram + prep + the
+        // largest possible anchor wave (whole grid for Chol, k·g + g for
+        // PiChol) + 2× the grid tasks (retries and quarantine synthesis)
+        // + k fold-level sweeps, doubled for headroom.
+        let (k, q, g) = (plan.cv.k_folds, plan.grid.len(), plan.cv.g_samples);
+        let cap = 2 * (8 + k + q + g * (k + 2) + 2 * plan.grid_tasks() + k);
+        self.arm_obs(plan.cv.obs, cap);
+        let hists_on = plan.cv.obs;
+        let mut timer = new_timer(hists_on);
         let mut tasks = 0usize;
 
         // stage 0: the shared Gram — G = XᵀX and g = Xᵀy, assembled exactly
@@ -528,15 +699,33 @@ impl SweepEngine {
             })
             .collect();
         type PrepRes = (FoldData, PhaseTimer, f64);
+        let obs = self.obs();
         let build_jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> PrepRes + Send>> = gathers
             .into_iter()
-            .map(|(xv, yv, train)| {
+            .enumerate()
+            .map(|(fi, (xv, yv, train))| {
                 let gram = Arc::clone(&gram);
+                let obs = obs.clone();
+                let tid = obs.as_ref().map_or(0, |o| o.alloc_id());
                 let f: Box<dyn FnOnce(&mut Scratch) -> PrepRes + Send> =
                     Box::new(move |_scratch| {
+                        let start = obs.as_ref().map_or(0, |o| o.now_us());
                         let t0 = Instant::now();
-                        let mut t = PhaseTimer::new();
+                        let mut t = new_timer(obs.is_some());
                         let data = FoldData::from_gram(&gram, xv, yv, train, &mut t);
+                        record_span(
+                            &obs,
+                            tid,
+                            0,
+                            "prep",
+                            "fold",
+                            fi as i64,
+                            -1,
+                            start,
+                            Outcome::Ok,
+                            None,
+                            0,
+                        );
                         (data, t, t0.elapsed().as_secs_f64())
                     });
                 f
@@ -599,6 +788,7 @@ impl SweepEngine {
         self.metrics.add("sweep.lambda_evals", evals as u64);
         let wall_secs = run_t0.elapsed().as_secs_f64();
         self.metrics.add_secs("sweep.run_wall", wall_secs);
+        let obs = self.finish_obs(&mut timer);
         Ok(SweepReport {
             kind: plan.kind,
             grid: plan.grid.clone(),
@@ -611,6 +801,7 @@ impl SweepEngine {
             kernel_backend: crate::linalg::kernel::active_backend().name(),
             fold_strategy: plan.cv.fold_strategy,
             strategy_source: plan.strategy_source,
+            obs,
         })
     }
 
@@ -663,7 +854,11 @@ impl SweepEngine {
         gram::validate_rows(&ds.x, &ds.y)?;
         self.metrics.incr("sweep.loo_runs");
         let run_t0 = Instant::now();
-        let mut timer = PhaseTimer::new();
+        // event bound: gram + g anchors + ⌈n/batch⌉ batches + the fit pair
+        let cap = 2 * (8 + 2 * plan.anchors.len() + ds.n().div_ceil(plan.batch));
+        self.arm_obs(plan.cv.obs, cap);
+        let hists_on = plan.cv.obs;
+        let mut timer = new_timer(hists_on);
         let mut tasks = 0usize;
         let n = ds.n();
 
@@ -701,6 +896,7 @@ impl SweepEngine {
         let anchor_lams = Arc::new(plan.anchors.clone());
         type CellRes = Result<(f64, Option<(Rung, DegradeInfo)>), CholeskyError>;
         type LooTaskRes = (Vec<Vec<CellRes>>, PhaseTimer, f64);
+        let obs = self.obs();
         let mut jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> LooTaskRes + Send>> = Vec::new();
         let mut spans: Vec<usize> = Vec::new(); // batch start rows
         let mut lo = 0;
@@ -713,10 +909,13 @@ impl SweepEngine {
             let factors = Arc::clone(&factors);
             let trusts = Arc::clone(&trusts);
             let anchor_lams = Arc::clone(&anchor_lams);
+            let obs = obs.clone();
+            let tid = obs.as_ref().map_or(0, |o| o.alloc_id());
             let job: Box<dyn FnOnce(&mut Scratch) -> LooTaskRes + Send> =
                 Box::new(move |scratch| {
+                    let start = obs.as_ref().map_or(0, |o| o.now_us());
                     let t0 = Instant::now();
-                    let mut t = PhaseTimer::new();
+                    let mut t = new_timer(obs.is_some());
                     let mut per_rows = Vec::with_capacity(xblock.rows());
                     for r in 0..xblock.rows() {
                         let yi = yblock[r];
@@ -736,6 +935,22 @@ impl SweepEngine {
                         }
                         per_rows.push(per_anchor);
                     }
+                    if obs.is_some() {
+                        let (outcome, rung, degraded) = batch_outcome(&per_rows);
+                        record_span(
+                            &obs,
+                            tid,
+                            0,
+                            "loo_batch",
+                            "loo",
+                            lo as i64,
+                            -1,
+                            start,
+                            outcome,
+                            rung,
+                            degraded,
+                        );
+                    }
                     (per_rows, t, t0.elapsed().as_secs_f64())
                 });
             jobs.push(job);
@@ -749,10 +964,14 @@ impl SweepEngine {
         let mut counts = vec![0usize; g];
         let mut skipped: Vec<LooSkip> = Vec::new();
         let mut degradations: Vec<Degradation> = Vec::new();
+        // the registry lookup is hoisted out of the merge loop: one atomic
+        // add per task, no lock inside the loop
+        let m_tasks = self.metrics.counter_handle("sweep.loo_tasks");
+        let m_wall = self.metrics.duration_handle("sweep.loo_wall");
         for (&lo, (per_rows, t, wall)) in spans.iter().zip(self.map_jobs(jobs)) {
             timer.merge(&t);
-            self.metrics.incr("sweep.loo_tasks");
-            self.metrics.add_secs("sweep.loo_wall", wall);
+            m_tasks.fetch_add(1, Ordering::Relaxed);
+            m_wall.fetch_add(secs_to_nanos(wall), Ordering::Relaxed);
             for (local, per_anchor) in per_rows.into_iter().enumerate() {
                 for (s, cell) in per_anchor.into_iter().enumerate() {
                     match cell {
@@ -809,10 +1028,14 @@ impl SweepEngine {
             .map(|(&l, &e)| (l, e))
             .unzip();
         let (best_lambda, best_error, curve) = if usable.0.len() > plan.cv.degree {
+            let tid = obs.as_ref().map_or(0, |o| o.alloc_id());
+            let start = obs.as_ref().map_or(0, |o| o.now_us());
             let poly = timer.time("fit", || {
                 fit_error_curve(&usable.0, &usable.1, plan.cv.degree)
             });
-            timer.time("interp", || poly.sweep(&plan.grid))
+            let swept = timer.time("interp", || poly.sweep(&plan.grid));
+            record_span(&obs, tid, 0, "fit", "curve", -1, -1, start, Outcome::Ok, None, 0);
+            swept
         } else if let Some((bl, be)) = usable
             .0
             .iter()
@@ -831,6 +1054,7 @@ impl SweepEngine {
 
         let wall_secs = run_t0.elapsed().as_secs_f64();
         self.metrics.add_secs("sweep.run_wall", wall_secs);
+        let obs = self.finish_obs(&mut timer);
         Ok(LooReport {
             grid: plan.grid.clone(),
             curve,
@@ -845,6 +1069,7 @@ impl SweepEngine {
             threads: self.pool.size(),
             tasks,
             n,
+            obs,
         })
     }
 
@@ -878,7 +1103,12 @@ impl SweepEngine {
         gram::validate_rows(&ds.x, &ds.y)?;
         self.metrics.incr("sweep.aloocv_runs");
         let run_t0 = Instant::now();
-        let mut timer = PhaseTimer::new();
+        // event bound: gram + g anchors + g solves + ⌈n/batch⌉ batches +
+        // the fit pair
+        let cap = 2 * (8 + 3 * plan.anchors.len() + ds.n().div_ceil(plan.batch));
+        self.arm_obs(plan.cv.obs, cap);
+        let hists_on = plan.cv.obs;
+        let mut timer = new_timer(hists_on);
         let mut tasks = 0usize;
         let n = ds.n();
 
@@ -905,10 +1135,13 @@ impl SweepEngine {
         )?);
         let trusts: Arc<Vec<FactorTrust>> =
             Arc::new(factors.iter().map(FactorTrust::fresh).collect());
+        let obs = self.obs();
         let thetas: Arc<Vec<Vec<f64>>> = {
             let mut work = Vec::new();
             let mut ths = Vec::with_capacity(g);
-            for l in factors.iter() {
+            for (s, l) in factors.iter().enumerate() {
+                let tid = obs.as_ref().map_or(0, |o| o.alloc_id());
+                let start = obs.as_ref().map_or(0, |o| o.now_us());
                 let mut theta = Vec::new();
                 timer.time("solve", || {
                     crate::linalg::triangular::solve_cholesky_into(
@@ -918,6 +1151,19 @@ impl SweepEngine {
                         &mut theta,
                     )
                 });
+                record_span(
+                    &obs,
+                    tid,
+                    0,
+                    "solve",
+                    "anchor",
+                    -1,
+                    s as i64,
+                    start,
+                    Outcome::Ok,
+                    None,
+                    0,
+                );
                 ths.push(theta);
             }
             Arc::new(ths)
@@ -945,10 +1191,13 @@ impl SweepEngine {
             let trusts = Arc::clone(&trusts);
             let thetas = Arc::clone(&thetas);
             let anchor_lams = Arc::clone(&anchor_lams);
+            let obs = obs.clone();
+            let tid = obs.as_ref().map_or(0, |o| o.alloc_id());
             let job: Box<dyn FnOnce(&mut Scratch) -> AlooTaskRes + Send> =
                 Box::new(move |scratch| {
+                    let start = obs.as_ref().map_or(0, |o| o.now_us());
                     let t0 = Instant::now();
-                    let mut t = PhaseTimer::new();
+                    let mut t = new_timer(obs.is_some());
                     let rows = xblock.rows();
                     let mut per_rows: Vec<Vec<CellRes>> = (0..rows)
                         .map(|_| Vec::with_capacity(factors.len()))
@@ -970,6 +1219,22 @@ impl SweepEngine {
                             per_rows[local].push(cell);
                         }
                     }
+                    if obs.is_some() {
+                        let (outcome, rung, degraded) = batch_outcome(&per_rows);
+                        record_span(
+                            &obs,
+                            tid,
+                            0,
+                            "aloo_batch",
+                            "aloocv",
+                            lo as i64,
+                            -1,
+                            start,
+                            outcome,
+                            rung,
+                            degraded,
+                        );
+                    }
                     (per_rows, t, t0.elapsed().as_secs_f64())
                 });
             jobs.push(job);
@@ -983,10 +1248,13 @@ impl SweepEngine {
         let mut counts = vec![0usize; g];
         let mut skipped: Vec<LooSkip> = Vec::new();
         let mut degradations: Vec<Degradation> = Vec::new();
+        // hoisted registry lookups: one lock-free atomic per task merge
+        let m_tasks = self.metrics.counter_handle("sweep.aloocv_tasks");
+        let m_wall = self.metrics.duration_handle("sweep.aloocv_wall");
         for (&lo, (per_rows, t, wall)) in spans.iter().zip(self.map_jobs(jobs)) {
             timer.merge(&t);
-            self.metrics.incr("sweep.aloocv_tasks");
-            self.metrics.add_secs("sweep.aloocv_wall", wall);
+            m_tasks.fetch_add(1, Ordering::Relaxed);
+            m_wall.fetch_add(secs_to_nanos(wall), Ordering::Relaxed);
             for (local, per_anchor) in per_rows.into_iter().enumerate() {
                 for (s, cell) in per_anchor.into_iter().enumerate() {
                     match cell {
@@ -1043,10 +1311,14 @@ impl SweepEngine {
             .map(|(&l, &e)| (l, e))
             .unzip();
         let (best_lambda, best_error, curve) = if usable.0.len() > plan.cv.degree {
+            let tid = obs.as_ref().map_or(0, |o| o.alloc_id());
+            let start = obs.as_ref().map_or(0, |o| o.now_us());
             let poly = timer.time("fit", || {
                 fit_error_curve(&usable.0, &usable.1, plan.cv.degree)
             });
-            timer.time("interp", || poly.sweep(&plan.grid))
+            let swept = timer.time("interp", || poly.sweep(&plan.grid));
+            record_span(&obs, tid, 0, "fit", "curve", -1, -1, start, Outcome::Ok, None, 0);
+            swept
         } else if let Some((bl, be)) = usable
             .0
             .iter()
@@ -1064,6 +1336,7 @@ impl SweepEngine {
 
         let wall_secs = run_t0.elapsed().as_secs_f64();
         self.metrics.add_secs("sweep.run_wall", wall_secs);
+        let obs = self.finish_obs(&mut timer);
         Ok(AloocvReport {
             grid: plan.grid.clone(),
             curve,
@@ -1079,6 +1352,7 @@ impl SweepEngine {
             tasks,
             n,
             certification: None,
+            obs,
         })
     }
 
@@ -1131,6 +1405,7 @@ impl SweepEngine {
                 f64,
             );
             let policy = plan.cv.recovery;
+            let obs = self.obs();
             let mut jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> FdRes + Send>> = Vec::new();
             let mut meta: Vec<(usize, f64)> = Vec::new(); // (fold, λ_s)
             for (fi, fd) in fold_data.iter().enumerate() {
@@ -1139,24 +1414,51 @@ impl SweepEngine {
                     let fd = Arc::clone(fd);
                     let global = Arc::clone(&global);
                     let trust = trusts[s];
+                    let obs = obs.clone();
+                    let tid = obs.as_ref().map_or(0, |o| o.alloc_id());
                     let job: Box<dyn FnOnce(&mut Scratch) -> FdRes + Send> =
                         Box::new(move |scratch| {
+                            let start = obs.as_ref().map_or(0, |o| o.now_us());
                             let t0 = Instant::now();
-                            let mut t = PhaseTimer::new();
+                            let mut t = new_timer(obs.is_some());
                             let res = fd
                                 .factor_from_anchor(&global[s], trust, lam, &policy, scratch, &mut t)
                                 .map(|ff| (scratch.factor.clone(), ff));
+                            let (outcome, rung, deg) = match &res {
+                                Ok((_, ff)) if ff.degraded.is_some() => {
+                                    (Outcome::Degraded, Some(ff.rung), 1)
+                                }
+                                Ok(_) => (Outcome::Ok, None, 0),
+                                // fatal for the run (the interpolant needs
+                                // every sample factor) — still log the span
+                                Err(_) => (Outcome::Degraded, Some(Rung::Skip), 1),
+                            };
+                            record_span(
+                                &obs,
+                                tid,
+                                0,
+                                "fold_downdate",
+                                "anchor",
+                                fi as i64,
+                                s as i64,
+                                start,
+                                outcome,
+                                rung,
+                                deg,
+                            );
                             (res, t, t0.elapsed().as_secs_f64())
                         });
                     jobs.push(job);
                 }
             }
             *tasks += jobs.len();
+            let m_tasks = self.metrics.counter_handle("sweep.fold_downdate_tasks");
+            let m_wall = self.metrics.duration_handle("sweep.fold_downdate_wall");
             let mut flat = Vec::with_capacity(meta.len());
             for ((fi, lam), (res, t, wall)) in meta.into_iter().zip(self.map_jobs(jobs)) {
                 timer.merge(&t);
-                self.metrics.incr("sweep.fold_downdate_tasks");
-                self.metrics.add_secs("sweep.fold_downdate_wall", wall);
+                m_tasks.fetch_add(1, Ordering::Relaxed);
+                m_wall.fetch_add(secs_to_nanos(wall), Ordering::Relaxed);
                 let (l, ff) = res?;
                 if let Some(info) = ff.degraded {
                     self.metrics.incr("sweep.degradations");
@@ -1222,8 +1524,20 @@ impl SweepEngine {
         let metric = plan.cv.metric;
         let policy = plan.cv.recovery;
 
+        let obs = self.obs();
+        let surface: &'static str = match &kind {
+            GridKind::Exact => "exact",
+            GridKind::Anchored(..) => "anchored",
+            GridKind::Interp(_) => "interp",
+        };
         let mut jobs: Vec<Arc<dyn Fn(&mut Scratch) -> TaskOut + Send + Sync>> = Vec::new();
         let mut spans: Vec<(usize, usize, usize)> = Vec::new(); // (fold, lo, hi)
+        // per-task event identity: ids allocated in (fold, lo) construction
+        // order; the attempt counter is bumped at the top of the body —
+        // *before* fault injection — so a retried task's surviving event
+        // carries the true attempt ordinal and a panicked attempt records
+        // nothing (its ring slot is never reached)
+        let mut task_ids: Vec<u32> = Vec::new();
         for (fi, fd) in fold_data.iter().enumerate() {
             let mut lo = 0;
             while lo < grid.len() {
@@ -1245,11 +1559,17 @@ impl SweepEngine {
                 // per λ evaluation. Jobs are `Fn` (not `FnOnce`) so a
                 // panicking task can be resubmitted by map_jobs_recover.
                 let ti = jobs.len();
+                let obs_t = obs.clone();
+                let tid = obs_t.as_ref().map_or(0, |o| o.alloc_id());
+                task_ids.push(tid);
+                let attempt_ctr = Arc::new(AtomicU32::new(0));
                 let job: Arc<dyn Fn(&mut Scratch) -> TaskOut + Send + Sync> =
                     Arc::new(move |scratch| {
+                        let attempt = attempt_ctr.fetch_add(1, Ordering::Relaxed);
+                        let start = obs_t.as_ref().map_or(0, |o| o.now_us());
                         crate::testutil::faults::maybe_panic_task(ti);
                         let t0 = Instant::now();
-                        let mut t = PhaseTimer::new();
+                        let mut t = new_timer(obs_t.is_some());
                         let mut errors = Vec::with_capacity(hi - lo);
                         let mut cell_degrades: Vec<(usize, Rung, DegradeInfo)> = Vec::new();
                         match &kind_view {
@@ -1317,6 +1637,29 @@ impl SweepEngine {
                                 }
                             }
                         }
+                        if obs_t.is_some() {
+                            let (outcome, rung) = if cell_degrades.is_empty() {
+                                (Outcome::Ok, None)
+                            } else {
+                                (
+                                    Outcome::Degraded,
+                                    cell_degrades.iter().map(|(_, r, _)| *r).max(),
+                                )
+                            };
+                            record_span(
+                                &obs_t,
+                                tid,
+                                attempt,
+                                "grid",
+                                surface,
+                                fi as i64,
+                                lo as i64,
+                                start,
+                                outcome,
+                                rung,
+                                cell_degrades.len() as u32,
+                            );
+                        }
                         TaskOut {
                             errors,
                             degradations: cell_degrades,
@@ -1335,6 +1678,9 @@ impl SweepEngine {
             .iter()
             .map(|_| vec![f64::NAN; grid.len()])
             .collect();
+        // hoisted registry lookups: one lock-free atomic per task merge
+        let m_tasks = self.metrics.counter_handle("sweep.grid_tasks");
+        let m_wall = self.metrics.duration_handle("sweep.grid_wall");
         for (&(fi, lo, hi), out) in spans.iter().zip(outs) {
             match out {
                 Ok(out) => {
@@ -1349,12 +1695,34 @@ impl SweepEngine {
                         ));
                     }
                     timer.merge(&out.timer);
-                    self.metrics.incr("sweep.grid_tasks");
-                    self.metrics.add_secs("sweep.grid_wall", out.wall);
+                    m_tasks.fetch_add(1, Ordering::Relaxed);
+                    m_wall.fetch_add(secs_to_nanos(out.wall), Ordering::Relaxed);
                 }
                 Err(fail) => {
                     // quarantined: this task's cells stay NaN and the sweep
-                    // carries on — one berserk task degrades one span
+                    // carries on — one berserk task degrades one span.
+                    // Every attempt panicked before it could reach its ring,
+                    // so the coordinator synthesizes the task's one event —
+                    // a zero-length Quarantined span at the final attempt
+                    // ordinal (the content tuple stays worker-invariant;
+                    // fault injection is by task index, not by worker).
+                    if let Some(o) = &obs {
+                        let now = o.now_us();
+                        o.record(Event {
+                            task_id: task_ids[fail.task],
+                            attempt: fail.attempts,
+                            kind: "grid",
+                            surface,
+                            fold: fi as i64,
+                            lambda_index: lo as i64,
+                            worker: 0, // stamped by record()
+                            start_us: now,
+                            stop_us: now,
+                            outcome: Outcome::Quarantined,
+                            rung: Some(Rung::Skip),
+                            degradations: 1,
+                        });
+                    }
                     self.metrics.incr("sweep.task_quarantines");
                     degradations.push(Degradation {
                         surface: "task",
@@ -1399,19 +1767,37 @@ impl SweepEngine {
         tasks: &mut usize,
     ) -> crate::Result<Vec<SweepResult>> {
         let grid = Arc::new(plan.grid.clone());
+        let obs = self.obs();
         type FoldRes = (crate::Result<SweepResult>, PhaseTimer, f64);
         let jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> FoldRes + Send>> = fold_data
             .iter()
-            .map(|fd| {
+            .enumerate()
+            .map(|(fi, fd)| {
                 let fd = Arc::clone(fd);
                 let grid = Arc::clone(&grid);
                 let cfg = plan.cv.clone();
                 let kind = plan.kind;
+                let obs = obs.clone();
+                let tid = obs.as_ref().map_or(0, |o| o.alloc_id());
                 let f: Box<dyn FnOnce(&mut Scratch) -> FoldRes + Send> =
                     Box::new(move |scratch| {
+                        let start = obs.as_ref().map_or(0, |o| o.now_us());
                         let t0 = Instant::now();
-                        let mut t = PhaseTimer::new();
+                        let mut t = new_timer(obs.is_some());
                         let res = solvers::sweep(kind, &fd, &grid, &cfg, scratch, &mut t);
+                        record_span(
+                            &obs,
+                            tid,
+                            0,
+                            "fold_sweep",
+                            "fold",
+                            fi as i64,
+                            -1,
+                            start,
+                            Outcome::Ok,
+                            None,
+                            0,
+                        );
                         (res, t, t0.elapsed().as_secs_f64())
                     });
                 f
@@ -1803,6 +2189,92 @@ mod tests {
             "one gather per Anchored grid task"
         );
         assert_eq!(rep.timer.count("fold_downdate"), 5 * 50);
+    }
+
+    /// Arming observability perturbs nothing: the numeric report is
+    /// bitwise the disarmed run's, the event log is complete (one span per
+    /// task, exact count for this shape), merged in ascending
+    /// `(task_id, attempt)` order with unique ids, nothing dropped, and
+    /// the latency histograms cover the phases the run actually timed.
+    #[test]
+    fn obs_armed_run_is_bitwise_identical_and_carries_events() {
+        let ds = ds();
+        let base = CvConfig {
+            sweep_batch: 4,
+            ..cfg_with_threads(2)
+        };
+        let on = CvConfig {
+            obs: true,
+            ..base.clone()
+        };
+        let plan_off = SweepPlan::new(&ds, SolverKind::Chol, &base);
+        let plan_on = SweepPlan::new(&ds, SolverKind::Chol, &on);
+        let off = SweepEngine::new(plan_off.threads)
+            .run(&ds, &plan_off)
+            .unwrap();
+        let rep = SweepEngine::new(plan_on.threads).run(&ds, &plan_on).unwrap();
+        assert!(off.obs.is_none(), "disarmed run must not carry an ObsReport");
+        let o = rep.obs.as_ref().expect("armed run must carry an ObsReport");
+        assert_eq!(o.dropped, 0);
+        // 1 gram + 5 prep + 50 anchor factors + 5·⌈50/4⌉ grid tasks
+        assert_eq!(o.events.len(), 1 + 5 + 50 + 5 * 13, "one span per task");
+        for w in o.events.windows(2) {
+            assert!(
+                (w[0].task_id, w[0].attempt) < (w[1].task_id, w[1].attempt),
+                "merged log must be strictly ordered by (task_id, attempt)"
+            );
+        }
+        for (a, b) in off.fold_results.iter().zip(&rep.fold_results) {
+            assert_eq!(a.errors, b.errors, "arming obs perturbed the sweep");
+            assert_eq!(a.best_lambda, b.best_lambda);
+            assert_eq!(a.best_error, b.best_error);
+        }
+        assert!(o.phase_hists.get("factor").is_some());
+        assert!(o.phase_hists.get("fold_downdate").is_some());
+        assert_eq!(
+            o.kind_hists.get("grid").map(|h| h.count()),
+            Some(5 * 13),
+            "per-kind histogram counts every grid span"
+        );
+    }
+
+    /// The merged event-log *content* — the (task_id, attempt, kind,
+    /// surface, fold, λ-index, outcome) tuple sequence — is identical at
+    /// any worker count; wall times and worker ids are payload.
+    #[test]
+    fn obs_event_content_is_worker_count_invariant() {
+        let ds = ds();
+        let mut logs = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let cfg = CvConfig {
+                obs: true,
+                sweep_batch: 4,
+                ..cfg_with_threads(threads)
+            };
+            let plan = SweepPlan::new(&ds, SolverKind::PiChol, &cfg);
+            let rep = SweepEngine::new(plan.threads).run(&ds, &plan).unwrap();
+            let o = rep.obs.expect("armed");
+            assert_eq!(o.dropped, 0);
+            logs.push(
+                o.events
+                    .iter()
+                    .map(|e| {
+                        (
+                            e.task_id,
+                            e.attempt,
+                            e.kind,
+                            e.surface,
+                            e.fold,
+                            e.lambda_index,
+                            e.outcome,
+                            e.degradations,
+                        )
+                    })
+                    .collect::<Vec<_>>(),
+            );
+        }
+        assert_eq!(logs[0], logs[1], "2 workers changed event content");
+        assert_eq!(logs[0], logs[2], "4 workers changed event content");
     }
 
     #[test]

@@ -139,6 +139,11 @@ pub struct AloocvReport {
     pub n: usize,
     /// Tier-agreement verdict — `Some` only from [`run_certified`].
     pub certification: Option<Certification>,
+    /// Observability payload — merged event log + latency histograms —
+    /// present only when the run was armed ([`CvConfig::obs`]). From
+    /// [`run_certified`] this is the *cheap tier's* payload; the exact
+    /// tier's run is observable through its own [`super::loo::LooReport`].
+    pub obs: Option<crate::obs::ObsReport>,
 }
 
 /// Run ALOOCV over a dataset: plans anchors/grid from `cfg` exactly like

@@ -124,6 +124,10 @@ pub struct LooReport {
     pub tasks: usize,
     /// Rows of the dataset (the number of held-out evaluations per anchor).
     pub n: usize,
+    /// Observability payload — merged event log + latency histograms —
+    /// present only when the run was armed ([`CvConfig::obs`]). See
+    /// [`crate::obs`] for the event schema and ordering contract.
+    pub obs: Option<crate::obs::ObsReport>,
 }
 
 /// Run leave-one-out CV over a dataset: plans the anchors/grid from `cfg`

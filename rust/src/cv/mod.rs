@@ -500,6 +500,13 @@ pub struct CvConfig {
     /// [`RecoveryPolicy`] drives every escalation decision of the run.
     /// TOML: `[trust]`; CLI: `--trust-budget` and friends.
     pub recovery: RecoveryPolicy,
+    /// Arm per-run observability ([`crate::obs`]): lock-free per-worker
+    /// event rings, per-phase latency histograms, and the merged event log
+    /// in the report. **Off by default** — disarmed runs take zero
+    /// per-event work and are bitwise identical to armed ones (pinned by
+    /// the chaos suite). TOML: `[obs] enabled = true`; implied by the CLI
+    /// `--trace-out` / `--ledger-out` flags.
+    pub obs: bool,
 }
 
 impl Default for CvConfig {
@@ -520,6 +527,7 @@ impl Default for CvConfig {
             mode: CvMode::KFold,
             fold_strategy: FoldStrategy::Downdate,
             recovery: RecoveryPolicy::default(),
+            obs: false,
         }
     }
 }
@@ -563,6 +571,14 @@ pub struct CvReport {
     /// file present but unusable, or the probe failed) — see
     /// [`strategy`].
     pub strategy_source: &'static str,
+    /// Worker threads the sweep used.
+    pub threads: usize,
+    /// Total tasks executed (Gram chunks + fold prep + anchors + sweeps).
+    pub tasks: usize,
+    /// Observability payload — merged event log + latency histograms —
+    /// present only when the run was armed ([`CvConfig::obs`]). See
+    /// [`crate::obs`] for the event schema and ordering contract.
+    pub obs: Option<crate::obs::ObsReport>,
 }
 
 impl CvReport {
@@ -623,6 +639,9 @@ pub fn aggregate_sweep(report: SweepReport) -> CvReport {
         kernel_backend,
         fold_strategy,
         strategy_source,
+        threads,
+        tasks,
+        obs,
         ..
     } = report;
 
@@ -683,6 +702,9 @@ pub fn aggregate_sweep(report: SweepReport) -> CvReport {
         kernel_backend,
         fold_strategy,
         strategy_source,
+        threads,
+        tasks,
+        obs,
     }
 }
 

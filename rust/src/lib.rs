@@ -65,6 +65,7 @@ pub mod cv;
 pub mod data;
 pub mod experiments;
 pub mod linalg;
+pub mod obs;
 pub mod pichol;
 pub mod prng;
 pub mod runtime;

@@ -88,8 +88,56 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(dir) = args.flag("artifacts") {
         cfg.artifacts_dir = dir.to_string();
     }
+    // observability: --obs arms the event/histogram layer; either artifact
+    // flag implies it (writing the artifact is the point of asking for it)
+    if args.switch("obs") {
+        cfg.cv.obs = true;
+    }
+    if let Some(p) = args.flag("trace-out") {
+        cfg.trace_out = Some(p.to_string());
+    }
+    if let Some(p) = args.flag("ledger-out") {
+        cfg.ledger_out = Some(p.to_string());
+    }
+    if cfg.trace_out.is_some() || cfg.ledger_out.is_some() {
+        cfg.cv.obs = true;
+    }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Print per-phase latency quantiles and write the `--trace-out` /
+/// `--ledger-out` artifacts for a finished observable run.
+fn emit_obs(cfg: &ExperimentConfig, run: &picholesky::obs::ledger::LedgerRun) -> Result<()> {
+    let fmt_q = |q: Option<f64>| match q {
+        Some(us) => format!("{us:.0}"),
+        None => "-".to_string(),
+    };
+    if !run.obs.phase_hists.is_empty() {
+        println!("  latency quantiles (µs):");
+        for (name, h) in run.obs.phase_hists.entries() {
+            println!(
+                "    {name:<12} p50={} p90={} p99={}  n={}",
+                fmt_q(h.quantile_us(0.50)),
+                fmt_q(h.quantile_us(0.90)),
+                fmt_q(h.quantile_us(0.99)),
+                h.count()
+            );
+        }
+    }
+    if let Some(path) = &cfg.ledger_out {
+        picholesky::obs::ledger::write_ledger(path, run)?;
+        println!(
+            "  ledger → {path} ({} events, {} dropped)",
+            run.obs.events.len(),
+            run.obs.dropped
+        );
+    }
+    if let Some(path) = &cfg.trace_out {
+        picholesky::obs::trace::write_chrome_trace(path, &run.obs.events)?;
+        println!("  trace  → {path}  (open in chrome://tracing or Perfetto)");
+    }
+    Ok(())
 }
 
 fn cmd_cv(args: &Args) -> Result<()> {
@@ -147,6 +195,32 @@ fn cmd_cv(args: &Args) -> Result<()> {
         for (phase, secs) in rep.timer.entries() {
             println!("  {phase:<10} {}", fmt_secs(*secs));
         }
+        if let Some(obs) = &rep.obs {
+            emit_obs(
+                &cfg,
+                &picholesky::obs::ledger::LedgerRun {
+                    mode: "aloocv",
+                    solver: "chol",
+                    kernel_backend: picholesky::linalg::kernel::active_backend().name(),
+                    fold_strategy: "hat-diagonal",
+                    strategy_source: "mode",
+                    threads: rep.threads,
+                    tasks: rep.tasks,
+                    k_folds: rep.n,
+                    q_grid: cfg.cv.q_grid,
+                    g_samples: cfg.cv.g_samples,
+                    seed: cfg.seed,
+                    policy: &cfg.cv.recovery,
+                    best_lambda: rep.best_lambda,
+                    best_error: rep.best_error,
+                    wall_secs: rep.wall_secs,
+                    degradations: &rep.degradations,
+                    certification: rep.certification.as_ref(),
+                    timer: &rep.timer,
+                    obs,
+                },
+            )?;
+        }
         if args.switch("metrics") {
             print!("{}", coord.metrics.snapshot());
         }
@@ -187,6 +261,32 @@ fn cmd_cv(args: &Args) -> Result<()> {
         }
         for (phase, secs) in rep.timer.entries() {
             println!("  {phase:<10} {}", fmt_secs(*secs));
+        }
+        if let Some(obs) = &rep.obs {
+            emit_obs(
+                &cfg,
+                &picholesky::obs::ledger::LedgerRun {
+                    mode: "loo",
+                    solver: "chol",
+                    kernel_backend: picholesky::linalg::kernel::active_backend().name(),
+                    fold_strategy: "downdate",
+                    strategy_source: "mode",
+                    threads: rep.threads,
+                    tasks: rep.tasks,
+                    k_folds: rep.n,
+                    q_grid: cfg.cv.q_grid,
+                    g_samples: cfg.cv.g_samples,
+                    seed: cfg.seed,
+                    policy: &cfg.cv.recovery,
+                    best_lambda: rep.best_lambda,
+                    best_error: rep.best_error,
+                    wall_secs: rep.wall_secs,
+                    degradations: &rep.degradations,
+                    certification: None,
+                    timer: &rep.timer,
+                    obs,
+                },
+            )?;
         }
         if args.switch("metrics") {
             print!("{}", coord.metrics.snapshot());
@@ -229,6 +329,32 @@ fn cmd_cv(args: &Args) -> Result<()> {
     );
     for (phase, secs) in rep.timer.entries() {
         println!("  {phase:<10} {}", fmt_secs(*secs));
+    }
+    if let Some(obs) = &rep.obs {
+        emit_obs(
+            &cfg,
+            &picholesky::obs::ledger::LedgerRun {
+                mode: "kfold",
+                solver: solver.name(),
+                kernel_backend: rep.kernel_backend,
+                fold_strategy: rep.fold_strategy.name(),
+                strategy_source: rep.strategy_source,
+                threads: rep.threads,
+                tasks: rep.tasks,
+                k_folds: cfg.cv.k_folds,
+                q_grid: cfg.cv.q_grid,
+                g_samples: cfg.cv.g_samples,
+                seed: cfg.seed,
+                policy: &cfg.cv.recovery,
+                best_lambda: rep.best_lambda,
+                best_error: rep.best_error,
+                wall_secs: rep.wall_secs,
+                degradations: &rep.degradations,
+                certification: None,
+                timer: &rep.timer,
+                obs,
+            },
+        )?;
     }
     if args.switch("metrics") {
         print!("{}", coord.metrics.snapshot());

@@ -1,0 +1,315 @@
+//! Log-bucketed latency histograms: HDR-style powers-of-√2 buckets,
+//! exact counts, mergeable in any order.
+//!
+//! Values are `u64` nanoseconds. Bucket `b` covers the half-open value
+//! range `(√2^b, √2^(b+1)]` (zero is counted separately), so two buckets
+//! per power of two give every bucket a ≤ ~41% relative width — enough
+//! resolution for p50/p90/p99 while keeping the whole histogram a fixed
+//! 128-slot array that merges by element-wise addition. Because counts
+//! are exact and addition is commutative/associative, merging per-worker
+//! histograms in any order yields identical bucket counts and therefore
+//! identical quantiles — the same partition-independence contract the
+//! numeric kernels follow.
+//!
+//! The bucket index of `v > 0` is `2k + u` where `k = ⌊log2 v⌋`
+//! (computed as `63 − leading_zeros`, no `ilog2` needed) and `u = 1` iff
+//! `v ≥ 2^(k+½)`, decided exactly in integers by `v² ≥ 2^(2k+1)`
+//! (the square is taken in `u128` so `v` up to `2⁶⁴−1` cannot overflow).
+
+use std::f64::consts::SQRT_2;
+
+/// Number of value buckets: two per power of two, `k ∈ 0..64`.
+pub const BUCKETS: usize = 128;
+
+/// Saturating `f64` seconds → `u64` nanoseconds. `NaN` and negatives
+/// map to 0; values at or beyond `u64::MAX` ns (~584 years) saturate.
+pub fn secs_to_nanos(secs: f64) -> u64 {
+    if !(secs > 0.0) {
+        return 0; // NaN, zero, negative
+    }
+    let ns = secs * 1e9;
+    if ns >= u64::MAX as f64 {
+        u64::MAX
+    } else {
+        ns as u64
+    }
+}
+
+/// Bucket index for `v > 0`: `2k + u`, see module docs.
+fn bucket_index(v: u64) -> usize {
+    debug_assert!(v > 0);
+    let k = (63 - v.leading_zeros()) as usize;
+    let upper = (v as u128) * (v as u128) >= 2u128 << (2 * k);
+    (2 * k + usize::from(upper)).min(BUCKETS - 1)
+}
+
+/// Representative (upper-bound) value of bucket `b`, in nanoseconds.
+fn bucket_upper(b: usize) -> f64 {
+    let k = (b / 2) as i32;
+    if b % 2 == 0 {
+        2f64.powi(k) * SQRT_2
+    } else {
+        2f64.powi(k + 1)
+    }
+}
+
+/// One mergeable log-bucketed histogram (values in nanoseconds).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hist {
+    zero: u64,
+    total: u64,
+    buckets: [u64; BUCKETS],
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist {
+            zero: 0,
+            total: 0,
+            buckets: [0u64; BUCKETS],
+        }
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one value (nanoseconds).
+    pub fn record(&mut self, v: u64) {
+        if v == 0 {
+            self.zero += 1;
+        } else {
+            self.buckets[bucket_index(v)] += 1;
+        }
+        self.total += 1;
+    }
+
+    /// Record one duration in seconds (saturating conversion).
+    pub fn record_secs(&mut self, secs: f64) {
+        self.record(secs_to_nanos(secs));
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Element-wise merge; order of merges never changes the result.
+    pub fn merge(&mut self, other: &Hist) {
+        self.zero += other.zero;
+        self.total += other.total;
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Quantile `q ∈ [0,1]` in nanoseconds (bucket upper bound), or
+    /// `None` when the histogram is empty. `q = 0` returns the bucket
+    /// of the smallest sample, `q = 1` of the largest.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.total == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((self.total as f64 * q).ceil() as u64).clamp(1, self.total);
+        let mut cum = self.zero;
+        if target <= cum {
+            return Some(0.0);
+        }
+        for (b, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if target <= cum {
+                return Some(bucket_upper(b));
+            }
+        }
+        Some(bucket_upper(BUCKETS - 1))
+    }
+
+    /// Quantile in microseconds (the reporting unit).
+    pub fn quantile_us(&self, q: f64) -> Option<f64> {
+        self.quantile(q).map(|ns| ns / 1e3)
+    }
+}
+
+/// Named histograms (per phase or per task kind), kept sorted by name so
+/// every rendering of the collection is deterministic regardless of the
+/// order phases were first observed in.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PhaseHists {
+    entries: Vec<(String, Hist)>,
+}
+
+impl PhaseHists {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn hist_mut(&mut self, name: &str) -> &mut Hist {
+        match self.entries.binary_search_by(|(n, _)| n.as_str().cmp(name)) {
+            Ok(i) => &mut self.entries[i].1,
+            Err(i) => {
+                self.entries.insert(i, (name.to_string(), Hist::new()));
+                &mut self.entries[i].1
+            }
+        }
+    }
+
+    /// Record one sample (nanoseconds) under `name`.
+    pub fn record(&mut self, name: &str, nanos: u64) {
+        self.hist_mut(name).record(nanos);
+    }
+
+    /// Record one duration in seconds under `name`.
+    pub fn record_secs(&mut self, name: &str, secs: f64) {
+        self.hist_mut(name).record_secs(secs);
+    }
+
+    /// Merge another collection in; any merge order yields the same state.
+    pub fn merge(&mut self, other: &PhaseHists) {
+        for (name, h) in &other.entries {
+            self.hist_mut(name).merge(h);
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Hist> {
+        self.entries
+            .binary_search_by(|(n, _)| n.as_str().cmp(name))
+            .ok()
+            .map(|i| &self.entries[i].1)
+    }
+
+    /// Sorted `(name, hist)` pairs.
+    pub fn entries(&self) -> &[(String, Hist)] {
+        &self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_sqrt2_spaced() {
+        // v = 1 lands in bucket 0; v = 2 in bucket 2 (one power up).
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 3); // 3 ≥ 2^1.5 ≈ 2.83
+        let mut prev = 0;
+        for shift in 0..63 {
+            let v = 1u64 << shift;
+            let b = bucket_index(v);
+            assert!(b >= prev, "bucket index must be monotone");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn bucket_upper_bounds_contain_their_values() {
+        for v in [1u64, 2, 3, 7, 1000, 123_456, u64::MAX / 2] {
+            let b = bucket_index(v);
+            assert!(
+                bucket_upper(b) >= v as f64 * 0.999_999,
+                "v={v} above its bucket upper bound {}",
+                bucket_upper(b)
+            );
+            if b > 0 {
+                assert!(
+                    bucket_upper(b - 1) < v as f64 * SQRT_2,
+                    "v={v} far below its bucket"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_track_the_data() {
+        let mut h = Hist::new();
+        for v in 1..=1000u64 {
+            h.record(v * 1000); // 1µs .. 1ms
+        }
+        let p50 = h.quantile(0.5).unwrap();
+        let p99 = h.quantile(0.99).unwrap();
+        // bucket resolution is √2: the estimate is within ~41% above truth
+        assert!(p50 >= 500_000.0 && p50 <= 500_000.0 * SQRT_2 * 1.01);
+        assert!(p99 >= 990_000.0 && p99 <= 990_000.0 * SQRT_2 * 1.01);
+        assert!(h.quantile(0.0).unwrap() <= h.quantile(1.0).unwrap());
+    }
+
+    #[test]
+    fn empty_histogram_has_no_quantiles() {
+        let h = Hist::new();
+        assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.quantile_us(0.99), None);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn zero_values_are_exact() {
+        let mut h = Hist::new();
+        h.record(0);
+        h.record(0);
+        h.record(10);
+        assert_eq!(h.quantile(0.1), Some(0.0));
+        assert_eq!(h.count(), 3);
+    }
+
+    #[test]
+    fn merge_is_order_independent() {
+        let vals: Vec<u64> = (0..500).map(|i| (i * 7919 + 13) % 100_000).collect();
+        let mut whole = Hist::new();
+        for &v in &vals {
+            whole.record(v);
+        }
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        let mut c = Hist::new();
+        for (i, &v) in vals.iter().enumerate() {
+            [&mut a, &mut b, &mut c][i % 3].record(v);
+        }
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut c_b_a = c.clone();
+        c_b_a.merge(&b);
+        c_b_a.merge(&a);
+        assert_eq!(ab_c, c_b_a);
+        assert_eq!(ab_c, whole);
+    }
+
+    #[test]
+    fn secs_to_nanos_saturates() {
+        assert_eq!(secs_to_nanos(f64::NAN), 0);
+        assert_eq!(secs_to_nanos(-1.0), 0);
+        assert_eq!(secs_to_nanos(f64::INFINITY), u64::MAX);
+        assert_eq!(secs_to_nanos(1e30), u64::MAX);
+        assert_eq!(secs_to_nanos(1.5), 1_500_000_000);
+    }
+
+    #[test]
+    fn phase_hists_sorted_and_mergeable() {
+        let mut p = PhaseHists::new();
+        p.record("zeta", 10);
+        p.record("alpha", 20);
+        p.record("zeta", 30);
+        let names: Vec<&str> = p.entries().iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["alpha", "zeta"]);
+        assert_eq!(p.get("zeta").unwrap().count(), 2);
+        let mut q = PhaseHists::new();
+        q.record("alpha", 40);
+        q.record("mid", 50);
+        p.merge(&q);
+        let names: Vec<&str> = p.entries().iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["alpha", "mid", "zeta"]);
+        assert_eq!(p.get("alpha").unwrap().count(), 2);
+    }
+}

@@ -1,0 +1,298 @@
+//! The run ledger: one JSONL file per run (`--ledger-out`).
+//!
+//! Each line is one self-contained JSON object with a `"record"`
+//! discriminator, written in a fixed deterministic order:
+//!
+//! 1. `"provenance"` — resolved config: mode, solver, kernel backend,
+//!    resolved fold strategy + its source, thread/task counts, grid
+//!    shape, seed, the full trust/recovery knob set, and the headline
+//!    result (λ*, score, wall).
+//! 2. `"degradation"` — one line per recovery-ladder climb, in the
+//!    deterministic report order.
+//! 3. `"certification"` — the ALOOCV-vs-LOO verdict, when `--certify`
+//!    ran.
+//! 4. `"phase"` — one line per `PhaseTimer` phase: invocation count,
+//!    total seconds, and p50/p90/p99 µs from the latency histograms.
+//! 5. `"task_kind"` — one line per event kind with its span quantiles.
+//! 6. `"summary"` — event totals and the ring-drop counter.
+//!
+//! The file is written via temp + atomic rename like every other
+//! artifact, so readers never observe a torn ledger. Non-finite floats
+//! (e.g. an `inf` trust budget) serialize as `null` to keep every line
+//! standard JSON — `ci.sh --obs` parses the ledger line-by-line with
+//! `python3 -m json.tool` semantics.
+
+use crate::cv::aloocv::Certification;
+use crate::cv::recovery::{Degradation, RecoveryPolicy};
+use crate::obs::hist::Hist;
+use crate::obs::ObsReport;
+use crate::util::PhaseTimer;
+
+/// Everything one ledger needs, borrowed from the finished report.
+pub struct LedgerRun<'a> {
+    /// `"kfold"`, `"loo"`, or `"aloocv"`.
+    pub mode: &'a str,
+    /// Solver name as given on the CLI (k-fold only; `"chol"` for the
+    /// LOO/ALOOCV tiers, which are factor-level by construction).
+    pub solver: &'a str,
+    pub kernel_backend: &'a str,
+    pub fold_strategy: &'a str,
+    pub strategy_source: &'a str,
+    pub threads: usize,
+    pub tasks: usize,
+    pub k_folds: usize,
+    pub q_grid: usize,
+    pub g_samples: usize,
+    pub seed: u64,
+    pub policy: &'a RecoveryPolicy,
+    pub best_lambda: f64,
+    pub best_error: f64,
+    pub wall_secs: f64,
+    pub degradations: &'a [Degradation],
+    pub certification: Option<&'a Certification>,
+    pub timer: &'a PhaseTimer,
+    pub obs: &'a ObsReport,
+}
+
+/// JSON string escaping for free-form detail text.
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Finite floats as JSON numbers; NaN/±inf as `null` (JSON has no
+/// non-finite literals).
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Optional µs quantile: `null` for an empty histogram.
+fn jq(h: &Hist, q: f64) -> String {
+    match h.quantile_us(q) {
+        Some(us) => format!("{us:.3}"),
+        None => "null".to_string(),
+    }
+}
+
+/// Render the full ledger as JSONL (exposed for tests; `write_ledger`
+/// is the file-writing entry point).
+pub fn render_ledger(run: &LedgerRun) -> String {
+    let mut s = String::new();
+
+    // 1. provenance
+    s.push_str(&format!(
+        "{{\"record\":\"provenance\",\"mode\":\"{}\",\"solver\":\"{}\",\
+         \"kernel_backend\":\"{}\",\"fold_strategy\":\"{}\",\
+         \"strategy_source\":\"{}\",\"threads\":{},\"tasks\":{},\
+         \"k_folds\":{},\"q_grid\":{},\"g_samples\":{},\"seed\":{},\
+         \"trust\":{{\"max_relative_drift\":{},\"max_hops\":{},\
+         \"max_shift_retries\":{},\"shift_growth\":{},\"task_retries\":{}}},\
+         \"best_lambda\":{},\"best_error\":{},\"wall_secs\":{}}}\n",
+        escape_json(run.mode),
+        escape_json(run.solver),
+        escape_json(run.kernel_backend),
+        escape_json(run.fold_strategy),
+        escape_json(run.strategy_source),
+        run.threads,
+        run.tasks,
+        run.k_folds,
+        run.q_grid,
+        run.g_samples,
+        run.seed,
+        jf(run.policy.budget.max_relative_drift),
+        run.policy.budget.max_hops,
+        run.policy.max_shift_retries,
+        jf(run.policy.shift_growth),
+        run.policy.task_retries,
+        jf(run.best_lambda),
+        jf(run.best_error),
+        jf(run.wall_secs),
+    ));
+
+    // 2. degradations, in report (deterministic) order
+    for d in run.degradations {
+        s.push_str(&format!(
+            "{{\"record\":\"degradation\",\"surface\":\"{}\",\"fold\":{},\
+             \"lambda\":{},\"cause\":\"{}\",\"rung\":\"{}\",\"trust\":{},\
+             \"detail\":\"{}\"}}\n",
+            escape_json(d.surface),
+            d.fold,
+            jf(d.lambda),
+            escape_json(d.cause),
+            d.rung.name(),
+            jf(d.trust),
+            escape_json(&d.detail),
+        ));
+    }
+
+    // 3. certification verdict
+    if let Some(c) = run.certification {
+        s.push_str(&format!(
+            "{{\"record\":\"certification\",\"aloo_lambda\":{},\
+             \"loo_lambda\":{},\"decades\":{},\"certified\":{}}}\n",
+            jf(c.aloo_lambda),
+            jf(c.loo_lambda),
+            jf(c.decades),
+            c.certified,
+        ));
+    }
+
+    // 4. per-phase latency summaries: counts/totals from the timer,
+    // quantiles from the histograms (sorted phase-name order)
+    let mut phases: Vec<&str> = run.timer.entries().iter().map(|(n, _)| n.as_str()).collect();
+    phases.sort_unstable();
+    for name in phases {
+        let total: f64 = run
+            .timer
+            .entries()
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, secs)| *secs)
+            .unwrap_or(0.0);
+        let empty = Hist::new();
+        let h = run.obs.phase_hists.get(name).unwrap_or(&empty);
+        s.push_str(&format!(
+            "{{\"record\":\"phase\",\"name\":\"{}\",\"count\":{},\
+             \"total_secs\":{},\"p50_us\":{},\"p90_us\":{},\"p99_us\":{}}}\n",
+            escape_json(name),
+            run.timer.count(name),
+            jf(total),
+            jq(h, 0.50),
+            jq(h, 0.90),
+            jq(h, 0.99),
+        ));
+    }
+
+    // 5. per-task-kind span summaries
+    for (name, h) in run.obs.kind_hists.entries() {
+        s.push_str(&format!(
+            "{{\"record\":\"task_kind\",\"name\":\"{}\",\"count\":{},\
+             \"p50_us\":{},\"p90_us\":{},\"p99_us\":{}}}\n",
+            escape_json(name),
+            h.count(),
+            jq(h, 0.50),
+            jq(h, 0.90),
+            jq(h, 0.99),
+        ));
+    }
+
+    // 6. totals
+    s.push_str(&format!(
+        "{{\"record\":\"summary\",\"events\":{},\"dropped\":{}}}\n",
+        run.obs.events.len(),
+        run.obs.dropped,
+    ));
+    s
+}
+
+/// Write the ledger to `path` (temp file + atomic rename).
+pub fn write_ledger(path: &str, run: &LedgerRun) -> crate::Result<()> {
+    super::write_atomic(path, &render_ledger(run))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::recovery::Rung;
+    use crate::obs::trace::{Event, Outcome};
+
+    fn sample_run<'a>(
+        policy: &'a RecoveryPolicy,
+        degs: &'a [Degradation],
+        timer: &'a PhaseTimer,
+        obs: &'a ObsReport,
+    ) -> LedgerRun<'a> {
+        LedgerRun {
+            mode: "kfold",
+            solver: "chol",
+            kernel_backend: "scalar",
+            fold_strategy: "downdate",
+            strategy_source: "default",
+            threads: 2,
+            tasks: 7,
+            k_folds: 3,
+            q_grid: 8,
+            g_samples: 4,
+            seed: 42,
+            policy,
+            best_lambda: 0.1,
+            best_error: 0.5,
+            wall_secs: 0.01,
+            degradations: degs,
+            certification: None,
+            timer,
+            obs,
+        }
+    }
+
+    #[test]
+    fn every_line_is_json_and_required_records_present() {
+        let policy = RecoveryPolicy::default();
+        let degs = vec![Degradation {
+            surface: "grid",
+            fold: 1,
+            lambda: 0.5,
+            cause: "breakdown",
+            rung: Rung::ShiftedRefactor,
+            trust: 0.0,
+            detail: "pivot −1e-3 at \"row\" 7\nretry".to_string(),
+        }];
+        let mut timer = PhaseTimer::default();
+        timer.time("factor", || std::hint::black_box(1 + 1));
+        let mut obs = ObsReport::default();
+        obs.phase_hists.record("factor", 1500);
+        obs.kind_hists.record("grid", 2500);
+        obs.events.push(Event {
+            kind: "grid",
+            outcome: Outcome::Degraded,
+            ..Event::default()
+        });
+        let s = render_ledger(&sample_run(&policy, &degs, &timer, &obs));
+
+        for line in s.lines() {
+            assert!(line.starts_with('{') && line.ends_with('}'), "line: {line}");
+            // no raw control characters or invalid JSON literals survive
+            assert!(!line.contains('\t'));
+            assert!(!line.contains("inf") || line.contains("null"), "line: {line}");
+        }
+        assert!(s.contains("\"record\":\"provenance\""));
+        assert!(s.contains("\"strategy_source\":\"default\""));
+        assert!(s.contains("\"record\":\"degradation\""));
+        assert!(s.contains("\\\"row\\\" 7\\nretry"));
+        assert!(s.contains("\"record\":\"phase\""));
+        assert!(s.contains("\"p99_us\""));
+        assert!(s.contains("\"record\":\"task_kind\""));
+        assert!(s.contains("\"record\":\"summary\""));
+    }
+
+    #[test]
+    fn non_finite_trust_budget_serializes_as_null() {
+        let mut policy = RecoveryPolicy::default();
+        policy.budget.max_relative_drift = f64::INFINITY;
+        let timer = PhaseTimer::default();
+        let obs = ObsReport::default();
+        let s = render_ledger(&sample_run(&policy, &[], &timer, &obs));
+        assert!(s.contains("\"max_relative_drift\":null"));
+    }
+
+    #[test]
+    fn escape_json_handles_specials() {
+        assert_eq!(escape_json("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape_json("\u{1}"), "\\u0001");
+    }
+}

@@ -1,0 +1,88 @@
+//! Deterministic observability: structured task tracing, log-bucketed
+//! latency histograms, and a machine-readable run ledger.
+//!
+//! Everything here is **off by default and free when off**: the engine
+//! arms a [`trace::RunObs`] (pre-sized per-worker event rings) only when
+//! the run's config asks for observation, and every hot-path call site
+//! carries an `Option` that short-circuits to nothing when disarmed —
+//! zero allocation, zero atomics, zero branches beyond the `None` check.
+//! When armed, observation is *deterministic in content*: task ids are
+//! allocated in construction order on the coordinating thread, the
+//! merged event log is sorted by `(task_id, attempt)`, and histograms
+//! merge commutatively — so the observable record (minus wall-clock
+//! payload) is bit-identical at any worker count, exactly like the
+//! numeric results it describes. `tests/obs.rs` pins both halves of the
+//! contract: obs-on runs are bitwise identical to obs-off runs, and the
+//! event-log content is worker-count invariant.
+//!
+//! - [`trace`]: per-worker lock-free event rings, the `(task_id,
+//!   attempt)` merge, and the Chrome trace-event exporter (`--trace-out`,
+//!   viewable in `chrome://tracing` / Perfetto).
+//! - [`hist`]: HDR-style powers-of-√2 latency histograms, exact-count
+//!   and mergeable in any order; p50/p90/p99 per phase and per task kind.
+//! - [`ledger`]: one JSONL file per run (`--ledger-out`) capturing config
+//!   provenance, every degradation, certification verdicts, and the
+//!   histogram summaries.
+
+pub mod hist;
+pub mod ledger;
+pub mod trace;
+
+pub use hist::{Hist, PhaseHists};
+pub use trace::{Event, Outcome, RunObs};
+
+use std::sync::Arc;
+
+/// Write `contents` to `path` via temp file + atomic rename, so a reader
+/// racing the writer never observes a truncated file and a crashed run
+/// never leaves one behind (same discipline as the bench harness).
+pub(crate) fn write_atomic(path: &str, contents: &str) -> crate::Result<()> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, contents)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// The per-run observation record carried on every report when the run
+/// was armed: the merged event log plus latency histograms per phase
+/// (from the instrumented `PhaseTimer`s) and per task kind (derived from
+/// event spans at collect time).
+#[derive(Clone, Debug, Default)]
+pub struct ObsReport {
+    /// Merged event log in ascending `(task_id, attempt)` order.
+    pub events: Vec<Event>,
+    /// Events lost to ring overflow (0 in any correctly-sized run).
+    pub dropped: u64,
+    /// Latency histograms keyed by `PhaseTimer` phase name.
+    pub phase_hists: PhaseHists,
+    /// Latency histograms keyed by event kind.
+    pub kind_hists: PhaseHists,
+}
+
+impl ObsReport {
+    /// Drain `obs` (after all waves quiesced) and pair the merged event
+    /// log with the phase histograms harvested from the run's timers.
+    pub fn from_run(obs: &Arc<RunObs>, phase_hists: PhaseHists) -> ObsReport {
+        let (events, dropped) = obs.collect();
+        let mut kind_hists = PhaseHists::new();
+        for e in &events {
+            kind_hists.record(e.kind, e.stop_us.saturating_sub(e.start_us) * 1000);
+        }
+        ObsReport {
+            events,
+            dropped,
+            phase_hists,
+            kind_hists,
+        }
+    }
+
+    /// The deterministic content of the event log: everything except the
+    /// wall-clock/worker payload. Identical at any worker count — the
+    /// acceptance tuple of `tests/obs.rs` and the `ci.sh --obs` gate.
+    pub fn content_tuples(&self) -> Vec<(u32, u32, &'static str, &'static str)> {
+        self.events
+            .iter()
+            .map(|e| (e.task_id, e.attempt, e.kind, e.outcome.name()))
+            .collect()
+    }
+}

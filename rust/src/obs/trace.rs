@@ -1,0 +1,323 @@
+//! Per-worker lock-free event rings and the post-run deterministic merge.
+//!
+//! Every observed span (one pool task, one coordinator stage) becomes one
+//! fixed-size [`Event`]. While a run is armed, each pool worker writes
+//! its events into its own single-producer ring (plus one ring for the
+//! coordinating thread), so the hot path takes no lock and performs no
+//! allocation: rings are pre-sized at arm time from the sweep plan's
+//! shape. After the run quiesces, [`RunObs::collect`] drains every ring
+//! on the coordinating thread and sorts by `(task_id, attempt)`.
+//!
+//! **Ordering contract.** `task_id`s are allocated on the coordinating
+//! thread at job-construction time, in the engine's deterministic
+//! construction order — so the merged sequence of
+//! `(task_id, attempt, kind, outcome)` tuples is bit-identical at any
+//! worker count. Wall-clock fields (`start_us`, `stop_us`) and the
+//! `worker` id are *payload*: they vary run to run and worker count to
+//! worker count; the ordering and content of everything else is the
+//! contract, pinned by `tests/obs.rs`.
+//!
+//! Ring overflow never blocks and never reorders: an over-capacity push
+//! is counted in `dropped` and surfaced in the report (the engine sizes
+//! rings so this does not happen in practice).
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::pool::worker_index;
+use crate::cv::recovery::Rung;
+
+/// How an observed span ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Completed without touching the recovery ladder.
+    Ok,
+    /// Completed, but one or more cells climbed a recovery rung.
+    Degraded,
+    /// The task was quarantined after exhausting its retry budget.
+    Quarantined,
+}
+
+impl Outcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Outcome::Ok => "ok",
+            Outcome::Degraded => "degraded",
+            Outcome::Quarantined => "quarantined",
+        }
+    }
+}
+
+impl Default for Outcome {
+    fn default() -> Self {
+        Outcome::Ok
+    }
+}
+
+/// One observed span. `Copy` and fixed-size so ring slots never allocate.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Deterministic id, allocated at job-construction time on the
+    /// coordinating thread — the primary sort key of the merged log.
+    pub task_id: u32,
+    /// 0-based attempt (retried tasks re-run with the next attempt).
+    pub attempt: u32,
+    /// Task kind: `"gram"`, `"prep"`, `"factor"`, `"chol"`,
+    /// `"fold_downdate"`, `"grid"`, `"fold_sweep"`, `"loo_batch"`,
+    /// `"aloo_batch"`, `"solve"`, `"fit"`, `"interp"`.
+    pub kind: &'static str,
+    /// Which wave/context scheduled it (`"gram"`, `"fold"`, `"anchor"`,
+    /// `"exact"`, `"anchored"`, `"interp"`, `"loo"`, `"aloocv"`,
+    /// `"curve"`, `"task"`).
+    pub surface: &'static str,
+    /// Fold index, or the batch start row for LOO/ALOOCV batches; −1
+    /// when not fold-addressed.
+    pub fold: i64,
+    /// λ/anchor/grid-cell index; −1 when not λ-addressed.
+    pub lambda_index: i64,
+    /// Ring index the event was written from (payload, not contract).
+    pub worker: u32,
+    /// Span start, µs since the run epoch (payload, not contract).
+    pub start_us: u64,
+    /// Span end, µs since the run epoch (payload, not contract).
+    pub stop_us: u64,
+    pub outcome: Outcome,
+    /// Highest recovery rung climbed inside the span, if any.
+    pub rung: Option<Rung>,
+    /// Number of degradations recorded inside the span.
+    pub degradations: u32,
+}
+
+impl Default for Event {
+    fn default() -> Self {
+        Event {
+            task_id: 0,
+            attempt: 0,
+            kind: "",
+            surface: "",
+            fold: -1,
+            lambda_index: -1,
+            worker: 0,
+            start_us: 0,
+            stop_us: 0,
+            outcome: Outcome::Ok,
+            rung: None,
+            degradations: 0,
+        }
+    }
+}
+
+/// Single-producer event ring: one owner thread pushes, the coordinating
+/// thread drains strictly after the run quiesces (pool waves are joined
+/// before `collect` runs, so the Release/Acquire pair on `len` is the
+/// only synchronization needed).
+pub struct EventRing {
+    slots: Vec<UnsafeCell<Event>>,
+    len: AtomicUsize,
+    dropped: AtomicUsize,
+}
+
+// SAFETY: slot `i` is written exactly once, by the single producing
+// thread, strictly before `len` is stored (Release) with a value > i;
+// readers only touch slots below the Acquire-loaded `len` and only
+// after the producer has quiesced (the pool wave has joined).
+unsafe impl Send for EventRing {}
+unsafe impl Sync for EventRing {}
+
+impl EventRing {
+    pub fn with_capacity(cap: usize) -> EventRing {
+        let mut slots = Vec::with_capacity(cap);
+        for _ in 0..cap {
+            slots.push(UnsafeCell::new(Event::default()));
+        }
+        EventRing {
+            slots,
+            len: AtomicUsize::new(0),
+            dropped: AtomicUsize::new(0),
+        }
+    }
+
+    /// Push from the single producing thread. Never blocks; counts a
+    /// drop when the ring is full.
+    pub fn push(&self, ev: Event) {
+        let i = self.len.load(Ordering::Relaxed);
+        if i >= self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        unsafe {
+            *self.slots[i].get() = ev;
+        }
+        self.len.store(i + 1, Ordering::Release);
+    }
+
+    fn drain_into(&self, out: &mut Vec<Event>) {
+        let n = self.len.load(Ordering::Acquire);
+        for slot in &self.slots[..n] {
+            out.push(unsafe { *slot.get() });
+        }
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed) as u64
+    }
+}
+
+/// Per-run observation state: one ring per pool worker plus one for the
+/// coordinating thread (the last ring). Armed by the engine only when
+/// the run requests observability; when disarmed the hot path carries a
+/// `None` and does nothing.
+pub struct RunObs {
+    rings: Vec<Arc<EventRing>>,
+    epoch: Instant,
+    next_id: AtomicU32,
+}
+
+impl RunObs {
+    /// `workers` pool worker rings + one coordinator ring, each holding
+    /// up to `capacity` events.
+    pub fn new(workers: usize, capacity: usize) -> Arc<RunObs> {
+        let rings = (0..workers + 1)
+            .map(|_| Arc::new(EventRing::with_capacity(capacity)))
+            .collect();
+        Arc::new(RunObs {
+            rings,
+            epoch: Instant::now(),
+            next_id: AtomicU32::new(0),
+        })
+    }
+
+    /// Allocate the next task id. Called on the coordinating thread at
+    /// job-construction time so ids follow deterministic construction
+    /// order, independent of scheduling.
+    pub fn alloc_id(&self) -> u32 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Microseconds since the run epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record `ev` into the calling thread's ring, stamping the ring
+    /// index into `ev.worker`. Pool workers resolve their own ring via
+    /// thread-local index; any other thread (the coordinator) uses the
+    /// last ring.
+    pub fn record(&self, mut ev: Event) {
+        let last = self.rings.len() - 1;
+        let i = worker_index().unwrap_or(last).min(last);
+        ev.worker = i as u32;
+        self.rings[i].push(ev);
+    }
+
+    /// Drain every ring and sort by `(task_id, attempt)` — the
+    /// deterministic merge. Returns the events and the total number of
+    /// dropped (over-capacity) events. Call only after all waves have
+    /// quiesced.
+    pub fn collect(&self) -> (Vec<Event>, u64) {
+        let mut out = Vec::new();
+        for r in &self.rings {
+            r.drain_into(&mut out);
+        }
+        out.sort_by_key(|e| (e.task_id, e.attempt));
+        let dropped = self.rings.iter().map(|r| r.dropped()).sum();
+        (out, dropped)
+    }
+}
+
+/// Export the merged event log as a Chrome trace-event JSON array
+/// (load in `chrome://tracing` or <https://ui.perfetto.dev>): one
+/// complete (`"ph":"X"`) event per span, `tid` = ring index so each
+/// worker gets its own track.
+pub fn write_chrome_trace(path: &str, events: &[Event]) -> crate::Result<()> {
+    let mut s = String::with_capacity(events.len() * 160 + 16);
+    s.push_str("[\n");
+    for (i, e) in events.iter().enumerate() {
+        let dur = e.stop_us.saturating_sub(e.start_us).max(1);
+        s.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+             \"pid\":1,\"tid\":{},\"args\":{{\"task_id\":{},\"attempt\":{},\
+             \"outcome\":\"{}\",\"rung\":\"{}\",\"fold\":{},\"lambda_index\":{}}}}}{}\n",
+            e.kind,
+            e.surface,
+            e.start_us,
+            dur,
+            e.worker,
+            e.task_id,
+            e.attempt,
+            e.outcome.name(),
+            e.rung.map(|r| r.name()).unwrap_or("none"),
+            e.fold,
+            e.lambda_index,
+            if i + 1 < events.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    super::write_atomic(path, &s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(task_id: u32, attempt: u32) -> Event {
+        Event {
+            task_id,
+            attempt,
+            kind: "grid",
+            surface: "interp",
+            ..Event::default()
+        }
+    }
+
+    #[test]
+    fn collect_sorts_by_task_id_then_attempt() {
+        let obs = RunObs::new(2, 16);
+        // out-of-order pushes from the "coordinator" ring
+        obs.record(ev(3, 0));
+        obs.record(ev(1, 1));
+        obs.record(ev(1, 0));
+        obs.record(ev(0, 0));
+        let (events, dropped) = obs.collect();
+        let ids: Vec<(u32, u32)> = events.iter().map(|e| (e.task_id, e.attempt)).collect();
+        assert_eq!(ids, [(0, 0), (1, 0), (1, 1), (3, 0)]);
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn overflow_drops_and_counts_without_blocking() {
+        let ring = EventRing::with_capacity(2);
+        ring.push(ev(0, 0));
+        ring.push(ev(1, 0));
+        ring.push(ev(2, 0));
+        let mut out = Vec::new();
+        ring.drain_into(&mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(ring.dropped(), 1);
+    }
+
+    #[test]
+    fn alloc_id_is_sequential() {
+        let obs = RunObs::new(1, 4);
+        assert_eq!(obs.alloc_id(), 0);
+        assert_eq!(obs.alloc_id(), 1);
+        assert_eq!(obs.alloc_id(), 2);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_shape() {
+        let dir = std::env::temp_dir().join("pichol_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        let events = vec![ev(0, 0), ev(1, 0)];
+        write_chrome_trace(path.to_str().unwrap(), &events).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.starts_with("[\n"));
+        assert!(s.trim_end().ends_with(']'));
+        assert_eq!(s.matches("\"ph\":\"X\"").count(), 2);
+        assert_eq!(s.matches("},").count(), 1); // one separator for two events
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,5 +1,6 @@
 //! Small shared utilities: wall-clock timing, formatting, log-spaced grids.
 
+use crate::obs::hist::PhaseHists;
 use std::time::Instant;
 
 /// Measure the wall-clock seconds of a closure, returning (result, secs).
@@ -18,11 +19,25 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
 pub struct PhaseTimer {
     entries: Vec<(String, f64)>,
     counts: Vec<(String, u64)>,
+    /// Optional latency-histogram sink: `None` (the default) keeps the
+    /// timer's behavior and cost exactly as before observability existed;
+    /// [`PhaseTimer::with_hists`] arms it so every individual sample also
+    /// lands in a per-phase log-bucketed histogram.
+    hists: Option<Box<PhaseHists>>,
 }
 
 impl PhaseTimer {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A timer that additionally records every sample into per-phase
+    /// latency histograms (the observability layer's p50/p90/p99 source).
+    pub fn with_hists() -> Self {
+        PhaseTimer {
+            hists: Some(Box::default()),
+            ..Self::default()
+        }
     }
 
     /// Run `f`, accumulating its wall time under `phase`.
@@ -50,6 +65,9 @@ impl PhaseTimer {
     /// Add seconds to a phase directly (counts as one invocation).
     pub fn add(&mut self, phase: &str, secs: f64) {
         self.bump(phase, secs, 1);
+        if let Some(h) = self.hists.as_deref_mut() {
+            h.record_secs(phase, secs);
+        }
     }
 
     /// Seconds accumulated under `phase` (0 if never timed).
@@ -81,7 +99,10 @@ impl PhaseTimer {
     }
 
     /// Merge another timer into this one (seconds and invocation counts both
-    /// accumulate; merging never counts as a fresh invocation).
+    /// accumulate; merging never counts as a fresh invocation). Armed
+    /// histograms merge too — histogram merging is order-independent, so
+    /// the coordinator's deterministic merge order is not load-bearing
+    /// for the quantiles.
     pub fn merge(&mut self, other: &PhaseTimer) {
         for (name, secs) in &other.entries {
             self.bump(name, *secs, 0);
@@ -89,6 +110,39 @@ impl PhaseTimer {
         for (name, n) in &other.counts {
             self.bump(name, 0.0, *n);
         }
+        if let (Some(mine), Some(theirs)) = (self.hists.as_deref_mut(), other.hists.as_deref()) {
+            mine.merge(theirs);
+        }
+    }
+
+    /// Detach the accumulated per-phase histograms (empty when the timer
+    /// was never armed).
+    pub fn take_hists(&mut self) -> PhaseHists {
+        self.hists.take().map(|b| *b).unwrap_or_default()
+    }
+
+    /// Whether this timer records per-sample histograms.
+    pub fn hists_armed(&self) -> bool {
+        self.hists.is_some()
+    }
+
+    /// Render a sorted, fixed-format per-phase summary: one line per
+    /// phase in lexicographic order, names padded to the longest name,
+    /// seconds in a fixed-width column — diffable between runs, like
+    /// `Metrics::snapshot`.
+    pub fn render(&self) -> String {
+        let mut names: Vec<&String> = self.entries.iter().map(|(n, _)| n).collect();
+        names.sort();
+        let width = names.iter().map(|n| n.len()).max().unwrap_or(0);
+        let mut s = String::new();
+        for n in names {
+            s.push_str(&format!(
+                "phase   {n:<width$} = {:>13.4}s  n={}\n",
+                self.get(n),
+                self.count(n)
+            ));
+        }
+        s
     }
 }
 
@@ -183,6 +237,39 @@ mod tests {
         // merge sums invocation counts; it is not itself an invocation
         assert_eq!(u.count("vec"), 3);
         assert_eq!(u.count("fit"), 1);
+    }
+
+    #[test]
+    fn phase_timer_hists_record_and_merge() {
+        let mut t = PhaseTimer::with_hists();
+        assert!(t.hists_armed());
+        t.add("vec", 0.001);
+        t.add("vec", 0.002);
+        let mut u = PhaseTimer::with_hists();
+        u.add("vec", 0.004);
+        u.add("fit", 0.008);
+        t.merge(&u);
+        let h = t.take_hists();
+        assert_eq!(h.get("vec").unwrap().count(), 3);
+        assert_eq!(h.get("fit").unwrap().count(), 1);
+        // a disarmed timer records nothing and takes an empty collection
+        let mut plain = PhaseTimer::new();
+        plain.add("vec", 1.0);
+        assert!(!plain.hists_armed());
+        assert!(plain.take_hists().is_empty());
+    }
+
+    #[test]
+    fn phase_timer_render_is_sorted_and_fixed_format() {
+        let mut t = PhaseTimer::new();
+        t.add("solve", 1.25);
+        t.add("chol", 0.0625);
+        t.add("chol", 0.0625);
+        let expected = "\
+phase   chol  =        0.1250s  n=2
+phase   solve =        1.2500s  n=1
+";
+        assert_eq!(t.render(), expected);
     }
 
     #[test]

@@ -31,6 +31,7 @@ use picholesky::cv::solvers::SolverKind;
 use picholesky::cv::{run_cv, CvConfig, FoldStrategy};
 use picholesky::data::folds::kfold;
 use picholesky::linalg::trust::TrustBudget;
+use picholesky::obs::Outcome;
 use picholesky::testutil::conformance::{assert_close_rms, well_conditioned};
 use picholesky::testutil::faults;
 use std::sync::{Mutex, MutexGuard, OnceLock};
@@ -297,4 +298,60 @@ fn garbage_bench_file_degrades_auto_to_default() {
     );
     assert!(garbage.degradations.is_empty());
     assert!(absent.degradations.is_empty());
+}
+
+/// Observability under chaos: arming the event/histogram layer on a run
+/// carrying an injected Gram breakdown AND a quarantined panicking task
+/// changes no numeric output bitwise — the no-perturbation contract holds
+/// exactly where it matters most — and both faults are visible in the
+/// merged event log (degraded cells with their counts, the quarantine
+/// with its recorded attempt total).
+#[test]
+fn enabling_obs_perturbs_nothing_under_injected_faults() {
+    let _guard = global_lock();
+    let mut ds = well_conditioned(40, 8, 5);
+    faults::spike_row(&mut ds, 0);
+    let armed_task = 1usize;
+
+    let off = {
+        let _armed = faults::PanicInjection::arm(armed_task, u64::MAX);
+        run_cv(&ds, SolverKind::Chol, &cfg(2)).unwrap()
+    };
+    let on = {
+        let _armed = faults::PanicInjection::arm(armed_task, u64::MAX);
+        let on_cfg = CvConfig { obs: true, ..cfg(2) };
+        run_cv(&ds, SolverKind::Chol, &on_cfg).unwrap()
+    };
+
+    assert!(off.obs.is_none());
+    let obs = on.obs.as_ref().expect("armed run must carry a payload");
+    assert_eq!(off.mean_errors, on.mean_errors, "obs must not perturb curve bits");
+    assert_eq!(off.fold_bests, on.fold_bests);
+    assert_eq!(off.best_lambda, on.best_lambda);
+    assert_eq!(off.best_error, on.best_error);
+    let fmt = |r: &picholesky::cv::CvReport| {
+        r.degradations.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+    };
+    assert_eq!(fmt(&off), fmt(&on), "same degradation records either way");
+
+    // both faults surface in the event log: the quarantined task exactly
+    // once (panicking attempts record nothing — the coordinator synthesizes
+    // the terminal event from the recorded attempt total), and the spiked
+    // fold's rescued cells as degraded grid events
+    let quarantined: Vec<_> = obs
+        .events
+        .iter()
+        .filter(|e| e.outcome == Outcome::Quarantined)
+        .collect();
+    assert_eq!(quarantined.len(), 1, "exactly the armed task is quarantined");
+    assert_eq!(quarantined[0].kind, "grid");
+    assert!(
+        quarantined[0].attempt >= 2,
+        "the quarantine event carries the exhausted retry budget, got {}",
+        quarantined[0].attempt
+    );
+    assert!(
+        obs.events.iter().any(|e| e.outcome == Outcome::Degraded && e.degradations > 0),
+        "the spiked fold's ladder climbs must be visible in the log"
+    );
 }

@@ -1,0 +1,327 @@
+//! Observability acceptance suite (`ci.sh --obs`).
+//!
+//! The contract under test ([`picholesky::obs`]):
+//!
+//! - **No perturbation** — arming the event/histogram layer changes no
+//!   numeric output bitwise, for every CV tier (k-fold, exact LOO,
+//!   ALOOCV) at workers {1, 2, 4}.
+//! - **Deterministic content** — the merged event log's content tuples
+//!   `(task_id, attempt, kind, surface, fold, λ-index, outcome,
+//!   degradations)` are identical at every worker count. Wall times and
+//!   worker ids are payload, not contract: task ids are allocated on the
+//!   coordinating thread at job-construction time and the post-run merge
+//!   sorts by `(task_id, attempt)`.
+//! - **Mergeable histograms** — bucket contents and quantiles are
+//!   invariant under any partition of the samples across any number of
+//!   per-worker histograms and any merge order.
+//! - **Ledger** — the JSONL render carries resolved-config provenance,
+//!   one record per degradation, and p50/p90/p99 per phase and per task
+//!   kind.
+//!
+//! `ci.sh --obs` runs exactly this file, then exercises the CLI artifact
+//! paths (`--trace-out` / `--ledger-out`) end to end.
+
+use picholesky::cv::aloocv::run_aloocv;
+use picholesky::cv::loo::run_loo;
+use picholesky::cv::solvers::SolverKind;
+use picholesky::cv::{run_cv, CvConfig, FoldStrategy};
+use picholesky::obs::hist::Hist;
+use picholesky::obs::ledger::{render_ledger, LedgerRun};
+use picholesky::obs::ObsReport;
+use picholesky::testutil::conformance::well_conditioned;
+use picholesky::testutil::{faults, proptest_lite};
+
+/// Pinned execution shape: the default `sweep_batch` is derived from the
+/// thread count, so worker-count-invariance assertions must fix it.
+fn cfg(workers: usize, obs: bool) -> CvConfig {
+    CvConfig {
+        k_folds: 3,
+        q_grid: 10,
+        g_samples: 4,
+        lambda_range: Some((1e-2, 1.0)),
+        sweep_threads: workers,
+        sweep_batch: 4,
+        fold_strategy: FoldStrategy::Downdate,
+        obs,
+        ..CvConfig::default()
+    }
+}
+
+/// The full per-event content tuple — everything that is contract, nothing
+/// that is payload (no wall times, no worker ids).
+type Content = (u32, u32, &'static str, &'static str, i64, i64, &'static str, u32);
+
+fn content(o: &ObsReport) -> Vec<Content> {
+    o.events
+        .iter()
+        .map(|e| {
+            (
+                e.task_id,
+                e.attempt,
+                e.kind,
+                e.surface,
+                e.fold,
+                e.lambda_index,
+                e.outcome.name(),
+                e.degradations,
+            )
+        })
+        .collect()
+}
+
+fn assert_strictly_ordered(o: &ObsReport) {
+    for w in o.events.windows(2) {
+        assert!(
+            (w[0].task_id, w[0].attempt) < (w[1].task_id, w[1].attempt),
+            "merged log must be strictly ascending in (task_id, attempt): \
+             ({}, {}) then ({}, {})",
+            w[0].task_id,
+            w[0].attempt,
+            w[1].task_id,
+            w[1].attempt
+        );
+    }
+}
+
+/// Satellite: histogram merging is a commutative monoid action — any
+/// partition of the samples across {1, 2, 4} worker-local histograms,
+/// merged in any order, reproduces the monolithic histogram bit for bit
+/// (bucket counts are exact integers, so equality is exact).
+#[test]
+fn hist_merge_is_partition_and_order_invariant() {
+    proptest_lite::check("hist-merge", 40, |case| {
+        let count = case.dim(0, 300);
+        let samples: Vec<u64> = (0..count)
+            .map(|_| {
+                // span the full bucket range: magnitudes from 2⁰ to 2⁴⁰
+                let mag = case.dim(0, 40);
+                case.rng.below(1u64 << mag)
+            })
+            .collect();
+        let mut whole = Hist::new();
+        for &v in &samples {
+            whole.record(v);
+        }
+        for &w in &[1usize, 2, 4] {
+            let mut parts = vec![Hist::new(); w];
+            for &v in &samples {
+                let i = case.rng.below(w as u64) as usize;
+                parts[i].record(v);
+            }
+            let mut fwd = Hist::new();
+            for p in &parts {
+                fwd.merge(p);
+            }
+            let mut rev = Hist::new();
+            for p in parts.iter().rev() {
+                rev.merge(p);
+            }
+            assert_eq!(fwd, whole, "forward merge of {w} parts");
+            assert_eq!(rev, whole, "reverse merge of {w} parts");
+            for &q in &[0.5, 0.9, 0.99] {
+                assert_eq!(fwd.quantile(q), whole.quantile(q));
+                assert_eq!(rev.quantile(q), whole.quantile(q));
+            }
+        }
+    });
+}
+
+/// Satellite edge case: quantiles of an empty histogram are `None`, not a
+/// default bucket — and merging empties never fabricates samples.
+#[test]
+fn empty_histogram_quantiles_are_none() {
+    let h = Hist::new();
+    assert!(h.is_empty());
+    assert_eq!(h.count(), 0);
+    assert_eq!(h.quantile(0.5), None);
+    assert_eq!(h.quantile(0.99), None);
+    assert_eq!(h.quantile_us(0.5), None);
+    let mut m = Hist::new();
+    m.merge(&h);
+    assert!(m.is_empty(), "merging empties must stay empty");
+    assert_eq!(m.quantile(0.5), None);
+}
+
+/// Off by default: no flag, no payload — for every tier.
+#[test]
+fn obs_is_off_by_default() {
+    let ds = well_conditioned(40, 8, 5);
+    assert!(run_cv(&ds, SolverKind::Chol, &cfg(2, false)).unwrap().obs.is_none());
+    assert!(run_loo(&ds, &cfg(2, false)).unwrap().obs.is_none());
+    assert!(run_aloocv(&ds, &cfg(2, false)).unwrap().obs.is_none());
+}
+
+/// Acceptance (k-fold): arming obs changes nothing numeric, and the event
+/// content is identical at workers {1, 2, 4}.
+#[test]
+fn kfold_obs_never_perturbs_and_content_is_worker_invariant() {
+    let ds = well_conditioned(60, 9, 3);
+    let mut logs = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let off = run_cv(&ds, SolverKind::Chol, &cfg(workers, false)).unwrap();
+        let on = run_cv(&ds, SolverKind::Chol, &cfg(workers, true)).unwrap();
+        assert!(off.obs.is_none());
+        let obs = on.obs.as_ref().expect("armed run must carry a payload");
+        assert_eq!(off.mean_errors, on.mean_errors, "workers={workers}");
+        assert_eq!(off.fold_bests, on.fold_bests, "workers={workers}");
+        assert_eq!(off.best_lambda, on.best_lambda);
+        assert_eq!(off.best_error, on.best_error);
+        assert_eq!(obs.dropped, 0, "rings must be sized for the whole run");
+        assert!(!obs.events.is_empty());
+        assert_strictly_ordered(obs);
+        logs.push(content(obs));
+    }
+    assert_eq!(logs[0], logs[1], "event content must not depend on workers");
+    assert_eq!(logs[0], logs[2], "event content must not depend on workers");
+}
+
+/// Acceptance (exact LOO): same no-perturbation + invariance contract.
+#[test]
+fn loo_obs_never_perturbs_and_content_is_worker_invariant() {
+    let ds = well_conditioned(50, 8, 7);
+    let mut logs = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let off = run_loo(&ds, &cfg(workers, false)).unwrap();
+        let on = run_loo(&ds, &cfg(workers, true)).unwrap();
+        assert!(off.obs.is_none());
+        let obs = on.obs.as_ref().expect("armed run must carry a payload");
+        assert_eq!(off.curve, on.curve, "workers={workers}");
+        assert_eq!(off.anchor_rmse, on.anchor_rmse, "workers={workers}");
+        assert_eq!(off.best_lambda, on.best_lambda);
+        assert_eq!(off.best_error, on.best_error);
+        assert_eq!(obs.dropped, 0);
+        assert_strictly_ordered(obs);
+        logs.push(content(obs));
+    }
+    assert_eq!(logs[0], logs[1]);
+    assert_eq!(logs[0], logs[2]);
+}
+
+/// Acceptance (ALOOCV): same no-perturbation + invariance contract.
+#[test]
+fn aloocv_obs_never_perturbs_and_content_is_worker_invariant() {
+    let ds = well_conditioned(50, 8, 7);
+    let mut logs = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let off = run_aloocv(&ds, &cfg(workers, false)).unwrap();
+        let on = run_aloocv(&ds, &cfg(workers, true)).unwrap();
+        assert!(off.obs.is_none());
+        let obs = on.obs.as_ref().expect("armed run must carry a payload");
+        assert_eq!(off.curve, on.curve, "workers={workers}");
+        assert_eq!(off.anchor_rmse, on.anchor_rmse, "workers={workers}");
+        assert_eq!(off.best_lambda, on.best_lambda);
+        assert_eq!(off.best_error, on.best_error);
+        assert_eq!(obs.dropped, 0);
+        assert_strictly_ordered(obs);
+        logs.push(content(obs));
+    }
+    assert_eq!(logs[0], logs[1]);
+    assert_eq!(logs[0], logs[2]);
+}
+
+/// The armed run feeds the per-phase histograms: every phase the timer
+/// accumulated has a histogram with the same invocation count, and the
+/// per-kind histograms cover every event.
+#[test]
+fn armed_run_populates_phase_and_kind_histograms() {
+    let ds = well_conditioned(60, 9, 3);
+    let rep = run_cv(&ds, SolverKind::Chol, &cfg(2, true)).unwrap();
+    let obs = rep.obs.as_ref().unwrap();
+    assert!(!obs.phase_hists.is_empty());
+    for (name, _) in rep.timer.entries() {
+        let h = obs
+            .phase_hists
+            .get(name)
+            .unwrap_or_else(|| panic!("phase '{name}' missing a histogram"));
+        assert_eq!(
+            h.count(),
+            rep.timer.count(name),
+            "phase '{name}': histogram samples must equal timer invocations"
+        );
+    }
+    let kind_total: u64 = obs.kind_hists.entries().iter().map(|(_, h)| h.count()).sum();
+    assert_eq!(
+        kind_total,
+        obs.events.len() as u64,
+        "every event lands in exactly one per-kind histogram"
+    );
+}
+
+/// Ledger acceptance: a degraded run renders resolved-config provenance,
+/// one record per degradation, and per-phase/per-kind quantiles — every
+/// line a JSON object.
+#[test]
+fn ledger_records_provenance_degradations_and_quantiles() {
+    let mut ds = well_conditioned(40, 8, 5);
+    faults::spike_row(&mut ds, 0);
+    let c = cfg(2, true);
+    let rep = run_cv(&ds, SolverKind::Chol, &c).unwrap();
+    assert!(!rep.degradations.is_empty(), "the spike must climb the ladder");
+    let obs = rep.obs.as_ref().unwrap();
+    assert!(
+        obs.events.iter().any(|e| e.degradations > 0),
+        "degraded cells must be visible in the event log"
+    );
+    let run = LedgerRun {
+        mode: "kfold",
+        solver: "chol",
+        kernel_backend: rep.kernel_backend,
+        fold_strategy: rep.fold_strategy.name(),
+        strategy_source: rep.strategy_source,
+        threads: rep.threads,
+        tasks: rep.tasks,
+        k_folds: c.k_folds,
+        q_grid: c.q_grid,
+        g_samples: c.g_samples,
+        seed: c.seed,
+        policy: &c.recovery,
+        best_lambda: rep.best_lambda,
+        best_error: rep.best_error,
+        wall_secs: rep.wall_secs,
+        degradations: &rep.degradations,
+        certification: None,
+        timer: &rep.timer,
+        obs,
+    };
+    let s = render_ledger(&run);
+    for line in s.lines() {
+        assert!(
+            line.starts_with('{') && line.ends_with('}'),
+            "every ledger line must be one JSON object: {line}"
+        );
+    }
+    assert!(s.contains("\"record\":\"provenance\""));
+    assert!(s.contains("\"strategy_source\":"));
+    assert!(s.contains("\"kernel_backend\":"));
+    assert_eq!(
+        s.matches("\"record\":\"degradation\"").count(),
+        rep.degradations.len(),
+        "one ledger record per degradation"
+    );
+    assert!(s.contains("\"record\":\"phase\""));
+    assert!(s.contains("\"p50_us\"") && s.contains("\"p90_us\"") && s.contains("\"p99_us\""));
+    assert!(s.contains("\"record\":\"task_kind\""));
+    assert!(s.contains("\"record\":\"summary\""));
+}
+
+/// The Chrome exporter writes one complete-span object per event into a
+/// single JSON array (the shape chrome://tracing and Perfetto load).
+#[test]
+fn chrome_trace_export_covers_every_event() {
+    let ds = well_conditioned(40, 8, 5);
+    let rep = run_cv(&ds, SolverKind::Chol, &cfg(2, true)).unwrap();
+    let obs = rep.obs.as_ref().unwrap();
+    let path = std::env::temp_dir().join(format!("pichol_trace_{}.json", std::process::id()));
+    let path_s = path.to_str().unwrap().to_string();
+    picholesky::obs::trace::write_chrome_trace(&path_s, &obs.events).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(text.trim_start().starts_with('['));
+    assert!(text.trim_end().ends_with(']'));
+    assert_eq!(
+        text.matches("\"ph\":\"X\"").count(),
+        obs.events.len(),
+        "one complete-span record per event"
+    );
+    assert!(text.contains("\"args\":{\"task_id\":"));
+}
