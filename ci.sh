@@ -30,6 +30,13 @@
 #                           content) plus an end-to-end sweep that writes
 #                           --ledger-out / --trace-out artifacts and
 #                           validates both with python3
+#   ./ci.sh --service       only the streaming-service gate: tests/service.rs
+#                           (bitwise worker/batch invariance of the traffic
+#                           replay, window refold round-trip, non-blocking
+#                           queries) plus an end-to-end `pichol serve` replay
+#                           that writes a --ledger-out artifact, validated
+#                           with python3 including a full-precision float
+#                           parse-back of every numeric field
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -135,6 +142,65 @@ EOF
   echo "obs gate passed: $led + $trc present and well-formed."
 }
 
+service() {
+  # the streaming-service gate. tests/service.rs pins the tentpole
+  # acceptance bar (same seeded replay → bitwise-identical snapshots and
+  # identical degradation ledgers at eval workers {1,2,4} × admission
+  # batches {1,3,64}; refold round-trips bitwise against a from-scratch
+  # Gram; queries never block and epochs are monotone). The end-to-end run
+  # below drives `pichol serve` — the bounded admission queue, sliding
+  # window with segment retirement, and epoch-swapped serving — with a
+  # ledger artifact, validated including a full-precision parse-back of
+  # every float field (the `{v:e}` ledger fix: round-tripping a ledger
+  # must reproduce the run's numbers bit for bit).
+  echo "==> streaming-service suite (worker/batch invariance, refold, non-blocking queries)"
+  cargo test -q --test service
+  local led="target/service_run.jsonl"
+  mkdir -p target
+  echo "==> end-to-end service replay (pichol serve) -> $led"
+  cargo run --release --bin pichol -- serve \
+    --dataset mnist --n 600 --h 8 --batch 8 --queries 2 \
+    --window 512 --refresh-every 48 --queue-depth 8 --tier aloocv \
+    --grid 9 --g 4 --threads 2 \
+    --trust-max-hops 40 --ledger-out "$led"
+  test -s "$led"
+  python3 - "$led" <<'EOF'
+import json, sys
+recs = [json.loads(line) for line in open(sys.argv[1]) if line.strip()]
+kinds = [r["record"] for r in recs]
+assert kinds[0] == "provenance", kinds[:1]
+assert kinds[-1] == "summary", kinds[-1:]
+prov = recs[0]
+assert prov["mode"] == "service", prov["mode"]
+assert "degradation" in kinds, "the hop budget must have tripped re-anchors"
+assert "phase" in kinds and "task_kind" in kinds, sorted(set(kinds))
+# full-precision parse-back: every float field must round-trip exactly
+# (the ledger writes {v:e}, not a truncated {v:.6e})
+def floats(obj, path=""):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            yield from floats(v, path + "/" + k)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from floats(v, "%s[%d]" % (path, i))
+    elif isinstance(obj, float):
+        yield path, obj
+n = 0
+for r in recs:
+    for path, v in floats(r):
+        s = json.dumps(v)
+        assert json.loads(s) == v or (v != v and json.loads(s) != json.loads(s)), (path, v)
+        n += 1
+print("service ledger OK: %d records, %d floats round-tripped, kinds=%s"
+      % (len(recs), n, sorted(set(kinds))))
+EOF
+  grep -q '"record":"provenance"' "$led"
+  grep -q '"mode":"service"' "$led"
+  grep -q '"record":"degradation"' "$led"
+  grep -q '"p50_us"' "$led"
+  echo "service gate passed: $led present and well-formed."
+}
+
 bench_smoke() {
   # smoke runs validate the harness + JSON shape into an UNTRACKED scratch
   # file: tiny-size reps=1 numbers must never land in the tracked
@@ -160,6 +226,10 @@ bench_smoke() {
   grep -q '"aloocv_sweep"' "$out"
   grep -q '"aloocv_phases"' "$out"
   grep -q '"per_row_downdate": 0' "$out"
+  # the streaming service's replay rides the harness too: admission and
+  # snapshot-serve latency quantiles from the deterministic replay
+  grep -q '"service_replay"' "$out"
+  grep -q '"service_query"' "$out"
   # per-stage latency quantiles ride next to the wall-clock means
   grep -q '"p50_us"' "$out"
   grep -q '"p99_us"' "$out"
@@ -196,6 +266,11 @@ if [[ "${1:-}" == "--obs" ]]; then
   exit 0
 fi
 
+if [[ "${1:-}" == "--service" ]]; then
+  service
+  exit 0
+fi
+
 echo "==> cargo build --release"
 cargo build --release
 
@@ -218,6 +293,10 @@ tiers
 
 # the observability gate: tests/obs.rs + end-to-end ledger/trace artifacts
 obs
+
+# the streaming-service gate: tests/service.rs + end-to-end `pichol serve`
+# replay with a parse-back-validated ledger artifact
+service
 
 echo "==> cargo run --release --example quickstart (end-to-end smoke gate)"
 cargo run --release --example quickstart

@@ -41,6 +41,12 @@
 //!   structural counts (`factor == anchors`, zero per-row factorizations
 //!   AND zero per-row downdates) as an `aloocv_phases` object.
 //! - `sweep` — end-to-end `run_cv` (PiChol, k=3) at n=2d (packed-only)
+//! - `service_replay` / `service_query` — the streaming service end-to-end:
+//!   the deterministic traffic replay (seeded rows admitted in fixed
+//!   batches through the bounded queue into the sliding-window Gram, point
+//!   queries interleaved). `service_replay` carries the per-batch admission
+//!   latency quantiles, `service_query` the per-query snapshot-serve
+//!   latency quantiles — the streaming tier's p50/p99 acceptance numbers.
 
 use std::time::Instant;
 
@@ -451,6 +457,60 @@ fn bench_kfold(d: usize, reps: usize, rows: &mut Vec<Row>) {
     });
 }
 
+/// The streaming-service traffic replay end-to-end: admission through the
+/// bounded queue, per-row window numerics, periodic snapshot refreshes,
+/// interleaved point queries against the epoch-swapped snapshot. Emits two
+/// rows sharing the replay wall: `service_replay` with the admission
+/// (validate + queue wait) latency histogram, `service_query` with the
+/// snapshot-serve latency histogram.
+fn bench_service(d: usize, smoke: bool, rows: &mut Vec<Row>) {
+    use picholesky::coordinator::service::{run_replay, ReplayConfig};
+    use picholesky::cv::window::ServiceConfig;
+
+    let replay = ReplayConfig {
+        rows: if smoke { 640 } else { 2048 },
+        dim: d,
+        batch: 8,
+        queries_per_batch: 4,
+        kind: DatasetKind::MnistLike,
+        seed: 42,
+    };
+    let svc = ServiceConfig {
+        window: if smoke { 512 } else { 1024 },
+        refresh_every: if smoke { 32 } else { 128 },
+        workers: 1, // single-threaded eval: kernel speed, not parallelism
+        ..ServiceConfig::default()
+    };
+    let cfg = CvConfig {
+        q_grid: 20,
+        g_samples: 4,
+        lambda_range: Some((0.1, 1.0)),
+        ..CvConfig::default()
+    };
+    let rep = run_replay(replay, svc, cfg);
+    assert_eq!(rep.rows_admitted as usize, replay.rows, "replay must admit everything");
+    assert!(rep.refreshes > 1, "replay must refresh repeatedly");
+    assert!(
+        rep.final_snapshot.best_lambda.is_finite(),
+        "replay must end serving a model"
+    );
+    std::hint::black_box(rep.final_snapshot.best_lambda);
+    rows.push(Row {
+        kernel: "service_replay",
+        d,
+        packed_secs: rep.wall_secs,
+        reference_secs: 0.0,
+        packed_hist: rep.admit_hist,
+    });
+    rows.push(Row {
+        kernel: "service_query",
+        d,
+        packed_secs: rep.wall_secs,
+        reference_secs: 0.0,
+        packed_hist: rep.query_hist,
+    });
+}
+
 fn bench_sweep(d: usize, rows: &mut Vec<Row>) {
     let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 2 * d, d, 7);
     let cfg = CvConfig {
@@ -545,6 +605,7 @@ fn main() {
     bench_sweep(if smoke { 32 } else { 256 }, &mut rows);
     let (loo_phases, loo_secs) = bench_loo(if smoke { 32 } else { 256 }, &mut rows);
     let aloocv_phases = bench_aloocv(if smoke { 32 } else { 256 }, loo_secs, &mut rows);
+    bench_service(if smoke { 32 } else { 256 }, smoke, &mut rows);
 
     println!("\n| kernel | d | packed | reference | speedup |");
     println!("|---|---|---|---|---|");

@@ -5,6 +5,7 @@
 //!
 //! ```text
 //! pichol cv        --dataset mnist --h 128 --n 1024 --solver pichol [...]
+//! pichol serve     --n 2048 --h 16 --window 512 [...]  # streaming service replay
 //! pichol compare   --dataset mnist --h 96  --n 512     # all six algorithms
 //! pichol experiments --out results [--fast]            # every table/figure
 //! pichol bound     --h 16 --lambda-c 0.5               # Theorem 4.7 demo
@@ -123,6 +124,23 @@ COMMANDS:
                certification verdict, and per-phase/per-kind latency
                quantiles; implies --obs)
                --seed <u64> --config <file.toml>
+  serve        run the streaming CV service over the deterministic traffic
+               replay: seeded rows admitted through a bounded queue into a
+               sliding-window Gram, λ*/θ(λ*) + the LOO/ALOOCV curve served
+               from epoch-swapped immutable snapshots (queries never block
+               on a window update); bitwise identical at any thread count
+               or admission batch size
+               --n <total rows streamed> --h <dim> --dataset <as cv> --seed <u64>
+               --batch <rows per admitted batch> --queries <point queries per batch>
+               --window <max retained rows> --refresh-every <rows between refreshes>
+               --queue-depth <admission backpressure, in batches>
+               --eval-batch <window rows per eval task|0=auto>
+               --tier loo|aloocv   (which tier scores the window at each anchor)
+               --threads <eval workers|0=auto> --grid <q> --g <anchors> --degree <r>
+               --trust-* as for `cv` (budget trips re-anchor λ* and are
+               recorded as degradations) --obs --trace-out --ledger-out
+               --config <file.toml>   ([service] section: window,
+               refresh_every, queue_depth, workers, eval_batch, tier)
   compare      run all six algorithms on one dataset (Figure 6 row)
                flags as for `cv`
   hlo          run one fold through the AOT HLO pipeline (requires `make artifacts`)

@@ -8,6 +8,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 
+use crate::cv::window::ServiceConfig;
 use crate::cv::{CvConfig, CvMode, FoldStrategy, Metric};
 use crate::data::synthetic::DatasetKind;
 
@@ -57,8 +58,8 @@ pub type TomlDoc = BTreeMap<String, TomlValue>;
 
 fn parse_value(raw: &str) -> Result<TomlValue> {
     let raw = raw.trim();
-    if raw.starts_with('"') && raw.ends_with('"') && raw.len() >= 2 {
-        return Ok(TomlValue::Str(raw[1..raw.len() - 1].to_string()));
+    if raw.starts_with('"') {
+        return parse_string(raw);
     }
     if raw == "true" {
         return Ok(TomlValue::Bool(true));
@@ -70,7 +71,7 @@ fn parse_value(raw: &str) -> Result<TomlValue> {
         let inner = &raw[1..raw.len() - 1];
         let mut items = Vec::new();
         if !inner.trim().is_empty() {
-            for part in inner.split(',') {
+            for part in split_top_level(inner)? {
                 items.push(parse_value(part)?);
             }
         }
@@ -83,6 +84,86 @@ fn parse_value(raw: &str) -> Result<TomlValue> {
         return Ok(TomlValue::Float(f));
     }
     bail!("cannot parse value '{raw}'")
+}
+
+/// Parse a `"…"` string value: `\"` and `\\` unescape, the closing quote
+/// must exist and must end the value. Unterminated strings and trailing
+/// junk are errors — silently keeping the outer quotes (or eating a
+/// dangling fragment) would corrupt the config it came from.
+fn parse_string(raw: &str) -> Result<TomlValue> {
+    debug_assert!(raw.starts_with('"'));
+    let mut out = String::with_capacity(raw.len());
+    let mut escaped = false;
+    let mut closed = false;
+    for c in raw.chars().skip(1) {
+        if closed {
+            bail!("trailing characters after closing quote in {raw}");
+        }
+        if escaped {
+            match c {
+                '"' => out.push('"'),
+                '\\' => out.push('\\'),
+                other => bail!("unsupported escape '\\{other}' in {raw}"),
+            }
+            escaped = false;
+        } else {
+            match c {
+                '\\' => escaped = true,
+                '"' => closed = true,
+                c => out.push(c),
+            }
+        }
+    }
+    if !closed {
+        bail!("unterminated string {raw}");
+    }
+    Ok(TomlValue::Str(out))
+}
+
+/// Split an array body on **top-level** commas only: commas inside string
+/// elements or nested arrays are element content, not separators. Tracks
+/// quote state (with `\"`/`\\` escapes) and bracket depth; unterminated
+/// strings and unbalanced brackets are errors.
+fn split_top_level(inner: &str) -> Result<Vec<&str>> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut escaped = false;
+    let mut start = 0usize;
+    for (i, c) in inner.char_indices() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '[' => depth += 1,
+            ']' => {
+                depth = depth
+                    .checked_sub(1)
+                    .ok_or_else(|| anyhow!("unbalanced ']' in array body '{inner}'"))?;
+            }
+            ',' if depth == 0 => {
+                parts.push(&inner[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        bail!("unterminated string in array body '{inner}'");
+    }
+    if depth != 0 {
+        bail!("unbalanced '[' in array body '{inner}'");
+    }
+    parts.push(&inner[start..]);
+    Ok(parts)
 }
 
 /// Parse a TOML-subset document into a flat `section.key` map.
@@ -144,6 +225,9 @@ pub struct ExperimentConfig {
     /// Run-ledger JSONL output path (`--ledger-out` / `obs.ledger_out`);
     /// setting it implies `cv.obs`.
     pub ledger_out: Option<String>,
+    /// Streaming-service shape (`[service]` section; see
+    /// [`crate::coordinator::service`]). Only the `serve` subcommand reads it.
+    pub service: ServiceConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -158,6 +242,7 @@ impl Default for ExperimentConfig {
             artifacts_dir: "artifacts".to_string(),
             trace_out: None,
             ledger_out: None,
+            service: ServiceConfig::default(),
         }
     }
 }
@@ -269,6 +354,28 @@ impl ExperimentConfig {
         if cfg.trace_out.is_some() || cfg.ledger_out.is_some() {
             cfg.cv.obs = true;
         }
+        // streaming-service shape ([service] section; 0 = auto where noted).
+        // `tier` is intentionally separate from `cv.mode`: a batch experiment
+        // and the service it feeds routinely want different accuracy tiers.
+        if let Some(v) = doc.get("service.window").and_then(TomlValue::as_usize) {
+            cfg.service.window = v;
+        }
+        if let Some(v) = doc.get("service.refresh_every").and_then(TomlValue::as_usize) {
+            cfg.service.refresh_every = v;
+        }
+        if let Some(v) = doc.get("service.queue_depth").and_then(TomlValue::as_usize) {
+            cfg.service.queue_depth = v;
+        }
+        if let Some(v) = doc.get("service.workers").and_then(TomlValue::as_usize) {
+            cfg.service.workers = v;
+        }
+        if let Some(v) = doc.get("service.eval_batch").and_then(TomlValue::as_usize) {
+            cfg.service.eval_batch = v;
+        }
+        if let Some(v) = doc.get("service.tier").and_then(TomlValue::as_str) {
+            cfg.service.tier = CvMode::parse(v)
+                .ok_or_else(|| anyhow!("unknown service tier '{v}' (loo | aloocv)"))?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -311,6 +418,19 @@ impl ExperimentConfig {
                 "trust.shift_growth must be a finite factor > 1, got {}",
                 r.shift_growth
             );
+        }
+        let s = &self.service;
+        if s.window == 0 {
+            bail!("service.window must be ≥ 1 (rows retained in the sliding window)");
+        }
+        if s.refresh_every == 0 {
+            bail!("service.refresh_every must be ≥ 1 (rows admitted between refreshes)");
+        }
+        if s.queue_depth == 0 {
+            bail!("service.queue_depth must be ≥ 1 (bounded admission queue)");
+        }
+        if s.tier == CvMode::KFold {
+            bail!("service.tier must be a streaming tier (loo | aloocv), not kfold");
         }
         Ok(())
     }
@@ -355,6 +475,53 @@ mod tests {
             TomlValue::Array(a) => assert_eq!(a.len(), 3),
             _ => panic!(),
         }
+    }
+
+    /// The array-splitting bug: commas inside string elements or nested
+    /// arrays are element content, not separators.
+    #[test]
+    fn array_split_respects_strings_and_nesting() {
+        let doc =
+            parse_toml("tags = [\"a,b\", \"c\"]\nnest = [[1, 2], [3]]\nempty = []\n").unwrap();
+        match doc.get("tags").unwrap() {
+            TomlValue::Array(a) => {
+                assert_eq!(a.len(), 2, "comma inside the string must not split");
+                assert_eq!(a[0].as_str(), Some("a,b"));
+                assert_eq!(a[1].as_str(), Some("c"));
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+        match doc.get("nest").unwrap() {
+            TomlValue::Array(a) => {
+                assert_eq!(a.len(), 2);
+                assert_eq!(a[0], TomlValue::Array(vec![TomlValue::Int(1), TomlValue::Int(2)]));
+                assert_eq!(a[1], TomlValue::Array(vec![TomlValue::Int(3)]));
+            }
+            other => panic!("expected nested array, got {other:?}"),
+        }
+        assert_eq!(doc.get("empty").unwrap(), &TomlValue::Array(vec![]));
+        // a string element containing a bracket must not confuse the depth
+        let doc = parse_toml("v = [\"a]b\", 2]\n").unwrap();
+        match doc.get("v").unwrap() {
+            TomlValue::Array(a) => {
+                assert_eq!(a[0].as_str(), Some("a]b"));
+                assert_eq!(a[1], TomlValue::Int(2));
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    /// String values unescape `\"` and `\\`; malformed strings are loud
+    /// errors instead of silently keeping the outer quotes.
+    #[test]
+    fn string_escapes_unescape_and_bad_strings_are_rejected() {
+        let doc = parse_toml("v = \"say \\\"hi,there\\\" and \\\\slash\"\n").unwrap();
+        assert_eq!(doc.get("v").unwrap().as_str(), Some("say \"hi,there\" and \\slash"));
+        assert!(parse_toml("v = \"unterminated\n").is_err(), "unterminated string");
+        assert!(parse_toml("v = \"closed\" junk\n").is_err(), "trailing junk");
+        assert!(parse_toml("v = \"bad \\q escape\"\n").is_err(), "unknown escape");
+        assert!(parse_toml("v = [\"open, 1]\n").is_err(), "unterminated in array");
+        assert!(parse_toml("v = [[1, 2]\n").is_err(), "unbalanced brackets");
     }
 
     #[test]
@@ -508,6 +675,38 @@ mod tests {
         )
         .unwrap();
         assert!(cfg.cv.obs);
+    }
+
+    #[test]
+    fn service_knobs_parse_and_validate() {
+        let doc = parse_toml(
+            "[service]\nwindow = 1024\nrefresh_every = 32\nqueue_depth = 8\nworkers = 2\neval_batch = 64\ntier = \"loo\"\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.service.window, 1024);
+        assert_eq!(cfg.service.refresh_every, 32);
+        assert_eq!(cfg.service.queue_depth, 8);
+        assert_eq!(cfg.service.workers, 2);
+        assert_eq!(cfg.service.eval_batch, 64);
+        assert_eq!(cfg.service.tier, CvMode::Loo);
+        // untouched configs keep the documented defaults
+        let cfg = ExperimentConfig::from_doc(&parse_toml("n = 64\n").unwrap()).unwrap();
+        assert_eq!(cfg.service, ServiceConfig::default());
+        assert_eq!(cfg.service.tier, CvMode::Aloocv);
+        // degenerate shapes are loud errors, not silent clamps
+        for bad in [
+            "[service]\nwindow = 0\n",
+            "[service]\nrefresh_every = 0\n",
+            "[service]\nqueue_depth = 0\n",
+            "[service]\ntier = \"kfold\"\n",
+            "[service]\ntier = \"hmm\"\n",
+        ] {
+            assert!(
+                ExperimentConfig::from_doc(&parse_toml(bad).unwrap()).is_err(),
+                "expected rejection of {bad:?}"
+            );
+        }
     }
 
     #[test]

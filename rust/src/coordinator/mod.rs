@@ -13,12 +13,16 @@
 //!   timings into, snapshotted into reports;
 //! - [`hlo_pipeline`] — the AOT request path (gram → cholvec → polyfit →
 //!   fused sweep, one PJRT execution per stage, python nowhere in sight);
+//! - [`service`] — the streaming variant: a long-lived [`service::CvService`]
+//!   admitting row batches over a bounded queue, maintaining a sliding-window
+//!   Gram, and serving λ*/θ from epoch-swapped immutable snapshots;
 //! - [`Coordinator`] — ties them together: plans folds, schedules work,
 //!   aggregates [`crate::cv::CvReport`]s for whole experiment matrices.
 
 pub mod hlo_pipeline;
 pub mod metrics;
 pub mod pool;
+pub mod service;
 pub mod sweep_engine;
 
 use std::sync::Arc;

@@ -1,0 +1,470 @@
+//! The long-lived streaming CV coordinator: async admission, epoch-swapped
+//! snapshot serving, and the deterministic traffic replay.
+//!
+//! ## Shape
+//!
+//! ```text
+//!   clients ──admit(batch)──► bounded MPSC queue ──► service worker thread
+//!      │                                                   │
+//!      │                                     WindowCv (per-row numerics,
+//!      │                                      refresh → new Snapshot)
+//!      │                                                   │
+//!      └──query() ◄── Mutex<Arc<Snapshot>> ◄── epoch swap ─┘
+//! ```
+//!
+//! - **Admission** rides a bounded [`std::sync::mpsc::sync_channel`]:
+//!   `queue_depth` batches of backpressure, any number of producer
+//!   clients ([`ServiceHandle`] is `Clone`). Rows are validated
+//!   client-side ([`gram::validate_rows`]) so a poisoned batch is rejected
+//!   synchronously, before it can occupy queue space.
+//! - **Serving** is an epoch swap in the `arc-swap` style, built from std
+//!   primitives: the worker builds each new [`Snapshot`] entirely off to
+//!   the side, then swaps the `Arc` under a mutex held for a pointer
+//!   store; readers hold the lock for a pointer clone. Queries therefore
+//!   **never block on a window update** — a refresh computes outside the
+//!   lock — and a reader holding an old snapshot keeps a fully consistent
+//!   view at its stamped epoch.
+//! - **Determinism**: the worker splits every admitted batch into single
+//!   rows before touching numerics ([`WindowCv::push_row`]), and refresh
+//!   points are a pure function of the admitted row sequence — so the
+//!   snapshot stream is bitwise identical at any worker count and any
+//!   admission batch size (pinned by `tests/service.rs`).
+//!
+//! ## Observability
+//!
+//! When armed ([`CvConfig::obs`]), the worker records one `"admit"` span
+//! per batch and one `"refresh"` span per rebuild into the PR-9 event
+//! rings, and the refresh phases land in per-phase latency histograms.
+//! Query spans are captured client-side as `(start, stop)` pairs and
+//! appended to the event log at [`CvService::finish`] (the rings are
+//! single-producer, so live client threads record into a mutex-guarded
+//! side buffer instead). Admission and query latencies additionally feed
+//! dedicated histograms — the `service_replay` bench's p50/p99 source —
+//! armed or not.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::pool::{default_workers, WorkerPool};
+use crate::cv::recovery::Degradation;
+use crate::cv::window::{ServiceConfig, Snapshot, WindowCv};
+use crate::cv::CvConfig;
+use crate::data::gram::{self, IngestError};
+use crate::data::synthetic::{DatasetKind, SyntheticDataset};
+use crate::linalg::matrix::Matrix;
+use crate::obs::{Event, Hist, ObsReport, Outcome, RunObs};
+use crate::util::PhaseTimer;
+
+/// Why an admission was refused.
+#[derive(Debug)]
+pub enum AdmitError {
+    /// The batch failed ingest validation (client-side, synchronous).
+    Ingest(IngestError),
+    /// The service worker has shut down.
+    Closed,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::Ingest(e) => write!(f, "batch rejected at admission: {e}"),
+            AdmitError::Closed => write!(f, "service is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// State shared between the worker and every handle.
+struct Shared {
+    snapshot: Mutex<Arc<Snapshot>>,
+    epoch: AtomicU64,
+    admit_hist: Mutex<Hist>,
+    query_hist: Mutex<Hist>,
+    /// Client-side query spans (µs since the obs epoch), drained into the
+    /// event log at finish; `None` when observability is disarmed.
+    query_spans: Mutex<Vec<(u64, u64)>>,
+    obs: Option<Arc<RunObs>>,
+}
+
+/// A cloneable producer/reader handle onto a running [`CvService`].
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: SyncSender<(Matrix, Vec<f64>)>,
+    shared: Arc<Shared>,
+}
+
+impl ServiceHandle {
+    /// Admit one row batch. Validates client-side (a bad batch is
+    /// rejected *here*, synchronously and without queue space), then
+    /// blocks while the bounded queue is full — admission backpressure.
+    /// The measured latency (validation + queue wait) feeds the
+    /// admission histogram.
+    pub fn admit(&self, x: Matrix, y: Vec<f64>) -> Result<(), AdmitError> {
+        let t0 = Instant::now();
+        gram::validate_rows(&x, &y).map_err(AdmitError::Ingest)?;
+        self.tx.send((x, y)).map_err(|_| AdmitError::Closed)?;
+        let secs = t0.elapsed().as_secs_f64();
+        self.shared
+            .admit_hist
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .record_secs(secs);
+        Ok(())
+    }
+
+    /// Non-blocking admission: `Ok(false)` when the queue is full.
+    pub fn try_admit(&self, x: Matrix, y: Vec<f64>) -> Result<bool, AdmitError> {
+        gram::validate_rows(&x, &y).map_err(AdmitError::Ingest)?;
+        match self.tx.try_send((x, y)) {
+            Ok(()) => Ok(true),
+            Err(TrySendError::Full(_)) => Ok(false),
+            Err(TrySendError::Disconnected(_)) => Err(AdmitError::Closed),
+        }
+    }
+
+    /// Serve the current snapshot: clone the `Arc` under a
+    /// held-for-a-pointer-copy lock. Never waits on a window update —
+    /// refreshes are computed off to the side and swapped in. The
+    /// measured latency feeds the query histogram (and, when armed, a
+    /// query span into the event log at finish).
+    pub fn query(&self) -> Arc<Snapshot> {
+        let start_us = self.shared.obs.as_ref().map(|o| o.now_us());
+        let t0 = Instant::now();
+        let snap = Arc::clone(
+            &self
+                .shared
+                .snapshot
+                .lock()
+                .unwrap_or_else(|e| e.into_inner()),
+        );
+        let secs = t0.elapsed().as_secs_f64();
+        self.shared
+            .query_hist
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .record_secs(secs);
+        if let (Some(start), Some(obs)) = (start_us, self.shared.obs.as_ref()) {
+            self.shared
+                .query_spans
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .push((start, obs.now_us()));
+        }
+        snap
+    }
+
+    /// The epoch of the currently served snapshot, lock-free.
+    pub fn epoch(&self) -> u64 {
+        self.shared.epoch.load(Ordering::Acquire)
+    }
+}
+
+/// What a finished service run produced — the streaming analogue of
+/// `LooReport`/`AloocvReport`, consumed by `pichol serve` and the
+/// determinism suite.
+pub struct ServiceReport {
+    /// The snapshot served at shutdown (after the final drain refresh).
+    pub final_snapshot: Arc<Snapshot>,
+    /// Every degradation the window recorded, in admission order.
+    pub degradations: Vec<Degradation>,
+    /// Rows admitted over the service lifetime.
+    pub rows_admitted: u64,
+    /// Batches admitted over the service lifetime.
+    pub batches: u64,
+    /// Rows rejected by in-worker validation (client-validated batches
+    /// make this 0; direct queue producers can still trip it).
+    pub rejected: u64,
+    /// Snapshot refreshes performed.
+    pub refreshes: u64,
+    /// Per-phase timings of every refresh, merged.
+    pub timer: PhaseTimer,
+    /// Worker-thread wall clock, admission of the first batch to drain.
+    pub wall_secs: f64,
+    /// Eval pool worker threads.
+    pub threads: usize,
+    /// Admission latency (validate + queue wait), recorded client-side.
+    pub admit_hist: Hist,
+    /// Query latency (snapshot clone), recorded client-side.
+    pub query_hist: Hist,
+    /// Observability payload when the run was armed.
+    pub obs: Option<ObsReport>,
+}
+
+/// The running service: owns the worker thread. Admission and queries go
+/// through [`ServiceHandle`] clones; dropping every handle closes the
+/// queue, after which [`CvService::finish`] joins the worker and returns
+/// the report.
+pub struct CvService {
+    worker: std::thread::JoinHandle<WorkerOut>,
+    shared: Arc<Shared>,
+    threads: usize,
+}
+
+struct WorkerOut {
+    window: WindowCv,
+    timer: PhaseTimer,
+    batches: u64,
+    rejected: u64,
+    refreshes: u64,
+    wall_secs: f64,
+}
+
+impl CvService {
+    /// Start the service worker and hand back the first producer handle.
+    /// `cv` supplies the λ grid/anchor plan, recovery policy, and the obs
+    /// switch; `svc` the window/queue/tier knobs.
+    pub fn start(svc: ServiceConfig, cv: CvConfig) -> (CvService, ServiceHandle) {
+        let threads = if svc.workers == 0 {
+            default_workers()
+        } else {
+            svc.workers
+        };
+        let obs = cv.obs.then(|| {
+            // admit + refresh spans from the worker, query spans appended
+            // at finish: one ring's worth of capacity each
+            RunObs::new(1, 4096)
+        });
+        let window = WindowCv::new(svc, cv);
+        let shared = Arc::new(Shared {
+            snapshot: Mutex::new(Arc::new(window.empty_snapshot())),
+            epoch: AtomicU64::new(0),
+            admit_hist: Mutex::new(Hist::new()),
+            query_hist: Mutex::new(Hist::new()),
+            query_spans: Mutex::new(Vec::new()),
+            obs: obs.clone(),
+        });
+        let (tx, rx) = sync_channel::<(Matrix, Vec<f64>)>(svc.queue_depth.max(1));
+        let worker_shared = Arc::clone(&shared);
+        let worker = std::thread::Builder::new()
+            .name("pichol-service".into())
+            .spawn(move || worker_loop(window, rx, worker_shared, threads, obs))
+            .expect("spawn service worker");
+        let handle = ServiceHandle {
+            tx,
+            shared: Arc::clone(&shared),
+        };
+        (
+            CvService {
+                worker,
+                shared,
+                threads,
+            },
+            handle,
+        )
+    }
+
+    /// Join the worker (the caller must have dropped every
+    /// [`ServiceHandle`] sender first — the queue closing is the shutdown
+    /// signal) and assemble the report. Appends the client-side query
+    /// spans to the event log: the worker has quiesced, so the
+    /// single-producer ring contract holds for this thread.
+    pub fn finish(self) -> ServiceReport {
+        let out = self.worker.join().expect("service worker panicked");
+        let mut timer = out.timer;
+        let obs = self.shared.obs.as_ref().map(|o| {
+            let spans = std::mem::take(
+                &mut *self
+                    .shared
+                    .query_spans
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner()),
+            );
+            for (start_us, stop_us) in spans {
+                o.record(Event {
+                    task_id: o.alloc_id(),
+                    kind: "query",
+                    surface: "service",
+                    start_us,
+                    stop_us,
+                    outcome: Outcome::Ok,
+                    ..Event::default()
+                });
+            }
+            ObsReport::from_run(o, timer.take_hists())
+        });
+        let final_snapshot = Arc::clone(
+            &self
+                .shared
+                .snapshot
+                .lock()
+                .unwrap_or_else(|e| e.into_inner()),
+        );
+        let take_hist = |m: &Mutex<Hist>| std::mem::take(&mut *m.lock().unwrap_or_else(|e| e.into_inner()));
+        ServiceReport {
+            final_snapshot,
+            degradations: out.window.degradations,
+            rows_admitted: out.window.rows_admitted(),
+            batches: out.batches,
+            rejected: out.rejected,
+            refreshes: out.refreshes,
+            timer,
+            wall_secs: out.wall_secs,
+            threads: self.threads,
+            admit_hist: take_hist(&self.shared.admit_hist),
+            query_hist: take_hist(&self.shared.query_hist),
+            obs,
+        }
+    }
+}
+
+/// The worker loop: drain batches, fold per-row, refresh when the window
+/// says so, swap the snapshot. Exits when every sender is dropped, after
+/// one final drain refresh so shutdown never discards admitted rows.
+fn worker_loop(
+    mut window: WindowCv,
+    rx: Receiver<(Matrix, Vec<f64>)>,
+    shared: Arc<Shared>,
+    threads: usize,
+    obs: Option<Arc<RunObs>>,
+) -> WorkerOut {
+    let pool = WorkerPool::new(threads);
+    let hists_on = obs.is_some();
+    let mut timer = if hists_on {
+        PhaseTimer::with_hists()
+    } else {
+        PhaseTimer::new()
+    };
+    let mut batches = 0u64;
+    let mut rejected = 0u64;
+    let mut refreshes = 0u64;
+    let t0 = Instant::now();
+
+    let publish = |window: &mut WindowCv,
+                   pool: &WorkerPool,
+                   timer: &mut PhaseTimer,
+                   refreshes: &mut u64| {
+        let start = obs.as_ref().map_or(0, |o| o.now_us());
+        let snap = Arc::new(window.refresh(pool, timer));
+        let degs = window.degradations.len() as u32;
+        let epoch = snap.epoch;
+        // built off to the side; the lock is held for one pointer store
+        *shared.snapshot.lock().unwrap_or_else(|e| e.into_inner()) = snap;
+        shared.epoch.store(epoch, Ordering::Release);
+        *refreshes += 1;
+        if let Some(o) = &obs {
+            o.record(Event {
+                task_id: o.alloc_id(),
+                kind: "refresh",
+                surface: "service",
+                fold: epoch as i64,
+                start_us: start,
+                stop_us: o.now_us(),
+                outcome: if degs > 0 {
+                    Outcome::Degraded
+                } else {
+                    Outcome::Ok
+                },
+                degradations: degs,
+                ..Event::default()
+            });
+        }
+    };
+
+    while let Ok((x, y)) = rx.recv() {
+        let start = obs.as_ref().map_or(0, |o| o.now_us());
+        let rows = x.rows();
+        let mut bad = 0u64;
+        // per-row numerics AND a per-row refresh check: neither the update
+        // sequence nor the refresh points may depend on how rows were
+        // batched at admission (the bitwise batch-size-invariance contract)
+        for r in 0..rows {
+            if window.push_row(x.row(r), y[r]).is_err() {
+                bad += 1;
+            } else if window.needs_refresh() {
+                publish(&mut window, &pool, &mut timer, &mut refreshes);
+            }
+        }
+        rejected += bad;
+        batches += 1;
+        if let Some(o) = &obs {
+            o.record(Event {
+                task_id: o.alloc_id(),
+                kind: "admit",
+                surface: "service",
+                fold: rows as i64,
+                start_us: start,
+                stop_us: o.now_us(),
+                outcome: if bad > 0 { Outcome::Degraded } else { Outcome::Ok },
+                ..Event::default()
+            });
+        }
+    }
+    // drain refresh: serve everything admitted before shutdown
+    if window.rows_admitted() > 0 {
+        publish(&mut window, &pool, &mut timer, &mut refreshes);
+    }
+    WorkerOut {
+        window,
+        timer,
+        batches,
+        rejected,
+        refreshes,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Knobs of the deterministic traffic replay (the `service_replay` bench
+/// stage and `pichol serve`'s driver): a seeded dataset streamed as
+/// sustained fixed-size appends with interleaved point queries.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplayConfig {
+    /// Total rows to stream.
+    pub rows: usize,
+    /// Feature dimension.
+    pub dim: usize,
+    /// Rows per admitted batch.
+    pub batch: usize,
+    /// Point queries issued after each admitted batch.
+    pub queries_per_batch: usize,
+    /// Dataset family and seed — the replay is a pure function of these.
+    pub kind: DatasetKind,
+    pub seed: u64,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        Self {
+            rows: 512,
+            dim: 16,
+            batch: 8,
+            queries_per_batch: 4,
+            kind: DatasetKind::MnistLike,
+            seed: 42,
+        }
+    }
+}
+
+/// Run the seeded replay: generate the dataset, stream it through a fresh
+/// service in `batch`-row admissions from this thread (one producer — the
+/// admitted row sequence is the dataset order, independent of timing),
+/// issue `queries_per_batch` point queries after each batch, drain, and
+/// return the report. The snapshot stream this produces is bitwise
+/// identical at any `svc.workers` and any `batch` (pinned by
+/// `tests/service.rs`).
+pub fn run_replay(replay: ReplayConfig, svc: ServiceConfig, cv: CvConfig) -> ServiceReport {
+    let ds = SyntheticDataset::generate(replay.kind, replay.rows, replay.dim, replay.seed);
+    let (service, handle) = CvService::start(svc, cv);
+    let batch = replay.batch.max(1);
+    let mut lo = 0usize;
+    while lo < replay.rows {
+        let hi = (lo + batch).min(replay.rows);
+        let x = ds.x.slice(lo, hi, 0, replay.dim);
+        let y = ds.y[lo..hi].to_vec();
+        handle
+            .admit(x, y)
+            .expect("replay batches are pre-validated synthetic data");
+        for q in 0..replay.queries_per_batch {
+            let snap = handle.query();
+            // a deterministic point query against the served model; the
+            // value is intentionally unused — the replay measures serving
+            let probe = (lo + q) % replay.rows;
+            let _ = snap.predict(ds.x.row(probe));
+        }
+        lo = hi;
+    }
+    drop(handle);
+    service.finish()
+}

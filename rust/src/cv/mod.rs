@@ -42,6 +42,7 @@ pub mod loo;
 pub mod recovery;
 pub mod solvers;
 pub mod strategy;
+pub mod window;
 
 use crate::coordinator::sweep_engine::{SweepEngine, SweepPlan, SweepReport};
 use crate::data::gram::{self, GramCache};

@@ -31,8 +31,10 @@
 //!   to first order — the note flags the weaker evidence);
 //! - `"probe"` — no trajectory file existed, so a ~10 ms in-process
 //!   micro-calibration measured the `chud_rk`-vs-refactor crossover right
-//!   here (once per process, cached) instead of silently using the static
-//!   default;
+//!   here (cached per kernel backend: a later `force_backend` /
+//!   `PICHOL_KERNEL_BACKEND` flip re-probes instead of reusing a
+//!   measurement taken under different dispatch) instead of silently
+//!   using the static default;
 //! - `"default"` — the file was present but malformed/unusable (kept
 //!   distinct from *absent* so a corrupt file degrades loudly rather than
 //!   triggering hidden re-measurement), or the probe itself failed.
@@ -41,7 +43,8 @@
 //! [`SweepPlan::new`](crate::coordinator::sweep_engine::SweepPlan::new);
 //! the sweep engine itself never sees [`FoldStrategy::Auto`].
 
-use std::sync::OnceLock;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::cv::FoldStrategy;
@@ -80,8 +83,9 @@ pub fn resolve(cfg_strategy: FoldStrategy, n: usize, d: usize, k_folds: usize) -
     let active = crate::linalg::kernel::active_backend().name();
     match read_bench_file() {
         Some(text) => resolve_with(FoldStrategy::Auto, n_v, d, Some(&text), active),
-        None => match probe_measurement() {
-            // a probe measures on the active backend by construction
+        None => match probe_for(active) {
+            // a probe measures on the active backend by construction —
+            // the cache is keyed by it, so a later backend flip re-probes
             Some((d_row, packed, reference)) => Resolved {
                 strategy: decide(n_v, d, d_row, packed, reference),
                 source: "probe",
@@ -216,14 +220,33 @@ const PROBE_DIM: usize = 64;
 /// refactorization it replaces (Hessian downdated once, outside the timed
 /// region). Returns `(d_row, packed_secs, reference_secs)` shaped like a
 /// `chud_rk` bench row, or `None` if the probe breaks down or the clock
-/// resolution swallows a timing. Cached per process — every later `resolve`
-/// reuses the first measurement.
-fn probe_measurement() -> Option<(usize, f64, f64)> {
-    static PROBE: OnceLock<Option<(usize, f64, f64)>> = OnceLock::new();
-    *PROBE.get_or_init(run_probe)
+/// resolution swallows a timing. Cached **per kernel backend**, not per
+/// process: the packed downdate dispatches through the active micro-kernel
+/// backend, so a measurement taken under `scalar` says nothing about
+/// `avx2`. Flipping back to an already-probed backend returns its original
+/// measurement (the map is append-only — entries are never evicted).
+pub fn probe_for(active_backend: &'static str) -> Option<(usize, f64, f64)> {
+    static PROBES: Mutex<Vec<(&'static str, Option<(usize, f64, f64)>)>> = Mutex::new(Vec::new());
+    let mut cache = PROBES.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some((_, cached)) = cache.iter().find(|(b, _)| *b == active_backend) {
+        return *cached;
+    }
+    let fresh = run_probe();
+    cache.push((active_backend, fresh));
+    fresh
 }
 
+/// How many times the probe has actually *measured* (cache misses), across
+/// all backends. Observability hook for the chaos suite: a backend flip
+/// must bump this, a repeat hit must not.
+pub fn probe_runs() -> u64 {
+    PROBE_RUNS.load(Ordering::Relaxed)
+}
+
+static PROBE_RUNS: AtomicU64 = AtomicU64::new(0);
+
 fn run_probe() -> Option<(usize, f64, f64)> {
+    PROBE_RUNS.fetch_add(1, Ordering::Relaxed);
     const LAM: f64 = 0.5;
     let d = PROBE_DIM;
     let x = crate::testutil::random_matrix(2 * d, d, 0x9e3779b9);
@@ -398,15 +421,18 @@ mod tests {
     }
 
     #[test]
-    fn probe_measurement_is_usable_and_cached() {
+    fn probe_measurement_is_usable_and_cached_per_backend() {
         // the probe itself: a real in-process measurement on this machine
         // must produce positive timings at the probe dimension, and the
-        // OnceLock must hand back the identical numbers on every later call
-        let first = probe_measurement().expect("probe must measure on a healthy host");
+        // per-backend cache must hand back the identical numbers on every
+        // later call under the same key (a fake key keeps this test
+        // independent of whatever real backends other tests have probed)
+        let first =
+            probe_for("strategy-test-backend").expect("probe must measure on a healthy host");
         assert_eq!(first.0, PROBE_DIM);
         assert!(first.1 > 0.0 && first.2 > 0.0);
-        let second = probe_measurement().unwrap();
-        assert_eq!(first, second, "probe must be cached per process");
+        let second = probe_for("strategy-test-backend").unwrap();
+        assert_eq!(first, second, "probe must be cached per backend");
     }
 
     #[test]

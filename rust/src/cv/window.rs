@@ -1,0 +1,904 @@
+//! The sliding-window CV state machine behind the streaming service.
+//!
+//! ## The workload
+//!
+//! ROADMAP item 1 — "the millions-of-users workload" — is a λ-sweep that
+//! never stops: rows arrive continuously, old rows age out, and the served
+//! model `θ(λ*)` plus its LOO/ALOOCV error curve must stay fresh without
+//! ever re-running the offline pipeline. Every hard primitive already
+//! exists: [`GramCache::append_rows`]/[`GramCache::retire_rows`] keep
+//! `(G, g)` incremental at `O(m·d²)` per block,
+//! [`AnchorFactors`] keeps the `g` anchor factors `chol(G + λ_s I)` fresh
+//! by rank-k rotation, the [`FactorTrust`] tags bound the accumulated
+//! rotation error, and the recovery ladder ([`crate::cv::recovery`]) turns
+//! every numerical surprise into a recorded degradation instead of a
+//! panic. This module is the composition: a window of recent rows, the
+//! incremental caches that shadow it, and a deterministic **refresh** that
+//! re-anchors λ* and rebuilds the served snapshot.
+//!
+//! ## Determinism contract — why the service is bitwise replayable
+//!
+//! The acceptance bar (ISSUE 10) is that the same admitted row sequence
+//! yields bitwise-identical snapshots at any worker count and any
+//! admission batch size. Three design rules deliver it:
+//!
+//! 1. **Per-row numerics.** [`WindowCv::push_row`] is the only mutation
+//!    entry point; the service splits every admitted batch into single
+//!    rows before touching numerics, so batch size affects queueing only —
+//!    the rank-1 update sequence is a pure function of the row sequence.
+//! 2. **Segment-aligned refolds.** Rows live in sealed
+//!    [`SEGMENT_ROWS`]-aligned segments (plus one short tail), each sealed
+//!    segment caching the partial `(XᵀX, Xᵀy)` computed by the *same* code
+//!    path [`GramCache::assemble`] uses. Retirement drops whole segments
+//!    only, so survivors always start on a segment boundary — and at every
+//!    refresh the Gram is **refolded** from the cached partials
+//!    ([`crate::data::gram::fold_partials`]), which is bitwise identical
+//!    to a from-scratch assembly of the surviving rows by construction.
+//!    The incremental Gram (kept between refreshes for transactional
+//!    validation) is replaced by the refold, so per-row rounding drift can
+//!    never accumulate across refreshes.
+//! 3. **Fixed eval partition, ordered merge.** The curve evaluation fans
+//!    (anchor × row-block) tasks over the pool in blocks of
+//!    [`ServiceConfig::eval_batch`] rows — a pure function of the window
+//!    size — and merges results in input order
+//!    ([`WorkerPool::map_scratch`]'s contract), so the worker count can
+//!    never reorder a floating-point reduction.
+//!
+//! ## Re-anchor policy
+//!
+//! A refresh fires when either trigger trips ([`WindowCv::needs_refresh`]):
+//! **staleness** (`refresh_every` rows admitted since the last refresh) or
+//! the **drift budget** (any anchor's [`FactorTrust`] exceeds the
+//! [`RecoveryPolicy`] budget). A staleness refresh keeps within-budget
+//! anchor factors incremental (the cheap path); a budget trip refactors
+//! the over-budget anchors from the refolded Gram through
+//! [`recovery::refactor_ladder`], recorded as `cause: "drift-budget"`
+//! degradations with `surface: "service"`. A retirement downdate that
+//! breaks down ([`AnchorFactors::retire_rows`] is transactional) triggers
+//! an immediate full refactor from the refolded Gram, recorded as
+//! `cause: "breakdown"`. Both are the exact policy faces PR 7 introduced,
+//! pointed at the streaming surface.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::coordinator::pool::WorkerPool;
+use crate::data::gram::{self, GramCache, IngestError, SEGMENT_ROWS};
+use crate::linalg::cholesky::CholeskyError;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::scratch::Scratch;
+use crate::linalg::triangular::solve_cholesky_into;
+use crate::linalg::trust::FactorTrust;
+use crate::pichol::pinrmse::fit_error_curve;
+use crate::util::{logspace, subsample_indices, PhaseTimer};
+
+use super::loo::{eval_heldout_point, AnchorFactors};
+use super::recovery::{self, DegradeInfo, Degradation, RecoveryPolicy, Rung};
+use super::{CvConfig, CvMode};
+
+/// The `[service]` knob set: window shape, refresh cadence, admission
+/// queue depth, and the evaluation tier/fan-out. TOML `[service]`, CLI
+/// `pichol serve` flags.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServiceConfig {
+    /// Maximum retained window rows. Retirement happens at whole-segment
+    /// granularity ([`SEGMENT_ROWS`]), so the effective capacity is
+    /// rounded up to the segment grid; values below one segment are
+    /// clamped up.
+    pub window: usize,
+    /// Rows admitted between snapshot refreshes (the staleness trigger).
+    pub refresh_every: usize,
+    /// Bounded admission-queue depth: producers block (backpressure) when
+    /// this many batches are in flight.
+    pub queue_depth: usize,
+    /// Curve-evaluation worker threads (0 = auto, like `sweep_threads`).
+    pub workers: usize,
+    /// Window rows per curve-evaluation task (0 = auto). A pure function
+    /// of the config — never of the worker count — so the eval partition
+    /// cannot perturb a result bit.
+    pub eval_batch: usize,
+    /// Which accuracy tier scores the window rows at each anchor:
+    /// [`CvMode::Aloocv`] (batched hat-diagonal solves, the `O(n·d)`
+    /// tier) or [`CvMode::Loo`] (exact rank-1 downdates). `KFold` is not
+    /// a streaming tier and is rejected by config validation.
+    pub tier: CvMode,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            window: 512,
+            refresh_every: 64,
+            queue_depth: 32,
+            workers: 0,
+            eval_batch: 0,
+            tier: CvMode::Aloocv,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// The effective eval-task row count (auto = one segment).
+    pub fn effective_eval_batch(&self) -> usize {
+        if self.eval_batch == 0 {
+            SEGMENT_ROWS
+        } else {
+            self.eval_batch
+        }
+    }
+}
+
+/// One immutable served snapshot: everything a query needs, stamped with
+/// its epoch and the trust state it was built under. Published behind an
+/// `Arc` and swapped atomically — readers holding an old epoch keep a
+/// fully consistent view forever.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// Monotone refresh counter; 0 is the empty pre-data snapshot.
+    pub epoch: u64,
+    /// Window rows the snapshot was computed over.
+    pub rows: usize,
+    /// Total rows ever admitted when the snapshot was built.
+    pub rows_admitted: u64,
+    /// The candidate λ grid (`q` points, fixed for the service lifetime).
+    pub grid: Vec<f64>,
+    /// Interpolated error curve over the grid (NaN when too few anchors
+    /// survived to fit — same degradation semantics as the batch tiers).
+    pub curve: Vec<f64>,
+    /// The anchor λ's (`g` of them, fixed for the service lifetime).
+    pub anchor_lambdas: Vec<f64>,
+    /// Exact tier RMSE at each anchor over the window rows.
+    pub anchor_rmse: Vec<f64>,
+    /// Grid minimizer of the curve (anchor argmin when the fit degraded;
+    /// NaN before any data).
+    pub best_lambda: f64,
+    /// Curve (or anchor) value at `best_lambda`.
+    pub best_error: f64,
+    /// The served model `θ(λ*)` — an exact `chol(G + λ*I)` solve over the
+    /// refolded window Gram, never an interpolated factor. Empty before
+    /// any data or after a full ladder exhaustion.
+    pub theta: Vec<f64>,
+    /// Largest anchor relative drift at build time (the trust stamp).
+    pub max_relative_drift: f64,
+    /// Largest anchor hop count at build time.
+    pub max_hops: u64,
+    /// Cumulative degradations recorded by the window so far.
+    pub degradations: usize,
+    /// The accuracy tier that scored the curve.
+    pub tier: CvMode,
+}
+
+impl Snapshot {
+    /// The pre-data snapshot (epoch 0): served before the first refresh so
+    /// queries never observe an uninitialized state.
+    pub fn empty(grid: Vec<f64>, anchor_lambdas: Vec<f64>, tier: CvMode) -> Snapshot {
+        let q = grid.len();
+        let g = anchor_lambdas.len();
+        Snapshot {
+            epoch: 0,
+            rows: 0,
+            rows_admitted: 0,
+            grid,
+            curve: vec![f64::NAN; q],
+            anchor_lambdas,
+            anchor_rmse: vec![f64::NAN; g],
+            best_lambda: f64::NAN,
+            best_error: f64::NAN,
+            theta: Vec::new(),
+            max_relative_drift: 0.0,
+            max_hops: 0,
+            degradations: 0,
+            tier,
+        }
+    }
+
+    /// Predict `xᵀθ(λ*)` for one feature row (NaN before the first
+    /// refresh — the served-model face of a point query).
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        if self.theta.len() != x.len() {
+            return f64::NAN;
+        }
+        x.iter().zip(&self.theta).map(|(a, b)| a * b).sum()
+    }
+}
+
+/// One sealed window segment: exactly [`SEGMENT_ROWS`] rows plus their
+/// cached Gram partial, computed by the same code path
+/// [`GramCache::assemble`] uses (the refold-bitwise keystone).
+struct Segment {
+    x: Matrix,
+    y: Vec<f64>,
+    ph: Matrix,
+    pg: Vec<f64>,
+}
+
+/// Per-cell evaluation result, matching the batch tiers' task bodies.
+type CellRes = Result<(f64, Option<(Rung, DegradeInfo)>), CholeskyError>;
+
+/// The sliding-window CV state: sealed segments + tail, the incremental
+/// `(G, g)` and anchor-factor caches that shadow them, and the refresh
+/// that turns the current window into a served [`Snapshot`]. Single-owner
+/// (the service worker thread); all parallelism lives inside
+/// [`WindowCv::refresh`]'s eval fan-out.
+pub struct WindowCv {
+    svc: ServiceConfig,
+    cv: CvConfig,
+    grid: Vec<f64>,
+    anchor_lambdas: Vec<f64>,
+    dim: Option<usize>,
+    segments: VecDeque<Segment>,
+    tail_x: Vec<f64>,
+    tail_y: Vec<f64>,
+    gram: Option<GramCache>,
+    anchors: Option<AnchorFactors>,
+    trans: Matrix,
+    epoch: u64,
+    rows_admitted: u64,
+    rows_since_refresh: usize,
+    /// Every recorded escalation, in admission order — the service
+    /// report's degradation ledger.
+    pub degradations: Vec<Degradation>,
+}
+
+impl WindowCv {
+    /// Build an empty window. The λ grid and anchor schedule are fixed
+    /// here for the service lifetime (the same `logspace` +
+    /// `subsample_indices` plan the batch tiers use); `cv.lambda_range`
+    /// falls back to `[1e-2, 1e2]` when unset — a service has no dataset
+    /// kind to inherit a paper range from.
+    pub fn new(svc: ServiceConfig, cv: CvConfig) -> WindowCv {
+        let (lo, hi) = cv.lambda_range.unwrap_or((1e-2, 1e2));
+        let grid = logspace(lo, hi, cv.q_grid.max(2));
+        let g = cv.g_samples.clamp(2, grid.len());
+        let anchor_lambdas: Vec<f64> = subsample_indices(grid.len(), g)
+            .into_iter()
+            .map(|i| grid[i])
+            .collect();
+        let svc = ServiceConfig {
+            window: svc.window.max(SEGMENT_ROWS),
+            ..svc
+        };
+        WindowCv {
+            svc,
+            cv,
+            grid,
+            anchor_lambdas,
+            dim: None,
+            segments: VecDeque::new(),
+            tail_x: Vec::new(),
+            tail_y: Vec::new(),
+            gram: None,
+            anchors: None,
+            trans: Matrix::zeros(0, 0),
+            epoch: 0,
+            rows_admitted: 0,
+            rows_since_refresh: 0,
+            degradations: Vec::new(),
+        }
+    }
+
+    /// The pre-data snapshot this window serves at epoch 0.
+    pub fn empty_snapshot(&self) -> Snapshot {
+        Snapshot::empty(self.grid.clone(), self.anchor_lambdas.clone(), self.svc.tier)
+    }
+
+    /// Rows currently retained in the window.
+    pub fn rows(&self) -> usize {
+        self.segments.len() * SEGMENT_ROWS + self.tail_y.len()
+    }
+
+    /// Total rows ever admitted.
+    pub fn rows_admitted(&self) -> u64 {
+        self.rows_admitted
+    }
+
+    /// The current snapshot epoch (number of completed refreshes).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Admit one row: validate, fold into the incremental `(G, g)` and
+    /// anchor caches (rank-1 each — `O(d²)` + `O(g·d²)`), seal a segment
+    /// when the tail fills, and retire the oldest segment(s) once the
+    /// window overflows. The **only** numeric mutation path — the service
+    /// splits every admitted batch to single rows before calling this, so
+    /// admission batch size can never perturb a result bit.
+    pub fn push_row(&mut self, xi: &[f64], yi: f64) -> Result<(), IngestError> {
+        let d = *self.dim.get_or_insert(xi.len());
+        if xi.len() != d {
+            return Err(IngestError::DimMismatch {
+                expected: d,
+                got: xi.len(),
+            });
+        }
+        let mut xrow = Matrix::zeros(1, d);
+        xrow.row_mut(0).copy_from_slice(xi);
+        match self.gram.as_mut() {
+            None => {
+                gram::validate_rows(&xrow, &[yi])?;
+                let cache = GramCache::assemble(&xrow, &[yi]);
+                // chol(G + λI) with λ > 0 succeeds on any PSD Gram — a
+                // failure here means a λ grid at/below rounding noise,
+                // which config validation rejects
+                self.anchors = AnchorFactors::factor(&cache, &self.anchor_lambdas).ok();
+                self.gram = Some(cache);
+            }
+            Some(cache) => {
+                cache.append_rows(&xrow, &[yi])?;
+                if let Some(anchors) = self.anchors.as_mut() {
+                    anchors.append_rows(&xrow, &mut self.trans);
+                }
+            }
+        }
+        self.tail_x.extend_from_slice(xi);
+        self.tail_y.push(yi);
+        if self.tail_y.len() == SEGMENT_ROWS {
+            self.seal_tail(d);
+        }
+        while self.rows() > self.svc.window && !self.segments.is_empty() {
+            self.retire_oldest_segment();
+        }
+        self.rows_admitted += 1;
+        self.rows_since_refresh += 1;
+        Ok(())
+    }
+
+    fn seal_tail(&mut self, d: usize) {
+        let rows = self.tail_y.len();
+        let mut x = Matrix::zeros(rows, d);
+        for r in 0..rows {
+            x.row_mut(r).copy_from_slice(&self.tail_x[r * d..(r + 1) * d]);
+        }
+        let y = std::mem::take(&mut self.tail_y);
+        self.tail_x.clear();
+        let (ph, pg) = gram::segment_partial(&x, &y, 0, rows);
+        self.segments.push_back(Segment { x, y, ph, pg });
+    }
+
+    /// Retire the oldest sealed segment: incremental Gram downdate plus a
+    /// transactional rank-[`SEGMENT_ROWS`] anchor downdate. A downdate
+    /// breakdown (the retired rows carried the factor's whole mass at
+    /// some pivot) leaves the anchor cache untouched; recovery refolds
+    /// the Gram from the surviving partials — drift-free by construction
+    /// — and refactors every anchor through the ladder, recorded as a
+    /// `"breakdown"` degradation.
+    fn retire_oldest_segment(&mut self) {
+        let Some(seg) = self.segments.pop_front() else {
+            return;
+        };
+        let Some(cache) = self.gram.as_mut() else {
+            return;
+        };
+        cache.retire_rows(&seg.x, &seg.y);
+        if let Some(anchors) = self.anchors.as_mut() {
+            let max_drift = anchors
+                .trusts
+                .iter()
+                .map(FactorTrust::relative_drift)
+                .fold(0.0, f64::max);
+            if let Err(e) = anchors.retire_rows(&seg.x, &mut self.trans) {
+                self.degradations.push(Degradation {
+                    surface: "service",
+                    fold: self.rows_admitted as usize,
+                    lambda: f64::NAN,
+                    cause: "breakdown",
+                    rung: Rung::Refactor,
+                    trust: max_drift,
+                    detail: format!(
+                        "window retirement downdate broke down ({e}); all anchors refactored from refolded Gram"
+                    ),
+                });
+                let refolded = self.refold();
+                let policy = self.cv.recovery;
+                if let Some(anchors) = self.anchors.as_mut() {
+                    refactor_all(anchors, &refolded, &policy);
+                }
+                self.gram = Some(refolded);
+            }
+        }
+    }
+
+    /// Rebuild a [`GramCache`] from the cached segment partials plus the
+    /// tail — **bitwise identical** to `GramCache::assemble` over the
+    /// surviving rows (see the module docs). Public so the determinism
+    /// suite can pin the round-trip directly.
+    pub fn refold(&self) -> GramCache {
+        let d = self.dim.unwrap_or(0);
+        let tail_partial = if self.tail_y.is_empty() {
+            None
+        } else {
+            let rows = self.tail_y.len();
+            let mut x = Matrix::zeros(rows, d);
+            for r in 0..rows {
+                x.row_mut(r).copy_from_slice(&self.tail_x[r * d..(r + 1) * d]);
+            }
+            Some(gram::segment_partial(&x, &self.tail_y, 0, rows))
+        };
+        let partials = self
+            .segments
+            .iter()
+            .map(|s| (&s.ph, s.pg.as_slice()))
+            .chain(tail_partial.iter().map(|(ph, pg)| (ph, pg.as_slice())));
+        gram::fold_partials(partials, d, self.rows())
+    }
+
+    /// Gather the current window rows in window order (oldest first) — the
+    /// evaluation set of a refresh, and the determinism suite's oracle
+    /// input.
+    pub fn window_rows(&self) -> (Matrix, Vec<f64>) {
+        let d = self.dim.unwrap_or(0);
+        let n = self.rows();
+        let mut x = Matrix::zeros(n, d);
+        let mut y = Vec::with_capacity(n);
+        let mut r = 0;
+        for seg in &self.segments {
+            for i in 0..seg.x.rows() {
+                x.row_mut(r).copy_from_slice(seg.x.row(i));
+                r += 1;
+            }
+            y.extend_from_slice(&seg.y);
+        }
+        for i in 0..self.tail_y.len() {
+            x.row_mut(r).copy_from_slice(&self.tail_x[i * d..(i + 1) * d]);
+            r += 1;
+        }
+        y.extend_from_slice(&self.tail_y);
+        (x, y)
+    }
+
+    /// Whether a refresh is due: the staleness trigger
+    /// (`refresh_every` rows since the last one) or the drift-budget
+    /// trigger (any anchor's trust tag over the [`RecoveryPolicy`]
+    /// budget). Both are pure functions of the admitted row sequence.
+    pub fn needs_refresh(&self) -> bool {
+        if self.gram.is_none() {
+            return false;
+        }
+        if self.rows_since_refresh >= self.svc.refresh_every.max(1) {
+            return true;
+        }
+        self.anchors
+            .as_ref()
+            .is_some_and(|a| a.trusts.iter().any(|t| t.exceeds(&self.cv.recovery.budget)))
+    }
+
+    /// Re-anchor λ* and rebuild the served snapshot:
+    ///
+    /// 1. **refold** — replace the incremental Gram with the segment-partial
+    ///    refold (bitwise the from-scratch assembly; repairs per-row drift);
+    /// 2. **anchor_refresh** — refactor over-budget anchors through the
+    ///    ladder (recorded), keep the rest incremental;
+    /// 3. **solve** — `θ_s` per anchor for the ALOOCV residual scoring;
+    /// 4. **eval** — score every window row at every anchor over the pool
+    ///    (fixed row-block partition, input-order merge — worker-invariant);
+    /// 5. **fit** — PINRMSE polynomial through the anchor RMSEs, swept over
+    ///    the grid (anchor argmin fallback when too few anchors survive);
+    /// 6. **theta** — exact `chol(G + λ*I)` solve for the served model.
+    pub fn refresh(&mut self, pool: &WorkerPool, timer: &mut PhaseTimer) -> Snapshot {
+        let Some(_) = self.gram.as_ref() else {
+            return self.empty_snapshot();
+        };
+        let refolded = timer.time("refold", || self.refold());
+        let policy = self.cv.recovery;
+
+        // stage 2: drift-budget refactorizations, from the refolded Gram
+        if let Some(anchors) = self.anchors.as_mut() {
+            for s in 0..anchors.lambdas.len() {
+                if !anchors.trusts[s].exceeds(&policy.budget) {
+                    continue;
+                }
+                let lam = anchors.lambdas[s];
+                let drift = anchors.trusts[s].relative_drift();
+                let hops = anchors.trusts[s].hops();
+                let res = timer.time("anchor_refresh", || {
+                    let mut out = Matrix::zeros(0, 0);
+                    recovery::refactor_ladder(refolded.hessian(), lam, &mut out, &policy)
+                        .map(|ok| (out, ok))
+                });
+                let (rung, detail) = match res {
+                    Ok((out, (rung, extra))) => {
+                        anchors.trusts[s] = FactorTrust::fresh(&out);
+                        anchors.factors[s] = out;
+                        let mut detail = format!(
+                            "relative drift {drift:.3e} over budget after {hops} hops; refactored"
+                        );
+                        if extra > 0.0 {
+                            detail.push_str(&format!(" with extra shift {extra:.3e}"));
+                        }
+                        (rung, detail)
+                    }
+                    Err(e) => (
+                        Rung::Skip,
+                        format!("drift over budget and refactor ladder exhausted: {e}"),
+                    ),
+                };
+                self.degradations.push(Degradation {
+                    surface: "service",
+                    fold: self.rows_admitted as usize,
+                    lambda: lam,
+                    cause: "drift-budget",
+                    rung,
+                    trust: drift,
+                    detail,
+                });
+            }
+        }
+
+        let shared = Arc::new(refolded);
+        let (sums, counts) = self.eval_anchors(&shared, pool, timer);
+
+        // stage 5: fit + sweep, the same fallback ladder as the batch tiers
+        let anchor_rmse: Vec<f64> = sums
+            .iter()
+            .zip(&counts)
+            .map(|(&s, &c)| if c > 0 { (s / c as f64).sqrt() } else { f64::NAN })
+            .collect();
+        let (usable_l, usable_e): (Vec<f64>, Vec<f64>) = self
+            .anchor_lambdas
+            .iter()
+            .zip(&anchor_rmse)
+            .filter(|(_, e)| e.is_finite())
+            .map(|(&l, &e)| (l, e))
+            .unzip();
+        let (best_lambda, best_error, curve) = timer.time("fit", || {
+            if usable_l.len() > self.cv.degree {
+                let poly = fit_error_curve(&usable_l, &usable_e, self.cv.degree);
+                poly.sweep(&self.grid)
+            } else if let Some((i, _)) = usable_e
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            {
+                (usable_l[i], usable_e[i], vec![f64::NAN; self.grid.len()])
+            } else {
+                (f64::NAN, f64::NAN, vec![f64::NAN; self.grid.len()])
+            }
+        });
+
+        // stage 6: the served model — exact factor at λ*, never interpolated
+        let theta = timer.time("theta", || {
+            if !best_lambda.is_finite() {
+                return Vec::new();
+            }
+            let mut out = Matrix::zeros(0, 0);
+            match recovery::refactor_ladder(shared.hessian(), best_lambda, &mut out, &policy) {
+                Ok((rung, extra)) => {
+                    if rung > Rung::Refactor {
+                        self.degradations.push(Degradation {
+                            surface: "service",
+                            fold: self.rows_admitted as usize,
+                            lambda: best_lambda,
+                            cause: "breakdown",
+                            rung,
+                            trust: 0.0,
+                            detail: format!("θ(λ*) factor needed extra shift {extra:.3e}"),
+                        });
+                    }
+                    let mut work = Vec::new();
+                    let mut theta = Vec::new();
+                    solve_cholesky_into(&out, shared.gradient(), &mut work, &mut theta);
+                    theta
+                }
+                Err(e) => {
+                    self.degradations.push(Degradation {
+                        surface: "service",
+                        fold: self.rows_admitted as usize,
+                        lambda: best_lambda,
+                        cause: "breakdown",
+                        rung: Rung::Skip,
+                        trust: 0.0,
+                        detail: format!("θ(λ*) ladder exhausted: {e}"),
+                    });
+                    Vec::new()
+                }
+            }
+        });
+
+        // the incremental cache is replaced by the refold: drift repaired,
+        // and the next refresh starts from the bitwise-exact state
+        let (max_drift, max_hops) = self.anchors.as_ref().map_or((0.0, 0), |a| {
+            a.trusts.iter().fold((0.0f64, 0u64), |(d, h), t| {
+                (d.max(t.relative_drift()), h.max(t.hops()))
+            })
+        });
+        self.gram = Some(
+            Arc::try_unwrap(shared).unwrap_or_else(|_| unreachable!("eval jobs have quiesced")),
+        );
+        self.epoch += 1;
+        self.rows_since_refresh = 0;
+        Snapshot {
+            epoch: self.epoch,
+            rows: self.rows(),
+            rows_admitted: self.rows_admitted,
+            grid: self.grid.clone(),
+            curve,
+            anchor_lambdas: self.anchor_lambdas.clone(),
+            anchor_rmse,
+            best_lambda,
+            best_error,
+            theta,
+            max_relative_drift: max_drift,
+            max_hops,
+            degradations: self.degradations.len(),
+            tier: self.svc.tier,
+        }
+    }
+
+    /// Stage 3 + 4: per-anchor `θ_s` solves, then the (anchor × row-block)
+    /// eval fan-out. Returns per-anchor (squared-error sum, served-cell
+    /// count), merged in ascending (anchor, block, row) order.
+    fn eval_anchors(
+        &mut self,
+        shared: &Arc<GramCache>,
+        pool: &WorkerPool,
+        timer: &mut PhaseTimer,
+    ) -> (Vec<f64>, Vec<usize>) {
+        let g = self.anchor_lambdas.len();
+        let (mut sums, mut counts) = (vec![0.0; g], vec![0usize; g]);
+        let Some(anchors) = self.anchors.as_ref() else {
+            return (sums, counts);
+        };
+        let n = self.rows();
+        if n == 0 {
+            return (sums, counts);
+        }
+        let (wx, wy) = self.window_rows();
+        let d = wx.cols();
+        let factors: Vec<Arc<Matrix>> =
+            anchors.factors.iter().map(|f| Arc::new(f.clone())).collect();
+        let trusts = anchors.trusts.clone();
+        let thetas: Vec<Arc<Vec<f64>>> = timer.time("solve", || {
+            factors
+                .iter()
+                .map(|f| {
+                    let mut work = Vec::new();
+                    let mut th = Vec::new();
+                    solve_cholesky_into(f, shared.gradient(), &mut work, &mut th);
+                    Arc::new(th)
+                })
+                .collect()
+        });
+
+        let eb = self.svc.effective_eval_batch();
+        let blocks: Vec<(usize, usize)> = (0..n).step_by(eb).map(|lo| (lo, (lo + eb).min(n))).collect();
+        let hists_on = timer.hists_armed();
+        type JobOut = (Vec<CellRes>, PhaseTimer);
+        let mut jobs: Vec<Box<dyn FnOnce(&mut Scratch) -> JobOut + Send>> = Vec::new();
+        let mut meta = Vec::new();
+        for s in 0..g {
+            let lam = self.anchor_lambdas[s];
+            for &(lo, hi) in &blocks {
+                let factor = Arc::clone(&factors[s]);
+                let trust = trusts[s];
+                let gramc = Arc::clone(shared);
+                let theta = Arc::clone(&thetas[s]);
+                let xblock = wx.slice(lo, hi, 0, d);
+                let yblock = wy[lo..hi].to_vec();
+                let policy = self.cv.recovery;
+                let tier = self.svc.tier;
+                meta.push((s, lo));
+                jobs.push(Box::new(move |scratch| {
+                    let mut t = if hists_on {
+                        PhaseTimer::with_hists()
+                    } else {
+                        PhaseTimer::new()
+                    };
+                    let cells = match tier {
+                        CvMode::Loo => (0..xblock.rows())
+                            .map(|i| {
+                                eval_heldout_point(
+                                    &factor,
+                                    trust,
+                                    &gramc,
+                                    xblock.row(i),
+                                    yblock[i],
+                                    lam,
+                                    &policy,
+                                    scratch,
+                                    &mut t,
+                                )
+                            })
+                            .collect(),
+                        // KFold is rejected by config validation; serve it
+                        // as ALOOCV rather than poisoning the run
+                        CvMode::Aloocv | CvMode::KFold => super::aloocv::eval_hat_block(
+                            &factor, trust, &gramc, &theta, &xblock, &yblock, lam, &policy,
+                            scratch, &mut t,
+                        ),
+                    };
+                    (cells, t)
+                }));
+            }
+        }
+        let results = timer.time("eval", || pool.map_scratch(jobs));
+        for ((s, lo), (cells, t)) in meta.into_iter().zip(results) {
+            timer.merge(&t);
+            let lam = self.anchor_lambdas[s];
+            for (local, cell) in cells.into_iter().enumerate() {
+                match cell {
+                    Ok((sqerr, climb)) => {
+                        sums[s] += sqerr;
+                        counts[s] += 1;
+                        if let Some((rung, info)) = climb {
+                            self.degradations.push(info.into_degradation(
+                                "service",
+                                lo + local,
+                                lam,
+                                rung,
+                            ));
+                        }
+                    }
+                    Err(e) => {
+                        self.degradations.push(Degradation {
+                            surface: "service",
+                            fold: lo + local,
+                            lambda: lam,
+                            cause: "breakdown",
+                            rung: Rung::Skip,
+                            trust: 0.0,
+                            detail: format!("ladder exhausted: {e}"),
+                        });
+                    }
+                }
+            }
+        }
+        (sums, counts)
+    }
+}
+
+/// Refactor every anchor from `gram` through the ladder (the retirement
+/// breakdown recovery). Ladder exhaustion keeps the old factor — the next
+/// budget trip retries.
+fn refactor_all(anchors: &mut AnchorFactors, gram: &GramCache, policy: &RecoveryPolicy) {
+    for s in 0..anchors.lambdas.len() {
+        let mut out = Matrix::zeros(0, 0);
+        if recovery::refactor_ladder(gram.hessian(), anchors.lambdas[s], &mut out, policy).is_ok() {
+            anchors.trusts[s] = FactorTrust::fresh(&out);
+            anchors.factors[s] = out;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{DatasetKind, SyntheticDataset};
+
+    fn service_cfg() -> ServiceConfig {
+        ServiceConfig {
+            window: 2 * SEGMENT_ROWS,
+            refresh_every: 24,
+            ..ServiceConfig::default()
+        }
+    }
+
+    fn cv_cfg() -> CvConfig {
+        CvConfig {
+            q_grid: 9,
+            g_samples: 4,
+            lambda_range: Some((0.1, 10.0)),
+            ..CvConfig::default()
+        }
+    }
+
+    fn feed(win: &mut WindowCv, ds: &SyntheticDataset, lo: usize, hi: usize) {
+        for i in lo..hi {
+            win.push_row(ds.x.row(i), ds.y[i]).unwrap();
+        }
+    }
+
+    /// The keystone: after growth past capacity (appends + whole-segment
+    /// retirements), the refold is bitwise a from-scratch `GramCache`
+    /// over exactly the surviving rows.
+    #[test]
+    fn window_refold_is_bitwise_from_scratch_on_survivors() {
+        let n = 5 * SEGMENT_ROWS + 7;
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, n, 11, 42);
+        let mut win = WindowCv::new(service_cfg(), cv_cfg());
+        feed(&mut win, &ds, 0, n);
+        assert!(win.rows() <= 2 * SEGMENT_ROWS + SEGMENT_ROWS, "retention must bound the window");
+        let (wx, wy) = win.window_rows();
+        let refold = win.refold();
+        let fresh = GramCache::assemble(&wx, &wy);
+        assert_eq!(refold.hessian().as_slice(), fresh.hessian().as_slice());
+        assert_eq!(refold.gradient(), fresh.gradient());
+        assert_eq!(refold.n_rows(), win.rows());
+        // and the surviving rows are the most recent ones, oldest first
+        let expect_first = n - win.rows();
+        assert_eq!(wx.row(0), ds.x.row(expect_first));
+        assert_eq!(wy[0], ds.y[expect_first]);
+    }
+
+    /// A refresh produces a usable snapshot: finite curve and λ*, a served
+    /// θ, a monotone epoch, and a trust stamp.
+    #[test]
+    fn refresh_serves_a_finite_snapshot() {
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 90, 9, 7);
+        let pool = WorkerPool::new(2);
+        let mut timer = PhaseTimer::new();
+        let mut win = WindowCv::new(service_cfg(), cv_cfg());
+        feed(&mut win, &ds, 0, 90);
+        assert!(win.needs_refresh(), "staleness trigger must have tripped");
+        let snap = win.refresh(&pool, &mut timer);
+        assert_eq!(snap.epoch, 1);
+        assert_eq!(snap.rows, win.rows());
+        assert!(snap.best_lambda.is_finite() && snap.best_error.is_finite());
+        assert!(snap.curve.iter().all(|v| v.is_finite()));
+        assert_eq!(snap.theta.len(), 9);
+        assert!(snap.predict(ds.x.row(0)).is_finite());
+        assert!(!win.needs_refresh(), "refresh must reset the staleness trigger");
+        // structural: one refold, one θ(λ*) factor, g anchor solves
+        assert_eq!(timer.count("refold"), 1);
+        assert_eq!(timer.count("theta"), 1);
+    }
+
+    /// Worker-count invariance of a single refresh: the eval fan-out
+    /// merges in input order, so curve bits cannot depend on the pool.
+    #[test]
+    fn refresh_is_bitwise_worker_invariant() {
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 80, 8, 3);
+        let run = |workers: usize| {
+            let pool = WorkerPool::new(workers);
+            let mut timer = PhaseTimer::new();
+            let mut win = WindowCv::new(service_cfg(), cv_cfg());
+            feed(&mut win, &ds, 0, 80);
+            win.refresh(&pool, &mut timer)
+        };
+        let base = run(1);
+        for workers in [2usize, 4] {
+            let par = run(workers);
+            assert_eq!(base.curve, par.curve, "workers={workers}");
+            assert_eq!(base.anchor_rmse, par.anchor_rmse, "workers={workers}");
+            assert_eq!(base.theta, par.theta, "workers={workers}");
+            assert_eq!(base.best_lambda.to_bits(), par.best_lambda.to_bits());
+        }
+    }
+
+    /// The drift-budget trigger: a budget no finite drift satisfies trips
+    /// after the first incremental append, forces recorded anchor
+    /// refactorizations at the next refresh, and the refactored anchors
+    /// carry fresh trust tags.
+    #[test]
+    fn tight_budget_forces_recorded_anchor_refactorizations() {
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 40, 7, 5);
+        let pool = WorkerPool::new(1);
+        let mut timer = PhaseTimer::new();
+        let mut cv = cv_cfg();
+        cv.recovery.budget = crate::linalg::trust::TrustBudget {
+            max_relative_drift: 1e-300,
+            max_hops: 0,
+        };
+        let mut win = WindowCv::new(service_cfg(), cv);
+        feed(&mut win, &ds, 0, 2);
+        assert!(win.needs_refresh(), "budget trigger must trip after one rank-1 hop");
+        let snap = win.refresh(&pool, &mut timer);
+        let budget_degs: Vec<_> = win
+            .degradations
+            .iter()
+            .filter(|d| d.cause == "drift-budget")
+            .collect();
+        assert_eq!(budget_degs.len(), 4, "every anchor must be refactored");
+        for d in budget_degs {
+            assert_eq!(d.surface, "service");
+            assert_eq!(d.rung, Rung::Refactor);
+            assert!(d.trust > 0.0);
+        }
+        assert_eq!(snap.max_relative_drift, 0.0, "refactored anchors are fresh");
+        assert_eq!(snap.max_hops, 0);
+    }
+
+    /// Bad rows are rejected at the door without mutating the window —
+    /// the same ingest gate as the batch pipeline.
+    #[test]
+    fn bad_rows_are_rejected_without_mutation() {
+        let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 10, 6, 1);
+        let mut win = WindowCv::new(service_cfg(), cv_cfg());
+        feed(&mut win, &ds, 0, 10);
+        let before = win.rows();
+        let bad = vec![1.0, f64::NAN, 0.0, 0.0, 0.0, 0.0];
+        assert!(win.push_row(&bad, 1.0).is_err());
+        assert!(win.push_row(&[1.0, 2.0], 1.0).is_err(), "dim mismatch");
+        assert_eq!(win.rows(), before);
+        assert_eq!(win.rows_admitted(), 10);
+    }
+}

@@ -184,6 +184,38 @@ fn segment_partial_into(
     }
 }
 
+/// Owned variant of [`segment_partial_into`] for callers that cache
+/// partials long-term (the streaming window seals one per
+/// [`SEGMENT_ROWS`]-aligned segment). Same code path as [`GramCache::assemble`],
+/// so a later [`fold_partials`] over these is bitwise a fresh assembly.
+pub(crate) fn segment_partial(x: &Matrix, y: &[f64], lo: usize, hi: usize) -> (Matrix, Vec<f64>) {
+    let hdim = x.cols();
+    let mut ph = Matrix::zeros(hdim, hdim);
+    let mut pg = vec![0.0; hdim];
+    segment_partial_into(x, y, lo, hi, &mut ph, &mut pg);
+    (ph, pg)
+}
+
+/// Rebuild a [`GramCache`] from cached per-segment partials, folded in the
+/// order given. When every partial covers exactly [`SEGMENT_ROWS`] rows
+/// except possibly the last, this is **bitwise identical** to
+/// [`GramCache::assemble`] over the concatenated rows — the identical
+/// copy-first-then-add reduction over the identical per-segment bits. The
+/// streaming window leans on this to repair incremental drift at refresh
+/// without the `O(n·d²)` reassembly ever diverging from the from-scratch
+/// oracle.
+pub(crate) fn fold_partials<'a>(
+    partials: impl IntoIterator<Item = (&'a Matrix, &'a [f64])>,
+    hdim: usize,
+    n: usize,
+) -> GramCache {
+    let mut red = GramReducer::new(hdim);
+    for (ph, pg) in partials {
+        red.fold(ph, pg);
+    }
+    red.finish(n)
+}
+
 /// The ordered reduction: fold per-segment partials into the running
 /// accumulators in ascending segment order (copy the first, `+=` the rest —
 /// the same op sequence as the packed kernel's internal chunk fold).
@@ -494,6 +526,44 @@ mod tests {
         for (a, b) in cache.gradient().iter().zip(base.gradient()) {
             assert!((a - b).abs() < 1e-10);
         }
+    }
+
+    /// The streaming-window keystone: refolding cached segment partials is
+    /// bitwise a fresh assembly whenever the partials sit on the
+    /// [`SEGMENT_ROWS`] grid — including a short tail, and including a
+    /// window whose oldest segments were dropped (survivors re-partialed
+    /// from row 0 of the surviving block).
+    #[test]
+    fn refolding_segment_partials_is_bitwise_a_fresh_assembly() {
+        let n = 3 * SEGMENT_ROWS + 5;
+        let (x, y) = dataset(n, 11, 0x5EA1);
+        let partials: Vec<(Matrix, Vec<f64>)> = chunk_ranges(n, SEGMENT_ROWS)
+            .into_iter()
+            .map(|(lo, hi)| segment_partial(&x, &y, lo, hi))
+            .collect();
+        let refolded = fold_partials(
+            partials.iter().map(|(ph, pg)| (ph, pg.as_slice())),
+            11,
+            n,
+        );
+        let fresh = GramCache::assemble(&x, &y);
+        assert_eq!(refolded.hessian().as_slice(), fresh.hessian().as_slice());
+        assert_eq!(refolded.gradient(), fresh.gradient());
+        assert_eq!(refolded.n_rows(), n);
+
+        // drop the oldest segment (a window retirement): survivors start at
+        // a segment boundary, so their partials are unchanged — the refold
+        // must match assembling the surviving rows from scratch
+        let survivors = x.slice(SEGMENT_ROWS, n, 0, 11);
+        let ys = y[SEGMENT_ROWS..].to_vec();
+        let retired = fold_partials(
+            partials[1..].iter().map(|(ph, pg)| (ph, pg.as_slice())),
+            11,
+            n - SEGMENT_ROWS,
+        );
+        let fresh2 = GramCache::assemble(&survivors, &ys);
+        assert_eq!(retired.hessian().as_slice(), fresh2.hessian().as_slice());
+        assert_eq!(retired.gradient(), fresh2.gradient());
     }
 
     /// Ingest validation pins the exact offender: NaN/Inf features, NaN

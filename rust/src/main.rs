@@ -30,6 +30,7 @@ fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.command.as_str() {
         "cv" => cmd_cv(&args),
+        "serve" => cmd_serve(&args),
         "compare" => cmd_compare(&args),
         "hlo" => cmd_hlo(&args),
         "experiments" => cmd_experiments(&args),
@@ -358,6 +359,114 @@ fn cmd_cv(args: &Args) -> Result<()> {
     }
     if args.switch("metrics") {
         print!("{}", coord.metrics.snapshot());
+    }
+    Ok(())
+}
+
+/// `pichol serve` — run the streaming CV service over the deterministic
+/// traffic replay: seeded rows streamed through the bounded admission
+/// queue, snapshot queries interleaved, λ*/θ served from epoch-swapped
+/// snapshots. The replay is the service's reference driver (and the
+/// `service_replay` bench source) — a pure function of its knobs, bitwise
+/// identical at any worker count or admission batch size.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use picholesky::coordinator::service::{run_replay, ReplayConfig};
+
+    let mut cfg = experiment_config(args)?;
+    // service knobs: flags override the [service] section
+    cfg.service.window = args.usize_flag("window", cfg.service.window)?;
+    cfg.service.refresh_every =
+        args.usize_flag("refresh-every", cfg.service.refresh_every)?;
+    cfg.service.queue_depth = args.usize_flag("queue-depth", cfg.service.queue_depth)?;
+    cfg.service.eval_batch = args.usize_flag("eval-batch", cfg.service.eval_batch)?;
+    cfg.service.workers = args.usize_flag("threads", cfg.service.workers)?;
+    if let Some(tier) = args.flag("tier") {
+        cfg.service.tier = CvMode::parse(tier)
+            .ok_or_else(|| anyhow::anyhow!("unknown --tier '{tier}' (loo | aloocv)"))?;
+    }
+    cfg.validate()?;
+    let replay = ReplayConfig {
+        rows: cfg.n,
+        dim: cfg.h,
+        batch: args.usize_flag("batch", ReplayConfig::default().batch)?.max(1),
+        queries_per_batch: args
+            .usize_flag("queries", ReplayConfig::default().queries_per_batch)?,
+        kind: cfg.dataset,
+        seed: cfg.seed,
+    };
+    println!(
+        "serve: dataset={} rows={} d={} batch={} window={} refresh_every={} queue_depth={} tier={:?}",
+        cfg.dataset.name(),
+        replay.rows,
+        replay.dim,
+        replay.batch,
+        cfg.service.window,
+        cfg.service.refresh_every,
+        cfg.service.queue_depth,
+        cfg.service.tier,
+    );
+
+    let rep = run_replay(replay, cfg.service, cfg.cv.clone());
+    let snap = &rep.final_snapshot;
+    println!(
+        "λ* = {:.4e}   error = {:.4}   epoch = {}   window rows = {}   wall = {}",
+        snap.best_lambda,
+        snap.best_error,
+        snap.epoch,
+        snap.rows,
+        fmt_secs(rep.wall_secs)
+    );
+    println!(
+        "  admitted {} rows in {} batches   refreshes = {}   trust: drift ≤ {:.2e}, hops ≤ {}",
+        rep.rows_admitted, rep.batches, rep.refreshes, snap.max_relative_drift, snap.max_hops
+    );
+    let fmt_q = |q: Option<f64>| match q {
+        Some(us) => format!("{us:.0}"),
+        None => "-".to_string(),
+    };
+    for (name, h) in [("admit", &rep.admit_hist), ("query", &rep.query_hist)] {
+        println!(
+            "  {name:<6} latency (µs): p50={} p90={} p99={}  n={}",
+            fmt_q(h.quantile_us(0.50)),
+            fmt_q(h.quantile_us(0.90)),
+            fmt_q(h.quantile_us(0.99)),
+            h.count()
+        );
+    }
+    if !rep.degradations.is_empty() {
+        println!("  {} degradation(s) recorded:", rep.degradations.len());
+        for d in &rep.degradations {
+            println!("    {d}");
+        }
+    }
+    for (phase, secs) in rep.timer.entries() {
+        println!("  {phase:<14} {}", fmt_secs(*secs));
+    }
+    if let Some(obs) = &rep.obs {
+        emit_obs(
+            &cfg,
+            &picholesky::obs::ledger::LedgerRun {
+                mode: "service",
+                solver: "chol",
+                kernel_backend: picholesky::linalg::kernel::active_backend().name(),
+                fold_strategy: "sliding-window",
+                strategy_source: "service",
+                threads: rep.threads,
+                tasks: rep.batches as usize,
+                k_folds: snap.rows,
+                q_grid: cfg.cv.q_grid,
+                g_samples: cfg.cv.g_samples,
+                seed: cfg.seed,
+                policy: &cfg.cv.recovery,
+                best_lambda: snap.best_lambda,
+                best_error: snap.best_error,
+                wall_secs: rep.wall_secs,
+                degradations: &rep.degradations,
+                certification: None,
+                timer: &rep.timer,
+                obs,
+            },
+        )?;
     }
     Ok(())
 }

@@ -72,10 +72,13 @@ fn escape_json(s: &str) -> String {
 }
 
 /// Finite floats as JSON numbers; NaN/±inf as `null` (JSON has no
-/// non-finite literals).
+/// non-finite literals). Uses the shortest round-trip exponential form
+/// (`{v:e}`, e.g. `3.0000000000000004e-1`): a fixed-precision format
+/// would truncate provenance — λ grid endpoints, trust budgets, RMSE
+/// values — so the ledger could no longer reproduce the run exactly.
 fn jf(v: f64) -> String {
     if v.is_finite() {
-        format!("{v:.6e}")
+        format!("{v:e}")
     } else {
         "null".to_string()
     }
@@ -278,6 +281,52 @@ mod tests {
         assert!(s.contains("\"p99_us\""));
         assert!(s.contains("\"record\":\"task_kind\""));
         assert!(s.contains("\"record\":\"summary\""));
+    }
+
+    /// The parse-back pin for the full-precision float format: every value
+    /// `jf` emits must parse back to the identical f64 bits, including the
+    /// ones a 7-significant-digit format destroys (0.1 + 0.2, subnormals,
+    /// one-ulp neighbours of 1.0).
+    #[test]
+    fn ledger_floats_parse_back_bitwise() {
+        for &v in &[
+            0.0,
+            -0.0,
+            0.1,
+            0.1 + 0.2,
+            1.0 / 3.0,
+            std::f64::consts::PI,
+            6.022_140_76e23,
+            -1.234_567_890_123_456_7e-89,
+            5e-324,              // smallest subnormal
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            1.0 + f64::EPSILON, // one ulp above 1.0
+        ] {
+            let s = jf(v);
+            let back: f64 = s.parse().expect("jf output must be a parseable number");
+            assert_eq!(back.to_bits(), v.to_bits(), "{v:?} rendered as {s}");
+        }
+        // and through a fully rendered provenance line: extract the
+        // best_lambda field and round-trip it bitwise
+        let policy = RecoveryPolicy::default();
+        let timer = PhaseTimer::default();
+        let obs = ObsReport::default();
+        let mut run = sample_run(&policy, &[], &timer, &obs);
+        run.best_lambda = 0.1 + 0.2; // 0.30000000000000004 — dies at 7 digits
+        let s = render_ledger(&run);
+        let line = s.lines().next().unwrap();
+        let tag = "\"best_lambda\":";
+        let at = line.find(tag).unwrap() + tag.len();
+        let num: String = line[at..]
+            .chars()
+            .take_while(|c| !matches!(c, ',' | '}'))
+            .collect();
+        assert_eq!(
+            num.parse::<f64>().unwrap().to_bits(),
+            (0.1f64 + 0.2).to_bits(),
+            "best_lambda must survive the ledger round trip bitwise: {num}"
+        );
     }
 
     #[test]

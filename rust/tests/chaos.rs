@@ -300,6 +300,40 @@ fn garbage_bench_file_degrades_auto_to_default() {
     assert!(absent.degradations.is_empty());
 }
 
+/// Fault class 5b: a stale crossover probe. The probe measures packed
+/// downdate timings through the *active* micro-kernel backend, so its
+/// cache must be keyed by backend — flipping the backend after the first
+/// probe (the `force_backend`/`PICHOL_KERNEL_BACKEND` scenario) must
+/// trigger a fresh measurement, never reuse of the mismatched one; and
+/// flipping *back* must return the original cached numbers, not probe a
+/// third time. Driven through fake backend names so the test can't collide
+/// with whatever real backends other tests have already probed.
+#[test]
+fn stale_strategy_probe_reprobes_on_backend_flip() {
+    use picholesky::cv::strategy::{probe_for, probe_runs};
+    let _guard = global_lock();
+
+    let before = probe_runs();
+    let a1 = probe_for("chaos-backend-a").expect("probe must measure on a healthy host");
+    assert_eq!(probe_runs(), before + 1, "first backend: a real measurement");
+
+    let a2 = probe_for("chaos-backend-a").unwrap();
+    assert_eq!(probe_runs(), before + 1, "repeat hit must not re-measure");
+    assert_eq!(a1, a2, "cache must hand back the identical measurement");
+
+    let b1 = probe_for("chaos-backend-b").expect("flip must re-probe, not reuse");
+    assert_eq!(
+        probe_runs(),
+        before + 2,
+        "a backend flip is a cache miss: the stale measurement must not be reused"
+    );
+    assert!(b1.1 > 0.0 && b1.2 > 0.0);
+
+    let a3 = probe_for("chaos-backend-a").unwrap();
+    assert_eq!(probe_runs(), before + 2, "flip-back hits the per-backend map");
+    assert_eq!(a1, a3, "the original backend's measurement survives the flip");
+}
+
 /// Observability under chaos: arming the event/histogram layer on a run
 /// carrying an injected Gram breakdown AND a quarantined panicking task
 /// changes no numeric output bitwise — the no-perturbation contract holds

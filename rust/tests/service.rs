@@ -1,0 +1,220 @@
+//! Determinism and liveness suite for the streaming CV service
+//! (`coordinator::service` + `cv::window`), pinning the ISSUE-10
+//! acceptance bar:
+//!
+//! - the same admitted row sequence yields **bitwise-identical** final
+//!   snapshots and **identical** degradation ledgers at any eval worker
+//!   count and any admission batch size;
+//! - the window's segment-partial refold round-trips **bitwise** against
+//!   a from-scratch `GramCache` over the surviving rows;
+//! - queries never block on a window update, and served epochs are
+//!   monotone;
+//! - arming observability perturbs no numeric bit and reports the
+//!   admit/refresh/query span log plus the latency histograms.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use picholesky::coordinator::service::{run_replay, CvService, ReplayConfig, ServiceReport};
+use picholesky::cv::window::{ServiceConfig, WindowCv};
+use picholesky::cv::CvConfig;
+use picholesky::data::gram::{GramCache, SEGMENT_ROWS};
+use picholesky::data::synthetic::{DatasetKind, SyntheticDataset};
+
+fn cv_cfg() -> CvConfig {
+    CvConfig {
+        q_grid: 9,
+        g_samples: 4,
+        lambda_range: Some((0.1, 10.0)),
+        ..CvConfig::default()
+    }
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn replay(workers: usize, batch: usize) -> ServiceReport {
+    let svc = ServiceConfig {
+        window: 2 * SEGMENT_ROWS,
+        refresh_every: 48,
+        workers,
+        ..ServiceConfig::default()
+    };
+    let mut cv = cv_cfg();
+    // a hop budget the stream trips repeatedly: every trip re-anchors λ*
+    // through the recovery ladder and records a degradation — so the
+    // ledger-identity assertion below is not vacuous
+    cv.recovery.budget.max_hops = 40;
+    let replay = ReplayConfig {
+        rows: 600,
+        dim: 8,
+        batch,
+        queries_per_batch: 2,
+        kind: DatasetKind::MnistLike,
+        seed: 11,
+    };
+    run_replay(replay, svc, cv)
+}
+
+/// The tentpole acceptance test: one seeded traffic replay, re-run across
+/// eval worker counts {1,2,4} × admission batch sizes {1,3,64}. Refresh
+/// points are a pure function of the admitted row sequence and the eval
+/// fan-out merges in input order, so every run must land on the same
+/// snapshot **bits** and the same degradation ledger.
+#[test]
+fn replay_is_bitwise_invariant_across_workers_and_batches() {
+    let base = replay(1, 1);
+    assert_eq!(base.rows_admitted, 600);
+    assert!(base.refreshes > 1, "the stream must refresh repeatedly");
+    assert!(base.final_snapshot.best_lambda.is_finite());
+    assert!(
+        !base.degradations.is_empty(),
+        "the hop budget must have tripped re-anchors"
+    );
+    let base_degs: Vec<String> = base.degradations.iter().map(|d| d.to_string()).collect();
+    for workers in [1usize, 2, 4] {
+        for batch in [1usize, 3, 64] {
+            if (workers, batch) == (1, 1) {
+                continue;
+            }
+            let rep = replay(workers, batch);
+            let tag = format!("workers={workers} batch={batch}");
+            let (a, b) = (&base.final_snapshot, &rep.final_snapshot);
+            assert_eq!(rep.rows_admitted, 600, "{tag}");
+            assert_eq!(base.refreshes, rep.refreshes, "{tag}: refresh points drifted");
+            assert_eq!(a.epoch, b.epoch, "{tag}");
+            assert_eq!(a.rows, b.rows, "{tag}");
+            assert_eq!(bits(&a.curve), bits(&b.curve), "{tag}: curve bits");
+            assert_eq!(bits(&a.anchor_rmse), bits(&b.anchor_rmse), "{tag}: anchor bits");
+            assert_eq!(bits(&a.theta), bits(&b.theta), "{tag}: θ(λ*) bits");
+            assert_eq!(a.best_lambda.to_bits(), b.best_lambda.to_bits(), "{tag}");
+            assert_eq!(a.best_error.to_bits(), b.best_error.to_bits(), "{tag}");
+            let degs: Vec<String> = rep.degradations.iter().map(|d| d.to_string()).collect();
+            assert_eq!(base_degs, degs, "{tag}: degradation ledgers diverged");
+        }
+    }
+}
+
+/// The window's retire/append round-trip: after streaming well past
+/// capacity (sealed-segment retirements included), the segment-partial
+/// refold equals a from-scratch `GramCache::assemble` over exactly the
+/// surviving rows, bit for bit.
+#[test]
+fn window_round_trip_matches_from_scratch_gram_bitwise() {
+    let n = 3 * SEGMENT_ROWS + 10;
+    let ds = SyntheticDataset::generate(DatasetKind::CoilLike, n, 9, 123);
+    let svc = ServiceConfig {
+        window: 2 * SEGMENT_ROWS,
+        ..ServiceConfig::default()
+    };
+    let mut win = WindowCv::new(svc, cv_cfg());
+    for i in 0..n {
+        win.push_row(ds.x.row(i), ds.y[i]).unwrap();
+    }
+    assert!(win.rows() <= 2 * SEGMENT_ROWS, "retention must bound the window");
+    let (wx, wy) = win.window_rows();
+    let refold = win.refold();
+    let fresh = GramCache::assemble(&wx, &wy);
+    assert_eq!(refold.hessian().as_slice(), fresh.hessian().as_slice());
+    assert_eq!(refold.gradient(), fresh.gradient());
+    assert_eq!(refold.n_rows(), win.rows());
+}
+
+/// Snapshot serving is non-blocking: a reader thread hammering `query()`
+/// while the worker admits and refreshes always gets a consistent
+/// snapshot, and the epochs it observes are monotone. The reader holds a
+/// `ServiceHandle` clone, so it must be joined (dropping its sender)
+/// before `finish()` can drain the queue.
+#[test]
+fn queries_never_block_and_epochs_are_monotone() {
+    let svc = ServiceConfig {
+        window: 2 * SEGMENT_ROWS,
+        refresh_every: 16,
+        queue_depth: 4,
+        workers: 2,
+        ..ServiceConfig::default()
+    };
+    let (service, handle) = CvService::start(svc, cv_cfg());
+    let stop = Arc::new(AtomicBool::new(false));
+    let reader = {
+        let h = handle.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut last = 0u64;
+            let mut queries = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let snap = h.query();
+                assert!(snap.epoch >= last, "served epochs must be monotone");
+                assert_eq!(
+                    snap.curve.len(),
+                    snap.grid.len(),
+                    "a held snapshot is internally consistent at its epoch"
+                );
+                last = snap.epoch;
+                queries += 1;
+            }
+            (last, queries)
+        })
+    };
+    let ds = SyntheticDataset::generate(DatasetKind::MnistLike, 200, 6, 9);
+    for lo in (0..200).step_by(5) {
+        let hi = (lo + 5).min(200);
+        handle
+            .admit(ds.x.slice(lo, hi, 0, 6), ds.y[lo..hi].to_vec())
+            .unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let (last_epoch, queries) = reader.join().unwrap();
+    assert!(queries > 0, "the reader must have been served while admitting");
+    drop(handle);
+    let rep = service.finish();
+    assert!(rep.refreshes >= 1);
+    assert_eq!(rep.final_snapshot.epoch, rep.refreshes, "one epoch per refresh");
+    assert!(last_epoch <= rep.final_snapshot.epoch);
+    assert_eq!(rep.rows_admitted, 200);
+    assert_eq!(rep.query_hist.count(), queries, "every query lands in the histogram");
+}
+
+/// Arming observability reports the admit/refresh/query span log and the
+/// latency histograms — and perturbs not one numeric bit relative to the
+/// same replay disarmed.
+#[test]
+fn armed_replay_reports_spans_without_perturbing_bits() {
+    let svc = ServiceConfig {
+        window: 2 * SEGMENT_ROWS,
+        refresh_every: 32,
+        ..ServiceConfig::default()
+    };
+    let replay_cfg = ReplayConfig {
+        rows: 128,
+        dim: 6,
+        batch: 8,
+        queries_per_batch: 3,
+        kind: DatasetKind::MnistLike,
+        seed: 5,
+    };
+    let dark = run_replay(replay_cfg, svc, cv_cfg());
+    assert!(dark.obs.is_none(), "disarmed runs carry no obs payload");
+    let mut cv = cv_cfg();
+    cv.obs = true;
+    let armed = run_replay(replay_cfg, svc, cv);
+    let obs = armed.obs.as_ref().expect("armed run must carry an obs report");
+
+    let kinds: Vec<&str> = obs.events.iter().map(|e| e.kind).collect();
+    let count = |k: &str| kinds.iter().filter(|x| **x == k).count() as u64;
+    assert_eq!(count("admit"), armed.batches, "one admit span per batch");
+    assert_eq!(count("refresh"), armed.refreshes, "one refresh span per refresh");
+    assert_eq!(
+        count("query"),
+        armed.query_hist.count(),
+        "client query spans are appended at finish"
+    );
+    assert_eq!(armed.admit_hist.count(), armed.batches);
+    assert!(!obs.phase_hists.is_empty(), "refresh phases land in hists");
+
+    let (a, b) = (&dark.final_snapshot, &armed.final_snapshot);
+    assert_eq!(bits(&a.curve), bits(&b.curve), "obs must not perturb curve bits");
+    assert_eq!(bits(&a.theta), bits(&b.theta), "obs must not perturb θ bits");
+    assert_eq!(a.best_lambda.to_bits(), b.best_lambda.to_bits());
+}
